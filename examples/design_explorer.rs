@@ -1,0 +1,102 @@
+//! Design explorer: sweep dataflows and memory hierarchies for *your*
+//! layer from the command line — the workflow the paper's optimization
+//! framework (§6.3) is built for.
+//!
+//! Run, e.g.:
+//! ```text
+//! cargo run --release --example design_explorer -- \
+//!     --k 384 --c 256 --x 13 --f 3 --batch 8 --rows 16 --cols 16
+//! ```
+
+use interstellar::arch::{eyeriss_like, ArrayShape};
+use interstellar::dataflow::{best_replication, enumerate_dataflows, utilization};
+use interstellar::energy::Table3;
+use interstellar::loopnest::Shape;
+use interstellar::search::{default_threads, optimize_layer, search_hierarchy, SearchOpts};
+use interstellar::util::{table::Table, Args};
+use interstellar::nn::{network, Network};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let shape = Shape::new(
+        args.get_u64("batch", 4),
+        args.get_u64("k", 384),
+        args.get_u64("c", 256),
+        args.get_u64("x", 13),
+        args.get_u64("y", args.get_u64("x", 13)),
+        args.get_u64("f", 3),
+        args.get_u64("f", 3),
+        args.get_u64("stride", 1) as u32,
+    );
+    let array = ArrayShape {
+        rows: args.get_u64("rows", 16) as u32,
+        cols: args.get_u64("cols", 16) as u32,
+    };
+    let threads = args.get_usize("threads", default_threads());
+    let opts = SearchOpts::capped(args.get_usize("max-blockings", 800), 6);
+
+    println!(
+        "layer: B={} K={} C={} X=Y={} F={} stride={}  ({} MACs)",
+        shape.bounds[0], shape.bounds[1], shape.bounds[2], shape.bounds[3],
+        shape.bounds[5], shape.stride, shape.macs()
+    );
+
+    // dataflow sweep with optimal blocking on the Eyeriss-like config
+    let arch = eyeriss_like();
+    let mut t = Table::new(vec!["dataflow", "repl map", "util %", "energy (uJ)"]);
+    let mut best: Option<(String, f64)> = None;
+    for df in enumerate_dataflows(&shape) {
+        let repl = best_replication(&shape, &df, &array);
+        let util = utilization(&shape, &repl, &array);
+        let cell = match optimize_layer(&shape, &arch, &df, &Table3, &opts, threads) {
+            Some(lo) => {
+                let e = lo.result.energy_pj;
+                if best.as_ref().map(|(_, b)| e < *b).unwrap_or(true) {
+                    best = Some((df.to_string(), e));
+                }
+                format!("{:.2}", lo.result.energy_uj())
+            }
+            None => "-".into(),
+        };
+        t.row(vec![
+            df.to_string(),
+            repl.to_string(),
+            format!("{:.0}", 100.0 * util),
+            cell,
+        ]);
+    }
+    println!("\n== dataflow sweep on {} ==", arch.describe());
+    print!("{}", t.to_text());
+    if let Some((name, e)) = &best {
+        println!("\nbest dataflow: {name} at {:.2} uJ", e / 1e6);
+    }
+
+    // hierarchy search for a single-layer "network"
+    println!("\n== memory-hierarchy search ==");
+    let net = Network {
+        name: "custom".into(),
+        layers: vec![interstellar::nn::Layer::conv(
+            "LAYER",
+            shape.bounds[0],
+            shape.bounds[1],
+            shape.bounds[2],
+            shape.bounds[3],
+            shape.bounds[4],
+            shape.bounds[5],
+            shape.stride,
+        )],
+        batch: shape.bounds[0],
+    };
+    let results = search_hierarchy(&net, array, &Table3, &opts, threads);
+    let mut ht = Table::new(vec!["hierarchy", "energy (uJ)"]);
+    for r in results.iter().take(8) {
+        ht.row(vec![
+            r.arch.name.clone(),
+            format!("{:.2}", r.opt.total_energy_pj / 1e6),
+        ]);
+    }
+    print!("{}", ht.to_text());
+
+    let _ = network("alexnet", 1); // keep the nn API exercised in docs
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! End-to-end driver: every layer of the stack composes.
+//!
+//! 1. **Optimize** (L3): the auto-optimizer picks a memory hierarchy +
+//!    blocking for AlexNet (fix `C|K`, ratio rule) and reports the gain
+//!    over the Eyeriss-like baseline.
+//! 2. **Validate** (L3): the winning mapping's analytical energy is
+//!    cross-checked against the exact trace simulator.
+//! 3. **Execute** (L1/L2 via PJRT): the scheduled layer's *numerics* run
+//!    through the AOT-compiled JAX/Pallas artifact on the PJRT CPU
+//!    client and are checked against the Rust functional simulator.
+//! 4. **Serve** (L3 runtime): a mixed trace of a few hundred layer
+//!    requests is served by worker threads over the artifact registry;
+//!    latency and throughput are reported.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_alexnet`
+
+use std::path::Path;
+
+use interstellar::arch::{eyeriss_like, ArrayShape};
+use interstellar::coordinator::serve::{mixed_trace, serve};
+use interstellar::dataflow::Dataflow;
+use interstellar::energy::Table3;
+use interstellar::loopnest::Shape;
+use interstellar::nn::network;
+use interstellar::runtime::Runtime;
+use interstellar::search::{
+    default_threads, optimize_network, search_hierarchy, SearchOpts,
+};
+use interstellar::sim::{reference_conv, simulate, ConvData};
+use interstellar::util::fmt_sig;
+
+fn main() -> anyhow::Result<()> {
+    let threads = default_threads();
+    let df = Dataflow::parse("C|K").unwrap();
+    let opts = SearchOpts::capped(1200, 6);
+
+    // ---- 1. auto-optimizer ------------------------------------------------
+    println!("[1/4] auto-optimizing AlexNet (batch 4) on a 16x16 array...");
+    let net = network("alexnet", 4).unwrap();
+    let baseline = optimize_network(&net, &eyeriss_like(), &df, &Table3, &opts, threads);
+    let results = search_hierarchy(&net, ArrayShape { rows: 16, cols: 16 }, &Table3, &opts, threads);
+    let best = results.first().expect("hierarchy search found nothing");
+    println!(
+        "  baseline (Eyeriss-like): {} uJ",
+        fmt_sig(baseline.total_energy_pj / 1e6)
+    );
+    println!(
+        "  optimized:              {} uJ on {}  -> {:.2}x better, {:.2} TOPS/W",
+        fmt_sig(best.opt.total_energy_pj / 1e6),
+        best.arch.name,
+        baseline.total_energy_pj / best.opt.total_energy_pj,
+        best.opt.tops_per_watt()
+    );
+
+    // ---- 2. model vs simulator -------------------------------------------
+    println!("[2/4] validating the winning CONV3 mapping against the trace simulator...");
+    let conv3_idx = net.layers.iter().position(|l| l.name == "CONV3").unwrap();
+    let lo = best.opt.per_layer[conv3_idx]
+        .as_ref()
+        .expect("CONV3 mapping");
+    let sim = simulate(&lo.mapping, &lo.smap, &best.arch, &Table3, 3_000_000_000)?;
+    let err = 100.0 * (lo.result.energy_pj - sim.energy_pj).abs() / sim.energy_pj;
+    println!(
+        "  model {} uJ vs sim {} uJ  (err {:.4}% — paper requires < 2%)",
+        fmt_sig(lo.result.energy_uj()),
+        fmt_sig(sim.energy_uj()),
+        err
+    );
+    assert!(err < 2.0, "validation failed");
+
+    // ---- 3. numerics through PJRT -----------------------------------------
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        println!("[3/4] SKIPPED: artifacts/ not built (run `make artifacts`)");
+        println!("[4/4] SKIPPED");
+        return Ok(());
+    }
+    println!("[3/4] executing the conv3x3 artifact via PJRT and cross-checking numerics...");
+    let rt = Runtime::load(artifacts)?;
+    let entry = rt.entry("conv3x3").unwrap().clone();
+    let (b, xh, c) = (
+        entry.inputs[0].dims[0] as u64,
+        entry.inputs[0].dims[1] as u64,
+        entry.inputs[0].dims[3] as u64,
+    );
+    let (fx, k) = (entry.inputs[1].dims[0] as u64, entry.inputs[1].dims[3] as u64);
+    let x = xh - fx + 1;
+    let shape = Shape::new(b, k, c, x, x, fx, fx, 1);
+    let data = ConvData::random(shape, 2024);
+    // repack the simulator's [B][C][H][W] / [K][C][FX][FY] layouts to NHWC/HWIO
+    let ix = shape.input_x();
+    let mut inp = vec![0.0f32; data.input.len()];
+    for bb in 0..b {
+        for cc in 0..c {
+            for i in 0..ix {
+                for j in 0..ix {
+                    inp[(((bb * ix + i) * ix + j) * c + cc) as usize] =
+                        data.input[(((bb * c + cc) * ix + i) * ix + j) as usize];
+                }
+            }
+        }
+    }
+    let mut w = vec![0.0f32; data.weight.len()];
+    for kk in 0..k {
+        for cc in 0..c {
+            for i in 0..fx {
+                for j in 0..fx {
+                    w[(((i * fx + j) * c + cc) * k + kk) as usize] =
+                        data.weight[(((kk * c + cc) * fx + i) * fx + j) as usize];
+                }
+            }
+        }
+    }
+    let outs = rt.execute_f32("conv3x3", &[inp, w])?;
+    let want = reference_conv(&data);
+    let mut max_err = 0.0f32;
+    for bb in 0..b {
+        for kk in 0..k {
+            for i in 0..x {
+                for j in 0..x {
+                    let g = outs[0][(((bb * x + i) * x + j) * k + kk) as usize];
+                    let e = want[(((bb * k + kk) * x + i) * x + j) as usize];
+                    max_err = max_err.max((g - e).abs());
+                }
+            }
+        }
+    }
+    println!("  PJRT (JAX/Pallas) vs Rust functional simulator: max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-2, "numerics mismatch");
+
+    // ---- 4. batched serving ------------------------------------------------
+    println!("[4/4] serving 300 mixed layer requests over the artifact registry...");
+    let stats = serve(artifacts, mixed_trace(300, 7), threads)?;
+    println!(
+        "  {} requests in {:.2}s  mean {:.2} ms  p95 {:.2} ms  {:.1} req/s",
+        stats.completed, stats.wall_s, stats.mean_latency_ms, stats.p95_latency_ms, stats.rps
+    );
+    println!("\nE2E OK: optimizer -> model==sim -> PJRT numerics -> serving all compose.");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: schedule AlexNet CONV3 with the Halide-style DSL, lower it
+//! onto the Eyeriss-like architecture, and evaluate energy/performance
+//! with the analytical model — the paper's §4 flow in ~40 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use interstellar::arch::eyeriss_like;
+use interstellar::energy::Table3;
+use interstellar::halide::{print_ir, tpu_ck};
+use interstellar::loopnest::Shape;
+use interstellar::sim::simulate;
+use interstellar::xmodel::evaluate;
+
+fn main() -> anyhow::Result<()> {
+    // AlexNet CONV3 at batch 4: B=4, K=384, C=256, 13x13 out, 3x3 filter.
+    let conv3 = Shape::new(4, 384, 256, 13, 13, 3, 3, 1);
+    let arch = eyeriss_like();
+    println!("layer: AlexNet CONV3, {} MACs", conv3.macs());
+    println!("arch:  {}\n", arch.describe());
+
+    // A TPU-style C|K schedule, written with the scheduling primitives
+    // (split / reorder / in+compute_at / unroll / systolic) and lowered.
+    let schedule = tpu_ck(conv3, 16, 16);
+    println!("=== schedule IR (Listing-2 style) ===");
+    println!("{}", print_ir(&schedule));
+
+    let (mapping, smap) = schedule.lower(&arch)?;
+    println!("dataflow: {} on a 16x16 systolic array", smap.label());
+    println!("PEs used: {}\n", mapping.pe_count());
+
+    // Analytical model: access counts -> energy -> performance.
+    let result = evaluate(&mapping, &smap, &arch, &Table3)?;
+    println!("=== energy breakdown (analytical model) ===");
+    print!("{}", result.breakdown_table(&arch).to_text());
+    println!(
+        "\ntotal: {:.1} uJ, {:.0} cycles, utilization {:.1}%, {:.2} TOPS/W",
+        result.energy_uj(),
+        result.cycles,
+        100.0 * result.utilization,
+        result.tops_per_watt(0.4),
+    );
+
+    // Cross-check against the exact trace simulator (same counts).
+    let sim = simulate(&mapping, &smap, &arch, &Table3, 3_000_000_000)?;
+    println!(
+        "simulator cross-check: {:.1} uJ (diff {:.4}%)",
+        sim.energy_uj(),
+        100.0 * (result.energy_pj - sim.energy_pj).abs() / sim.energy_pj
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Schedule tour: re-create the prior-work accelerators of §2/Fig 6 as
+//! Halide-style schedules, print their lowered IR, and compare their
+//! energy on the same layer and hardware budget — the paper's "fair
+//! comparison" exercise.
+//!
+//! Run: `cargo run --release --example schedule_tour`
+
+use interstellar::arch::{eyeriss_like, no_local_reuse, Arch};
+use interstellar::energy::Table3;
+use interstellar::halide::{
+    diannao_tree, eyeriss_rs, nvdla_like, print_ir, shidiannao_os, tpu_ck, Schedule,
+};
+use interstellar::loopnest::Shape;
+use interstellar::util::table::Table;
+use interstellar::xmodel::evaluate;
+
+fn main() -> anyhow::Result<()> {
+    let conv3 = Shape::new(4, 384, 256, 13, 13, 3, 3, 1);
+    let systolic = eyeriss_like();
+    let broadcast = no_local_reuse();
+
+    let cases: Vec<(Schedule, &Arch)> = vec![
+        (eyeriss_rs(conv3, 16, 16), &systolic),
+        (tpu_ck(conv3, 16, 16), &systolic),
+        (shidiannao_os(conv3, 16, 16), &systolic),
+        (diannao_tree(conv3, 16), &broadcast),
+        (nvdla_like(conv3, 16, 16), &broadcast),
+    ];
+
+    let mut table = Table::new(vec![
+        "schedule", "dataflow", "PEs", "energy (uJ)", "util %", "RF %", "DRAM %",
+    ]);
+
+    for (schedule, arch) in cases {
+        println!("=== {} ===", schedule.name);
+        println!("{}", print_ir(&schedule));
+        let (mapping, smap) = schedule.lower(arch)?;
+        let r = evaluate(&mapping, &smap, arch, &Table3)?;
+        table.row(vec![
+            schedule.name.clone(),
+            smap.label().to_string(),
+            format!("{}", mapping.pe_count()),
+            format!("{:.1}", r.energy_uj()),
+            format!("{:.0}", 100.0 * r.utilization),
+            format!("{:.0}", 100.0 * r.level_fraction(0)),
+            format!("{:.0}", 100.0 * r.level_fraction(arch.num_levels() - 1)),
+        ]);
+    }
+
+    println!("=== fair comparison on AlexNet CONV3 (batch 4) ===");
+    print!("{}", table.to_text());
+    println!(
+        "\nObservation 1 in action: with each design's own blocking these\n\
+         energies differ; §6 shows that once blocking is *optimized per\n\
+         dataflow* the spread nearly vanishes (see `cargo bench --bench\n\
+         fig8_dataflow`)."
+    );
+    Ok(())
+}

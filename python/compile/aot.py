@@ -1,0 +1,163 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO text artifacts.
+
+Runs ONCE at build time (`make artifacts`); the Rust runtime loads the
+HLO text via `HloModuleProto::from_text_file` and executes it on the PJRT
+CPU client. Python never runs on the request path.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifact shapes are intentionally small: they are the *functional* stand-in
+for the scheduled hardware — the Rust coordinator cross-checks its trace
+simulator's conv outputs against these, and serves batched layer requests
+through them in the e2e example. A plain-text manifest (one line per
+artifact: name, file, input/output dtypes+shapes) lets the Rust side load
+everything without a JSON parser.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt(s):
+    return f"f32[{','.join(str(d) for d in s.shape)}]"
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (fn returning a tuple, input specs)
+# Shapes mirror (at reduced scale) the paper's workloads:
+#   conv3x3   — AlexNet CONV3-like CONV layer (the Fig 8a/10 subject)
+#   conv1x1   — GoogLeNet 4C3R-like pointwise reduction (Fig 8c subject)
+#   conv5x5_s2— strided large-filter CONV (AlexNet CONV1/2 family)
+#   depthwise — MobileNet depthwise layer
+#   fc        — MLP / FC layer (Fig 11 FC bars)
+#   lstm_cell — seq2seq LSTM cell (LSTM-M/L family)
+#   conv_chain— two stacked CONV+ReLU layers: the e2e driver's model
+# ---------------------------------------------------------------------------
+
+
+def _conv3x3(i, w):
+    return (model.conv_layer(i, w, stride=1, block_k=16),)
+
+
+def _conv1x1(i, w):
+    return (model.pointwise_layer(i, w, block_k=16),)
+
+
+def _conv5x5_s2(i, w):
+    return (model.conv_layer(i, w, stride=2, block_k=8),)
+
+
+def _depthwise(i, w):
+    return (model.depthwise_layer(i, w, stride=1, block_c=8),)
+
+
+def _fc(a, b):
+    return (model.fc_layer(a, b, block_n=32),)
+
+
+def _lstm_cell(x, h, c, w_ih, w_hh, bias):
+    return model.lstm_cell(x, h, c, w_ih, w_hh, bias)
+
+
+def _conv_chain(i, w1, w2):
+    return (model.conv_relu_chain(i, [w1, w2]),)
+
+
+ARTIFACTS = {
+    "conv3x3": (
+        _conv3x3,
+        [_spec(2, 10, 10, 16), _spec(3, 3, 16, 32)],
+    ),
+    "conv1x1": (
+        _conv1x1,
+        [_spec(2, 8, 8, 32), _spec(32, 16)],
+    ),
+    "conv5x5_s2": (
+        _conv5x5_s2,
+        [_spec(1, 13, 13, 8), _spec(5, 5, 8, 16)],
+    ),
+    "depthwise": (
+        _depthwise,
+        [_spec(2, 10, 10, 16), _spec(3, 3, 16)],
+    ),
+    "fc": (
+        _fc,
+        [_spec(8, 64), _spec(64, 32)],
+    ),
+    "lstm_cell": (
+        _lstm_cell,
+        [
+            _spec(4, 32),
+            _spec(4, 32),
+            _spec(4, 32),
+            _spec(32, 128),
+            _spec(32, 128),
+            _spec(128),
+        ],
+    ),
+    "conv_chain": (
+        _conv_chain,
+        [_spec(1, 8, 8, 8), _spec(3, 3, 8, 16), _spec(3, 3, 16, 16)],
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output dir (or a single .hlo.txt path for the default artifact)")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    if out_dir.endswith(".hlo.txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, (fn, specs) in sorted(ARTIFACTS.items()):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        in_s = ";".join(_fmt(s) for s in specs)
+        out_s = ";".join(_fmt(s) for s in outs)
+        manifest_lines.append(f"name={name} file={fname} inputs={in_s} outputs={out_s}")
+        print(f"  {name}: {len(text)} chars, in=[{in_s}] out=[{out_s}]")
+
+    # `model.hlo.txt` is the Makefile's stamp target: the conv_chain e2e model.
+    import shutil
+
+    shutil.copyfile(
+        os.path.join(out_dir, "conv_chain.hlo.txt"),
+        os.path.join(out_dir, "model.hlo.txt"),
+    )
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(ARTIFACTS)} artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""L1: Pallas kernels + pure-jnp oracles for the Interstellar stack."""
+
+from .conv import conv2d_tiled, depthwise_conv2d_tiled  # noqa: F401
+from .matmul import matmul_tiled, pick_block  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,135 @@
+"""Blocking-parameterized Pallas CONV kernel.
+
+The paper's seven-loop CONV nest, tiled the way the Interstellar schedule
+language tiles it for hardware: the Pallas grid carries the outer (B, Ko)
+loops, the kernel body walks the filter taps and performs one
+(X*Y, C) @ (C, Tk) MXU matmul per tap — i.e. the `C | K` dataflow with the
+spatial dims replicated onto the MXU rows (DESIGN.md §Hardware-Adaptation).
+
+Layouts: I [B, XH, YH, C] (pre-padded, XH=(X-1)*stride+FX), W [FX,FY,C,K],
+O [B, X, Y, K]. The weight tile for one grid step is (FX, FY, C, Tk) and
+the input block is one full padded image — for the layer shapes we AOT
+this fits the 16 MiB VMEM budget (asserted in tests via `vmem_words`).
+
+interpret=True throughout: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _conv_kernel(i_ref, w_ref, o_ref, *, x_out, y_out, stride):
+    """One batch image x one K tile.
+
+    i_ref: (1, XH, YH, C); w_ref: (FX, FY, C, Tk); o_ref: (1, X, Y, Tk).
+    """
+    fx, fy, c, tk = w_ref.shape
+    inp = i_ref[0]  # (XH, YH, C)
+    acc = jnp.zeros((x_out * y_out, tk), dtype=jnp.float32)
+    # Filter taps are static python loops -> fully unrolled in the HLO,
+    # matching the RF-resident FX/FY loops of the hardware schedule.
+    for dx in range(fx):
+        for dy in range(fy):
+            patch = jax.lax.slice(
+                inp,
+                (dx, dy, 0),
+                (dx + (x_out - 1) * stride + 1, dy + (y_out - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )  # (X, Y, C)
+            acc += jnp.dot(
+                patch.reshape(x_out * y_out, c),
+                w_ref[dx, dy],
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[0] = acc.reshape(x_out, y_out, tk).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "block_k", "interpret")
+)
+def conv2d_tiled(inp, w, *, stride=1, block_k=64, interpret=True):
+    """Tiled CONV: ([B,XH,YH,C], [FX,FY,C,K]) -> [B,X,Y,K]."""
+    b, xh, yh, c = inp.shape
+    fx, fy, c2, k = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    x_out = (xh - fx) // stride + 1
+    y_out = (yh - fy) // stride + 1
+    bk = pick_block(k, block_k)
+
+    kernel = functools.partial(
+        _conv_kernel, x_out=x_out, y_out=y_out, stride=stride
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, k // bk),
+        in_specs=[
+            pl.BlockSpec((1, xh, yh, c), lambda bi, ki: (bi, 0, 0, 0)),
+            pl.BlockSpec((fx, fy, c, bk), lambda bi, ki: (0, 0, 0, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, x_out, y_out, bk), lambda bi, ki: (bi, 0, 0, ki)),
+        out_shape=jax.ShapeDtypeStruct((b, x_out, y_out, k), jnp.float32),
+        interpret=interpret,
+    )(inp.astype(jnp.float32), w.astype(jnp.float32))
+    return out.astype(inp.dtype)
+
+
+def _dw_kernel(i_ref, w_ref, o_ref, *, x_out, y_out, stride):
+    """Depthwise tap accumulation: one batch image x one C tile."""
+    fx, fy, tc = w_ref.shape
+    inp = i_ref[0]  # (XH, YH, Tc)
+    acc = jnp.zeros((x_out, y_out, tc), dtype=jnp.float32)
+    for dx in range(fx):
+        for dy in range(fy):
+            patch = jax.lax.slice(
+                inp,
+                (dx, dy, 0),
+                (dx + (x_out - 1) * stride + 1, dy + (y_out - 1) * stride + 1, tc),
+                (stride, stride, 1),
+            )
+            acc += patch * w_ref[dx, dy]
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "block_c", "interpret")
+)
+def depthwise_conv2d_tiled(inp, w, *, stride=1, block_c=128, interpret=True):
+    """Depthwise CONV: ([B,XH,YH,C], [FX,FY,C]) -> [B,X,Y,C].
+
+    MobileNet's depthwise layer is the 7-loop nest with the C loop fused to
+    K (one filter per channel) — the VPU (elementwise) path on TPU, not the
+    MXU, so the kernel accumulates tap-shifted elementwise products.
+    """
+    b, xh, yh, c = inp.shape
+    fx, fy, c2 = w.shape
+    assert c == c2
+    x_out = (xh - fx) // stride + 1
+    y_out = (yh - fy) // stride + 1
+    bc = pick_block(c, block_c)
+
+    kernel = functools.partial(_dw_kernel, x_out=x_out, y_out=y_out, stride=stride)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, xh, yh, bc), lambda bi, ci: (bi, 0, 0, ci)),
+            pl.BlockSpec((fx, fy, bc), lambda bi, ci: (0, 0, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, x_out, y_out, bc), lambda bi, ci: (bi, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((b, x_out, y_out, c), jnp.float32),
+        interpret=interpret,
+    )(inp.astype(jnp.float32), w.astype(jnp.float32))
+    return out.astype(inp.dtype)
+
+
+def conv_vmem_words(b, xh, yh, c, fx, fy, k, block_k):
+    """VMEM working-set (words) for one conv grid step."""
+    bk = pick_block(k, block_k)
+    x_out = xh - fx + 1
+    y_out = yh - fy + 1
+    return xh * yh * c + fx * fy * c * bk + x_out * y_out * bk

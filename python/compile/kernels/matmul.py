@@ -1,0 +1,92 @@
+"""Blocking-parameterized Pallas matmul kernel.
+
+This is the FC / LSTM-gate hot-spot (the paper's C,K,B-only loop nest) as a
+Pallas kernel. The (block_m, block_n, block_c) tiling is exactly the loop
+blocking the Interstellar schedule language produces for the array level:
+the grid is the outer (Mo, No, Co) loops, each kernel body is one inner
+tile's worth of MACs on the MXU.
+
+TPU adaptation notes (see DESIGN.md §Hardware-Adaptation):
+  - block shapes default to MXU-friendly multiples (8, 128);
+    VMEM footprint per grid step is
+    block_m*block_c + block_c*block_n + block_m*block_n words.
+  - the C (reduction) grid dimension is innermost so the output tile stays
+    resident across the accumulation — "output stationary at the array
+    level" in the paper's taxonomy (dataflow C|K maps C,K to the grid).
+  - interpret=True everywhere in this repo: the CPU PJRT plugin cannot run
+    Mosaic custom-calls; numerics are identical to the TPU lowering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (block_m, block_n) output tile; accumulates over the C grid dim.
+
+    The output block index is independent of the C grid index, so o_ref
+    aliases the same tile across the reduction — the canonical Pallas
+    accumulate-in-place pattern.
+    """
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...],
+        b_ref[...],
+        preferred_element_type=o_ref.dtype,
+    ).astype(o_ref.dtype)
+
+
+def pick_block(dim, preferred):
+    """Largest divisor of `dim` that is <= preferred (tiles must divide)."""
+    b = max(1, min(preferred, dim))
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_c", "interpret")
+)
+def matmul_tiled(a, b, *, block_m=128, block_n=128, block_c=128, interpret=True):
+    """Tiled matmul: [M, C] @ [C, N] -> [M, N], f32 accumulation.
+
+    Block sizes are clamped to the largest divisor of each dim so any shape
+    works; schedules produced by the Rust optimizer pass exact divisors.
+    """
+    m, c = a.shape
+    c2, n = b.shape
+    assert c == c2, f"contraction mismatch {c} vs {c2}"
+    bm = pick_block(m, block_m)
+    bn = pick_block(n, block_n)
+    bc = pick_block(c, block_c)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, c // bc),
+        in_specs=[
+            pl.BlockSpec((bm, bc), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bc, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out.astype(a.dtype)
+
+
+def vmem_words(m, c, n, block_m, block_n, block_c):
+    """VMEM working-set estimate (words) for one grid step — used by the
+    DESIGN.md roofline discussion and checked by tests against the 16 MiB
+    VMEM budget for the shapes we AOT."""
+    bm = pick_block(m, block_m)
+    bn = pick_block(n, block_n)
+    bc = pick_block(c, block_c)
+    return bm * bc + bc * bn + bm * bn

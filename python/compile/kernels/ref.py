@@ -1,0 +1,89 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle in f32 (and to bf16 tolerance in bf16). The oracles
+use only stock jax.numpy / lax ops so they lower to plain HLO everywhere.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(inp, w, stride=1):
+    """Reference CONV layer.
+
+    Args:
+      inp: [B, XH, YH, C] input fmaps, already padded (XH = (X-1)*stride+FX).
+      w:   [FX, FY, C, K] filter weights.
+      stride: spatial stride.
+
+    Returns:
+      [B, X, Y, K] output fmaps.
+    """
+    dn = lax.conv_dimension_numbers(inp.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    return lax.conv_general_dilated(
+        inp,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=dn,
+        preferred_element_type=jnp.float32,
+    ).astype(inp.dtype)
+
+
+def matmul_ref(a, b):
+    """Reference FC / matmul: [M, C] @ [C, N] -> [M, N]."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def lstm_cell_ref(x, h, c, w_ih, w_hh, bias):
+    """Reference LSTM cell (seq2seq-style).
+
+    Args:
+      x: [B, E] input embedding.
+      h: [B, H] previous hidden state.
+      c: [B, H] previous cell state.
+      w_ih: [E, 4H] input->gates weights, gate order (i, f, g, o).
+      w_hh: [H, 4H] hidden->gates weights.
+      bias: [4H].
+
+    Returns:
+      (h_next [B, H], c_next [B, H])
+    """
+    gates = (
+        matmul_ref(x, w_ih).astype(jnp.float32)
+        + matmul_ref(h, w_hh).astype(jnp.float32)
+        + bias.astype(jnp.float32)
+    )
+    hdim = h.shape[-1]
+    i = lax.logistic(gates[:, 0 * hdim : 1 * hdim])
+    f = lax.logistic(gates[:, 1 * hdim : 2 * hdim])
+    g = jnp.tanh(gates[:, 2 * hdim : 3 * hdim])
+    o = lax.logistic(gates[:, 3 * hdim : 4 * hdim])
+    c_next = f * c.astype(jnp.float32) + i * g
+    h_next = o * jnp.tanh(c_next)
+    return h_next.astype(h.dtype), c_next.astype(c.dtype)
+
+
+def depthwise_conv2d_ref(inp, w, stride=1):
+    """Reference depthwise CONV (MobileNet): one filter per channel.
+
+    Args:
+      inp: [B, XH, YH, C] padded input.
+      w:   [FX, FY, C] per-channel filters.
+
+    Returns:
+      [B, X, Y, C].
+    """
+    c = inp.shape[-1]
+    rhs = w[:, :, None, :]  # (FX, FY, 1, C): 1 input feature per group
+    dn = lax.conv_dimension_numbers(inp.shape, rhs.shape, ("NHWC", "HWIO", "NHWC"))
+    return lax.conv_general_dilated(
+        inp,
+        rhs,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=dn,
+        feature_group_count=c,
+        preferred_element_type=jnp.float32,
+    ).astype(inp.dtype)

@@ -1,0 +1,74 @@
+"""L2: layer-forward compute graphs, calling the Pallas kernels.
+
+Each public function here is a jit-able forward for one layer kind of the
+paper's workload set (CONV, pointwise CONV, depthwise CONV, FC, LSTM
+cell). `aot.py` lowers instances of these at the artifact shapes to HLO
+text; the Rust runtime executes them on the PJRT CPU client.
+
+Python is build-time only: nothing in this module runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import conv2d_tiled, depthwise_conv2d_tiled, matmul_tiled
+
+
+def conv_layer(inp, w, *, stride=1, block_k=64):
+    """CONV layer forward (pre-padded input), Pallas-tiled."""
+    return conv2d_tiled(inp, w, stride=stride, block_k=block_k)
+
+
+def pointwise_layer(inp, w, *, block_k=128):
+    """1x1 CONV (e.g. GoogLeNet 4C3R) — lowers to a matmul over channels.
+
+    inp: [B, X, Y, C]; w: [C, K] -> [B, X, Y, K].
+    """
+    b, x, y, c = inp.shape
+    flat = inp.reshape(b * x * y, c)
+    out = matmul_tiled(flat, w, block_m=128, block_n=block_k, block_c=128)
+    return out.reshape(b, x, y, w.shape[1])
+
+
+def depthwise_layer(inp, w, *, stride=1, block_c=128):
+    """Depthwise CONV layer forward (MobileNet)."""
+    return depthwise_conv2d_tiled(inp, w, stride=stride, block_c=block_c)
+
+
+def fc_layer(inp, w, *, block_n=128):
+    """FC layer forward: [B, C] @ [C, K]."""
+    return matmul_tiled(inp, w, block_m=128, block_n=block_n, block_c=128)
+
+
+def lstm_cell(x, h, c, w_ih, w_hh, bias):
+    """LSTM cell forward; both gate matmuls go through the Pallas kernel."""
+    gates = (
+        matmul_tiled(x, w_ih).astype(jnp.float32)
+        + matmul_tiled(h, w_hh).astype(jnp.float32)
+        + bias.astype(jnp.float32)
+    )
+    hdim = h.shape[-1]
+    i = lax.logistic(gates[:, 0 * hdim : 1 * hdim])
+    f = lax.logistic(gates[:, 1 * hdim : 2 * hdim])
+    g = jnp.tanh(gates[:, 2 * hdim : 3 * hdim])
+    o = lax.logistic(gates[:, 3 * hdim : 4 * hdim])
+    c_next = f * c.astype(jnp.float32) + i * g
+    h_next = o * jnp.tanh(c_next)
+    return h_next.astype(h.dtype), c_next.astype(c.dtype)
+
+
+def conv_relu_chain(inp, ws, *, stride=1):
+    """A small CONV->ReLU stack (the e2e driver's mini AlexNet tail).
+
+    ws: list of [FX,FY,C,K] weights; each conv is VALID over a freshly
+    padded input so spatial size is preserved.
+    """
+    out = inp
+    for w in ws:
+        fx, fy = w.shape[0], w.shape[1]
+        px, py = fx // 2, fy // 2
+        out = jnp.pad(out, ((0, 0), (px, px), (py, py), (0, 0)))
+        out = conv_layer(out, w, stride=stride)
+        out = jax.nn.relu(out)
+    return out

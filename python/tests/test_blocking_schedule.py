@@ -1,0 +1,57 @@
+"""Cross-layer contract: the Pallas kernels accept the block sizes the
+Rust optimizer emits (exact divisors), and kernel tiling mirrors the
+schedule semantics (any valid blocking computes the same function)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d_tiled, matmul_tiled, ref
+from compile.kernels.matmul import vmem_words
+from compile.kernels.conv import conv_vmem_words
+
+RNG = np.random.default_rng(3)
+
+
+def _arr(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+def divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+@given(data=st.data())
+@settings(max_examples=12, deadline=None)
+def test_matmul_any_exact_divisor_blocking(data):
+    m = data.draw(st.sampled_from([8, 12, 24]))
+    c = data.draw(st.sampled_from([6, 16, 18]))
+    n = data.draw(st.sampled_from([4, 10, 32]))
+    bm = data.draw(st.sampled_from(divisors(m)))
+    bc = data.draw(st.sampled_from(divisors(c)))
+    bn = data.draw(st.sampled_from(divisors(n)))
+    a, b = _arr(m, c), _arr(c, n)
+    out = matmul_tiled(a, b, block_m=bm, block_n=bn, block_c=bc)
+    np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-4, atol=1e-5)
+
+
+@given(bk=st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=5, deadline=None)
+def test_conv_any_k_blocking(bk):
+    i = _arr(1, 8, 8, 4)
+    w = _arr(3, 3, 4, 16)
+    out = conv2d_tiled(i, w, block_k=bk)
+    np.testing.assert_allclose(out, ref.conv2d_ref(i, w), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimates_fit_budget():
+    # the shapes we AOT must fit a 16 MiB VMEM at f32
+    budget_words = (16 << 20) // 4
+    assert vmem_words(8, 64, 32, 128, 32, 128) < budget_words
+    assert conv_vmem_words(2, 10, 10, 16, 3, 3, 32, 16) < budget_words
+
+
+def test_vmem_grows_with_blocks():
+    small = vmem_words(128, 128, 128, 32, 32, 32)
+    large = vmem_words(128, 128, 128, 128, 128, 128)
+    assert small < large

@@ -1,0 +1,192 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, block sizes, strides and dtypes; every case
+asserts allclose against ref.py. This is the core correctness signal for
+the compute layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    conv2d_tiled,
+    depthwise_conv2d_tiled,
+    matmul_tiled,
+    pick_block,
+    ref,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def _arr(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+def _close(a, b, dtype=np.float32):
+    if dtype == np.float32:
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+    else:  # bf16
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-2, atol=2e-2
+        )
+
+
+# ---------------------------------------------------------------- pick_block
+
+
+@given(dim=st.integers(1, 512), pref=st.integers(1, 512))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_divides_and_bounded(dim, pref):
+    b = pick_block(dim, pref)
+    assert 1 <= b <= dim
+    assert dim % b == 0
+    assert b <= max(1, min(pref, dim))
+
+
+def test_pick_block_exact():
+    assert pick_block(128, 128) == 128
+    assert pick_block(48, 32) == 24
+    assert pick_block(7, 4) == 1
+    assert pick_block(12, 6) == 6
+
+
+# ------------------------------------------------------------------- matmul
+
+
+@given(
+    m=st.integers(1, 48),
+    c=st.integers(1, 48),
+    n=st.integers(1, 48),
+    bm=st.sampled_from([1, 4, 8, 16, 128]),
+    bn=st.sampled_from([1, 4, 8, 16, 128]),
+    bc=st.sampled_from([1, 4, 8, 16, 128]),
+)
+@settings(max_examples=25, deadline=None)
+def test_matmul_matches_ref(m, c, n, bm, bn, bc):
+    a = _arr(m, c)
+    b = _arr(c, n)
+    out = matmul_tiled(a, b, block_m=bm, block_n=bn, block_c=bc)
+    assert out.shape == (m, n)
+    _close(out, ref.matmul_ref(a, b))
+
+
+def test_matmul_bf16():
+    a = _arr(32, 32, dtype=np.float32).astype(jnp.bfloat16)
+    b = _arr(32, 32, dtype=np.float32).astype(jnp.bfloat16)
+    out = matmul_tiled(a, b, block_m=8, block_n=8, block_c=8)
+    assert out.dtype == jnp.bfloat16
+    _close(out, ref.matmul_ref(a, b), dtype=np.float16)
+
+
+def test_matmul_identity():
+    a = _arr(16, 16)
+    eye = jnp.eye(16, dtype=jnp.float32)
+    _close(matmul_tiled(a, eye, block_m=4, block_n=4, block_c=4), a)
+
+
+def test_matmul_block_larger_than_dim():
+    a = _arr(3, 5)
+    b = _arr(5, 2)
+    _close(matmul_tiled(a, b, block_m=64, block_n=64, block_c=64), ref.matmul_ref(a, b))
+
+
+# --------------------------------------------------------------------- conv
+
+
+@given(
+    b=st.integers(1, 3),
+    x=st.integers(1, 9),
+    c=st.integers(1, 12),
+    k=st.integers(1, 12),
+    f=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    bk=st.sampled_from([1, 4, 64]),
+)
+@settings(max_examples=20, deadline=None)
+def test_conv_matches_ref(b, x, c, k, f, stride, bk):
+    xh = (x - 1) * stride + f
+    i = _arr(b, xh, xh, c)
+    w = _arr(f, f, c, k)
+    out = conv2d_tiled(i, w, stride=stride, block_k=bk)
+    assert out.shape == (b, x, x, k)
+    _close(out, ref.conv2d_ref(i, w, stride=stride))
+
+
+def test_conv_rectangular_filter():
+    i = _arr(1, 8, 10, 4)
+    w = _arr(3, 5, 4, 6)
+    _close(conv2d_tiled(i, w, block_k=2), ref.conv2d_ref(i, w))
+
+
+def test_conv_1x1_equals_matmul():
+    i = _arr(2, 6, 6, 8)
+    w = _arr(1, 1, 8, 4)
+    out = conv2d_tiled(i, w, block_k=4)
+    mm = ref.matmul_ref(i.reshape(-1, 8), w[0, 0]).reshape(2, 6, 6, 4)
+    _close(out, mm)
+
+
+def test_conv_block_k_irregular():
+    # K=6 with block_k preference 4 -> picks 3 (largest divisor <= 4)
+    i = _arr(1, 6, 6, 3)
+    w = _arr(3, 3, 3, 6)
+    _close(conv2d_tiled(i, w, block_k=4), ref.conv2d_ref(i, w))
+
+
+# ---------------------------------------------------------------- depthwise
+
+
+@given(
+    b=st.integers(1, 2),
+    x=st.integers(1, 8),
+    c=st.integers(1, 16),
+    f=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    bc=st.sampled_from([1, 8, 128]),
+)
+@settings(max_examples=15, deadline=None)
+def test_depthwise_matches_ref(b, x, c, f, stride, bc):
+    xh = (x - 1) * stride + f
+    i = _arr(b, xh, xh, c)
+    w = _arr(f, f, c)
+    out = depthwise_conv2d_tiled(i, w, stride=stride, block_c=bc)
+    assert out.shape == (b, x, x, c)
+    _close(out, ref.depthwise_conv2d_ref(i, w, stride=stride))
+
+
+def test_depthwise_vs_grouped_conv():
+    # depthwise == conv with a diagonal C->K filter bank
+    i = _arr(1, 6, 6, 4)
+    w = _arr(3, 3, 4)
+    full = jnp.zeros((3, 3, 4, 4), jnp.float32)
+    for ch in range(4):
+        full = full.at[:, :, ch, ch].set(w[:, :, ch])
+    _close(depthwise_conv2d_tiled(i, w), ref.conv2d_ref(i, full))
+
+
+# -------------------------------------------------------------- determinism
+
+
+def test_kernels_deterministic():
+    a = _arr(24, 24)
+    b = _arr(24, 24)
+    o1 = matmul_tiled(a, b, block_m=8, block_n=8, block_c=8)
+    o2 = matmul_tiled(a, b, block_m=8, block_n=8, block_c=8)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_blocking_invariance():
+    """Different block choices must compute the same function (fp-tolerant).
+
+    This is the kernel-level statement of the paper's premise: blocking
+    changes locality, never semantics.
+    """
+    a = _arr(36, 30)
+    b = _arr(30, 42)
+    base = np.asarray(matmul_tiled(a, b, block_m=36, block_n=42, block_c=30))
+    for bm, bn, bc in [(1, 1, 30), (4, 6, 5), (9, 14, 15), (36, 42, 1)]:
+        out = np.asarray(matmul_tiled(a, b, block_m=bm, block_n=bn, block_c=bc))
+        np.testing.assert_allclose(out, base, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,82 @@
+"""L2 correctness: layer-forward graphs vs oracles, shape contracts."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+def _arr(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+def _close(a, b):
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_conv_layer_shape_and_value():
+    i = _arr(2, 10, 10, 8)
+    w = _arr(3, 3, 8, 12)
+    out = model.conv_layer(i, w, block_k=4)
+    assert out.shape == (2, 8, 8, 12)
+    _close(out, ref.conv2d_ref(i, w))
+
+
+def test_pointwise_equals_1x1_conv():
+    i = _arr(2, 7, 7, 16)
+    w = _arr(16, 8)
+    _close(model.pointwise_layer(i, w), ref.conv2d_ref(i, w[None, None]))
+
+
+def test_depthwise_layer():
+    i = _arr(1, 9, 9, 8)
+    w = _arr(3, 3, 8)
+    _close(model.depthwise_layer(i, w), ref.depthwise_conv2d_ref(i, w))
+
+
+def test_fc_layer():
+    a = _arr(16, 32)
+    w = _arr(32, 10)
+    _close(model.fc_layer(a, w), ref.matmul_ref(a, w))
+
+
+@given(b=st.integers(1, 4), e=st.sampled_from([8, 16]), h=st.sampled_from([8, 16]))
+@settings(max_examples=8, deadline=None)
+def test_lstm_cell_matches_ref(b, e, h):
+    x, hh, cc = _arr(b, e), _arr(b, h), _arr(b, h)
+    w_ih, w_hh, bias = _arr(e, 4 * h), _arr(h, 4 * h), _arr(4 * h)
+    hn, cn = model.lstm_cell(x, hh, cc, w_ih, w_hh, bias)
+    hr, cr = ref.lstm_cell_ref(x, hh, cc, w_ih, w_hh, bias)
+    assert hn.shape == (b, h) and cn.shape == (b, h)
+    _close(hn, hr)
+    _close(cn, cr)
+
+
+def test_lstm_cell_state_bounded():
+    # tanh(o * ...) => |h| <= 1 elementwise
+    x, h, c = _arr(3, 16), _arr(3, 16), _arr(3, 16)
+    w_ih, w_hh, bias = _arr(16, 64), _arr(16, 64), _arr(64)
+    hn, _ = model.lstm_cell(x, h, c, w_ih, w_hh, bias)
+    assert np.all(np.abs(np.asarray(hn)) <= 1.0 + 1e-6)
+
+
+def test_conv_relu_chain_shape_preserved():
+    i = _arr(1, 8, 8, 4)
+    ws = [_arr(3, 3, 4, 8), _arr(3, 3, 8, 8)]
+    out = model.conv_relu_chain(i, ws)
+    assert out.shape == (1, 8, 8, 8)
+    assert np.all(np.asarray(out) >= 0.0)  # relu output
+
+
+def test_conv_relu_chain_matches_manual():
+    i = _arr(1, 6, 6, 3)
+    w1, w2 = _arr(3, 3, 3, 4), _arr(3, 3, 4, 4)
+    out = model.conv_relu_chain(i, [w1, w2])
+    pad = lambda t: jnp.pad(t, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    manual = jnp.maximum(ref.conv2d_ref(pad(i), w1), 0.0)
+    manual = jnp.maximum(ref.conv2d_ref(pad(manual), w2), 0.0)
+    _close(out, manual)

@@ -1,0 +1,54 @@
+//! Fig 11: per-layer energy breakdown of AlexNet, 512 B RF vs 64 B RF.
+//! Paper's claims: with a 512 B RF the RF level dominates CONV-layer
+//! energy; a 64 B RF cuts total energy substantially; FC layers stay
+//! DRAM-bound either way.
+
+use interstellar::coordinator::experiments::{self, Effort};
+use interstellar::search::default_threads;
+use interstellar::util::bench::Bencher;
+
+fn main() {
+    let threads = default_threads();
+    let mut b = Bencher::new(1);
+    let mut table = None;
+    b.bench("fig11/breakdown alexnet", || {
+        table = Some(experiments::fig11_breakdown(Effort::Fast, threads));
+    });
+    let table = table.unwrap();
+    println!("\n=== Fig 11: 512 B vs 64 B RF (AlexNet) ===");
+    print!("{}", table.to_text());
+
+    // claims on CONV3 row: RF fraction falls, energy falls
+    let csv = table.to_csv();
+    let conv3 = csv
+        .lines()
+        .find(|l| l.starts_with("CONV3"))
+        .expect("CONV3 row");
+    let cells: Vec<&str> = conv3.split(',').collect();
+    let rf_frac_big: f64 = cells[3].trim_end_matches('%').parse().unwrap();
+    let rf_frac_small: f64 = cells[5].trim_end_matches('%').parse().unwrap();
+    let gain: f64 = cells[6].trim_end_matches('x').parse().unwrap();
+    println!(
+        "\nCONV3: RF fraction {rf_frac_big}% (512B) -> {rf_frac_small}% (64B), gain {gain}x"
+    );
+    assert!(
+        rf_frac_big > 35.0 && rf_frac_big > 2.0 * rf_frac_small,
+        "512B RF should be the dominant component and shrink sharply at 64B, \
+         got {rf_frac_big}% -> {rf_frac_small}%"
+    );
+    assert!(gain > 1.3, "64B RF should cut energy, got {gain}x");
+    // FC layers are DRAM-bound: RF size barely moves them (paper §6.1)
+    let fc6 = csv.lines().find(|l| l.starts_with("FC6")).expect("FC6 row");
+    let fc_gain: f64 = fc6
+        .split(',')
+        .nth(6)
+        .unwrap()
+        .trim_end_matches('x')
+        .parse()
+        .unwrap();
+    assert!(
+        fc_gain < 1.3,
+        "FC layers should be insensitive to RF size, got {fc_gain}x"
+    );
+    println!("\nfig11 OK (Observation 2: no level should dominate)");
+}

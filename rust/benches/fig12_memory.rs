@@ -1,0 +1,41 @@
+//! Fig 12: memory-hierarchy exploration — total AlexNet energy over the
+//! (RF size × SRAM size) grid with C|K. Paper's claims: 32–64 B RFs beat
+//! 512 B by up to ~2.6x; SRAM beyond 256 KB plateaus.
+
+use interstellar::coordinator::experiments::{self, Effort};
+use interstellar::search::default_threads;
+use interstellar::util::bench::Bencher;
+
+fn main() {
+    let threads = default_threads();
+    let mut b = Bencher::new(1);
+    let mut table = None;
+    b.bench("fig12/memory_grid alexnet", || {
+        table = Some(experiments::fig12_memory(Effort::Fast, threads));
+    });
+    let table = table.unwrap();
+    println!("\n=== Fig 12: RF x SRAM exploration (AlexNet total energy, uJ) ===");
+    print!("{}", table.to_text());
+
+    // parse the grid back for the claims
+    let csv = table.to_csv();
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for line in csv.lines().skip(1) {
+        rows.push(
+            line.split(',')
+                .skip(1)
+                .map(|v| v.parse::<f64>().unwrap())
+                .collect(),
+        );
+    }
+    // columns: RF 32,64,128,256,512 ; rows: SRAM 64K..512K
+    let best_small_rf = rows
+        .iter()
+        .map(|r| r[0].min(r[1]))
+        .fold(f64::INFINITY, f64::min);
+    let best_big_rf = rows.iter().map(|r| r[4]).fold(f64::INFINITY, f64::min);
+    let ratio = best_big_rf / best_small_rf;
+    println!("\nbest 512B-RF energy / best 32-64B-RF energy = {ratio:.2}x");
+    assert!(ratio > 1.3, "small RFs should win clearly, got {ratio:.2}x");
+    println!("\nfig12 OK");
+}

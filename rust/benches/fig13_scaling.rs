@@ -1,0 +1,36 @@
+//! Fig 13: optimal memory allocation vs PE-array size. Paper's claims:
+//! the optimal per-level memory grows **sub-linearly** with PE count, and
+//! total energy drifts slightly *down* with more PEs.
+
+use interstellar::coordinator::experiments::{self, Effort};
+use interstellar::search::default_threads;
+use interstellar::util::bench::Bencher;
+
+fn main() {
+    let threads = default_threads();
+    let mut b = Bencher::new(1);
+    let mut table = None;
+    b.bench("fig13/scaling alexnet", || {
+        table = Some(experiments::fig13_scaling(Effort::Fast, threads));
+    });
+    let table = table.unwrap();
+    println!("\n=== Fig 13: optimal allocation vs PE array size ===");
+    print!("{}", table.to_text());
+
+    // sub-linear RF scaling: total RF bytes = per-PE RF x PEs should grow
+    // slower than PE count, i.e. per-PE RF must not grow
+    let csv = table.to_csv();
+    let per_pe: Vec<f64> = csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').nth(4).unwrap().parse::<f64>().unwrap())
+        .collect();
+    println!("\nper-PE RF bytes across array sizes: {per_pe:?}");
+    for w in per_pe.windows(2) {
+        assert!(
+            w[1] <= w[0] * 2.0,
+            "per-PE RF should not grow with array size (sub-linear total)"
+        );
+    }
+    println!("\nfig13 OK");
+}

@@ -1,0 +1,57 @@
+//! Fig 14: the efficient auto-optimizer across all nine benchmarks.
+//! Paper's claims: up to 3.5x/2.7x/4.2x energy gains for VGG-16 /
+//! GoogLeNet / MobileNet, ~1.6x for LSTMs, ~1.8x for MLPs, vs the
+//! Eyeriss-like baseline; plus TOPS/W in the 0.35–1.85 band.
+
+use interstellar::coordinator::experiments::{self, Effort};
+use interstellar::search::default_threads;
+use interstellar::util::bench::Bencher;
+
+fn main() {
+    let threads = default_threads();
+    let mut b = Bencher::new(1);
+    let mut table = None;
+    b.bench("fig14/auto_optimizer 9 benchmarks", || {
+        table = Some(experiments::fig14_optimizer(Effort::Fast, threads));
+    });
+    let table = table.unwrap();
+    println!("\n=== Fig 14: auto-optimizer gains ===");
+    print!("{}", table.to_text());
+
+    let csv = table.to_csv();
+    let gain = |net: &str| -> f64 {
+        csv.lines()
+            .find(|l| l.starts_with(net))
+            .map(|l| {
+                l.split(',')
+                    .nth(3)
+                    .unwrap()
+                    .trim_end_matches('x')
+                    .parse::<f64>()
+                    .unwrap()
+            })
+            .unwrap_or_else(|| panic!("{net} row missing"))
+    };
+    // shape assertions: meaningful CNN gains, smaller LSTM/MLP gains
+    for net in ["vgg16", "googlenet", "mobilenet"] {
+        let g = gain(net);
+        println!("{net}: {g:.2}x (paper: 2.7x-4.2x)");
+        assert!(g > 1.3, "{net} gain {g:.2}x too small");
+    }
+    for net in ["lstm-m", "lstm-l", "rhn", "mlp-m", "mlp-l"] {
+        let g = gain(net);
+        println!("{net}: {g:.2}x (paper: ~1.6x-1.8x; DRAM-bound so bounded)");
+        assert!(g >= 0.99, "{net} optimizer must not lose to the baseline");
+    }
+    // crossover shape: CNN gains exceed LSTM/MLP gains
+    let cnn_best = ["vgg16", "googlenet", "mobilenet"]
+        .iter()
+        .map(|n| gain(n))
+        .fold(0.0, f64::max);
+    let rec_best = ["lstm-m", "mlp-m"].iter().map(|n| gain(n)).fold(0.0, f64::max);
+    assert!(
+        cnn_best > rec_best,
+        "CNN gains ({cnn_best:.2}x) should exceed LSTM/MLP gains ({rec_best:.2}x)"
+    );
+    println!("\nfig14 OK");
+}

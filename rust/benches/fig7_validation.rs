@@ -1,0 +1,37 @@
+//! Fig 7 / Table 4: analytical model vs the exact trace simulator on the
+//! three validation ASIC designs (OS4, OS8, WS16) over AlexNet conv
+//! layers, plus the Fig 7b Eyeriss-style breakdown.
+//!
+//! The paper validates its model against post-synthesis designs at < 2 %
+//! error; our ground truth is the exact access-counting simulator and the
+//! bench FAILS (exit 1) if any error exceeds 2 %.
+
+use interstellar::coordinator::experiments;
+use interstellar::search::default_threads;
+use interstellar::util::bench::Bencher;
+
+fn main() {
+    let threads = default_threads();
+    let mut b = Bencher::new(1);
+
+    let mut table = None;
+    b.bench("fig7/model_vs_sim_full_sweep", || {
+        table = Some(experiments::fig7_validation(threads));
+    });
+    let table = table.unwrap();
+    println!("\n=== Fig 7a / Table 4: model vs simulator ===");
+    print!("{}", table.to_text());
+
+    // enforce the paper's validation bound
+    let mut worst = 0.0f64;
+    for line in table.to_csv().lines().skip(1) {
+        let err: f64 = line.split(',').nth(4).unwrap().parse().unwrap();
+        worst = worst.max(err);
+    }
+    println!("\nworst-case error: {worst:.4}% (paper bound: 2%)");
+    assert!(worst < 2.0, "validation exceeded the 2% bound");
+
+    println!("\n=== Fig 7b: AlexNet breakdown under Eyeriss RS (FY|Y) ===");
+    print!("{}", experiments::fig7b_eyeriss_breakdown(threads).to_text());
+    println!("\nfig7 OK");
+}

@@ -1,0 +1,60 @@
+//! Fig 9: PE-array utilization per dataflow, with and without
+//! replication, on a 16×16 array. The paper's claims: utilization varies
+//! wildly without replication; replication lifts almost every dataflow
+//! to high utilization; `C|K` beats `FY|Y` on AlexNet CONV3 because the
+//! channel dims are large.
+
+use interstellar::arch::ArrayShape;
+use interstellar::coordinator::experiments;
+use interstellar::dataflow::{best_replication, single_loop_map, utilization, Dataflow};
+use interstellar::util::bench::Bencher;
+use interstellar::util::stats;
+
+fn main() {
+    let conv3 = experiments::alexnet_conv3(16);
+    let g4c3r = experiments::googlenet_4c3r(16);
+    let array = ArrayShape { rows: 16, cols: 16 };
+    let mut b = Bencher::new(200);
+
+    for (name, shape) in [("AlexNet CONV3", conv3), ("GoogLeNet 4C3R", g4c3r)] {
+        println!("\n=== Fig 9: {name} ===");
+        let t = experiments::fig9_utilization(shape);
+        print!("{}", t.to_text());
+
+        // aggregate claims
+        let mut no_repl = Vec::new();
+        let mut with_repl = Vec::new();
+        for line in t.to_csv().lines().skip(1) {
+            let mut it = line.split(',');
+            it.next();
+            no_repl.push(it.next().unwrap().parse::<f64>().unwrap());
+            with_repl.push(it.next().unwrap().parse::<f64>().unwrap());
+        }
+        println!(
+            "mean util: {:.2} (no repl) -> {:.2} (repl); min {:.2} -> {:.2}",
+            stats::mean(&no_repl),
+            stats::mean(&with_repl),
+            stats::min(&no_repl),
+            stats::min(&with_repl)
+        );
+        assert!(stats::mean(&with_repl) > stats::mean(&no_repl));
+        assert!(stats::mean(&with_repl) > 0.8, "replication should lift mean util > 0.8");
+    }
+
+    // C|K vs FY|Y on CONV3 (paper: ~20% better)
+    let ck = best_replication(&conv3, &Dataflow::parse("C|K").unwrap(), &array);
+    let fyy = single_loop_map(&conv3, &Dataflow::parse("FY|Y").unwrap(), &array);
+    let (u_ck, u_fyy) = (
+        utilization(&conv3, &ck, &array),
+        utilization(&conv3, &fyy, &array),
+    );
+    println!("\nC|K util {u_ck:.3} vs plain FY|Y {u_fyy:.3} ({:.0}% better)", 100.0 * (u_ck / u_fyy - 1.0));
+    assert!(u_ck > u_fyy);
+
+    b.bench("fig9/best_replication conv3 all dataflows", || {
+        for df in interstellar::dataflow::enumerate_dataflows(&conv3) {
+            std::hint::black_box(best_replication(&conv3, &df, &array));
+        }
+    });
+    println!("\nfig9 OK");
+}

@@ -1,0 +1,59 @@
+//! §Perf: microbenchmarks of the L3 hot path — the analytical-model
+//! evaluation and blocking enumeration that every sweep spends its time
+//! in — plus the end-to-end per-layer optimization. Tracked in
+//! EXPERIMENTS.md §Perf across optimization iterations.
+
+use interstellar::arch::eyeriss_like;
+use interstellar::coordinator::experiments;
+use interstellar::dataflow::Dataflow;
+use interstellar::energy::Table3;
+use interstellar::search::{
+    divisor_replication, enumerate_blockings, optimize_layer, SearchOpts,
+};
+use interstellar::util::bench::{black_box, Bencher};
+use interstellar::xmodel::evaluate;
+use interstellar::loopnest::{Blocking, LevelOrder, Mapping, Tensor};
+
+fn main() {
+    let shape = experiments::alexnet_conv3(4);
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").unwrap();
+    let smap = divisor_replication(&shape, &df, &arch.array);
+    let spatial = smap.factors();
+    let opts = SearchOpts::capped(2000, 6);
+
+    let mut b = Bencher::new(400);
+
+    // 1. single model evaluation (the innermost hot op)
+    let tables = enumerate_blockings(&shape, &arch, spatial, &opts);
+    let orders = vec![LevelOrder::stationary_for(Tensor::Output); arch.num_levels()];
+    let mapping = Mapping {
+        shape,
+        blocking: Blocking {
+            factors: tables[tables.len() / 2].clone(),
+        },
+        orders,
+        spatial,
+        spatial_at: arch.rf_levels(),
+    };
+    b.bench("perf/evaluate_one_mapping", || {
+        black_box(evaluate(black_box(&mapping), &smap, &arch, &Table3).unwrap());
+    });
+
+    // 2. blocking enumeration
+    b.bench("perf/enumerate_blockings(2000 cap)", || {
+        black_box(enumerate_blockings(&shape, &arch, spatial, &opts));
+    });
+
+    // 3. end-to-end per-layer optimization, 1 thread vs N threads
+    let small_opts = SearchOpts::capped(600, 5);
+    b.bench("perf/optimize_layer conv3 (1 thread)", || {
+        black_box(optimize_layer(&shape, &arch, &df, &Table3, &small_opts, 1));
+    });
+    let n = interstellar::search::default_threads();
+    b.bench(&format!("perf/optimize_layer conv3 ({n} threads)"), || {
+        black_box(optimize_layer(&shape, &arch, &df, &Table3, &small_opts, n));
+    });
+
+    println!("\nperf_hotpath done (record these in EXPERIMENTS.md §Perf)");
+}

@@ -1,0 +1,31 @@
+//! End-to-end serving bench: latency/throughput of the PJRT artifact
+//! registry under the multi-worker request loop (the L3 request path).
+//! Skips cleanly when `artifacts/` has not been built.
+
+use std::path::Path;
+
+use interstellar::coordinator::serve::{mixed_trace, serve};
+use interstellar::search::default_threads;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("serve_e2e SKIPPED: run `make artifacts` first");
+        return;
+    }
+    for threads in [1, 2, default_threads()] {
+        let stats = serve(dir, mixed_trace(120, 99), threads).expect("serve");
+        println!(
+            "bench serve/mixed_trace threads={threads:<2} mean {:>7.3} ms  p95 {:>7.3} ms  {:>7.1} req/s",
+            stats.mean_latency_ms, stats.p95_latency_ms, stats.rps
+        );
+    }
+    // determinism: same trace, same checksum
+    let a = serve(dir, mixed_trace(40, 5), 2).unwrap();
+    let b = serve(dir, mixed_trace(40, 5), 4).unwrap();
+    assert!(
+        (a.checksum - b.checksum).abs() < 1e-3 * a.checksum.abs().max(1.0),
+        "serving must be deterministic across worker counts"
+    );
+    println!("serve_e2e OK (deterministic across worker counts)");
+}

@@ -1,0 +1,24 @@
+//! Table 3: the energy cost table (anchors + interpolation) and the cost
+//! model's lookup throughput.
+
+use interstellar::coordinator::experiments;
+use interstellar::energy::{CostModel, Table3};
+use interstellar::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("=== Table 3: energy per 16-bit access ===");
+    print!("{}", experiments::table3().to_text());
+
+    let mut b = Bencher::new(200);
+    let m = Table3;
+    b.bench("table3/reg_access_lookup", || {
+        for s in [8u64, 16, 64, 512] {
+            black_box(m.reg_access(black_box(s)));
+        }
+    });
+    b.bench("table3/sram_access_lookup", || {
+        for s in [32u64 << 10, 256 << 10, 28 << 20] {
+            black_box(m.sram_access(black_box(s)));
+        }
+    });
+}

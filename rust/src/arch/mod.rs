@@ -1,0 +1,386 @@
+//! Hardware resource allocation: PE arrays, memory hierarchies, and the
+//! paper's reference configurations (§6).
+
+use crate::util::fmt_bytes;
+
+/// Kind of a storage level — selects the energy formula and whether the
+/// level is per-PE or shared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LevelKind {
+    /// Per-PE register file (linear energy in size).
+    Reg,
+    /// Shared on-chip SRAM buffer (×1.5 per size doubling).
+    Sram,
+    /// Off-chip DRAM (flat per-access cost).
+    Dram,
+}
+
+/// One storage level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemLevel {
+    /// Display name ("RF", "RF2", "GBUF", "DRAM").
+    pub name: String,
+    /// Kind (see [`LevelKind`]).
+    pub kind: LevelKind,
+    /// Capacity in bytes **per instance** (per PE for `Reg`, total for
+    /// `Sram`). Ignored for DRAM.
+    pub size_bytes: u64,
+}
+
+impl MemLevel {
+    /// Per-PE register file of `size` bytes.
+    pub fn reg(name: &str, size: u64) -> Self {
+        MemLevel {
+            name: name.into(),
+            kind: LevelKind::Reg,
+            size_bytes: size,
+        }
+    }
+
+    /// Shared SRAM buffer of `size` bytes.
+    pub fn sram(name: &str, size: u64) -> Self {
+        MemLevel {
+            name: name.into(),
+            kind: LevelKind::Sram,
+            size_bytes: size,
+        }
+    }
+
+    /// Off-chip DRAM.
+    pub fn dram() -> Self {
+        MemLevel {
+            name: "DRAM".into(),
+            kind: LevelKind::Dram,
+            size_bytes: u64::MAX,
+        }
+    }
+}
+
+/// PE array dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayShape {
+    /// Vertical dimension (the `U` axis of `U | V`).
+    pub rows: u32,
+    /// Horizontal dimension (the `V` axis). 1 for 1D arrays.
+    pub cols: u32,
+}
+
+impl ArrayShape {
+    /// Total PEs.
+    pub fn pes(&self) -> u64 {
+        self.rows as u64 * self.cols as u64
+    }
+}
+
+/// On-chip interconnect style between the shared buffer and the PEs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrayBus {
+    /// Systolic / neighbor forwarding: shared data moves PE-to-PE at hop
+    /// cost (the paper's default; enables the inter-PE "level").
+    Systolic,
+    /// Broadcast-only bus: no inter-PE communication, every delivery comes
+    /// from the shared buffer (the red configuration in Fig 8).
+    Broadcast,
+}
+
+/// A complete accelerator resource allocation.
+///
+/// `levels` is ordered innermost → outermost and must be: one or more
+/// `Reg` levels (per-PE), then zero or more `Sram` levels, then exactly
+/// one `Dram`. The PE array sits between the outermost `Reg` and the
+/// first shared level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    /// Display name.
+    pub name: String,
+    /// Storage levels, innermost first, DRAM last.
+    pub levels: Vec<MemLevel>,
+    /// PE array shape.
+    pub array: ArrayShape,
+    /// Interconnect style.
+    pub bus: ArrayBus,
+    /// Word size in bytes (paper: 16-bit = 2).
+    pub word_bytes: u32,
+    /// DRAM bandwidth in bytes per cycle (for the performance bound).
+    pub dram_bw_bytes_per_cycle: f64,
+}
+
+impl Arch {
+    /// Number of per-PE register levels (== `Mapping::spatial_at`).
+    pub fn rf_levels(&self) -> usize {
+        self.levels
+            .iter()
+            .take_while(|l| l.kind == LevelKind::Reg)
+            .count()
+    }
+
+    /// Total temporal levels (register + shared, incl. DRAM).
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Words that fit in level `i` (per instance).
+    pub fn level_words(&self, i: usize) -> u64 {
+        if self.levels[i].kind == LevelKind::Dram {
+            u64::MAX
+        } else {
+            self.levels[i].size_bytes / self.word_bytes as u64
+        }
+    }
+
+    /// Validate the level ordering contract.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen_sram = false;
+        let mut seen_dram = false;
+        if self.levels.is_empty() {
+            return Err("no levels".into());
+        }
+        for l in &self.levels {
+            match l.kind {
+                LevelKind::Reg => {
+                    if seen_sram || seen_dram {
+                        return Err(format!("Reg level {} after shared levels", l.name));
+                    }
+                }
+                LevelKind::Sram => {
+                    if seen_dram {
+                        return Err(format!("Sram level {} after DRAM", l.name));
+                    }
+                    seen_sram = true;
+                }
+                LevelKind::Dram => {
+                    if seen_dram {
+                        return Err("multiple DRAM levels".into());
+                    }
+                    seen_dram = true;
+                }
+            }
+        }
+        if !seen_dram {
+            return Err("missing DRAM level".into());
+        }
+        if self.rf_levels() == 0 {
+            return Err("need at least one Reg level".into());
+        }
+        Ok(())
+    }
+
+    /// One-line description for reports.
+    pub fn describe(&self) -> String {
+        let levels = self
+            .levels
+            .iter()
+            .map(|l| {
+                if l.kind == LevelKind::Dram {
+                    l.name.clone()
+                } else {
+                    format!("{} {}", l.name, fmt_bytes(l.size_bytes))
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" / ");
+        format!(
+            "{}: {}x{} PEs ({:?}), {}",
+            self.name, self.array.rows, self.array.cols, self.bus, levels
+        )
+    }
+}
+
+/// The Eyeriss-like baseline (blue config in Fig 8): 512 B RF per PE,
+/// 128 KB global buffer, 16×16 systolic array.
+pub fn eyeriss_like() -> Arch {
+    Arch {
+        name: "eyeriss-like".into(),
+        levels: vec![
+            MemLevel::reg("RF", 512),
+            MemLevel::sram("GBUF", 128 << 10),
+            MemLevel::dram(),
+        ],
+        array: ArrayShape { rows: 16, cols: 16 },
+        bus: ArrayBus::Systolic,
+        word_bytes: 2,
+        dram_bw_bytes_per_cycle: 16.0,
+    }
+}
+
+/// The red config in Fig 8: same resources but a broadcast-only bus
+/// (inter-PE communication disabled).
+pub fn no_local_reuse() -> Arch {
+    Arch {
+        name: "broadcast-bus".into(),
+        bus: ArrayBus::Broadcast,
+        ..eyeriss_like()
+    }
+}
+
+/// The green config in Fig 8: a 64 B RF to lower per-access energy.
+pub fn small_rf() -> Arch {
+    let mut a = eyeriss_like();
+    a.name = "small-rf".into();
+    a.levels[0] = MemLevel::reg("RF", 64);
+    a
+}
+
+/// The paper's large cloud-class baseline (§6.3): 128×128 PEs, 8 B
+/// register per PE, 64 KB L1 buffer, 28 MB L2 buffer.
+pub fn tpu_like() -> Arch {
+    Arch {
+        name: "tpu-like".into(),
+        levels: vec![
+            MemLevel::reg("RF", 8),
+            MemLevel::sram("L1", 64 << 10),
+            MemLevel::sram("L2", 28 << 20),
+            MemLevel::dram(),
+        ],
+        array: ArrayShape { rows: 128, cols: 128 },
+        bus: ArrayBus::Systolic,
+        word_bytes: 2,
+        dram_bw_bytes_per_cycle: 64.0,
+    }
+}
+
+/// The paper's optimized mobile configuration (§6.3 result): two-level
+/// register file (16 B + 128 B) and a 256 KB global double buffer.
+pub fn optimized_mobile() -> Arch {
+    Arch {
+        name: "optimized-mobile".into(),
+        levels: vec![
+            MemLevel::reg("RF1", 16),
+            MemLevel::reg("RF2", 128),
+            MemLevel::sram("GBUF", 256 << 10),
+            MemLevel::dram(),
+        ],
+        array: ArrayShape { rows: 16, cols: 16 },
+        bus: ArrayBus::Systolic,
+        word_bytes: 2,
+        dram_bw_bytes_per_cycle: 16.0,
+    }
+}
+
+/// Table 4 validation designs: OS4, OS8, WS16.
+pub fn validation_designs() -> Vec<(Arch, &'static str)> {
+    vec![
+        (
+            Arch {
+                name: "OS4".into(),
+                levels: vec![
+                    MemLevel::reg("RF", 32),
+                    MemLevel::sram("GBUF", 32 << 10),
+                    MemLevel::dram(),
+                ],
+                array: ArrayShape { rows: 4, cols: 1 },
+                bus: ArrayBus::Systolic,
+                word_bytes: 2,
+                dram_bw_bytes_per_cycle: 8.0,
+            },
+            "X", // output-stationary: X unrolled on the 1D array
+        ),
+        (
+            Arch {
+                name: "OS8".into(),
+                levels: vec![
+                    MemLevel::reg("RF", 64),
+                    MemLevel::sram("GBUF", 64 << 10),
+                    MemLevel::dram(),
+                ],
+                array: ArrayShape { rows: 8, cols: 1 },
+                bus: ArrayBus::Systolic,
+                word_bytes: 2,
+                dram_bw_bytes_per_cycle: 8.0,
+            },
+            "X",
+        ),
+        (
+            Arch {
+                name: "WS16".into(),
+                levels: vec![
+                    MemLevel::reg("RF", 64),
+                    MemLevel::sram("GBUF", 32 << 10),
+                    MemLevel::dram(),
+                ],
+                array: ArrayShape { rows: 4, cols: 4 },
+                bus: ArrayBus::Systolic,
+                word_bytes: 2,
+                dram_bw_bytes_per_cycle: 8.0,
+            },
+            "C|K",
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_configs_validate() {
+        for a in [
+            eyeriss_like(),
+            no_local_reuse(),
+            small_rf(),
+            tpu_like(),
+            optimized_mobile(),
+        ] {
+            a.validate().unwrap_or_else(|e| panic!("{}: {e}", a.name));
+        }
+        for (a, _) in validation_designs() {
+            a.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn eyeriss_config_matches_paper() {
+        let a = eyeriss_like();
+        assert_eq!(a.levels[0].size_bytes, 512);
+        assert_eq!(a.levels[1].size_bytes, 128 << 10);
+        assert_eq!(a.array.pes(), 256);
+        assert_eq!(a.rf_levels(), 1);
+        // 512 B RF at 2 B words = 256 words
+        assert_eq!(a.level_words(0), 256);
+        assert_eq!(a.level_words(2), u64::MAX);
+    }
+
+    #[test]
+    fn tpu_config_matches_paper() {
+        let a = tpu_like();
+        assert_eq!(a.array.pes(), 16384);
+        assert_eq!(a.levels[2].size_bytes, 28 << 20);
+        assert_eq!(a.num_levels(), 4);
+    }
+
+    #[test]
+    fn two_level_rf_counts() {
+        assert_eq!(optimized_mobile().rf_levels(), 2);
+    }
+
+    #[test]
+    fn validate_rejects_bad_orders() {
+        let bad = Arch {
+            name: "bad".into(),
+            levels: vec![MemLevel::sram("S", 1024), MemLevel::reg("R", 64), MemLevel::dram()],
+            array: ArrayShape { rows: 1, cols: 1 },
+            bus: ArrayBus::Systolic,
+            word_bytes: 2,
+            dram_bw_bytes_per_cycle: 1.0,
+        };
+        assert!(bad.validate().is_err());
+
+        let no_dram = Arch {
+            name: "nodram".into(),
+            levels: vec![MemLevel::reg("R", 64)],
+            array: ArrayShape { rows: 1, cols: 1 },
+            bus: ArrayBus::Systolic,
+            word_bytes: 2,
+            dram_bw_bytes_per_cycle: 1.0,
+        };
+        assert!(no_dram.validate().is_err());
+    }
+
+    #[test]
+    fn describe_mentions_sizes() {
+        let d = eyeriss_like().describe();
+        assert!(d.contains("512 B"));
+        assert!(d.contains("128 KB"));
+        assert!(d.contains("16x16"));
+    }
+}

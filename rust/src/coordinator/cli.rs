@@ -1,0 +1,195 @@
+//! The `interstellar` CLI: subcommands for optimization, sweeps,
+//! validation, schedule display, and the end-to-end serving driver.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use super::experiments::{self, Effort};
+use super::serve;
+use crate::arch::{eyeriss_like, ArrayShape};
+use crate::dataflow::Dataflow;
+use crate::energy::Table3;
+use crate::nn::network;
+use crate::search::{default_threads, optimize_network, search_hierarchy, SearchOpts};
+use crate::util::{fmt_sig, Args};
+
+const USAGE: &str = "interstellar — Halide-schedule analysis of DNN accelerators (ASPLOS'20 reproduction)
+
+USAGE: interstellar <command> [options]
+
+COMMANDS:
+  optimize        --net <name> [--batch N] [--rows 16 --cols 16] [--full]
+                  run the auto-optimizer (fix C|K + ratio rule) on a network
+  sweep-dataflow  [--layer conv3|4c3r] [--batch N] [--full]   (Fig 8)
+  utilization     [--layer conv3|4c3r] [--batch N]            (Fig 9)
+  sweep-blocking  [--layer conv3|4c3r] [--batch N] [--full]   (Fig 10)
+  breakdown       [--full]                                    (Fig 11)
+  sweep-memory    [--full]                                    (Fig 12)
+  scaling         [--full]                                    (Fig 13)
+  optimizer-gains [--full]                                    (Fig 14)
+  validate        model-vs-simulator validation               (Fig 7 / Table 4)
+  table3          print the energy cost table                 (Table 3)
+  schedules       print prior-work schedules lowered to IR    (Listing 2 / Fig 6)
+  run-e2e         [--requests N] [--threads N] [--artifacts DIR]
+                  serve a mixed trace through the PJRT artifacts
+  report          run every experiment at fast effort
+
+Common options: --threads N (default: cores-1), --csv (CSV output), --full";
+
+/// CLI entrypoint.
+pub fn run(args: Args) -> Result<()> {
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let threads = args.get_usize("threads", default_threads());
+    let effort = if args.has_flag("full") {
+        Effort::Full
+    } else {
+        Effort::Fast
+    };
+    let csv = args.has_flag("csv");
+    let show = |t: &crate::util::table::Table| {
+        if csv {
+            print!("{}", t.to_csv());
+        } else {
+            print!("{}", t.to_text());
+        }
+    };
+
+    let layer_shape = |args: &Args| {
+        let batch = args.get_u64("batch", effort.batch_for_cli());
+        match args.get_str("layer", "conv3") {
+            "4c3r" => experiments::googlenet_4c3r(batch),
+            _ => experiments::alexnet_conv3(batch),
+        }
+    };
+
+    match cmd {
+        "optimize" => {
+            let name = args.get_str("net", "alexnet");
+            let batch = args.get_u64("batch", 4);
+            let Some(net) = network(name, batch) else {
+                bail!("unknown network {name} (try: {:?})", crate::nn::network_names());
+            };
+            let rows = args.get_u64("rows", 16) as u32;
+            let cols = args.get_u64("cols", 16) as u32;
+            println!("optimizing {name} (batch {batch}) on {rows}x{cols} PEs...");
+            let opts = effort_opts(effort);
+            let df = Dataflow::parse("C|K").unwrap();
+            let baseline =
+                optimize_network(&net, &eyeriss_like(), &df, &Table3, &opts, threads);
+            let results =
+                search_hierarchy(&net, ArrayShape { rows, cols }, &Table3, &opts, threads);
+            let Some(best) = results.first() else {
+                bail!("no feasible hierarchy found");
+            };
+            println!("baseline (Eyeriss-like): {} uJ", fmt_sig(baseline.total_energy_pj / 1e6));
+            println!(
+                "optimized: {} uJ on {}  ({:.2}x better, {:.2} TOPS/W)",
+                fmt_sig(best.opt.total_energy_pj / 1e6),
+                best.arch.describe(),
+                baseline.total_energy_pj / best.opt.total_energy_pj,
+                best.opt.tops_per_watt(),
+            );
+            println!("\ntop-5 hierarchies:");
+            for r in results.iter().take(5) {
+                println!(
+                    "  {:<24} {} uJ",
+                    r.arch.name,
+                    fmt_sig(r.opt.total_energy_pj / 1e6)
+                );
+            }
+        }
+        "sweep-dataflow" => show(&experiments::fig8_dataflow(layer_shape(&args), effort, threads)),
+        "utilization" => show(&experiments::fig9_utilization(layer_shape(&args))),
+        "sweep-blocking" => show(&experiments::fig10_blocking(layer_shape(&args), effort, threads)),
+        "breakdown" => show(&experiments::fig11_breakdown(effort, threads)),
+        "sweep-memory" => show(&experiments::fig12_memory(effort, threads)),
+        "scaling" => show(&experiments::fig13_scaling(effort, threads)),
+        "optimizer-gains" => show(&experiments::fig14_optimizer(effort, threads)),
+        "validate" => show(&experiments::fig7_validation(threads)),
+        "table3" => show(&experiments::table3()),
+        "schedules" => print_schedules(),
+        "run-e2e" => {
+            let n = args.get_usize("requests", 200);
+            let dir = PathBuf::from(args.get_str("artifacts", "artifacts"));
+            let trace = serve::mixed_trace(n, 42);
+            println!("serving {n} requests from {} on {threads} workers...", dir.display());
+            let stats = serve::serve(&dir, trace, threads)?;
+            println!(
+                "completed {}  wall {:.2}s  mean {:.2} ms  p95 {:.2} ms  {:.1} req/s  checksum {:.3}",
+                stats.completed,
+                stats.wall_s,
+                stats.mean_latency_ms,
+                stats.p95_latency_ms,
+                stats.rps,
+                stats.checksum
+            );
+        }
+        "report" => {
+            println!("== Table 3 ==");
+            show(&experiments::table3());
+            println!("\n== Fig 7 (validation) ==");
+            show(&experiments::fig7_validation(threads));
+            println!("\n== Fig 8 (dataflows, AlexNet CONV3) ==");
+            show(&experiments::fig8_dataflow(
+                experiments::alexnet_conv3(4),
+                effort,
+                threads,
+            ));
+            println!("\n== Fig 9 (utilization) ==");
+            show(&experiments::fig9_utilization(experiments::alexnet_conv3(4)));
+            println!("\n== Fig 10 (blocking) ==");
+            show(&experiments::fig10_blocking(
+                experiments::alexnet_conv3(4),
+                effort,
+                threads,
+            ));
+            println!("\n== Fig 11 (RF breakdown) ==");
+            show(&experiments::fig11_breakdown(effort, threads));
+            println!("\n== Fig 12 (memory sweep) ==");
+            show(&experiments::fig12_memory(effort, threads));
+            println!("\n== Fig 13 (scaling) ==");
+            show(&experiments::fig13_scaling(effort, threads));
+            println!("\n== Fig 14 (optimizer gains) ==");
+            show(&experiments::fig14_optimizer(effort, threads));
+        }
+        other => {
+            println!("unknown command: {other}\n\n{USAGE}");
+        }
+    }
+    Ok(())
+}
+
+fn effort_opts(e: Effort) -> SearchOpts {
+    match e {
+        Effort::Fast => SearchOpts::capped(600, 5),
+        Effort::Full => SearchOpts::capped(20_000, 8),
+    }
+}
+
+impl Effort {
+    fn batch_for_cli(self) -> u64 {
+        match self {
+            Effort::Fast => 4,
+            Effort::Full => 16,
+        }
+    }
+}
+
+fn print_schedules() {
+    use crate::halide::{diannao_tree, eyeriss_rs, nvdla_like, print_ir, shidiannao_os, tpu_ck};
+    let conv3 = experiments::alexnet_conv3(4);
+    for s in [
+        eyeriss_rs(conv3, 16, 16),
+        tpu_ck(conv3, 16, 16),
+        shidiannao_os(conv3, 16, 16),
+        diannao_tree(conv3, 16),
+        nvdla_like(conv3, 16, 16),
+    ] {
+        println!("== {} ==", s.name);
+        println!("{}", print_ir(&s));
+    }
+}

@@ -1,0 +1,12 @@
+//! The L3 coordinator: experiment drivers that regenerate every paper
+//! table/figure, the batched-serving loop over the PJRT runtime, and the
+//! CLI that fronts it all.
+
+pub mod cli;
+pub mod experiments;
+pub mod serve;
+
+pub use experiments::Effort;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,120 @@
+//! Batched request serving over the PJRT runtime — the request-path loop
+//! of the e2e driver. Worker threads pull layer-inference requests from a
+//! shared queue, batch-execute the AOT artifact, and report per-request
+//! latency; Python is never involved.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::util::XorShift;
+
+/// One serving request: which artifact to run (inputs are generated
+/// per-request from the seed).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Artifact name.
+    pub artifact: String,
+    /// Input seed.
+    pub seed: u64,
+}
+
+/// Serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Requests completed.
+    pub completed: usize,
+    /// Wall time of the whole run, seconds.
+    pub wall_s: f64,
+    /// Mean per-request latency, milliseconds.
+    pub mean_latency_ms: f64,
+    /// p95 per-request latency, milliseconds.
+    pub p95_latency_ms: f64,
+    /// Throughput, requests/second.
+    pub rps: f64,
+    /// Output checksum (sum of all output elements) for determinism
+    /// checks.
+    pub checksum: f64,
+}
+
+/// Run `requests` against the artifact registry in `artifacts_dir` using
+/// `threads` workers. PJRT clients are not `Sync`, so each worker owns a
+/// full runtime replica (the standard per-worker-model-replica serving
+/// layout); request pulling is work-stealing over a shared counter.
+pub fn serve(artifacts_dir: &Path, requests: Vec<Request>, threads: usize) -> Result<ServeStats> {
+    let n = requests.len();
+    let next = AtomicUsize::new(0);
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(n));
+    let checksum = Mutex::new(0.0f64);
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for _ in 0..threads.max(1) {
+            let requests = &requests;
+            let next = &next;
+            let latencies = &latencies;
+            let checksum = &checksum;
+            handles.push(scope.spawn(move || -> Result<()> {
+                let rt = Runtime::load(artifacts_dir)?; // per-worker replica
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return Ok(());
+                    }
+                    let req = &requests[i];
+                    let entry = rt
+                        .entry(&req.artifact)
+                        .ok_or_else(|| anyhow::anyhow!("unknown artifact {}", req.artifact))?
+                        .clone();
+                    let mut rng = XorShift::new(req.seed);
+                    let inputs: Vec<Vec<f32>> = entry
+                        .inputs
+                        .iter()
+                        .map(|spec| rng.f32_vec(spec.elems() as usize))
+                        .collect();
+                    let t = Instant::now();
+                    let outs = rt.execute_f32(&req.artifact, &inputs)?;
+                    let dt = t.elapsed().as_secs_f64() * 1e3;
+                    let s: f64 = outs
+                        .iter()
+                        .map(|o| o.iter().map(|&v| v as f64).sum::<f64>())
+                        .sum();
+                    latencies.lock().unwrap().push(dt);
+                    *checksum.lock().unwrap() += s;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked")?;
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let lat = latencies.into_inner().unwrap();
+    Ok(ServeStats {
+        completed: lat.len(),
+        wall_s: wall,
+        mean_latency_ms: crate::util::stats::mean(&lat),
+        p95_latency_ms: crate::util::stats::percentile(&lat, 95.0),
+        rps: lat.len() as f64 / wall,
+        checksum: checksum.into_inner().unwrap(),
+    })
+}
+
+/// Build a mixed request trace over the available artifacts.
+pub fn mixed_trace(n: usize, seed: u64) -> Vec<Request> {
+    let kinds = ["conv3x3", "conv1x1", "fc", "lstm_cell", "conv_chain"];
+    let mut rng = XorShift::new(seed);
+    (0..n)
+        .map(|i| Request {
+            artifact: kinds[rng.below(kinds.len() as u64) as usize].to_string(),
+            seed: seed ^ (i as u64).wrapping_mul(0x9E37),
+        })
+        .collect()
+}

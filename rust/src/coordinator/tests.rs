@@ -1,0 +1,90 @@
+//! Coordinator tests: experiment drivers produce well-formed tables and
+//! the serving trace generator is deterministic.
+
+use super::experiments::{self, Effort};
+use super::serve::mixed_trace;
+
+#[test]
+fn table3_has_all_anchor_rows() {
+    let t = experiments::table3();
+    let txt = t.to_text();
+    for needle in ["16 B", "512 B", "32 KB", "512 KB", "MAC", "Hop", "DRAM", "28 MB"] {
+        assert!(txt.contains(needle), "missing {needle} in\n{txt}");
+    }
+}
+
+#[test]
+fn fig9_table_covers_all_dataflows() {
+    let t = experiments::fig9_utilization(experiments::alexnet_conv3(4));
+    assert_eq!(t.len(), 21, "CONV layer has (7 choose 2) dataflows");
+    // every row's utilizations parse and are in (0, 1]
+    for line in t.to_csv().lines().skip(1) {
+        let mut cells = line.split(',');
+        cells.next();
+        let u0: f64 = cells.next().unwrap().parse().unwrap();
+        let u1: f64 = cells.next().unwrap().parse().unwrap();
+        assert!(u0 > 0.0 && u0 <= 1.0);
+        assert!(u1 > 0.0 && u1 <= 1.0);
+        assert!(u1 + 1e-9 >= u0, "replication must not hurt: {line}");
+    }
+}
+
+#[test]
+fn spotlight_layers_shapes() {
+    let layers = experiments::spotlight_layers(Effort::Fast);
+    assert_eq!(layers.len(), 4);
+    // 4C3R is a pointwise layer
+    assert_eq!(layers[2].1.bounds[5], 1);
+    // CONV3 has a 3x3 filter
+    assert_eq!(layers[0].1.bounds[5], 3);
+}
+
+#[test]
+fn fig10_metrics_present() {
+    let t = experiments::fig10_blocking(
+        crate::loopnest::Shape::new(1, 16, 16, 6, 6, 3, 3, 1),
+        Effort::Fast,
+        1,
+    );
+    let txt = t.to_text();
+    assert!(txt.contains("schemes evaluated"));
+    assert!(txt.contains("% within 1.25x of min"));
+    assert!(txt.contains("bucket"));
+}
+
+#[test]
+fn mixed_trace_deterministic_and_mixed() {
+    let a = mixed_trace(50, 7);
+    let b = mixed_trace(50, 7);
+    assert_eq!(a.len(), 50);
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.artifact, y.artifact);
+        assert_eq!(x.seed, y.seed);
+    }
+    // different seeds give a different mix
+    let c = mixed_trace(50, 8);
+    assert!(a.iter().zip(c.iter()).any(|(x, y)| x.artifact != y.artifact));
+    // at least 3 artifact kinds appear
+    let kinds: std::collections::HashSet<_> = a.iter().map(|r| r.artifact.clone()).collect();
+    assert!(kinds.len() >= 3, "{kinds:?}");
+}
+
+#[test]
+fn ablation_cost_models_runs() {
+    let t = experiments::ablation_cost_models(
+        crate::loopnest::Shape::new(1, 8, 8, 4, 4, 3, 3, 1),
+        1,
+    );
+    assert_eq!(t.len(), 4);
+    // spreads parse as "N.NNx" and stay sane under every cost model
+    for line in t.to_csv().lines().skip(1) {
+        let spread: f64 = line
+            .split(',')
+            .nth(1)
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!(spread >= 1.0 && spread < 20.0, "{line}");
+    }
+}

@@ -1,0 +1,12 @@
+//! The `U | V` dataflow taxonomy (§3.2): which loops are spatially
+//! unrolled on each physical array axis, with replication (multiple loops
+//! per axis) and the communication-distance model of Fig 3.
+
+mod replication;
+mod taxonomy;
+
+pub use replication::{best_replication, single_loop_map, utilization};
+pub use taxonomy::{enumerate_dataflows, named_dataflows, Dataflow, SpatialMap};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,148 @@
+//! Replication (§3.2, Fig 2): packing multiple loops onto one physical
+//! array axis to raise utilization, and the utilization model itself.
+
+use super::taxonomy::{Dataflow, SpatialMap};
+use crate::arch::ArrayShape;
+use crate::loopnest::{Dim, Shape, ALL_DIMS};
+use crate::util::ceil_div;
+
+/// PE-array utilization of a concrete spatial map on `array` for `shape`:
+/// useful work over occupied capacity, accounting for ceil fragmentation
+/// on every unrolled loop (Fig 2's 3/16 vs 15/16).
+pub fn utilization(shape: &Shape, map: &SpatialMap, array: &ArrayShape) -> f64 {
+    let mut work: f64 = 1.0;
+    let mut capacity: f64 = 1.0;
+    for (d, e) in map.u.iter().chain(map.v.iter()) {
+        let bound = shape.bound(*d);
+        let passes = ceil_div(bound, *e);
+        work *= bound as f64;
+        capacity *= (passes * e) as f64;
+    }
+    // idle PEs on each axis also count as occupied capacity
+    let used_u = map.axis_extent(true);
+    let used_v = map.axis_extent(false);
+    if used_u > array.rows as u64 || used_v > array.cols as u64 {
+        return 0.0; // does not fit
+    }
+    capacity *= array.rows as f64 / used_u as f64;
+    capacity *= array.cols as f64 / used_v as f64;
+    work / capacity
+}
+
+/// The no-replication spatial map for a dataflow label: each axis unrolls
+/// its single primary loop with extent `min(bound, axis size)` (the best
+/// single-loop extent is the full axis, or the bound when smaller).
+pub fn single_loop_map(shape: &Shape, df: &Dataflow, array: &ArrayShape) -> SpatialMap {
+    let mk = |dims: &[Dim], size: u64| -> Vec<(Dim, u64)> {
+        dims.first()
+            .map(|&d| vec![(d, best_single_extent(shape.bound(d), size))])
+            .into_iter()
+            .flatten()
+            .collect()
+    };
+    SpatialMap {
+        u: mk(&df.u, array.rows as u64),
+        v: mk(&df.v, array.cols as u64),
+    }
+}
+
+/// Best extent for unrolling a single loop of `bound` onto an axis of
+/// `size` PEs: maximizes `bound / (ceil(bound/e) * e)` with `e <= size`,
+/// breaking ties toward larger `e` (more parallelism).
+fn best_single_extent(bound: u64, size: u64) -> u64 {
+    let mut best_e = 1;
+    let mut best_score = 0.0;
+    for e in 1..=size.min(bound.max(1)) {
+        let score = bound as f64 / ((ceil_div(bound, e) * e) as f64);
+        let better = score > best_score + 1e-12
+            || ((score - best_score).abs() <= 1e-12 && e > best_e);
+        if better {
+            best_e = e;
+            best_score = score;
+        }
+    }
+    best_e
+}
+
+/// Greedily pack extra loops onto one axis of `map` while utilization
+/// improves. Mutates `map` and `used`.
+fn greedy_fill(
+    shape: &Shape,
+    map: &mut SpatialMap,
+    used: &mut Vec<Dim>,
+    array: &ArrayShape,
+    vertical: bool,
+) {
+    let axis_size = if vertical { array.rows } else { array.cols } as u64;
+    loop {
+        let occupied = map.axis_extent(vertical);
+        let room = axis_size / occupied.max(1);
+        if room < 2 {
+            break;
+        }
+        let mut best: Option<(Dim, u64, f64)> = None;
+        let current = utilization(shape, map, array);
+        for d in ALL_DIMS {
+            if used.contains(&d) || shape.bound(d) == 1 {
+                continue;
+            }
+            for e in 2..=room.min(shape.bound(d)) {
+                let mut cand = map.clone();
+                if vertical {
+                    cand.u.push((d, e));
+                } else {
+                    cand.v.push((d, e));
+                }
+                let u = utilization(shape, &cand, array);
+                if u > current + 1e-12 && best.map(|(_, _, bu)| u > bu + 1e-12).unwrap_or(true) {
+                    best = Some((d, e, u));
+                }
+            }
+        }
+        match best {
+            Some((d, e, _)) => {
+                if vertical {
+                    map.u.push((d, e));
+                } else {
+                    map.v.push((d, e));
+                }
+                used.push(d);
+            }
+            None => break,
+        }
+    }
+}
+
+/// Replication search: pack multiple loops onto each axis to maximize
+/// utilization — the paper's Fig 2 move (C=3 alone → 3/16; C=3 × X=5 →
+/// 15/16). The primary loop keeps its axis but its extent is searched
+/// too: `FY|Y` with Y=13 on 16 columns does better as Y=2 × K=8 than as
+/// Y=13 alone.
+pub fn best_replication(shape: &Shape, df: &Dataflow, array: &ArrayShape) -> SpatialMap {
+    let mut map = single_loop_map(shape, df, array);
+    let mut used: Vec<Dim> = df.dims();
+
+    for vertical in [true, false] {
+        let axis_size = if vertical { array.rows } else { array.cols } as u64;
+        let primary = if vertical { df.u.first() } else { df.v.first() };
+        let Some(&primary) = primary else { continue };
+        let mut best: Option<(SpatialMap, Vec<Dim>, f64)> = None;
+        for e_p in 1..=axis_size.min(shape.bound(primary)) {
+            let mut cand = map.clone();
+            let axis = if vertical { &mut cand.u } else { &mut cand.v };
+            axis.clear();
+            axis.push((primary, e_p));
+            let mut cand_used = used.clone();
+            greedy_fill(shape, &mut cand, &mut cand_used, array, vertical);
+            let u = utilization(shape, &cand, array);
+            if best.as_ref().map(|(_, _, bu)| u > bu + 1e-12).unwrap_or(true) {
+                best = Some((cand, cand_used, u));
+            }
+        }
+        if let Some((cand, cand_used, _)) = best {
+            map = cand;
+            used = cand_used;
+        }
+    }
+    map
+}

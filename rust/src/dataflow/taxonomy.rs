@@ -1,0 +1,233 @@
+//! Dataflow labels (`C|K`, `FY|Y`, `CK|X`, ...) and concrete spatial maps.
+
+use crate::loopnest::{Dim, Tensor, ALL_DIMS, NDIMS, Shape};
+
+/// A dataflow *label*: the loops unrolled on the vertical (`u`) and
+/// horizontal (`v`) array axes, ordered by communication proximity —
+/// the leftmost loop of an axis maps to nearest-neighbor PEs (Fig 3).
+///
+/// A 1D dataflow has an empty `v`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Dataflow {
+    /// Vertical-axis loops, nearest-neighbor first.
+    pub u: Vec<Dim>,
+    /// Horizontal-axis loops, nearest-neighbor first.
+    pub v: Vec<Dim>,
+}
+
+impl Dataflow {
+    /// Single-loop-per-axis 2D dataflow.
+    pub fn two_d(u: Dim, v: Dim) -> Self {
+        Dataflow {
+            u: vec![u],
+            v: vec![v],
+        }
+    }
+
+    /// 1D dataflow.
+    pub fn one_d(u: Dim) -> Self {
+        Dataflow {
+            u: vec![u],
+            v: vec![],
+        }
+    }
+
+    /// Parse `"C|K"`, `"CK|X"`, `"FY|Y"`, `"X"` (case-insensitive;
+    /// multi-letter dims FX/FY are recognized greedily).
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        let mut parts = s.split('|');
+        let u = parse_axis(parts.next()?.trim())?;
+        let v = match parts.next() {
+            Some(p) => parse_axis(p.trim())?,
+            None => vec![],
+        };
+        if parts.next().is_some() || u.is_empty() {
+            return None;
+        }
+        // no dim may appear twice
+        let mut seen = [false; NDIMS];
+        for d in u.iter().chain(v.iter()) {
+            if seen[d.idx()] {
+                return None;
+            }
+            seen[d.idx()] = true;
+        }
+        Some(Dataflow { u, v })
+    }
+
+    /// All dims used on either axis.
+    pub fn dims(&self) -> Vec<Dim> {
+        self.u.iter().chain(self.v.iter()).copied().collect()
+    }
+}
+
+fn parse_axis(s: &str) -> Option<Vec<Dim>> {
+    let up = s.to_ascii_uppercase();
+    let bytes = up.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'F' && i + 1 < bytes.len() {
+            out.push(Dim::parse(&up[i..i + 2])?);
+            i += 2;
+        } else {
+            out.push(Dim::parse(&up[i..i + 1])?);
+            i += 1;
+        }
+    }
+    Some(out)
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let axis = |dims: &[Dim]| dims.iter().map(|d| d.name()).collect::<String>();
+        if self.v.is_empty() {
+            write!(f, "{}", axis(&self.u))
+        } else {
+            write!(f, "{}|{}", axis(&self.u), axis(&self.v))
+        }
+    }
+}
+
+/// A concrete spatial mapping: each unrolled loop with its extent.
+/// Extents on one axis multiply to at most the axis size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpatialMap {
+    /// Vertical axis: (dim, extent), nearest-neighbor first.
+    pub u: Vec<(Dim, u64)>,
+    /// Horizontal axis.
+    pub v: Vec<(Dim, u64)>,
+}
+
+impl SpatialMap {
+    /// No unrolling (1 PE).
+    pub fn scalar() -> Self {
+        SpatialMap { u: vec![], v: vec![] }
+    }
+
+    /// Total PEs occupied.
+    pub fn pes_used(&self) -> u64 {
+        self.axis_extent(true) * self.axis_extent(false)
+    }
+
+    /// Product of extents on one axis (`vertical = true` for `u`).
+    pub fn axis_extent(&self, vertical: bool) -> u64 {
+        let axis = if vertical { &self.u } else { &self.v };
+        axis.iter().map(|(_, e)| e).product()
+    }
+
+    /// Spatial factor per dim as a canonical `[u64; NDIMS]` array
+    /// (for [`crate::loopnest::Mapping::spatial`]).
+    pub fn factors(&self) -> [u64; NDIMS] {
+        let mut f = [1u64; NDIMS];
+        for (d, e) in self.u.iter().chain(self.v.iter()) {
+            f[d.idx()] *= e;
+        }
+        f
+    }
+
+    /// Extent of a dim (1 when not unrolled).
+    pub fn extent(&self, d: Dim) -> u64 {
+        self.factors()[d.idx()]
+    }
+
+    /// Product of extents of dims *relevant* to tensor `t` — the number
+    /// of distinct tile slices of `t` across the array (multicast width is
+    /// `pes_used / unique_factor`).
+    pub fn unique_factor(&self, t: Tensor) -> u64 {
+        self.u
+            .iter()
+            .chain(self.v.iter())
+            .filter(|(d, _)| t.relevant(*d))
+            .map(|(_, e)| e)
+            .product()
+    }
+
+    /// Product of extents of *reduction* dims — the number of partial
+    /// sums per output element produced across the array.
+    pub fn spatial_reduction(&self) -> u64 {
+        self.u
+            .iter()
+            .chain(self.v.iter())
+            .filter(|(d, _)| d.is_reduction())
+            .map(|(_, e)| e)
+            .product()
+    }
+
+    /// The dataflow label of this map (dims with extent > 1).
+    pub fn label(&self) -> Dataflow {
+        Dataflow {
+            u: self.u.iter().filter(|(_, e)| *e > 1).map(|(d, _)| *d).collect(),
+            v: self.v.iter().filter(|(_, e)| *e > 1).map(|(d, _)| *d).collect(),
+        }
+    }
+
+    /// Average hop distance for one word of tensor `t` delivered into the
+    /// array, under systolic forwarding (Fig 3 model): data shared along a
+    /// `t`-irrelevant unrolled loop is forwarded between the PEs that
+    /// share it; the forwarding step spans the extents of the loops mapped
+    /// *nearer* (to the left) on the same axis.
+    ///
+    /// Returns ~0 for data fully private per PE (no sharing → delivered
+    /// once, charged at the buffer) and grows with replication-group size
+    /// for inter-group sharing.
+    pub fn share_hops(&self, t: Tensor) -> f64 {
+        let mut hops = 0.0;
+        for axis in [&self.u, &self.v] {
+            let mut inner: u64 = 1;
+            for (d, e) in axis.iter() {
+                if *e > 1 && !t.relevant(*d) {
+                    // one word visits `e` positions spaced `inner` apart
+                    hops += (inner as f64) * ((*e - 1) as f64) / (*e as f64);
+                }
+                inner *= *e;
+            }
+        }
+        hops
+    }
+}
+
+impl std::fmt::Display for SpatialMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let axis = |dims: &[(Dim, u64)]| {
+            dims.iter()
+                .map(|(d, e)| format!("{}{}", d.name(), e))
+                .collect::<Vec<_>>()
+                .join("·")
+        };
+        write!(f, "[{} | {}]", axis(&self.u), axis(&self.v))
+    }
+}
+
+/// Enumerate dataflow labels for a layer: all 1D choices plus all
+/// unordered 2D pairs over dims with bound > 1 (the paper's
+/// `(L choose 2)` count; `U|V` and `V|U` are symmetric on square arrays).
+pub fn enumerate_dataflows(shape: &Shape) -> Vec<Dataflow> {
+    let dims: Vec<Dim> = ALL_DIMS
+        .into_iter()
+        .filter(|d| shape.bound(*d) > 1)
+        .collect();
+    let mut out = Vec::new();
+    for (i, &u) in dims.iter().enumerate() {
+        for &v in dims.iter().skip(i + 1) {
+            out.push(Dataflow::two_d(u, v));
+        }
+    }
+    if out.is_empty() {
+        // degenerate single-dim layers: 1D flows
+        for &u in &dims {
+            out.push(Dataflow::one_d(u));
+        }
+    }
+    out
+}
+
+/// The named dataflows of Table 1, for reports.
+pub fn named_dataflows() -> Vec<(&'static str, Dataflow)> {
+    vec![
+        ("output-stationary (X|Y)", Dataflow::two_d(Dim::X, Dim::Y)),
+        ("weight-stationary (FX|FY)", Dataflow::two_d(Dim::FX, Dim::FY)),
+        ("row-stationary (FY|Y)", Dataflow::two_d(Dim::FY, Dim::Y)),
+        ("weight-stationary (C|K)", Dataflow::two_d(Dim::C, Dim::K)),
+    ]
+}

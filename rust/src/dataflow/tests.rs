@@ -1,0 +1,267 @@
+//! Tests for the dataflow taxonomy, replication, and utilization model.
+
+use super::*;
+use crate::arch::ArrayShape;
+use crate::loopnest::{Dim, Shape, Tensor};
+use crate::util::prop;
+
+fn conv3() -> Shape {
+    Shape::new(16, 384, 256, 13, 13, 3, 3, 1)
+}
+
+#[test]
+fn parse_and_display_roundtrip() {
+    for s in ["C|K", "FY|Y", "X|Y", "CK|X", "C|KX", "X", "FX|FY"] {
+        let df = Dataflow::parse(s).unwrap_or_else(|| panic!("parse {s}"));
+        assert_eq!(df.to_string(), s, "roundtrip {s}");
+    }
+}
+
+#[test]
+fn parse_rejects_garbage() {
+    assert!(Dataflow::parse("").is_none());
+    assert!(Dataflow::parse("Q|K").is_none());
+    assert!(Dataflow::parse("C|C").is_none()); // duplicate dim
+    assert!(Dataflow::parse("C|K|X").is_none()); // three axes
+}
+
+#[test]
+fn parse_multiletter_dims() {
+    let df = Dataflow::parse("FXFY|C").unwrap();
+    assert_eq!(df.u, vec![Dim::FX, Dim::FY]);
+    assert_eq!(df.v, vec![Dim::C]);
+}
+
+#[test]
+fn enumeration_count_matches_paper() {
+    // CONV layer with all 7 dims > 1: (7 choose 2) = 21 (§3.2)
+    let s = Shape::new(2, 4, 4, 5, 5, 3, 3, 1);
+    assert_eq!(enumerate_dataflows(&s).len(), 21);
+    // FC layer: only B, K, C: (3 choose 2) = 3
+    let fc = Shape::new(16, 100, 200, 1, 1, 1, 1, 1);
+    assert_eq!(enumerate_dataflows(&fc).len(), 3);
+}
+
+#[test]
+fn named_dataflows_table1() {
+    let named = named_dataflows();
+    assert_eq!(named.len(), 4);
+    assert_eq!(named[0].1, Dataflow::two_d(Dim::X, Dim::Y));
+    assert_eq!(named[3].1, Dataflow::two_d(Dim::C, Dim::K));
+}
+
+#[test]
+fn figure2_utilization_example() {
+    // Fig 2: C=3 unrolled on 16 rows -> 3/16; adding X=5 -> 15/16.
+    // (1D array: cols = 1)
+    let shape = Shape::new(1, 64, 3, 55, 55, 3, 3, 1);
+    let arr = ArrayShape { rows: 16, cols: 1 };
+    let alone = SpatialMap {
+        u: vec![(Dim::C, 3)],
+        v: vec![],
+    };
+    assert!((utilization(&shape, &alone, &arr) - 3.0 / 16.0).abs() < 1e-9);
+    let replicated = SpatialMap {
+        u: vec![(Dim::C, 3), (Dim::X, 5)],
+        v: vec![],
+    };
+    assert!((utilization(&shape, &replicated, &arr) - 15.0 / 16.0).abs() < 1e-9);
+}
+
+#[test]
+fn utilization_with_fragmentation() {
+    // X=13 on extent 5: ceil(13/5)=3 passes, work 13, capacity 15
+    let shape = Shape::new(1, 1, 1, 13, 1, 1, 1, 1);
+    let arr = ArrayShape { rows: 5, cols: 1 };
+    let m = SpatialMap {
+        u: vec![(Dim::X, 5)],
+        v: vec![],
+    };
+    assert!((utilization(&shape, &m, &arr) - 13.0 / 15.0).abs() < 1e-9);
+}
+
+#[test]
+fn utilization_overflow_is_zero() {
+    let shape = conv3();
+    let arr = ArrayShape { rows: 4, cols: 4 };
+    let m = SpatialMap {
+        u: vec![(Dim::K, 8)],
+        v: vec![],
+    };
+    assert_eq!(utilization(&shape, &m, &arr), 0.0);
+}
+
+#[test]
+fn replication_improves_utilization_on_conv3() {
+    // FY|Y on 16x16: FY=3, Y=13 -> low; replication should lift it
+    let shape = conv3();
+    let arr = ArrayShape { rows: 16, cols: 16 };
+    let df = Dataflow::parse("FY|Y").unwrap();
+    let plain = single_loop_map(&shape, &df, &arr);
+    let repl = best_replication(&shape, &df, &arr);
+    let u0 = utilization(&shape, &plain, &arr);
+    let u1 = utilization(&shape, &repl, &arr);
+    assert!(u0 < 0.7, "plain FY|Y should underutilize, got {u0}");
+    assert!(u1 > 0.85, "replication should fix it, got {u1}");
+    assert!(u1 >= u0);
+}
+
+#[test]
+fn ck_dataflow_fills_large_channel_dims() {
+    // C|K with C=256, K=384 divides 16x16 exactly -> utilization 1.0
+    let shape = conv3();
+    let arr = ArrayShape { rows: 16, cols: 16 };
+    let df = Dataflow::parse("C|K").unwrap();
+    let m = single_loop_map(&shape, &df, &arr);
+    assert!((utilization(&shape, &m, &arr) - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn spatial_map_factors_and_unique() {
+    let m = SpatialMap {
+        u: vec![(Dim::C, 4)],
+        v: vec![(Dim::K, 8)],
+    };
+    assert_eq!(m.pes_used(), 32);
+    assert_eq!(m.extent(Dim::C), 4);
+    assert_eq!(m.extent(Dim::B), 1);
+    // W relevant to both C and K -> 32 unique slices
+    assert_eq!(m.unique_factor(Tensor::Weight), 32);
+    // I irrelevant to K -> 4 unique slices (multicast along K)
+    assert_eq!(m.unique_factor(Tensor::Input), 4);
+    // O irrelevant to C -> 8 unique, spatial reduction = 4
+    assert_eq!(m.unique_factor(Tensor::Output), 8);
+    assert_eq!(m.spatial_reduction(), 4);
+}
+
+#[test]
+fn share_hops_fig3_groups() {
+    // Fig 3: CK on a 1D array of 8 (C inner 4, K outer 2).
+    // Outputs (K-relevant, C-irrelevant): shared across C (inner, step 1)
+    // -> ~1 hop. Inputs (C-relevant, K-irrelevant): shared across K groups
+    // (step = group size 4) -> ~4x the output distance.
+    let m = SpatialMap {
+        u: vec![(Dim::C, 4), (Dim::K, 2)],
+        v: vec![],
+    };
+    let o_hops = m.share_hops(Tensor::Output);
+    let i_hops = m.share_hops(Tensor::Input);
+    assert!(o_hops > 0.0 && o_hops <= 1.0, "{o_hops}");
+    assert!(
+        (i_hops / o_hops - 4.0 / 1.5).abs() < 0.3 || i_hops / o_hops >= 2.0,
+        "inter-group {i_hops} should cost several x intra-group {o_hops}"
+    );
+    // W relevant to both: private per PE, no sharing hops
+    assert_eq!(m.share_hops(Tensor::Weight), 0.0);
+}
+
+#[test]
+fn label_strips_unit_extents() {
+    let m = SpatialMap {
+        u: vec![(Dim::C, 4), (Dim::X, 1)],
+        v: vec![(Dim::K, 8)],
+    };
+    assert_eq!(m.label().to_string(), "C|K");
+}
+
+#[test]
+fn prop_replication_never_hurts_and_fits() {
+    prop::for_cases(0xdf10, 120, |rng| {
+        let shape = Shape::new(
+            rng.range(1, 8),
+            rng.range(1, 64),
+            rng.range(1, 64),
+            rng.range(1, 28),
+            rng.range(1, 28),
+            rng.range(1, 5),
+            rng.range(1, 5),
+            1,
+        );
+        let arr = ArrayShape {
+            rows: *rng.choose(&[4, 8, 16]),
+            cols: *rng.choose(&[1, 4, 16]),
+        };
+        let flows = enumerate_dataflows(&shape);
+        if flows.is_empty() {
+            return;
+        }
+        let df = rng.choose(&flows).clone();
+        let plain = single_loop_map(&shape, &df, &arr);
+        let repl = best_replication(&shape, &df, &arr);
+        let u0 = utilization(&shape, &plain, &arr);
+        let u1 = utilization(&shape, &repl, &arr);
+        assert!(u1 + 1e-9 >= u0, "replication reduced utilization: {u0} -> {u1}");
+        assert!(u1 <= 1.0 + 1e-9);
+        assert!(repl.axis_extent(true) <= arr.rows as u64);
+        assert!(repl.axis_extent(false) <= arr.cols as u64);
+    });
+}
+
+#[test]
+fn single_loop_map_degenerate_axis() {
+    // 1D dataflow leaves the v axis empty
+    let shape = Shape::new(1, 16, 16, 4, 4, 3, 3, 1);
+    let arr = ArrayShape { rows: 8, cols: 1 };
+    let df = Dataflow::one_d(Dim::C);
+    let m = single_loop_map(&shape, &df, &arr);
+    assert!(m.v.is_empty());
+    assert_eq!(m.axis_extent(false), 1);
+    assert_eq!(m.extent(Dim::C), 8);
+}
+
+#[test]
+fn scalar_map_is_one_pe() {
+    let m = SpatialMap::scalar();
+    assert_eq!(m.pes_used(), 1);
+    assert_eq!(m.unique_factor(Tensor::Weight), 1);
+    assert_eq!(m.spatial_reduction(), 1);
+    assert_eq!(m.share_hops(Tensor::Input), 0.0);
+}
+
+#[test]
+fn spatial_reduction_counts_all_reduction_dims() {
+    let m = SpatialMap {
+        u: vec![(Dim::C, 4), (Dim::FX, 3)],
+        v: vec![(Dim::FY, 3)],
+    };
+    assert_eq!(m.spatial_reduction(), 36);
+    // outputs irrelevant to all three -> fully merged
+    assert_eq!(m.unique_factor(Tensor::Output), 1);
+}
+
+#[test]
+fn best_single_extent_prefers_exact_fill() {
+    // bound 384 on 16 rows: extent 16 divides -> utilization 1.0
+    let shape = Shape::new(1, 384, 1, 1, 1, 1, 1, 1);
+    let arr = ArrayShape { rows: 16, cols: 1 };
+    let m = single_loop_map(&shape, &Dataflow::one_d(Dim::K), &arr);
+    assert_eq!(m.extent(Dim::K), 16);
+    assert!((utilization(&shape, &m, &arr) - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn prop_unique_factor_divides_pes() {
+    prop::for_cases(0x0d1f, 100, |rng| {
+        let shape = Shape::new(
+            rng.range(1, 4),
+            rng.range(2, 32),
+            rng.range(2, 32),
+            rng.range(2, 14),
+            rng.range(2, 14),
+            rng.range(1, 4),
+            rng.range(1, 4),
+            1,
+        );
+        let arr = ArrayShape { rows: 16, cols: 16 };
+        let flows = enumerate_dataflows(&shape);
+        let df = rng.choose(&flows).clone();
+        let m = best_replication(&shape, &df, &arr);
+        for t in crate::loopnest::ALL_TENSORS {
+            assert_eq!(
+                m.pes_used() % m.unique_factor(t),
+                0,
+                "{t}: unique must divide PEs for {m}"
+            );
+        }
+    });
+}

@@ -1,0 +1,233 @@
+//! The Table 3 energy cost model: energy per 16-bit access for register
+//! files and SRAMs of various sizes, plus MAC, inter-PE hop, and DRAM
+//! costs. All values in picojoules, 28 nm.
+//!
+//! Interpolation beyond the table's anchor points follows the table's own
+//! structure: RF energy is **linear** in size (each doubling doubles the
+//! cost: 16 B = 0.03 → 512 B = 0.96), SRAM energy grows **×1.5 per
+//! doubling** (32 KB = 6 → 512 KB = 30.375), i.e. `size^log2(1.5)`.
+
+use crate::arch::{Arch, LevelKind};
+
+/// Energy cost provider (pJ). Pluggable so different technology nodes can
+/// be studied (§5: "it is easy to supply new cost models").
+pub trait CostModel: Send + Sync {
+    /// Energy per access of a register file of `size_bytes`.
+    fn reg_access(&self, size_bytes: u64) -> f64;
+    /// Energy per access of an SRAM of `size_bytes`.
+    fn sram_access(&self, size_bytes: u64) -> f64;
+    /// Energy per DRAM access.
+    fn dram_access(&self) -> f64;
+    /// Energy per 16-bit MAC.
+    fn mac(&self) -> f64;
+    /// Energy per one-hop inter-PE word transfer.
+    fn hop(&self) -> f64;
+
+    /// Energy per access of architecture level `i`.
+    fn level_access(&self, arch: &Arch, i: usize) -> f64 {
+        let l = &arch.levels[i];
+        match l.kind {
+            LevelKind::Reg => self.reg_access(l.size_bytes),
+            LevelKind::Sram => self.sram_access(l.size_bytes),
+            LevelKind::Dram => self.dram_access(),
+        }
+    }
+}
+
+/// The paper's Table 3 (28 nm, 16-bit words).
+#[derive(Debug, Clone, Default)]
+pub struct Table3;
+
+/// RF anchor: 16 B costs 0.03 pJ, linear in size.
+const RF_BASE_BYTES: f64 = 16.0;
+const RF_BASE_PJ: f64 = 0.03;
+/// SRAM anchor: 32 KB costs 6 pJ, ×1.5 per doubling.
+const SRAM_BASE_BYTES: f64 = 32.0 * 1024.0;
+const SRAM_BASE_PJ: f64 = 6.0;
+const SRAM_DOUBLING: f64 = 1.5;
+
+impl CostModel for Table3 {
+    fn reg_access(&self, size_bytes: u64) -> f64 {
+        // Linear: E = 0.03 * size/16. Clamp below 8 B to the 8 B value so
+        // the TPU-like 8 B register costs 0.015 pJ, not ~0.
+        let s = (size_bytes as f64).max(8.0);
+        RF_BASE_PJ * s / RF_BASE_BYTES
+    }
+
+    fn sram_access(&self, size_bytes: u64) -> f64 {
+        // E = 6 * 1.5^(log2(size/32K)) = 6 * (size/32K)^log2(1.5) within
+        // the table's range. Beyond 512 KB the growth flattens to x1.2
+        // per doubling: very large buffers are heavily banked (the
+        // per-access cost approaches the bank cost plus wire energy), so
+        // the TPU-like 28 MB L2 stays cheaper than DRAM.
+        let s = (size_bytes as f64).max(1024.0);
+        let table_top = 512.0 * 1024.0;
+        if s <= table_top {
+            let ratio = s / SRAM_BASE_BYTES;
+            SRAM_BASE_PJ * ratio.powf(SRAM_DOUBLING.log2())
+        } else {
+            let top = SRAM_BASE_PJ * (table_top / SRAM_BASE_BYTES).powf(SRAM_DOUBLING.log2());
+            top * (s / table_top).powf(1.2f64.log2())
+        }
+    }
+
+    fn dram_access(&self) -> f64 {
+        200.0
+    }
+
+    fn mac(&self) -> f64 {
+        0.075
+    }
+
+    fn hop(&self) -> f64 {
+        0.035
+    }
+}
+
+/// The anchor rows of Table 3, for the `table3_energy` bench and tests:
+/// `(kind, size_bytes, pJ)`.
+pub fn table3_anchors() -> Vec<(LevelKind, u64, f64)> {
+    vec![
+        (LevelKind::Reg, 16, 0.03),
+        (LevelKind::Reg, 32, 0.06),
+        (LevelKind::Reg, 64, 0.12),
+        (LevelKind::Reg, 128, 0.24),
+        (LevelKind::Reg, 256, 0.48),
+        (LevelKind::Reg, 512, 0.96),
+        (LevelKind::Sram, 32 << 10, 6.0),
+        (LevelKind::Sram, 64 << 10, 9.0),
+        (LevelKind::Sram, 128 << 10, 13.5),
+        (LevelKind::Sram, 256 << 10, 20.25),
+        (LevelKind::Sram, 512 << 10, 30.375),
+    ]
+}
+
+/// A scaled cost model for studying other technology nodes: multiplies
+/// every memory cost by `mem_scale` and the MAC cost by `mac_scale`
+/// relative to Table 3. Used by the "different energy cost models"
+/// robustness sweep (§6.1 claims the conclusions are cost-model
+/// independent).
+#[derive(Debug, Clone)]
+pub struct ScaledCost {
+    /// Multiplier on all memory access costs.
+    pub mem_scale: f64,
+    /// Multiplier on MAC cost.
+    pub mac_scale: f64,
+    /// Multiplier on DRAM cost.
+    pub dram_scale: f64,
+}
+
+impl CostModel for ScaledCost {
+    fn reg_access(&self, size_bytes: u64) -> f64 {
+        Table3.reg_access(size_bytes) * self.mem_scale
+    }
+    fn sram_access(&self, size_bytes: u64) -> f64 {
+        Table3.sram_access(size_bytes) * self.mem_scale
+    }
+    fn dram_access(&self) -> f64 {
+        Table3.dram_access() * self.dram_scale
+    }
+    fn mac(&self) -> f64 {
+        Table3.mac() * self.mac_scale
+    }
+    fn hop(&self) -> f64 {
+        Table3.hop() * self.mem_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_anchor_points_exact() {
+        let m = Table3;
+        for (kind, size, pj) in table3_anchors() {
+            let got = match kind {
+                LevelKind::Reg => m.reg_access(size),
+                LevelKind::Sram => m.sram_access(size),
+                LevelKind::Dram => unreachable!(),
+            };
+            assert!(
+                (got - pj).abs() < 1e-9,
+                "{kind:?} {size}: got {got}, want {pj}"
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_costs_match_table3() {
+        let m = Table3;
+        assert_eq!(m.mac(), 0.075);
+        assert_eq!(m.hop(), 0.035);
+        assert_eq!(m.dram_access(), 200.0);
+    }
+
+    #[test]
+    fn rf_linear_interpolation() {
+        let m = Table3;
+        // 96 B sits between 64 (0.12) and 128 (0.24): linear -> 0.18
+        assert!((m.reg_access(96) - 0.18).abs() < 1e-9);
+        // 8 B (TPU-like) = half of 16 B
+        assert!((m.reg_access(8) - 0.015).abs() < 1e-9);
+        // below 8 B clamps
+        assert_eq!(m.reg_access(2), m.reg_access(8));
+    }
+
+    #[test]
+    fn sram_doubling_rule() {
+        let m = Table3;
+        // each doubling is x1.5 within the table's range
+        assert!((m.sram_access(256 << 10) / m.sram_access(128 << 10) - 1.5).abs() < 1e-9);
+        // beyond 512 KB growth flattens to x1.2 per doubling
+        assert!((m.sram_access(1 << 20) / m.sram_access(512 << 10) - 1.2).abs() < 1e-9);
+        // 28 MB L2 (TPU-like) stays below DRAM cost
+        let e28 = m.sram_access(28 << 20);
+        assert!(e28 > 30.375 && e28 < 200.0, "{e28}");
+    }
+
+    #[test]
+    fn monotone_in_size() {
+        let m = Table3;
+        let mut prev = 0.0;
+        for s in [8u64, 16, 64, 512, 4096] {
+            let e = m.reg_access(s);
+            assert!(e >= prev);
+            prev = e;
+        }
+        let mut prev = 0.0;
+        for s in [16u64 << 10, 64 << 10, 256 << 10, 4 << 20] {
+            let e = m.sram_access(s);
+            assert!(e > prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn dram_dominates_everything_onchip() {
+        let m = Table3;
+        assert!(m.dram_access() > m.sram_access(28 << 20));
+        assert!(m.sram_access(32 << 10) > m.reg_access(512));
+    }
+
+    #[test]
+    fn level_access_dispatch() {
+        let a = crate::arch::eyeriss_like();
+        let m = Table3;
+        assert!((m.level_access(&a, 0) - 0.96).abs() < 1e-9); // 512 B RF
+        assert!((m.level_access(&a, 1) - 13.5).abs() < 1e-9); // 128 KB
+        assert_eq!(m.level_access(&a, 2), 200.0);
+    }
+
+    #[test]
+    fn scaled_model_scales() {
+        let s = ScaledCost {
+            mem_scale: 2.0,
+            mac_scale: 0.5,
+            dram_scale: 1.0,
+        };
+        assert!((s.reg_access(512) - 1.92).abs() < 1e-9);
+        assert!((s.mac() - 0.0375).abs() < 1e-9);
+        assert_eq!(s.dram_access(), 200.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Lowering a [`Schedule`] onto the loop-nest IR.
+
+use super::schedule::{Axis, Schedule};
+use crate::arch::{Arch, ArrayBus};
+use crate::dataflow::SpatialMap;
+use crate::loopnest::{Blocking, Dim, LevelOrder, Mapping, ALL_DIMS, NDIMS};
+
+/// Lowering failures.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LowerError {
+    /// Number of buffer groups must be `arch levels - 1`.
+    WrongBufferCount {
+        /// Buffer groups declared.
+        got: usize,
+        /// Groups required by the architecture.
+        want: usize,
+    },
+    /// Buffer attach points must nest strictly outward.
+    BuffersNotNested,
+    /// Spatial extents exceed the array axis.
+    ArrayOverflow {
+        /// Axis name ("U" or "V").
+        axis: &'static str,
+        /// Product of unrolled extents.
+        extent: u64,
+        /// Physical axis size.
+        size: u64,
+    },
+    /// The schedule requests systolic forwarding but the architecture has
+    /// a broadcast bus (or vice versa).
+    BusMismatch,
+}
+
+impl std::fmt::Display for LowerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LowerError::WrongBufferCount { got, want } => {
+                write!(f, "schedule declares {got} buffer groups, arch needs {want}")
+            }
+            LowerError::BuffersNotNested => write!(f, "buffer attach points must nest"),
+            LowerError::ArrayOverflow { axis, extent, size } => {
+                write!(f, "axis {axis}: unrolled extent {extent} > array size {size}")
+            }
+            LowerError::BusMismatch => write!(f, "systolic/broadcast mismatch with arch"),
+        }
+    }
+}
+
+impl std::error::Error for LowerError {}
+
+impl Schedule {
+    /// `accelerate`: lower the schedule for a target architecture into
+    /// the `(Mapping, SpatialMap)` pair consumed by the model, the
+    /// simulator, and the search.
+    pub fn lower(&self, arch: &Arch) -> Result<(Mapping, SpatialMap), LowerError> {
+        let nlv = arch.num_levels();
+
+        // group buffers by attach loop, positions sorted innermost-first
+        let mut attach_positions: Vec<usize> = self
+            .buffers
+            .iter()
+            .map(|b| self.pos(b.at))
+            .collect();
+        attach_positions.sort_unstable();
+        attach_positions.dedup();
+        if attach_positions.len() != nlv - 1 {
+            return Err(LowerError::WrongBufferCount {
+                got: attach_positions.len(),
+                want: nlv - 1,
+            });
+        }
+
+        if self.systolic != (arch.bus == ArrayBus::Systolic) {
+            return Err(LowerError::BusMismatch);
+        }
+
+        // spatial map from unrolled pieces (push order = proximity order)
+        let mut smap = SpatialMap::scalar();
+        for &id in self.order.iter() {
+            let p = &self.pieces[id.0];
+            match p.unrolled {
+                Some(Axis::U) => smap.u.push((p.dim, p.extent)),
+                Some(Axis::V) => smap.v.push((p.dim, p.extent)),
+                None => {}
+            }
+        }
+        let (eu, ev) = (smap.axis_extent(true), smap.axis_extent(false));
+        if eu > arch.array.rows as u64 {
+            return Err(LowerError::ArrayOverflow {
+                axis: "U",
+                extent: eu,
+                size: arch.array.rows as u64,
+            });
+        }
+        if ev > arch.array.cols as u64 {
+            return Err(LowerError::ArrayOverflow {
+                axis: "V",
+                extent: ev,
+                size: arch.array.cols as u64,
+            });
+        }
+
+        // assign temporal pieces to levels by their position relative to
+        // the attach points: inside attach[0] -> level 0, between
+        // attach[i-1] and attach[i] -> level i, outside the last -> DRAM
+        let mut blocking = Blocking::ones(nlv);
+        let mut level_dims: Vec<Vec<Dim>> = vec![Vec::new(); nlv]; // innermost-first per level
+        for (pos, &id) in self.order.iter().enumerate() {
+            let p = &self.pieces[id.0];
+            if p.unrolled.is_some() {
+                continue;
+            }
+            let level = attach_positions
+                .iter()
+                .position(|&a| pos < a)
+                .unwrap_or(nlv - 1);
+            let cur = blocking.factor(level, p.dim);
+            blocking.set(level, p.dim, cur * p.extent);
+            if !level_dims[level].contains(&p.dim) {
+                level_dims[level].push(p.dim);
+            }
+        }
+
+        // per-level orders: listed dims innermost-first, then the rest
+        let orders: Vec<LevelOrder> = level_dims
+            .iter()
+            .map(|dims| {
+                let mut o: Vec<Dim> = dims.clone();
+                for d in ALL_DIMS {
+                    if !o.contains(&d) {
+                        o.push(d);
+                    }
+                }
+                let mut arr = [Dim::B; NDIMS];
+                arr.copy_from_slice(&o);
+                LevelOrder(arr)
+            })
+            .collect();
+
+        let mapping = Mapping {
+            shape: self.shape,
+            blocking,
+            orders,
+            spatial: smap.factors(),
+            spatial_at: arch.rf_levels(),
+        };
+        Ok((mapping, smap))
+    }
+}

@@ -1,0 +1,32 @@
+//! The Halide-style scheduling language (§4): `split`, `reorder`,
+//! `in_` + `compute_at`, `unroll`, `systolic`, `accelerate` — and its
+//! lowering onto the loop-nest IR ([`crate::loopnest::Mapping`]).
+//!
+//! The paper's key claim is that these primitives are sufficient to
+//! express every dense DNN accelerator. Here a [`Schedule`] is built by
+//! applying primitives to the seven-loop CONV algorithm; `lower()`
+//! produces the `(Mapping, SpatialMap)` pair the analytical model, the
+//! simulator, and the hardware backend all consume, and
+//! [`print_ir`](printer::print_ir) renders the Listing-2-style
+//! intermediate representation.
+//!
+//! Lowering contract: an architecture with `L` storage levels needs
+//! `L - 1` buffer groups (`in_` + `compute_at`), one per on-chip level,
+//! innermost (RF) first; loops inside the innermost attach point become
+//! level-0 (RF) factors, loops between attach points `i-1` and `i`
+//! become level-`i` factors, loops outside the outermost attach point
+//! become DRAM-level factors. `unroll`ed loops leave the temporal nest
+//! and become the spatial map.
+
+mod lower;
+mod presets;
+mod printer;
+mod schedule;
+
+pub use lower::LowerError;
+pub use presets::{diannao_tree, eyeriss_rs, nvdla_like, shidiannao_os, tpu_ck};
+pub use printer::print_ir;
+pub use schedule::{Axis, LoopId, Schedule};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,232 @@
+//! Re-creations of prior-work accelerator schedules (§4.2 / Fig 6):
+//! Eyeriss row-stationary, TPU `C|K`, ShiDianNao output-stationary,
+//! DianNao reduction tree, NVDLA-like. Each returns a [`Schedule`] that
+//! lowers against the matching 3-level architecture.
+
+use super::schedule::{Axis, Schedule};
+use crate::loopnest::{Dim, Shape};
+use crate::util::divisors;
+
+/// Largest divisor of `n` that is `<= cap`.
+fn dv(n: u64, cap: u64) -> u64 {
+    divisors(n).into_iter().filter(|&d| d <= cap).max().unwrap_or(1)
+}
+
+/// Shared builder: split each dim into (outer, mid, rf) pieces plus
+/// spatial extents, order the nest, attach the RF and GBUF buffers.
+///
+/// `rf` and `mid` list (dim, extent) innermost-first; any dim's leftover
+/// iterates at the DRAM level. `unroll_u`/`unroll_v` extents must divide
+/// the bound alongside the temporal pieces (the caller passes divisors).
+#[allow(clippy::too_many_arguments)]
+fn build(
+    name: &str,
+    shape: Shape,
+    rf: &[(Dim, u64)],
+    mid: &[(Dim, u64)],
+    unroll_u: &[(Dim, u64)],
+    unroll_v: &[(Dim, u64)],
+    systolic: bool,
+) -> Schedule {
+    let mut s = Schedule::new(name, shape);
+    let f = |list: &[(Dim, u64)], d: Dim| -> u64 {
+        list.iter().find(|(x, _)| *x == d).map(|(_, e)| *e).unwrap_or(1)
+    };
+
+    let mut rf_ids = Vec::new();
+    let mut sp_u = Vec::new();
+    let mut sp_v = Vec::new();
+    let mut mid_ids = Vec::new();
+    let mut outer_ids = Vec::new();
+
+    for d in [Dim::FX, Dim::FY, Dim::X, Dim::Y, Dim::C, Dim::K, Dim::B] {
+        let (rf_e, u_e, v_e, mid_e) = (f(rf, d), f(unroll_u, d), f(unroll_v, d), f(mid, d));
+        let bound = shape.bound(d);
+        debug_assert_eq!(
+            bound % (rf_e * u_e * v_e * mid_e),
+            0,
+            "{d}: {bound} not divisible by pieces"
+        );
+        let mut outer = s.loop_of(d);
+        // split chain: peel rf, then spatial, then mid; leftover = outer
+        if rf_e * u_e * v_e * mid_e > 1 {
+            let (o, rest) = s.split(outer, rf_e * u_e * v_e * mid_e);
+            outer = o;
+            let (rest2, rf_id) = s.split(rest, rf_e);
+            rf_ids.push(rf_id);
+            let (rest3, u_id) = s.split(rest2, u_e);
+            if u_e > 1 {
+                s.unroll(u_id, Axis::U);
+                sp_u.push(u_id);
+            } else {
+                mid_ids.push(u_id); // unit piece rides in the mid segment
+            }
+            let (rest4, v_id) = s.split(rest3, v_e);
+            if v_e > 1 {
+                s.unroll(v_id, Axis::V);
+                sp_v.push(v_id);
+            } else {
+                mid_ids.push(v_id);
+            }
+            // rest4 extent == mid_e
+            mid_ids.push(rest4);
+        }
+        outer_ids.push(outer);
+    }
+
+    // order innermost-first: rf pieces (caller's order first), then
+    // spatial, then mid, then outer.
+    let mut order: Vec<super::schedule::LoopId> = Vec::new();
+    for (d, _) in rf {
+        if let Some(id) = rf_ids.iter().find(|id| s.dim(**id) == *d) {
+            order.push(*id);
+        }
+    }
+    for id in &rf_ids {
+        if !order.contains(id) {
+            order.push(*id);
+        }
+    }
+    let rf_count = order.len();
+    for id in sp_u.iter().chain(sp_v.iter()) {
+        order.push(*id);
+    }
+    for (d, _) in mid {
+        if let Some(id) = mid_ids
+            .iter()
+            .find(|id| s.dim(**id) == *d && s.extent(**id) > 1 && !order.contains(id))
+        {
+            order.push(*id);
+        }
+    }
+    for id in &mid_ids {
+        if !order.contains(id) {
+            order.push(*id);
+        }
+    }
+    for id in &outer_ids {
+        order.push(*id);
+    }
+    s.reorder(&order);
+
+    // buffers: RF attaches at the first loop outside the RF segment,
+    // GBUF at the first outer loop.
+    let rf_attach = order[rf_count];
+    let gbuf_attach = order[order.len() - outer_ids.len()];
+    s.buffer_at("rf", rf_attach);
+    s.buffer_at("gbuf", gbuf_attach);
+
+    if systolic {
+        s.set_systolic();
+    }
+    s
+}
+
+/// Eyeriss row-stationary (`FY | Y`): filter rows move horizontally,
+/// output rows accumulate vertically (Fig 6a).
+pub fn eyeriss_rs(shape: Shape, rows: u64, cols: u64) -> Schedule {
+    let fy = dv(shape.bound(Dim::FY), rows);
+    let y = dv(shape.bound(Dim::Y), cols);
+    let c0 = dv(shape.bound(Dim::C), 2);
+    let x0 = dv(shape.bound(Dim::X), 2);
+    let k_mid = dv(shape.bound(Dim::K), 16);
+    let c_mid = dv(shape.bound(Dim::C) / c0, 8);
+    build(
+        "eyeriss_rs",
+        shape,
+        &[(Dim::FX, shape.bound(Dim::FX)), (Dim::X, x0), (Dim::C, c0)],
+        &[(Dim::K, k_mid), (Dim::C, c_mid), (Dim::X, dv(shape.bound(Dim::X) / x0, 4))],
+        &[(Dim::FY, fy)],
+        &[(Dim::Y, y)],
+        true,
+    )
+}
+
+/// TPU-style `C | K` systolic matmul (Fig 6b): input channels stream
+/// vertically, output channels accumulate horizontally.
+pub fn tpu_ck(shape: Shape, rows: u64, cols: u64) -> Schedule {
+    let c = dv(shape.bound(Dim::C), rows);
+    let k = dv(shape.bound(Dim::K), cols);
+    let x0 = dv(shape.bound(Dim::X), 2);
+    build(
+        "tpu_ck",
+        shape,
+        &[
+            (Dim::FX, shape.bound(Dim::FX)),
+            (Dim::FY, shape.bound(Dim::FY)),
+            (Dim::X, x0),
+        ],
+        &[
+            (Dim::X, dv(shape.bound(Dim::X) / x0, 8)),
+            (Dim::Y, dv(shape.bound(Dim::Y), 8)),
+            (Dim::K, dv(shape.bound(Dim::K) / k, 4)),
+        ],
+        &[(Dim::C, c)],
+        &[(Dim::K, k)],
+        true,
+    )
+}
+
+/// ShiDianNao output-stationary (`X | Y`): each PE owns an output pixel.
+pub fn shidiannao_os(shape: Shape, rows: u64, cols: u64) -> Schedule {
+    let x = dv(shape.bound(Dim::X), rows);
+    let y = dv(shape.bound(Dim::Y), cols);
+    build(
+        "shidiannao_os",
+        shape,
+        &[
+            (Dim::FX, shape.bound(Dim::FX)),
+            (Dim::FY, shape.bound(Dim::FY)),
+            (Dim::C, dv(shape.bound(Dim::C), 2)),
+        ],
+        &[
+            (Dim::C, dv(shape.bound(Dim::C) / dv(shape.bound(Dim::C), 2), 8)),
+            (Dim::K, dv(shape.bound(Dim::K), 8)),
+        ],
+        &[(Dim::X, x)],
+        &[(Dim::Y, y)],
+        true,
+    )
+}
+
+/// DianNao-style 1D reduction tree over input channels (Fig 6c):
+/// broadcast bus, no inter-PE forwarding.
+pub fn diannao_tree(shape: Shape, rows: u64) -> Schedule {
+    let c = dv(shape.bound(Dim::C), rows);
+    build(
+        "diannao_tree",
+        shape,
+        &[
+            (Dim::FX, shape.bound(Dim::FX)),
+            (Dim::FY, shape.bound(Dim::FY)),
+        ],
+        &[
+            (Dim::K, dv(shape.bound(Dim::K), 16)),
+            (Dim::X, dv(shape.bound(Dim::X), 4)),
+        ],
+        &[(Dim::C, c)],
+        &[],
+        false,
+    )
+}
+
+/// NVDLA-like `C | K` with a broadcast data bus.
+pub fn nvdla_like(shape: Shape, rows: u64, cols: u64) -> Schedule {
+    let c = dv(shape.bound(Dim::C), rows);
+    let k = dv(shape.bound(Dim::K), cols);
+    build(
+        "nvdla_like",
+        shape,
+        &[
+            (Dim::FX, shape.bound(Dim::FX)),
+            (Dim::FY, shape.bound(Dim::FY)),
+        ],
+        &[
+            (Dim::X, dv(shape.bound(Dim::X), 8)),
+            (Dim::Y, dv(shape.bound(Dim::Y), 8)),
+        ],
+        &[(Dim::C, c)],
+        &[(Dim::K, k)],
+        false,
+    )
+}

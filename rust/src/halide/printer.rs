@@ -1,0 +1,73 @@
+//! Listing-2-style IR pretty-printer: the lowered loop nest with buffer
+//! allocations, unrolled loops, and the MAC statement.
+
+use super::schedule::Schedule;
+use crate::loopnest::Dim;
+
+/// Render the schedule as the intermediate representation the paper's
+/// Listing 2 shows: nested `for` loops (outermost first), `alloc`/copy
+/// lines at each buffer attach point, `unrolled_for` for spatial loops,
+/// and the innermost compute statement.
+pub fn print_ir(s: &Schedule) -> String {
+    let mut out = String::new();
+    let mut indent = 0usize;
+
+    // count suffix occurrences per dim to name pieces xo/xi/x2...
+    let mut seen: std::collections::HashMap<Dim, usize> = std::collections::HashMap::new();
+    let mut names: Vec<String> = vec![String::new(); s.pieces.len()];
+    // order outermost-first for naming: outer pieces get "o", inner "i"
+    for &id in s.order.iter().rev() {
+        let d = s.pieces[id.0].dim;
+        let n = seen.entry(d).or_insert(0);
+        let total_pieces = s
+            .pieces
+            .iter()
+            .filter(|p| p.dim == d)
+            .count();
+        let base = d.name().to_lowercase();
+        names[id.0] = if total_pieces == 1 {
+            base
+        } else if *n == 0 {
+            format!("{base}o")
+        } else if *n == total_pieces - 1 {
+            format!("{base}i")
+        } else {
+            format!("{base}{n}")
+        };
+        *n += 1;
+    }
+
+    let pad = |n: usize| "  ".repeat(n);
+
+    // walk outermost -> innermost, emitting buffers attached at each loop
+    for (rev_idx, &id) in s.order.iter().rev().enumerate() {
+        let pos = s.order.len() - 1 - rev_idx;
+        let p = &s.pieces[id.0];
+        let kw = if p.unrolled.is_some() {
+            "unrolled_for"
+        } else {
+            "for"
+        };
+        out.push_str(&format!(
+            "{}{} ({}, 0, {})\n",
+            pad(indent),
+            kw,
+            names[id.0],
+            p.extent
+        ));
+        indent += 1;
+        // buffers attached at this loop are allocated just inside it
+        for b in &s.buffers {
+            if s.pos(b.at) == pos {
+                out.push_str(&format!("{}alloc {}[...]\n", pad(indent), b.name));
+                out.push_str(&format!("{}{}[...] = <parent>[...]\n", pad(indent), b.name));
+            }
+        }
+    }
+    out.push_str(&format!(
+        "{}{}(x, y, k) += ibuf(x + r.x, y + r.y, r.z) * wbuf(r.x, r.y, r.z, k)\n",
+        pad(indent),
+        s.name
+    ));
+    out
+}

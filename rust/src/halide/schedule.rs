@@ -1,0 +1,176 @@
+//! The schedule builder: primitives applied to the CONV algorithm.
+
+use crate::loopnest::{Dim, Shape};
+
+/// Handle to one loop piece created by the algorithm or by `split`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LoopId(pub(crate) usize);
+
+/// Physical array axis for `unroll`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    /// Vertical (`U` of `U | V`).
+    U,
+    /// Horizontal (`V`).
+    V,
+}
+
+/// One loop piece: a dim and its extent. Pieces of the same dim nest
+/// multiplicatively (their extents multiply back to the dim's bound).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct LoopPiece {
+    pub dim: Dim,
+    pub extent: u64,
+    /// Spatially unrolled (and on which axis, in push order).
+    pub unrolled: Option<Axis>,
+}
+
+/// A buffer declared with `in_` + `compute_at`.
+#[derive(Debug, Clone)]
+pub(crate) struct Buffer {
+    pub name: String,
+    /// The loop the buffer hangs at (refilled per iteration of it).
+    pub at: LoopId,
+}
+
+/// A schedule under construction for the CONV algorithm of one layer.
+///
+/// Mirrors the paper's Table 2: `split`/`reorder` (loop blocking),
+/// `in_`+`compute_at` (memory levels), `unroll`+`systolic` (dataflow),
+/// `accelerate` (finalize → lower).
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Algorithm (function) name, used by the IR printer.
+    pub name: String,
+    /// The layer being scheduled.
+    pub shape: Shape,
+    pub(crate) pieces: Vec<LoopPiece>,
+    /// Nest order, **innermost first** (like Halide's `reorder` argument
+    /// order).
+    pub(crate) order: Vec<LoopId>,
+    pub(crate) buffers: Vec<Buffer>,
+    pub(crate) systolic: bool,
+}
+
+impl Schedule {
+    /// Start from the pure algorithm: one loop per dim in Algorithm 1's
+    /// order (`fx` innermost ... `b` outermost).
+    pub fn new(name: &str, shape: Shape) -> Self {
+        let dims_inner_first = [Dim::FX, Dim::FY, Dim::X, Dim::Y, Dim::C, Dim::K, Dim::B];
+        let pieces: Vec<LoopPiece> = dims_inner_first
+            .iter()
+            .map(|&dim| LoopPiece {
+                dim,
+                extent: shape.bound(dim),
+                unrolled: None,
+            })
+            .collect();
+        let order = (0..pieces.len()).map(LoopId).collect();
+        Schedule {
+            name: name.to_string(),
+            shape,
+            pieces,
+            order,
+            buffers: Vec::new(),
+            systolic: false,
+        }
+    }
+
+    /// The current (outermost) piece of a dim — the piece `split` splits.
+    pub fn loop_of(&self, d: Dim) -> LoopId {
+        // outermost piece of the dim = last in order with that dim
+        *self
+            .order
+            .iter()
+            .rev()
+            .find(|id| self.pieces[id.0].dim == d)
+            .expect("dim always has a piece")
+    }
+
+    /// `split(x, xo, xi, f)`: split a loop into an outer piece of
+    /// `extent/f` (keeps the identity of `id`) and a new inner piece of
+    /// extent `f` placed directly inside it. Returns `(outer, inner)`.
+    /// The factor must divide the current extent.
+    pub fn split(&mut self, id: LoopId, factor: u64) -> (LoopId, LoopId) {
+        let extent = self.pieces[id.0].extent;
+        assert!(
+            factor >= 1 && extent % factor == 0,
+            "split factor {factor} must divide extent {extent}"
+        );
+        let dim = self.pieces[id.0].dim;
+        self.pieces[id.0].extent = extent / factor;
+        let inner = LoopId(self.pieces.len());
+        self.pieces.push(LoopPiece {
+            dim,
+            extent: factor,
+            unrolled: None,
+        });
+        let pos = self.pos(id);
+        self.order.insert(pos, inner); // directly inside the outer piece
+        (id, inner)
+    }
+
+    /// Convenience: split the outermost piece of dim `d`.
+    pub fn split_dim(&mut self, d: Dim, factor: u64) -> (LoopId, LoopId) {
+        self.split(self.loop_of(d), factor)
+    }
+
+    /// `reorder(...)`: set the nest order, **innermost first**. Every
+    /// current loop piece must appear exactly once.
+    pub fn reorder(&mut self, order: &[LoopId]) {
+        assert_eq!(order.len(), self.pieces.len(), "reorder must list every loop");
+        let mut seen = vec![false; self.pieces.len()];
+        for id in order {
+            assert!(!seen[id.0], "duplicate loop in reorder");
+            seen[id.0] = true;
+        }
+        self.order = order.to_vec();
+    }
+
+    /// `in_(tensor, buf) ... compute_at(buf, at)`: declare a staging
+    /// buffer refilled per iteration of `at`. Buffers attached at the
+    /// same loop form one memory level; levels must be declared for every
+    /// on-chip level of the target architecture.
+    pub fn buffer_at(&mut self, name: &str, at: LoopId) {
+        self.buffers.push(Buffer {
+            name: name.to_string(),
+            at,
+        });
+    }
+
+    /// `unroll`: spatially unroll a loop piece onto a physical axis.
+    pub fn unroll(&mut self, id: LoopId, axis: Axis) {
+        self.pieces[id.0].unrolled = Some(axis);
+    }
+
+    /// `systolic`: inter-PE forwarding (Fig 5a). Without it the array is
+    /// a broadcast/reduction-tree structure (Fig 5b).
+    pub fn set_systolic(&mut self) {
+        self.systolic = true;
+    }
+
+    /// Position of a piece in the order (0 = innermost).
+    pub fn pos(&self, id: LoopId) -> usize {
+        self.order.iter().position(|x| *x == id).expect("loop in order")
+    }
+
+    /// Extent of a piece.
+    pub fn extent(&self, id: LoopId) -> u64 {
+        self.pieces[id.0].extent
+    }
+
+    /// Dim of a piece.
+    pub fn dim(&self, id: LoopId) -> Dim {
+        self.pieces[id.0].dim
+    }
+
+    /// Number of loop pieces.
+    pub fn num_loops(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// The current nest order (innermost first).
+    pub fn order_snapshot(&self) -> Vec<LoopId> {
+        self.order.clone()
+    }
+}

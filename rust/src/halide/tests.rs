@@ -1,0 +1,236 @@
+//! Schedule DSL tests: primitives, lowering, IR printing, presets.
+
+use super::*;
+use crate::arch::{eyeriss_like, no_local_reuse};
+use crate::energy::Table3;
+use crate::loopnest::{Dim, Shape};
+use crate::xmodel::evaluate;
+
+fn listing1_shape() -> Shape {
+    // The paper's running example: 16x16x64 output from 3x5x5 filters
+    Shape::new(1, 64, 3, 16, 16, 5, 5, 1)
+}
+
+/// Build the paper's Listing 1 schedule: split x and y by 8, buffers at
+/// xo, unroll xi on a 4-PE systolic row.
+fn listing1() -> Schedule {
+    let mut s = Schedule::new("output", listing1_shape());
+    let (_xo, xi) = s.split_dim(Dim::X, 8);
+    let (_yo, _yi) = s.split_dim(Dim::Y, 8);
+    let (_xii_o, xii) = s.split(xi, 4); // the 4-wide systolic piece
+    s.unroll(xii, Axis::U);
+    s.set_systolic();
+    s
+}
+
+#[test]
+fn split_preserves_product() {
+    let mut s = Schedule::new("f", listing1_shape());
+    let (xo, xi) = s.split_dim(Dim::X, 8);
+    assert_eq!(s.extent(xo), 2);
+    assert_eq!(s.extent(xi), 8);
+    assert_eq!(s.dim(xo), Dim::X);
+    assert_eq!(s.dim(xi), Dim::X);
+    assert_eq!(s.num_loops(), 8);
+    // inner piece sits directly inside the outer
+    assert_eq!(s.pos(xi) + 1, s.pos(xo));
+}
+
+#[test]
+#[should_panic(expected = "must divide")]
+fn split_requires_divisibility() {
+    let mut s = Schedule::new("f", listing1_shape());
+    s.split_dim(Dim::X, 7);
+}
+
+#[test]
+fn reorder_rejects_duplicates() {
+    let mut s = Schedule::new("f", listing1_shape());
+    let mut order: Vec<LoopId> = (0..s.num_loops()).map(LoopId).collect();
+    order[1] = order[0];
+    let r = std::panic::catch_unwind(move || s.reorder(&order));
+    assert!(r.is_err());
+}
+
+#[test]
+fn listing1_lowers_to_valid_mapping() {
+    let mut s = listing1();
+    // RF buffer inside everything; GBUF at xo (per Listing 1)
+    let order: Vec<LoopId> = s.order_snapshot();
+    let rf_attach = order[0]; // attach at innermost loop: RF = operands only
+    s.buffer_at("rf", rf_attach);
+    let xo = s.loop_of(Dim::X);
+    s.buffer_at("ibuf", xo);
+    let (m, smap) = s.lower(&eyeriss_like()).unwrap();
+    m.validate().unwrap();
+    assert_eq!(smap.axis_extent(true), 4);
+    assert_eq!(m.pe_count(), 4);
+}
+
+#[test]
+fn lowering_counts_buffer_groups() {
+    let s = listing1(); // no buffers declared
+    match s.lower(&eyeriss_like()) {
+        Err(LowerError::WrongBufferCount { got: 0, want: 2 }) => {}
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn lowering_rejects_array_overflow() {
+    let shape = Shape::new(1, 64, 3, 16, 16, 5, 5, 1);
+    let mut s = Schedule::new("f", shape);
+    let k = s.loop_of(Dim::K);
+    s.unroll(k, Axis::U); // 64 > 16 rows
+    s.set_systolic();
+    let order = s.order_snapshot();
+    s.buffer_at("rf", order[0]);
+    s.buffer_at("gbuf", order[3]);
+    match s.lower(&eyeriss_like()) {
+        Err(LowerError::ArrayOverflow { axis: "U", extent: 64, .. }) => {}
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn lowering_rejects_bus_mismatch() {
+    let mut s = listing1();
+    let order = s.order_snapshot();
+    s.buffer_at("rf", order[0]);
+    s.buffer_at("gbuf", order[4]);
+    match s.lower(&no_local_reuse()) {
+        Err(LowerError::BusMismatch) => {}
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn ir_printer_emits_listing2_structure() {
+    let mut s = listing1();
+    let order = s.order_snapshot();
+    s.buffer_at("rf", order[0]);
+    let xo = s.loop_of(Dim::X);
+    s.buffer_at("ibuf", xo);
+    s.buffer_at("wbuf", xo);
+    let ir = print_ir(&s);
+    assert!(ir.contains("alloc ibuf"), "{ir}");
+    assert!(ir.contains("alloc wbuf"), "{ir}");
+    assert!(ir.contains("unrolled_for"), "{ir}");
+    assert!(ir.contains("output(x, y, k) +="), "{ir}");
+    // loops print outermost-first; the b loop (extent 1) exists
+    let first_for = ir.lines().next().unwrap();
+    assert!(first_for.starts_with("for ("), "{first_for}");
+}
+
+#[test]
+fn presets_lower_and_evaluate_on_alexnet_conv3() {
+    let conv3 = Shape::new(4, 384, 256, 13, 13, 3, 3, 1);
+    let arch = eyeriss_like();
+    let bcast = no_local_reuse();
+    let cases: Vec<(Schedule, &crate::arch::Arch)> = vec![
+        (eyeriss_rs(conv3, 16, 16), &arch),
+        (tpu_ck(conv3, 16, 16), &arch),
+        (shidiannao_os(conv3, 16, 16), &arch),
+        (diannao_tree(conv3, 16), &bcast),
+        (nvdla_like(conv3, 16, 16), &bcast),
+    ];
+    for (s, a) in cases {
+        let name = s.name.clone();
+        let (m, smap) = s
+            .lower(a)
+            .unwrap_or_else(|e| panic!("{name}: lower failed: {e}"));
+        m.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let r = evaluate(&m, &smap, a, &Table3)
+            .unwrap_or_else(|e| panic!("{name}: eval failed: {e}"));
+        assert!(r.energy_pj > 0.0, "{name}");
+        assert!(r.active_pes > 1, "{name} uses the array");
+        // every preset keeps most references on-chip: DRAM fraction < 80%
+        let dram_frac = r.energy_by_level.last().unwrap() / r.energy_pj;
+        assert!(dram_frac < 0.95, "{name}: DRAM fraction {dram_frac}");
+    }
+}
+
+#[test]
+fn preset_schedules_match_their_dataflow_labels() {
+    let conv3 = Shape::new(4, 384, 256, 13, 13, 3, 3, 1);
+    let (_, smap) = tpu_ck(conv3, 16, 16).lower(&eyeriss_like()).unwrap();
+    assert_eq!(smap.label().to_string(), "C|K");
+    let (_, smap) = eyeriss_rs(conv3, 16, 16).lower(&eyeriss_like()).unwrap();
+    assert_eq!(smap.label().to_string(), "FY|Y");
+    let (_, smap) = shidiannao_os(conv3, 16, 16).lower(&eyeriss_like()).unwrap();
+    assert_eq!(smap.label().to_string(), "X|Y");
+}
+
+#[test]
+fn lowered_schedule_agrees_with_simulator() {
+    // the DSL path and the direct-mapping path must produce identical
+    // access counts on a small layer
+    let shape = Shape::new(2, 8, 4, 8, 8, 3, 3, 1);
+    let (m, smap) = tpu_ck(shape, 4, 4).lower(&eyeriss_like()).unwrap();
+    let model = evaluate(&m, &smap, &eyeriss_like(), &Table3).unwrap();
+    let sim =
+        crate::sim::simulate(&m, &smap, &eyeriss_like(), &Table3, 100_000_000).unwrap();
+    assert!((model.energy_pj - sim.energy_pj).abs() < 1e-9 * model.energy_pj);
+}
+
+#[test]
+fn functional_equivalence_of_preset_schedule() {
+    let shape = Shape::new(1, 4, 4, 6, 6, 3, 3, 1);
+    let (m, _) = shidiannao_os(shape, 3, 3).lower(&eyeriss_like()).unwrap();
+    let data = crate::sim::ConvData::random(shape, 42);
+    assert_eq!(
+        crate::sim::functional_conv(&m, &data),
+        crate::sim::reference_conv(&data)
+    );
+}
+
+#[test]
+fn printer_names_split_pieces() {
+    let mut s = Schedule::new("f", listing1_shape());
+    let (_xo, xi) = s.split_dim(Dim::X, 8);
+    let _ = xi;
+    let ir = print_ir(&s);
+    assert!(ir.contains("for (xo, 0, 2)"), "{ir}");
+    assert!(ir.contains("for (xi, 0, 8)"), "{ir}");
+}
+
+#[test]
+fn loop_of_returns_outermost_piece() {
+    let mut s = Schedule::new("f", listing1_shape());
+    let (xo, _xi) = s.split_dim(Dim::X, 8);
+    assert_eq!(s.loop_of(Dim::X), xo);
+    let (xoo, _xoi) = s.split_dim(Dim::X, 2);
+    assert_eq!(s.loop_of(Dim::X), xoo);
+    assert_eq!(xoo, xo); // split keeps the outer identity
+}
+
+#[test]
+fn diannao_tree_is_broadcast_reduction() {
+    let shape = Shape::new(2, 16, 16, 6, 6, 3, 3, 1);
+    let sched = diannao_tree(shape, 16);
+    let (m, smap) = sched.lower(&no_local_reuse()).unwrap();
+    // C unrolled on the tree
+    assert!(smap.extent(Dim::C) > 1);
+    assert!(smap.v.is_empty() || smap.axis_extent(false) == 1);
+    m.validate().unwrap();
+}
+
+#[test]
+fn presets_respect_arbitrary_array_sizes() {
+    let conv3 = Shape::new(2, 384, 256, 13, 13, 3, 3, 1);
+    for (rows, cols) in [(4, 4), (8, 8), (32, 32)] {
+        let (m, smap) = tpu_ck(conv3, rows, cols)
+            .lower(&{
+                let mut a = eyeriss_like();
+                a.array = crate::arch::ArrayShape {
+                    rows: rows as u32,
+                    cols: cols as u32,
+                };
+                a
+            })
+            .unwrap();
+        m.validate().unwrap();
+        assert!(smap.axis_extent(true) <= rows);
+        assert!(smap.axis_extent(false) <= cols);
+    }
+}

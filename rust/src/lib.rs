@@ -1,0 +1,42 @@
+//! # Interstellar
+//!
+//! A reproduction of *"Interstellar: Using Halide's Scheduling Language to
+//! Analyze DNN Accelerators"* (Yang et al., ASPLOS 2020) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper's insight: every dense DNN accelerator is a particular
+//! transformation — blocking, reordering, spatial unrolling — of the
+//! seven-level CONV loop nest, plus a hardware resource allocation. This
+//! crate implements:
+//!
+//! - [`loopnest`] — the seven-dim loop-nest IR, blocking factors, tiling;
+//! - [`nn`] — layer shapes and the paper's nine benchmark networks;
+//! - [`arch`] — memory hierarchies, PE arrays, the paper's configurations;
+//! - [`energy`] — the Table 3 access-energy cost model;
+//! - [`dataflow`] — the `U | V` dataflow taxonomy with replication;
+//! - [`xmodel`] — the analytical access-count / energy / performance model;
+//! - [`sim`] — a trace-driven simulator that counts accesses exactly
+//!   (the stand-in for the paper's post-synthesis validation, Fig 7);
+//! - [`halide`] — the schedule DSL (`split`, `reorder`, `in_`/`compute_at`,
+//!   `unroll`, `systolic`, `accelerate`) and its lowering;
+//! - [`search`] — design-space enumeration and the efficient auto-optimizer
+//!   (§6.3: fix `C|K`, 4–16 size-ratio rule);
+//! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
+//!   artifacts (the request-path compute; Python is build-time only);
+//! - [`coordinator`] — CLI, sweep orchestration, reports.
+//!
+//! See `DESIGN.md` for the experiment index (every paper table/figure →
+//! bench target) and `EXPERIMENTS.md` for measured results.
+
+pub mod arch;
+pub mod coordinator;
+pub mod dataflow;
+pub mod energy;
+pub mod halide;
+pub mod loopnest;
+pub mod nn;
+pub mod runtime;
+pub mod search;
+pub mod sim;
+pub mod util;
+pub mod xmodel;

@@ -1,0 +1,298 @@
+//! Blocking factors, per-level loop orders, and the [`Mapping`] — a fully
+//! scheduled loop nest (the paper's "loop blocking + dataflow" pair).
+
+use super::dims::{Dim, Tensor, ALL_DIMS, NDIMS};
+
+/// The seven loop bounds of one layer plus its spatial stride.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    /// Bounds in canonical dim order `[B, K, C, X, Y, FX, FY]`.
+    pub bounds: [u64; NDIMS],
+    /// Spatial stride (input step per output pixel).
+    pub stride: u32,
+}
+
+impl Shape {
+    /// Construct from named bounds.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(b: u64, k: u64, c: u64, x: u64, y: u64, fx: u64, fy: u64, stride: u32) -> Self {
+        Shape {
+            bounds: [b, k, c, x, y, fx, fy],
+            stride,
+        }
+    }
+
+    /// Bound of one dim.
+    #[inline]
+    pub fn bound(&self, d: Dim) -> u64 {
+        self.bounds[d.idx()]
+    }
+
+    /// Total multiply-accumulate operations.
+    pub fn macs(&self) -> u64 {
+        self.bounds.iter().product()
+    }
+
+    /// Input width in elements: `(X-1)*stride + FX`.
+    pub fn input_x(&self) -> u64 {
+        (self.bound(Dim::X) - 1) * self.stride as u64 + self.bound(Dim::FX)
+    }
+
+    /// Input height in elements: `(Y-1)*stride + FY`.
+    pub fn input_y(&self) -> u64 {
+        (self.bound(Dim::Y) - 1) * self.stride as u64 + self.bound(Dim::FY)
+    }
+
+    /// Total elements of one tensor.
+    pub fn tensor_elems(&self, t: Tensor) -> u64 {
+        match t {
+            Tensor::Weight => {
+                self.bound(Dim::K) * self.bound(Dim::C) * self.bound(Dim::FX) * self.bound(Dim::FY)
+            }
+            Tensor::Output => {
+                self.bound(Dim::B) * self.bound(Dim::K) * self.bound(Dim::X) * self.bound(Dim::Y)
+            }
+            Tensor::Input => {
+                self.bound(Dim::B) * self.bound(Dim::C) * self.input_x() * self.input_y()
+            }
+        }
+    }
+}
+
+/// Intra-level loop order: all seven dims, **innermost first**.
+///
+/// The order decides stationarity: a dim irrelevant to tensor `t` that is
+/// nested inside every `t`-relevant dim (with factor > 1) at this level
+/// does not force refetches of `t`'s tile below this level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelOrder(pub [Dim; NDIMS]);
+
+impl LevelOrder {
+    /// Canonical order (FX,FY innermost ... B outermost) — a sensible
+    /// weight-stationary-ish default.
+    pub fn canonical() -> Self {
+        LevelOrder([Dim::FX, Dim::FY, Dim::C, Dim::X, Dim::Y, Dim::K, Dim::B])
+    }
+
+    /// An order that keeps `t` stationary at this level: all dims
+    /// irrelevant to `t` innermost (so iterating them does not evict `t`'s
+    /// tile below), relevant dims outermost.
+    pub fn stationary_for(t: Tensor) -> Self {
+        let mut dims = [Dim::B; NDIMS];
+        let mut i = 0;
+        for d in ALL_DIMS {
+            if !t.relevant(d) {
+                dims[i] = d;
+                i += 1;
+            }
+        }
+        for d in ALL_DIMS {
+            if t.relevant(d) {
+                dims[i] = d;
+                i += 1;
+            }
+        }
+        LevelOrder(dims)
+    }
+
+    /// Validate: a permutation of all seven dims.
+    pub fn is_valid(&self) -> bool {
+        let mut seen = [false; NDIMS];
+        for d in self.0 {
+            if seen[d.idx()] {
+                return false;
+            }
+            seen[d.idx()] = true;
+        }
+        true
+    }
+
+    /// Position of a dim (0 = innermost).
+    pub fn pos(&self, d: Dim) -> usize {
+        self.0.iter().position(|&x| x == d).unwrap()
+    }
+}
+
+/// Per-level temporal blocking factors.
+///
+/// `factors[level][dim]`; level 0 is the innermost storage level (RF),
+/// the last level is DRAM. The product over levels of `factors[_][d]`
+/// times the spatial factor of `d` must equal the layer bound of `d`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Blocking {
+    /// `factors[level][dim_idx]`.
+    pub factors: Vec<[u64; NDIMS]>,
+}
+
+impl Blocking {
+    /// All-ones blocking with `levels` levels (everything at DRAM level 0
+    /// iteration... i.e. no blocking yet).
+    pub fn ones(levels: usize) -> Self {
+        Blocking {
+            factors: vec![[1; NDIMS]; levels],
+        }
+    }
+
+    /// Number of temporal levels.
+    pub fn levels(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Factor of `d` at `level`.
+    #[inline]
+    pub fn factor(&self, level: usize, d: Dim) -> u64 {
+        self.factors[level][d.idx()]
+    }
+
+    /// Set a factor.
+    pub fn set(&mut self, level: usize, d: Dim, f: u64) {
+        self.factors[level][d.idx()] = f;
+    }
+}
+
+/// A fully scheduled loop nest: shape + temporal blocking + per-level
+/// orders + spatial unrolling position.
+///
+/// Hierarchy layout (innermost → outermost):
+/// temporal levels `0 .. spatial_at` are **per-PE** (register files);
+/// the PE array's spatial unrolling sits between `spatial_at - 1` and
+/// `spatial_at`; temporal levels `spatial_at ..` are **shared**
+/// (SRAM buffers, then DRAM last).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mapping {
+    /// The layer being scheduled.
+    pub shape: Shape,
+    /// Temporal blocking factors (innermost level first, DRAM last).
+    pub blocking: Blocking,
+    /// Intra-level loop orders, one per temporal level.
+    pub orders: Vec<LevelOrder>,
+    /// Spatially unrolled factors per dim (the dataflow extents).
+    pub spatial: [u64; NDIMS],
+    /// Index of the first *shared* temporal level (the array sits just
+    /// below it). Also the number of per-PE register levels.
+    pub spatial_at: usize,
+}
+
+impl Mapping {
+    /// A trivial mapping: everything iterated at DRAM with `rf_levels`
+    /// per-PE levels and `shared_levels` shared levels, no unrolling.
+    pub fn trivial(shape: Shape, rf_levels: usize, shared_levels: usize) -> Self {
+        let levels = rf_levels + shared_levels;
+        let mut blocking = Blocking::ones(levels);
+        // all iteration at the outermost (DRAM) level
+        for d in ALL_DIMS {
+            blocking.set(levels - 1, d, shape.bound(d));
+        }
+        Mapping {
+            shape,
+            blocking,
+            orders: vec![LevelOrder::canonical(); levels],
+            spatial: [1; NDIMS],
+            spatial_at: rf_levels,
+        }
+    }
+
+    /// Number of temporal levels.
+    pub fn levels(&self) -> usize {
+        self.blocking.levels()
+    }
+
+    /// Total PEs used (product of spatial factors).
+    pub fn pe_count(&self) -> u64 {
+        self.spatial.iter().product()
+    }
+
+    /// Check factorization: per dim, (Π temporal factors) × spatial == bound.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.orders.len() != self.blocking.levels() {
+            return Err(format!(
+                "orders ({}) != levels ({})",
+                self.orders.len(),
+                self.blocking.levels()
+            ));
+        }
+        if self.spatial_at == 0 || self.spatial_at > self.blocking.levels() {
+            return Err(format!("spatial_at {} out of range", self.spatial_at));
+        }
+        for o in &self.orders {
+            if !o.is_valid() {
+                return Err("invalid level order (not a permutation)".into());
+            }
+        }
+        for d in ALL_DIMS {
+            let prod: u64 = (0..self.blocking.levels())
+                .map(|l| self.blocking.factor(l, d))
+                .product::<u64>()
+                * self.spatial[d.idx()];
+            if prod != self.shape.bound(d) {
+                return Err(format!(
+                    "dim {}: factors product {} != bound {}",
+                    d,
+                    prod,
+                    self.shape.bound(d)
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Cumulative bound of dim `d` visible at temporal level `level`
+    /// (inclusive): per-PE below `spatial_at`, aggregate (× spatial) at or
+    /// above it.
+    pub fn cum(&self, level: usize, d: Dim) -> u64 {
+        let mut p: u64 = (0..=level).map(|l| self.blocking.factor(l, d)).product();
+        if level >= self.spatial_at {
+            p *= self.spatial[d.idx()];
+        }
+        p
+    }
+
+    /// Cumulative bound including the spatial factor regardless of level —
+    /// the "unique data across the whole array" view used for shared-level
+    /// access counting.
+    pub fn cum_with_spatial(&self, level: usize, d: Dim) -> u64 {
+        let p: u64 = (0..=level).map(|l| self.blocking.factor(l, d)).product();
+        p * self.spatial[d.idx()]
+    }
+
+    /// Tile size (elements) of tensor `t` held at temporal level `level`.
+    ///
+    /// For levels below `spatial_at` this is the per-PE tile; at or above,
+    /// the aggregate tile across the array. Input tiles use halo
+    /// arithmetic: `ix = (cx-1)*stride + cfx`.
+    pub fn tile_elems(&self, t: Tensor, level: usize) -> u64 {
+        let c = |d: Dim| self.cum(level, d);
+        match t {
+            Tensor::Weight => c(Dim::K) * c(Dim::C) * c(Dim::FX) * c(Dim::FY),
+            Tensor::Output => c(Dim::B) * c(Dim::K) * c(Dim::X) * c(Dim::Y),
+            Tensor::Input => {
+                let ix = (c(Dim::X) - 1) * self.shape.stride as u64 + c(Dim::FX);
+                let iy = (c(Dim::Y) - 1) * self.shape.stride as u64 + c(Dim::FY);
+                c(Dim::B) * c(Dim::C) * ix.min(self.shape.input_x()) * iy.min(self.shape.input_y())
+            }
+        }
+    }
+
+    /// Unique elements of `t` needed by the whole array for one pass of
+    /// temporal level `level` (i.e. `tile_elems` but always counting the
+    /// spatial extent, with multicast dedup along `t`-irrelevant spatial
+    /// dims).
+    pub fn tile_elems_array(&self, t: Tensor, level: usize) -> u64 {
+        let c = |d: Dim| {
+            let mut p: u64 = (0..=level).map(|l| self.blocking.factor(l, d)).product();
+            if level >= self.spatial_at || t.relevant(d) {
+                p *= self.spatial[d.idx()];
+            }
+            p
+        };
+        match t {
+            Tensor::Weight => c(Dim::K) * c(Dim::C) * c(Dim::FX) * c(Dim::FY),
+            Tensor::Output => c(Dim::B) * c(Dim::K) * c(Dim::X) * c(Dim::Y),
+            Tensor::Input => {
+                let ix = (c(Dim::X) - 1) * self.shape.stride as u64 + c(Dim::FX);
+                let iy = (c(Dim::Y) - 1) * self.shape.stride as u64 + c(Dim::FY);
+                c(Dim::B) * c(Dim::C) * ix.min(self.shape.input_x()) * iy.min(self.shape.input_y())
+            }
+        }
+    }
+}

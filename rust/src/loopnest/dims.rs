@@ -1,0 +1,143 @@
+//! Loop dimensions and tensors of the seven-level CONV nest.
+
+/// The seven loop dimensions of Algorithm 1.
+///
+/// `B` batch, `K` output channels, `C` input channels, `X`/`Y` output
+/// spatial, `FX`/`FY` filter spatial.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    /// Batch.
+    B,
+    /// Output channels (filters).
+    K,
+    /// Input channels.
+    C,
+    /// Output width.
+    X,
+    /// Output height.
+    Y,
+    /// Filter width.
+    FX,
+    /// Filter height.
+    FY,
+}
+
+/// Number of loop dimensions.
+pub const NDIMS: usize = 7;
+
+/// All dims in canonical (index) order: B, K, C, X, Y, FX, FY.
+pub const ALL_DIMS: [Dim; NDIMS] = [Dim::B, Dim::K, Dim::C, Dim::X, Dim::Y, Dim::FX, Dim::FY];
+
+impl Dim {
+    /// Canonical index (position in [`ALL_DIMS`]).
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            Dim::B => 0,
+            Dim::K => 1,
+            Dim::C => 2,
+            Dim::X => 3,
+            Dim::Y => 4,
+            Dim::FX => 5,
+            Dim::FY => 6,
+        }
+    }
+
+    /// Dim from canonical index.
+    pub fn from_idx(i: usize) -> Dim {
+        ALL_DIMS[i]
+    }
+
+    /// Short name used in dataflow syntax ("C|K", "FY|Y").
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::B => "B",
+            Dim::K => "K",
+            Dim::C => "C",
+            Dim::X => "X",
+            Dim::Y => "Y",
+            Dim::FX => "FX",
+            Dim::FY => "FY",
+        }
+    }
+
+    /// Parse a short name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Dim> {
+        match s.to_ascii_uppercase().as_str() {
+            "B" => Some(Dim::B),
+            "K" => Some(Dim::K),
+            "C" => Some(Dim::C),
+            "X" => Some(Dim::X),
+            "Y" => Some(Dim::Y),
+            "FX" => Some(Dim::FX),
+            "FY" => Some(Dim::FY),
+            _ => None,
+        }
+    }
+
+    /// Is this a reduction dim (irrelevant to the output tensor)?
+    #[inline]
+    pub fn is_reduction(self) -> bool {
+        matches!(self, Dim::C | Dim::FX | Dim::FY)
+    }
+}
+
+impl std::fmt::Display for Dim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The three tensors of the CONV nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tensor {
+    /// Input feature maps `I[b][c][x+fx][y+fy]`.
+    Input,
+    /// Weights `W[k][c][fx][fy]`.
+    Weight,
+    /// Output feature maps `O[b][k][x][y]`.
+    Output,
+}
+
+/// All tensors, canonical order.
+pub const ALL_TENSORS: [Tensor; 3] = [Tensor::Input, Tensor::Weight, Tensor::Output];
+
+impl Tensor {
+    /// Canonical index.
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            Tensor::Input => 0,
+            Tensor::Weight => 1,
+            Tensor::Output => 2,
+        }
+    }
+
+    /// Short label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tensor::Input => "I",
+            Tensor::Weight => "W",
+            Tensor::Output => "O",
+        }
+    }
+
+    /// Is `d` an index dimension of this tensor?
+    ///
+    /// `X`/`Y` count as relevant to the input (via the `x+fx` halo);
+    /// reduction dims are irrelevant to the output.
+    #[inline]
+    pub fn relevant(self, d: Dim) -> bool {
+        match self {
+            Tensor::Input => matches!(d, Dim::B | Dim::C | Dim::X | Dim::Y | Dim::FX | Dim::FY),
+            Tensor::Weight => matches!(d, Dim::K | Dim::C | Dim::FX | Dim::FY),
+            Tensor::Output => matches!(d, Dim::B | Dim::K | Dim::X | Dim::Y),
+        }
+    }
+}
+
+impl std::fmt::Display for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}

@@ -1,0 +1,16 @@
+//! The seven-dimension loop-nest IR (Algorithm 1 of the paper).
+//!
+//! Every dense DNN layer is the nest
+//! `for b,k,c,y,x,fy,fx: O[b][k][x][y] += I[b][c][x+fx][y+fy] * W[k][c][fx][fy]`
+//! and every accelerator is a blocking / reordering / spatial-unrolling of
+//! it. This module defines the dims, tensors, per-level blocking factors,
+//! per-level loop orders, and tile-size arithmetic (with the input halo).
+
+mod blocking;
+mod dims;
+
+pub use blocking::{Blocking, LevelOrder, Mapping, Shape};
+pub use dims::{Dim, Tensor, ALL_DIMS, ALL_TENSORS, NDIMS};
+
+#[cfg(test)]
+mod tests;

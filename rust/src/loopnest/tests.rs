@@ -1,0 +1,198 @@
+//! Unit + property tests for the loop-nest IR.
+
+use super::*;
+use crate::util::prop;
+
+fn conv3_like() -> Shape {
+    // AlexNet CONV3 at full scale: B=16, K=384, C=256, X=Y=13, F=3x3
+    Shape::new(16, 384, 256, 13, 13, 3, 3, 1)
+}
+
+#[test]
+fn dim_roundtrip() {
+    for d in ALL_DIMS {
+        assert_eq!(Dim::from_idx(d.idx()), d);
+        assert_eq!(Dim::parse(d.name()), Some(d));
+    }
+    assert_eq!(Dim::parse("fy"), Some(Dim::FY));
+    assert_eq!(Dim::parse("Z"), None);
+}
+
+#[test]
+fn reduction_dims() {
+    assert!(Dim::C.is_reduction());
+    assert!(Dim::FX.is_reduction());
+    assert!(Dim::FY.is_reduction());
+    assert!(!Dim::B.is_reduction());
+    assert!(!Dim::K.is_reduction());
+    assert!(!Dim::X.is_reduction());
+}
+
+#[test]
+fn tensor_relevance_matches_algorithm1() {
+    use Tensor::*;
+    // O[b][k][x][y]
+    for d in [Dim::B, Dim::K, Dim::X, Dim::Y] {
+        assert!(Output.relevant(d));
+    }
+    for d in [Dim::C, Dim::FX, Dim::FY] {
+        assert!(!Output.relevant(d));
+    }
+    // W[k][c][fx][fy]
+    for d in [Dim::K, Dim::C, Dim::FX, Dim::FY] {
+        assert!(Weight.relevant(d));
+    }
+    for d in [Dim::B, Dim::X, Dim::Y] {
+        assert!(!Weight.relevant(d));
+    }
+    // I[b][c][x+fx][y+fy]
+    for d in ALL_DIMS {
+        assert_eq!(Input.relevant(d), d != Dim::K);
+    }
+}
+
+#[test]
+fn reduction_iff_output_irrelevant() {
+    for d in ALL_DIMS {
+        assert_eq!(d.is_reduction(), !Tensor::Output.relevant(d));
+    }
+}
+
+#[test]
+fn shape_macs_and_sizes() {
+    let s = conv3_like();
+    assert_eq!(s.macs(), 16 * 384 * 256 * 13 * 13 * 3 * 3);
+    assert_eq!(s.tensor_elems(Tensor::Weight), 384 * 256 * 3 * 3);
+    assert_eq!(s.tensor_elems(Tensor::Output), 16 * 384 * 13 * 13);
+    assert_eq!(s.input_x(), 15);
+    assert_eq!(s.tensor_elems(Tensor::Input), 16 * 256 * 15 * 15);
+}
+
+#[test]
+fn fc_layer_as_degenerate_conv() {
+    // FC: only B, K, C loops (paper §3)
+    let s = Shape::new(128, 1000, 4096, 1, 1, 1, 1, 1);
+    assert_eq!(s.macs(), 128 * 1000 * 4096);
+    assert_eq!(s.tensor_elems(Tensor::Weight), 1000 * 4096);
+    assert_eq!(s.tensor_elems(Tensor::Input), 128 * 4096);
+    assert_eq!(s.tensor_elems(Tensor::Output), 128 * 1000);
+}
+
+#[test]
+fn strided_input_halo() {
+    // AlexNet CONV1-like: 11x11 filter, stride 4, X=Y=55
+    let s = Shape::new(1, 96, 3, 55, 55, 11, 11, 4);
+    assert_eq!(s.input_x(), 54 * 4 + 11); // 227
+    assert_eq!(s.input_y(), 227);
+}
+
+#[test]
+fn level_order_validity() {
+    assert!(LevelOrder::canonical().is_valid());
+    for t in ALL_TENSORS {
+        let o = LevelOrder::stationary_for(t);
+        assert!(o.is_valid());
+        // irrelevant dims must all be innermost
+        let n_irrel = ALL_DIMS.iter().filter(|&&d| !t.relevant(d)).count();
+        for (i, d) in o.0.iter().enumerate() {
+            assert_eq!(t.relevant(*d), i >= n_irrel, "{t} order {:?}", o.0);
+        }
+    }
+    let bad = LevelOrder([Dim::B; NDIMS]);
+    assert!(!bad.is_valid());
+}
+
+#[test]
+fn trivial_mapping_validates() {
+    let m = Mapping::trivial(conv3_like(), 1, 2);
+    m.validate().unwrap();
+    assert_eq!(m.levels(), 3);
+    assert_eq!(m.pe_count(), 1);
+    // full tensor resident only at the top level
+    assert_eq!(
+        m.tile_elems(Tensor::Weight, 2),
+        conv3_like().tensor_elems(Tensor::Weight)
+    );
+    assert_eq!(m.tile_elems(Tensor::Weight, 0), 1);
+}
+
+#[test]
+fn mapping_validate_catches_bad_product() {
+    let mut m = Mapping::trivial(conv3_like(), 1, 2);
+    m.blocking.set(0, Dim::K, 2); // 2*384 != 384
+    assert!(m.validate().is_err());
+}
+
+#[test]
+fn mapping_cum_and_tiles() {
+    let shape = Shape::new(2, 8, 4, 6, 6, 3, 3, 1);
+    let mut m = Mapping::trivial(shape, 1, 2);
+    // move K=2, C=4, FX=3, FY=3, X=6, Y=6 into RF; spatial K=2; rest stays up
+    m.blocking.set(0, Dim::K, 2);
+    m.blocking.set(0, Dim::C, 4);
+    m.blocking.set(0, Dim::FX, 3);
+    m.blocking.set(0, Dim::FY, 3);
+    m.blocking.set(0, Dim::X, 6);
+    m.blocking.set(0, Dim::Y, 6);
+    m.spatial[Dim::K.idx()] = 2;
+    m.blocking.set(2, Dim::K, 2);
+    m.blocking.set(2, Dim::C, 1);
+    m.blocking.set(2, Dim::FX, 1);
+    m.blocking.set(2, Dim::FY, 1);
+    m.blocking.set(2, Dim::X, 1);
+    m.blocking.set(2, Dim::Y, 1);
+    m.validate().unwrap();
+
+    // per-PE RF tile
+    assert_eq!(m.cum(0, Dim::K), 2);
+    assert_eq!(m.tile_elems(Tensor::Weight, 0), 2 * 4 * 3 * 3);
+    // input halo at RF: ix = (6-1)*1+3 = 8
+    assert_eq!(m.tile_elems(Tensor::Input, 0), 4 * 8 * 8);
+    // shared level sees spatial: K cum at level 1 = 2(rf) * 2(spatial)
+    assert_eq!(m.cum(1, Dim::K), 4);
+    // array-unique weight tile for one RF pass: K spans spatial
+    assert_eq!(m.tile_elems_array(Tensor::Weight, 0), 4 * 4 * 3 * 3);
+    // input is K-irrelevant: multicast, no K multiplier
+    assert_eq!(m.tile_elems_array(Tensor::Input, 0), 4 * 8 * 8);
+}
+
+#[test]
+fn halo_clamps_to_full_input() {
+    // cum X tile of 5 with stride 2 and FX 3 -> ix = 4*2+3 = 11, but the
+    // real input is only (5-1)*2+3 = 11 as well; craft a case where the
+    // naive halo would exceed: X split 5 = 5 at RF, full
+    let shape = Shape::new(1, 1, 1, 5, 5, 3, 3, 2);
+    let m = Mapping::trivial(shape, 1, 1);
+    assert_eq!(m.tile_elems(Tensor::Input, 1), shape.tensor_elems(Tensor::Input));
+}
+
+#[test]
+fn prop_random_blockings_validate_and_tile_monotone() {
+    prop::for_cases(0xb10c, 200, |rng| {
+        // random small shape
+        let shape = Shape::new(
+            rng.range(1, 4),
+            rng.range(1, 16),
+            rng.range(1, 16),
+            rng.range(1, 8),
+            rng.range(1, 8),
+            rng.range(1, 3),
+            rng.range(1, 3),
+            rng.range(1, 2) as u32,
+        );
+        let levels = rng.range(2, 4) as usize;
+        let m = crate::search::random_mapping(shape, levels, 1, rng);
+        m.validate().unwrap_or_else(|e| panic!("{e}"));
+        // tiles grow monotonically with level
+        for t in ALL_TENSORS {
+            for l in 1..m.levels() {
+                assert!(
+                    m.tile_elems(t, l) >= m.tile_elems(t, l - 1),
+                    "tile of {t} shrank at level {l}"
+                );
+            }
+            // top level holds the whole tensor
+            assert_eq!(m.tile_elems(t, m.levels() - 1), shape.tensor_elems(t));
+        }
+    });
+}

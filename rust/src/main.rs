@@ -1,0 +1,9 @@
+//! `interstellar` — leader binary: CLI over the coordinator.
+
+use anyhow::Result;
+use interstellar::coordinator::cli;
+use interstellar::util::Args;
+
+fn main() -> Result<()> {
+    cli::run(Args::from_env())
+}

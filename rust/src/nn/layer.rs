@@ -1,0 +1,95 @@
+//! A single DNN layer as an instance of the seven-loop nest.
+
+use crate::loopnest::{Shape, Tensor};
+
+/// Layer kind — determines which loop bounds degenerate to 1 and how the
+/// layer maps onto the Pallas kernels at the compute layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard convolution.
+    Conv,
+    /// 1×1 convolution (channel reduction / expansion).
+    Pointwise,
+    /// Depthwise convolution: one filter per channel. Expressed in the
+    /// seven-loop nest with `C = 1` and `K =` channel count (each output
+    /// channel reads its own single input channel); the input-channel
+    /// dimension rides on `K`, so input size uses `K` instead of `C`.
+    Depthwise,
+    /// Fully connected: only B, K, C loops.
+    FullyConnected,
+    /// One gate-bank matmul of an LSTM cell (timestep-batched FC).
+    LstmGate,
+}
+
+/// One layer: a name, a kind, and the seven loop bounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    /// Display name, e.g. `"CONV3"`.
+    pub name: String,
+    /// Kind (see [`LayerKind`]).
+    pub kind: LayerKind,
+    /// The loop-nest shape.
+    pub shape: Shape,
+}
+
+impl Layer {
+    /// Standard conv layer. `x`/`y` are *output* spatial sizes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(name: &str, b: u64, k: u64, c: u64, x: u64, y: u64, f: u64, stride: u32) -> Self {
+        Layer {
+            name: name.to_string(),
+            kind: if f == 1 { LayerKind::Pointwise } else { LayerKind::Conv },
+            shape: Shape::new(b, k, c, x, y, f, f, stride),
+        }
+    }
+
+    /// Depthwise conv layer over `ch` channels (MobileNet).
+    pub fn depthwise(name: &str, b: u64, ch: u64, x: u64, y: u64, f: u64, stride: u32) -> Self {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Depthwise,
+            shape: Shape::new(b, ch, 1, x, y, f, f, stride),
+        }
+    }
+
+    /// Fully-connected layer: `c` inputs, `k` outputs, batch `b`.
+    pub fn fc(name: &str, b: u64, k: u64, c: u64) -> Self {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::FullyConnected,
+            shape: Shape::new(b, k, c, 1, 1, 1, 1, 1),
+        }
+    }
+
+    /// One LSTM gate bank: `[b, e] @ [e, 4h]` (input) or `[b, h] @ [h, 4h]`
+    /// (hidden) — both matmuls per cell are emitted as separate layers.
+    pub fn lstm_gate(name: &str, b: u64, in_dim: u64, h: u64) -> Self {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::LstmGate,
+            shape: Shape::new(b, 4 * h, in_dim, 1, 1, 1, 1, 1),
+        }
+    }
+
+    /// MACs for this layer.
+    pub fn macs(&self) -> u64 {
+        self.shape.macs()
+    }
+
+    /// Total elements of one tensor (depthwise adjusts I to ride on K).
+    pub fn tensor_elems(&self, t: Tensor) -> u64 {
+        match (self.kind, t) {
+            (LayerKind::Depthwise, Tensor::Input) => {
+                // input channels == output channels (K); C is 1 in the nest
+                self.shape.tensor_elems(Tensor::Input) * self.shape.bounds[1]
+            }
+            _ => self.shape.tensor_elems(t),
+        }
+    }
+
+    /// True when the layer has meaningful weight reuse only through
+    /// batching (FC-family) — the paper's "limited reuse" class.
+    pub fn is_fc_family(&self) -> bool {
+        matches!(self.kind, LayerKind::FullyConnected | LayerKind::LstmGate)
+    }
+}

@@ -1,0 +1,10 @@
+//! Layers and benchmark networks (the paper's §6.3 workload set).
+
+mod layer;
+mod networks;
+
+pub use layer::{Layer, LayerKind};
+pub use networks::{all_benchmarks, network, network_names, Network};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,219 @@
+//! The paper's benchmark networks (§6.3): four CNNs, three recurrent
+//! networks, two MLPs.
+//!
+//! Layer tables are encoded from the original papers. Notes:
+//! - AlexNet's grouped CONV2/4/5 use the per-group input-channel counts
+//!   (C = 48/192/192), matching the original network's MAC count (~724M
+//!   per image) and the convention of Eyeriss and the Interstellar repo.
+//! - LSTM-M / LSTM-L are one four-layer seq2seq timestep (Sutskever et
+//!   al.) with embedding sizes 500 / 1000: two gate-bank matmuls per
+//!   layer. RHN is the depth-10 Recurrent Highway Network (hidden 830).
+//! - MLPs follow PRIME's topologies at batch 128.
+
+use super::layer::Layer;
+
+/// A named network: an ordered list of layers.
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// Display name ("alexnet", ...).
+    pub name: String,
+    /// Layers in execution order.
+    pub layers: Vec<Layer>,
+    /// The batch size the layers were instantiated with.
+    pub batch: u64,
+}
+
+impl Network {
+    /// Total MACs over all layers.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+}
+
+/// Names of all nine benchmarks, in the paper's Figure 14 order.
+pub fn network_names() -> Vec<&'static str> {
+    vec![
+        "alexnet",
+        "vgg16",
+        "googlenet",
+        "mobilenet",
+        "lstm-m",
+        "lstm-l",
+        "rhn",
+        "mlp-m",
+        "mlp-l",
+    ]
+}
+
+/// Build a benchmark network by name with the given batch size.
+/// Recognized names are those in [`network_names`].
+pub fn network(name: &str, batch: u64) -> Option<Network> {
+    let b = batch;
+    let layers = match name {
+        "alexnet" => alexnet(b),
+        "vgg16" => vgg16(b),
+        "googlenet" => googlenet(b),
+        "mobilenet" => mobilenet(b),
+        "lstm-m" => lstm(b, 500),
+        "lstm-l" => lstm(b, 1000),
+        "rhn" => rhn(b, 830, 10),
+        "mlp-m" => mlp(b, &[784, 500, 250, 10]),
+        "mlp-l" => mlp(b, &[784, 1500, 1000, 500, 10]),
+        _ => return None,
+    };
+    Some(Network {
+        name: name.to_string(),
+        layers,
+        batch,
+    })
+}
+
+/// All nine benchmarks at the paper's default batch sizes
+/// (CNNs 16, LSTMs/RHN 1, MLPs 128).
+pub fn all_benchmarks() -> Vec<Network> {
+    network_names()
+        .into_iter()
+        .map(|n| {
+            let batch = if n.starts_with("lstm") || n == "rhn" {
+                1
+            } else if n.starts_with("mlp") {
+                128
+            } else {
+                16
+            };
+            network(n, batch).unwrap()
+        })
+        .collect()
+}
+
+fn alexnet(b: u64) -> Vec<Layer> {
+    vec![
+        Layer::conv("CONV1", b, 96, 3, 55, 55, 11, 4),
+        Layer::conv("CONV2", b, 256, 48, 27, 27, 5, 1),
+        Layer::conv("CONV3", b, 384, 256, 13, 13, 3, 1),
+        Layer::conv("CONV4", b, 384, 192, 13, 13, 3, 1),
+        Layer::conv("CONV5", b, 256, 192, 13, 13, 3, 1),
+        Layer::fc("FC6", b, 4096, 9216),
+        Layer::fc("FC7", b, 4096, 4096),
+        Layer::fc("FC8", b, 1000, 4096),
+    ]
+}
+
+fn vgg16(b: u64) -> Vec<Layer> {
+    let mut v = vec![
+        Layer::conv("CONV1_1", b, 64, 3, 224, 224, 3, 1),
+        Layer::conv("CONV1_2", b, 64, 64, 224, 224, 3, 1),
+        Layer::conv("CONV2_1", b, 128, 64, 112, 112, 3, 1),
+        Layer::conv("CONV2_2", b, 128, 128, 112, 112, 3, 1),
+        Layer::conv("CONV3_1", b, 256, 128, 56, 56, 3, 1),
+        Layer::conv("CONV3_2", b, 256, 256, 56, 56, 3, 1),
+        Layer::conv("CONV3_3", b, 256, 256, 56, 56, 3, 1),
+        Layer::conv("CONV4_1", b, 512, 256, 28, 28, 3, 1),
+        Layer::conv("CONV4_2", b, 512, 512, 28, 28, 3, 1),
+        Layer::conv("CONV4_3", b, 512, 512, 28, 28, 3, 1),
+        Layer::conv("CONV5_1", b, 512, 512, 14, 14, 3, 1),
+        Layer::conv("CONV5_2", b, 512, 512, 14, 14, 3, 1),
+        Layer::conv("CONV5_3", b, 512, 512, 14, 14, 3, 1),
+    ];
+    v.push(Layer::fc("FC6", b, 4096, 25088));
+    v.push(Layer::fc("FC7", b, 4096, 4096));
+    v.push(Layer::fc("FC8", b, 1000, 4096));
+    v
+}
+
+/// Inception v1 module: (name, spatial, c_in, n1x1, n3x3r, n3x3, n5x5r, n5x5, pool_proj).
+const INCEPTION: [(&str, u64, u64, u64, u64, u64, u64, u64, u64); 9] = [
+    ("3A", 28, 192, 64, 96, 128, 16, 32, 32),
+    ("3B", 28, 256, 128, 128, 192, 32, 96, 64),
+    ("4A", 14, 480, 192, 96, 208, 16, 48, 64),
+    ("4B", 14, 512, 160, 112, 224, 24, 64, 64),
+    ("4C", 14, 512, 128, 128, 256, 24, 64, 64),
+    ("4D", 14, 512, 112, 144, 288, 32, 64, 64),
+    ("4E", 14, 528, 256, 160, 320, 32, 128, 128),
+    ("5A", 7, 832, 256, 160, 320, 32, 128, 128),
+    ("5B", 7, 832, 384, 192, 384, 48, 128, 128),
+];
+
+fn googlenet(b: u64) -> Vec<Layer> {
+    let mut v = vec![
+        Layer::conv("CONV1", b, 64, 3, 112, 112, 7, 2),
+        Layer::conv("CONV2R", b, 64, 64, 56, 56, 1, 1),
+        Layer::conv("CONV2", b, 192, 64, 56, 56, 3, 1),
+    ];
+    for (name, s, cin, n1, n3r, n3, n5r, n5, pp) in INCEPTION {
+        v.push(Layer::conv(&format!("{name}1"), b, n1, cin, s, s, 1, 1));
+        v.push(Layer::conv(&format!("{name}3R"), b, n3r, cin, s, s, 1, 1));
+        v.push(Layer::conv(&format!("{name}3"), b, n3, n3r, s, s, 3, 1));
+        v.push(Layer::conv(&format!("{name}5R"), b, n5r, cin, s, s, 1, 1));
+        v.push(Layer::conv(&format!("{name}5"), b, n5, n5r, s, s, 5, 1));
+        v.push(Layer::conv(&format!("{name}PP"), b, pp, cin, s, s, 1, 1));
+    }
+    v.push(Layer::fc("FC", b, 1000, 1024));
+    v
+}
+
+fn mobilenet(b: u64) -> Vec<Layer> {
+    // (channels_in, channels_out, output_spatial, dw_stride)
+    const BLOCKS: [(u64, u64, u64, u32); 13] = [
+        (32, 64, 112, 1),
+        (64, 128, 56, 2),
+        (128, 128, 56, 1),
+        (128, 256, 28, 2),
+        (256, 256, 28, 1),
+        (256, 512, 14, 2),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 1024, 7, 2),
+        (1024, 1024, 7, 1),
+    ];
+    let mut v = vec![Layer::conv("CONV1", b, 32, 3, 112, 112, 3, 2)];
+    for (i, (cin, cout, s, stride)) in BLOCKS.iter().enumerate() {
+        v.push(Layer::depthwise(
+            &format!("DW{}", i + 1),
+            b,
+            *cin,
+            *s,
+            *s,
+            3,
+            *stride,
+        ));
+        v.push(Layer::conv(&format!("PW{}", i + 1), b, *cout, *cin, *s, *s, 1, 1));
+    }
+    v.push(Layer::fc("FC", b, 1000, 1024));
+    v
+}
+
+fn lstm(b: u64, e: u64) -> Vec<Layer> {
+    // 4-layer seq2seq encoder timestep; hidden size == embedding size.
+    let mut v = Vec::new();
+    for l in 0..4 {
+        v.push(Layer::lstm_gate(&format!("L{l}_IH"), b, e, e));
+        v.push(Layer::lstm_gate(&format!("L{l}_HH"), b, e, e));
+    }
+    v
+}
+
+fn rhn(b: u64, h: u64, depth: u64) -> Vec<Layer> {
+    // Recurrent Highway Network: depth micro-layers, each with H and T
+    // transforms (2 matmuls of h x h); the first also takes the input.
+    let mut v = vec![
+        Layer::fc("IN_H", b, h, h),
+        Layer::fc("IN_T", b, h, h),
+    ];
+    for d in 0..depth {
+        v.push(Layer::fc(&format!("D{d}_H"), b, h, h));
+        v.push(Layer::fc(&format!("D{d}_T"), b, h, h));
+    }
+    v
+}
+
+fn mlp(b: u64, widths: &[u64]) -> Vec<Layer> {
+    widths
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| Layer::fc(&format!("FC{}", i + 1), b, w[1], w[0]))
+        .collect()
+}

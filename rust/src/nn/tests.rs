@@ -1,0 +1,129 @@
+//! Tests for layer shapes and benchmark network tables.
+
+use super::*;
+use crate::loopnest::{Dim, Tensor};
+
+#[test]
+fn alexnet_conv3_dims() {
+    let net = network("alexnet", 16).unwrap();
+    let conv3 = net.layers.iter().find(|l| l.name == "CONV3").unwrap();
+    assert_eq!(conv3.shape.bound(Dim::K), 384);
+    assert_eq!(conv3.shape.bound(Dim::C), 256);
+    assert_eq!(conv3.shape.bound(Dim::X), 13);
+    assert_eq!(conv3.shape.bound(Dim::FX), 3);
+    assert_eq!(conv3.shape.bound(Dim::B), 16);
+    // per-image MACs ~ 149.5M
+    assert_eq!(conv3.macs() / 16, 384 * 256 * 13 * 13 * 9);
+}
+
+#[test]
+fn alexnet_macs_order_of_magnitude() {
+    // ~666M conv MACs + ~58.6M FC MACs per image
+    let net = network("alexnet", 1).unwrap();
+    let macs = net.macs();
+    assert!(macs > 600_000_000 && macs < 800_000_000, "{macs}");
+}
+
+#[test]
+fn vgg16_macs_order_of_magnitude() {
+    // ~15.3G conv MACs + ~123M FC per image
+    let net = network("vgg16", 1).unwrap();
+    let macs = net.macs();
+    assert!(
+        macs > 15_000_000_000 && macs < 16_000_000_000,
+        "{macs}"
+    );
+}
+
+#[test]
+fn googlenet_4c3r_layer() {
+    let net = network("googlenet", 16).unwrap();
+    let l = net.layers.iter().find(|l| l.name == "4C3R").unwrap();
+    assert_eq!(l.kind, LayerKind::Pointwise);
+    assert_eq!(l.shape.bound(Dim::C), 512);
+    assert_eq!(l.shape.bound(Dim::K), 128);
+    assert_eq!(l.shape.bound(Dim::X), 14);
+    assert_eq!(l.shape.bound(Dim::FX), 1);
+}
+
+#[test]
+fn googlenet_layer_count() {
+    // 3 stem + 9 modules x 6 + 1 FC = 58
+    let net = network("googlenet", 1).unwrap();
+    assert_eq!(net.layers.len(), 58);
+    // ~1.58G MACs per image (inception v1, incl. pointwise pool projections)
+    let macs = net.macs();
+    assert!(macs > 1_300_000_000 && macs < 1_800_000_000, "{macs}");
+}
+
+#[test]
+fn mobilenet_structure() {
+    let net = network("mobilenet", 1).unwrap();
+    // 1 stem + 13 x (dw + pw) + 1 fc = 28
+    assert_eq!(net.layers.len(), 28);
+    let dw1 = net.layers.iter().find(|l| l.name == "DW1").unwrap();
+    assert_eq!(dw1.kind, LayerKind::Depthwise);
+    assert_eq!(dw1.shape.bound(Dim::C), 1);
+    assert_eq!(dw1.shape.bound(Dim::K), 32);
+    // ~569M MACs per image
+    let macs = net.macs();
+    assert!(macs > 500_000_000 && macs < 650_000_000, "{macs}");
+}
+
+#[test]
+fn depthwise_input_elems_ride_on_k() {
+    let l = Layer::depthwise("DW", 1, 32, 10, 10, 3, 1);
+    // input = 32 channels of 12x12, even though nest C = 1
+    assert_eq!(l.tensor_elems(Tensor::Input), 32 * 12 * 12);
+    assert_eq!(l.tensor_elems(Tensor::Weight), 32 * 9);
+}
+
+#[test]
+fn fc_layers_are_degenerate() {
+    let net = network("mlp-m", 128).unwrap();
+    assert_eq!(net.layers.len(), 3);
+    for l in &net.layers {
+        assert!(l.is_fc_family());
+        assert_eq!(l.shape.bound(Dim::X), 1);
+        assert_eq!(l.shape.bound(Dim::FX), 1);
+        assert_eq!(l.shape.bound(Dim::B), 128);
+    }
+    assert_eq!(net.layers[0].shape.bound(Dim::C), 784);
+    assert_eq!(net.layers[0].shape.bound(Dim::K), 500);
+}
+
+#[test]
+fn lstm_gate_shapes() {
+    let net = network("lstm-m", 1).unwrap();
+    assert_eq!(net.layers.len(), 8); // 4 layers x 2 gate banks
+    for l in &net.layers {
+        assert_eq!(l.shape.bound(Dim::K), 2000); // 4 x 500
+        assert_eq!(l.shape.bound(Dim::C), 500);
+    }
+    let large = network("lstm-l", 1).unwrap();
+    assert_eq!(large.layers[0].shape.bound(Dim::K), 4000);
+}
+
+#[test]
+fn all_benchmarks_present_with_paper_batches() {
+    let nets = all_benchmarks();
+    assert_eq!(nets.len(), 9);
+    let get = |n: &str| nets.iter().find(|x| x.name == n).unwrap().batch;
+    assert_eq!(get("alexnet"), 16);
+    assert_eq!(get("vgg16"), 16);
+    assert_eq!(get("lstm-m"), 1);
+    assert_eq!(get("rhn"), 1);
+    assert_eq!(get("mlp-l"), 128);
+}
+
+#[test]
+fn unknown_network_is_none() {
+    assert!(network("resnet-9000", 1).is_none());
+}
+
+#[test]
+fn batch_scales_macs_linearly() {
+    let m1 = network("alexnet", 1).unwrap().macs();
+    let m16 = network("alexnet", 16).unwrap().macs();
+    assert_eq!(m16, 16 * m1);
+}

@@ -1,0 +1,160 @@
+//! Plain-text artifact manifest parser (`manifest.txt`, one line per
+//! artifact; format written by `python/compile/aot.py`):
+//!
+//! ```text
+//! name=fc file=fc.hlo.txt inputs=f32[8,64];f32[64,32] outputs=f32[8,32]
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// One tensor's dtype + dims.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Element type (always "f32" in this project).
+    pub dtype: String,
+    /// Dimensions.
+    pub dims: Vec<i64>,
+}
+
+impl TensorSpec {
+    /// Parse `"f32[8,64]"` (scalar: `"f32[]"`).
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let open = s.find('[').ok_or_else(|| anyhow!("no [ in {s}"))?;
+        if !s.ends_with(']') {
+            bail!("no closing ] in {s}");
+        }
+        let dtype = s[..open].to_string();
+        let body = &s[open + 1..s.len() - 1];
+        let dims = if body.is_empty() {
+            Vec::new()
+        } else {
+            body.split(',')
+                .map(|d| d.trim().parse::<i64>().context("dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype, dims })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> u64 {
+        self.dims.iter().map(|&d| d as u64).product()
+    }
+}
+
+/// One artifact line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Artifact name ("conv3x3").
+    pub name: String,
+    /// HLO text file name relative to the manifest.
+    pub file: String,
+    /// Input tensor specs in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs.
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// All entries, in file order.
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse a manifest from text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut file = None;
+            let mut inputs = None;
+            let mut outputs = None;
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("line {}: bad token {tok}", ln + 1))?;
+                match k {
+                    "name" => name = Some(v.to_string()),
+                    "file" => file = Some(v.to_string()),
+                    "inputs" => inputs = Some(parse_specs(v)?),
+                    "outputs" => outputs = Some(parse_specs(v)?),
+                    other => bail!("line {}: unknown key {other}", ln + 1),
+                }
+            }
+            entries.push(ManifestEntry {
+                name: name.ok_or_else(|| anyhow!("line {}: missing name", ln + 1))?,
+                file: file.ok_or_else(|| anyhow!("line {}: missing file", ln + 1))?,
+                inputs: inputs.ok_or_else(|| anyhow!("line {}: missing inputs", ln + 1))?,
+                outputs: outputs.ok_or_else(|| anyhow!("line {}: missing outputs", ln + 1))?,
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Load and parse from a file.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+fn parse_specs(s: &str) -> Result<Vec<TensorSpec>> {
+    s.split(';').map(TensorSpec::parse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec() {
+        let t = TensorSpec::parse("f32[8,64]").unwrap();
+        assert_eq!(t.dtype, "f32");
+        assert_eq!(t.dims, vec![8, 64]);
+        assert_eq!(t.elems(), 512);
+        let s = TensorSpec::parse("f32[]").unwrap();
+        assert!(s.dims.is_empty());
+        assert_eq!(s.elems(), 1);
+    }
+
+    #[test]
+    fn parse_spec_rejects_garbage() {
+        assert!(TensorSpec::parse("f32").is_err());
+        assert!(TensorSpec::parse("f32[1,2").is_err());
+        assert!(TensorSpec::parse("f32[a]").is_err());
+    }
+
+    #[test]
+    fn parse_manifest_line() {
+        let m = Manifest::parse(
+            "name=fc file=fc.hlo.txt inputs=f32[8,64];f32[64,32] outputs=f32[8,32]\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.name, "fc");
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.outputs[0].dims, vec![8, 32]);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let m = Manifest::parse("# hello\n\nname=a file=a.hlo.txt inputs=f32[1] outputs=f32[1]\n")
+            .unwrap();
+        assert_eq!(m.entries.len(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_missing_fields() {
+        assert!(Manifest::parse("name=a file=b.hlo.txt inputs=f32[1]").is_err());
+        assert!(Manifest::parse("name=a inputs=f32[1] outputs=f32[1]").is_err());
+        assert!(Manifest::parse("bogus line").is_err());
+    }
+}

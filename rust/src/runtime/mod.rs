@@ -1,0 +1,235 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client.
+//! This is the request-path compute engine — Python never runs here.
+
+mod manifest;
+
+pub use manifest::{Manifest, ManifestEntry, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A loaded, compiled artifact registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.txt`, compiling each
+    /// HLO text module on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            executables,
+        })
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// PJRT platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Manifest entry for an artifact.
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.manifest.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Execute an artifact on f32 input buffers (shapes validated against
+    /// the manifest). Returns one `Vec<f32>` per output.
+    pub fn execute_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .entry(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                entry.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(entry.inputs.iter()) {
+            if data.len() as u64 != spec.elems() {
+                bail!(
+                    "{name}: input has {} elems, manifest wants {} ({:?})",
+                    data.len(),
+                    spec.elems(),
+                    spec.dims
+                );
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(&spec.dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).expect("compiled with manifest");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // lowered with return_tuple=True: unpack the tuple
+        let parts = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("{name} output {i} to_vec: {e:?}"))?;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("artifacts not built; skipping runtime test");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("load artifacts"))
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let Some(rt) = runtime() else { return };
+        let names = rt.names();
+        for expect in ["conv3x3", "conv1x1", "fc", "lstm_cell", "conv_chain"] {
+            assert!(names.contains(&expect), "missing {expect}");
+        }
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn fc_artifact_matches_cpu_matmul() {
+        let Some(rt) = runtime() else { return };
+        let entry = rt.entry("fc").unwrap().clone();
+        let (m, c) = (entry.inputs[0].dims[0] as usize, entry.inputs[0].dims[1] as usize);
+        let n = entry.inputs[1].dims[1] as usize;
+        let mut rng = crate::util::XorShift::new(5);
+        let a = rng.f32_vec(m * c);
+        let b = rng.f32_vec(c * n);
+        let out = rt.execute_f32("fc", &[a.clone(), b.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        // reference matmul
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for k in 0..c {
+                let av = a[i * c + k];
+                for j in 0..n {
+                    want[i * n + j] += av * b[k * n + j];
+                }
+            }
+        }
+        for (g, w) in out[0].iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-3 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn conv3x3_artifact_matches_trace_simulator() {
+        // The cross-layer check: PJRT-executed JAX/Pallas conv ==
+        // the Rust functional simulator on the same data.
+        let Some(rt) = runtime() else { return };
+        let entry = rt.entry("conv3x3").unwrap().clone();
+        // manifest: input [2,10,10,16] NHWC, weight [3,3,16,32] HWIO
+        let (b, xh, _yh, c) = (
+            entry.inputs[0].dims[0] as u64,
+            entry.inputs[0].dims[1] as u64,
+            entry.inputs[0].dims[2] as u64,
+            entry.inputs[0].dims[3] as u64,
+        );
+        let (fx, fy, _, k) = (
+            entry.inputs[1].dims[0] as u64,
+            entry.inputs[1].dims[1] as u64,
+            entry.inputs[1].dims[2] as u64,
+            entry.inputs[1].dims[3] as u64,
+        );
+        let x = xh - fx + 1;
+        let shape = crate::loopnest::Shape::new(b, k, c, x, x, fx, fy, 1);
+        let data = crate::sim::ConvData::random(shape, 777);
+
+        // repack sim layouts (BCHW-ish) into the artifact's NHWC / HWIO
+        let ix = shape.input_x();
+        let mut inp = vec![0.0f32; (b * ix * ix * c) as usize];
+        for bb in 0..b {
+            for cc in 0..c {
+                for i in 0..ix {
+                    for j in 0..ix {
+                        let src = (((bb * c + cc) * ix + i) * ix + j) as usize;
+                        let dst = (((bb * ix + i) * ix + j) * c + cc) as usize;
+                        inp[dst] = data.input[src];
+                    }
+                }
+            }
+        }
+        let mut w = vec![0.0f32; (fx * fy * c * k) as usize];
+        for kk in 0..k {
+            for cc in 0..c {
+                for i in 0..fx {
+                    for j in 0..fy {
+                        let src = (((kk * c + cc) * fx + i) * fy + j) as usize;
+                        let dst = (((i * fy + j) * c + cc) * k + kk) as usize;
+                        w[dst] = data.weight[src];
+                    }
+                }
+            }
+        }
+
+        let out = rt.execute_f32("conv3x3", &[inp, w]).unwrap();
+        let want = crate::sim::reference_conv(&data); // [B][K][X][Y]
+        // artifact output is NHWC [B][X][Y][K]
+        let mut max_err = 0.0f32;
+        for bb in 0..b {
+            for kk in 0..k {
+                for i in 0..x {
+                    for j in 0..x {
+                        let g = out[0][(((bb * x + i) * x + j) * k + kk) as usize];
+                        let e = want[(((bb * k + kk) * x + i) * x + j) as usize];
+                        max_err = max_err.max((g - e).abs());
+                    }
+                }
+            }
+        }
+        assert!(max_err < 1e-2, "max abs err {max_err}");
+    }
+
+    #[test]
+    fn execute_rejects_bad_shapes() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute_f32("fc", &[vec![0.0; 3]]).is_err());
+        assert!(rt.execute_f32("nonexistent", &[]).is_err());
+    }
+}

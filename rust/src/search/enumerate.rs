@@ -1,0 +1,279 @@
+//! Blocking-scheme enumeration with capacity pruning.
+
+use crate::arch::{Arch, LevelKind};
+use crate::loopnest::{Dim, Shape, ALL_DIMS, NDIMS};
+use crate::util::divisors;
+
+/// Search options.
+#[derive(Debug, Clone)]
+pub struct SearchOpts {
+    /// Hard cap on enumerated blockings (the paper's "conservatively
+    /// pruned search"); enumeration stops once reached.
+    pub max_blockings: usize,
+    /// Max divisor choices considered per dim per level (geometrically
+    /// subsampled when a bound has more divisors).
+    pub max_divisors: usize,
+    /// Cap on per-level loop-order combinations tried per blocking
+    /// (3 stationary candidates per level, cartesian across levels).
+    pub max_order_combos: usize,
+}
+
+impl Default for SearchOpts {
+    fn default() -> Self {
+        SearchOpts {
+            max_blockings: 150_000,
+            max_divisors: 8,
+            max_order_combos: 81,
+        }
+    }
+}
+
+impl SearchOpts {
+    /// Convenience constructor for the common (blockings, divisors) pair.
+    pub fn capped(max_blockings: usize, max_divisors: usize) -> Self {
+        SearchOpts {
+            max_blockings,
+            max_divisors,
+            ..Default::default()
+        }
+    }
+}
+
+/// All ordered `levels`-tuples of factors of `n` (divisor chains), e.g.
+/// `factor_splits(12, 2)` = [1,12], [2,6], [3,4], ..., [12,1].
+pub fn factor_splits(n: u64, levels: usize) -> Vec<Vec<u64>> {
+    fn rec(rem: u64, left: usize, cur: &mut Vec<u64>, out: &mut Vec<Vec<u64>>) {
+        if left == 1 {
+            cur.push(rem);
+            out.push(cur.clone());
+            cur.pop();
+            return;
+        }
+        for d in divisors(rem) {
+            cur.push(d);
+            rec(rem / d, left - 1, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(n, levels, &mut Vec::new(), &mut out);
+    out
+}
+
+/// Geometrically subsample a divisor list down to at most `cap` entries,
+/// always keeping 1 and the maximum.
+fn subsample(mut ds: Vec<u64>, cap: usize) -> Vec<u64> {
+    if ds.len() <= cap {
+        return ds;
+    }
+    let n = ds.len();
+    let mut keep = Vec::with_capacity(cap);
+    for i in 0..cap {
+        let idx = (i as f64 / (cap - 1) as f64 * (n - 1) as f64).round() as usize;
+        keep.push(ds[idx]);
+    }
+    keep.dedup();
+    ds = keep;
+    ds
+}
+
+/// Enumerate temporal blocking factor tables for `shape` on `arch` with
+/// fixed spatial factors. Each returned table is `factors[level][dim]`
+/// (innermost level first, DRAM last = the leftover), and every on-chip
+/// level's three tiles fit the level capacity with double buffering.
+pub fn enumerate_blockings(
+    shape: &Shape,
+    arch: &Arch,
+    spatial: [u64; NDIMS],
+    opts: &SearchOpts,
+) -> Vec<Vec<[u64; NDIMS]>> {
+    let nlv = arch.num_levels();
+    let sp = arch.rf_levels();
+    let mut out: Vec<Vec<[u64; NDIMS]>> = Vec::new();
+
+    // per-dim remaining bound after spatial unrolling
+    let mut total = [0u64; NDIMS];
+    for d in ALL_DIMS {
+        debug_assert_eq!(shape.bound(d) % spatial[d.idx()], 0);
+        total[d.idx()] = shape.bound(d) / spatial[d.idx()];
+    }
+
+    // recursive enumeration: level by level, dim by dim within a level
+    struct Ctx<'a> {
+        shape: &'a Shape,
+        arch: &'a Arch,
+        spatial: [u64; NDIMS],
+        sp: usize,
+        nlv: usize,
+        opts: &'a SearchOpts,
+        table: Vec<[u64; NDIMS]>,
+        cum: [u64; NDIMS], // cumulative incl. spatial once past sp
+        rem: [u64; NDIMS],
+        out: Vec<Vec<[u64; NDIMS]>>,
+    }
+
+    impl Ctx<'_> {
+        fn tiles_fit(&self, level: usize) -> bool {
+            if self.arch.levels[level].kind == LevelKind::Dram {
+                return true;
+            }
+            let c = &self.cum;
+            let s = self.shape;
+            let w = c[1] * c[2] * c[5] * c[6]; // K C FX FY
+            let o = c[0] * c[1] * c[3] * c[4]; // B K X Y
+            let ix = ((c[3] - 1) * s.stride as u64 + c[5]).min(s.input_x());
+            let iy = ((c[4] - 1) * s.stride as u64 + c[6]).min(s.input_y());
+            let i = c[0] * c[2] * ix * iy;
+            2 * (w + o + i) <= self.arch.level_words(level)
+        }
+
+        fn rec_dim(&mut self, level: usize, di: usize) {
+            if self.out.len() >= self.opts.max_blockings {
+                return;
+            }
+            if di == NDIMS {
+                if self.tiles_fit(level) {
+                    self.rec_level(level + 1);
+                }
+                return;
+            }
+            // last level takes the remainder
+            if level == self.nlv - 1 {
+                let f = self.rem[di];
+                self.table[level][di] = f;
+                let keep = self.cum[di];
+                self.cum[di] *= f;
+                self.rem[di] = 1;
+                self.rec_dim(level, di + 1);
+                self.rem[di] = f;
+                self.cum[di] = keep;
+                self.table[level][di] = 1;
+                return;
+            }
+            let ds = subsample(divisors(self.rem[di]), self.opts.max_divisors);
+            for f in ds {
+                self.table[level][di] = f;
+                let keep_cum = self.cum[di];
+                let keep_rem = self.rem[di];
+                self.cum[di] *= f;
+                self.rem[di] /= f;
+                // early prune: even a partial level must fit (the unset
+                // dims contribute at least their current cum)
+                if self.arch.levels[level].kind == LevelKind::Dram || self.tiles_fit(level) {
+                    self.rec_dim(level, di + 1);
+                }
+                self.cum[di] = keep_cum;
+                self.rem[di] = keep_rem;
+                self.table[level][di] = 1;
+                if self.out.len() >= self.opts.max_blockings {
+                    return;
+                }
+            }
+        }
+
+        fn rec_level(&mut self, level: usize) {
+            if self.out.len() >= self.opts.max_blockings {
+                return;
+            }
+            if level == self.nlv {
+                self.out.push(self.table.clone());
+                return;
+            }
+            if level == self.sp {
+                // crossing the array: spatial factors join the cumulative
+                for d in 0..NDIMS {
+                    self.cum[d] *= self.spatial[d];
+                }
+                self.rec_dim(level, 0);
+                for d in 0..NDIMS {
+                    self.cum[d] /= self.spatial[d];
+                }
+            } else {
+                self.rec_dim(level, 0);
+            }
+        }
+    }
+
+    let mut ctx = Ctx {
+        shape,
+        arch,
+        spatial,
+        sp,
+        nlv,
+        opts,
+        table: vec![[1; NDIMS]; nlv],
+        cum: [1; NDIMS],
+        rem: total,
+        out: Vec::new(),
+    };
+    ctx.rec_level(0);
+    out.append(&mut ctx.out);
+    out
+}
+
+/// Convenience: bound of dim `d` in a factor table (product over levels).
+pub fn table_bound(table: &[[u64; NDIMS]], d: Dim) -> u64 {
+    table.iter().map(|row| row[d.idx()]).product()
+}
+
+#[cfg(test)]
+mod unit {
+    use super::*;
+    use crate::arch::eyeriss_like;
+
+    #[test]
+    fn factor_splits_basic() {
+        let s = factor_splits(12, 2);
+        assert!(s.contains(&vec![3, 4]));
+        assert!(s.contains(&vec![12, 1]));
+        assert_eq!(s.len(), 6); // divisors of 12
+        for v in &s {
+            assert_eq!(v.iter().product::<u64>(), 12);
+        }
+    }
+
+    #[test]
+    fn factor_splits_three_levels() {
+        let s = factor_splits(8, 3);
+        // ordered 3-splits of 2^3: C(3+2,2) = 10
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn subsample_keeps_ends() {
+        let ds = divisors(720720);
+        let s = subsample(ds.clone(), 6);
+        assert!(s.len() <= 6);
+        assert_eq!(s[0], 1);
+        assert_eq!(*s.last().unwrap(), 720720);
+    }
+
+    #[test]
+    fn enumerated_blockings_are_valid_and_fit() {
+        let shape = Shape::new(2, 16, 16, 6, 6, 3, 3, 1);
+        let arch = eyeriss_like();
+        let opts = SearchOpts::capped(5000, 6);
+        let tables = enumerate_blockings(&shape, &arch, [1; NDIMS], &opts);
+        assert!(!tables.is_empty());
+        for t in tables.iter().take(200) {
+            for d in ALL_DIMS {
+                assert_eq!(table_bound(t, d), shape.bound(d));
+            }
+            // RF tile fits 512 B / 2 B words / double buffer
+            let c = &t[0];
+            let w = c[1] * c[2] * c[5] * c[6];
+            let o = c[0] * c[1] * c[3] * c[4];
+            assert!(2 * (w + o) <= 256, "RF overflow: {t:?}");
+        }
+    }
+
+    #[test]
+    fn cap_respected() {
+        let shape = Shape::new(4, 64, 64, 14, 14, 3, 3, 1);
+        let arch = eyeriss_like();
+        let opts = SearchOpts::capped(100, 8);
+        let tables = enumerate_blockings(&shape, &arch, [1; NDIMS], &opts);
+        assert!(tables.len() <= 100);
+        assert!(!tables.is_empty());
+    }
+}

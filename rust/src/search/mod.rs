@@ -1,0 +1,20 @@
+//! Design-space search: blocking enumeration with capacity pruning,
+//! order selection, divisor-constrained replication, the per-layer
+//! optimizer, and the §6.3 auto-optimizer (fix `C|K`, 4–16 size-ratio
+//! rule) over whole networks.
+
+mod enumerate;
+mod optimize;
+mod par;
+mod random;
+
+pub use enumerate::{enumerate_blockings, factor_splits, table_bound, SearchOpts};
+pub use optimize::{
+    divisor_replication, optimize_layer, optimize_network, search_hierarchy, sweep_blockings,
+    HierarchyResult, LayerOpt, NetworkOpt,
+};
+pub use par::{default_threads, parallel_map};
+pub use random::{random_mapping, random_mapping_for_arch};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,402 @@
+//! Per-layer and per-network optimizers, and the §6.3 auto-optimizer's
+//! memory-hierarchy search.
+
+use std::collections::HashMap;
+
+use super::enumerate::{enumerate_blockings, SearchOpts};
+use super::par::parallel_map;
+use crate::arch::{Arch, ArrayShape, MemLevel};
+use crate::dataflow::{Dataflow, SpatialMap};
+use crate::energy::CostModel;
+use crate::loopnest::{Blocking, LevelOrder, Mapping, Shape, Tensor, NDIMS};
+use crate::nn::Network;
+use crate::util::divisors;
+use crate::xmodel::{evaluate_prechecked, ModelResult};
+
+/// Best mapping found for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerOpt {
+    /// The winning mapping.
+    pub mapping: Mapping,
+    /// Its spatial map.
+    pub smap: SpatialMap,
+    /// Model evaluation of the winner.
+    pub result: ModelResult,
+    /// Number of candidate (blocking × order) points evaluated.
+    pub evaluated: usize,
+}
+
+/// Replication like [`crate::dataflow::best_replication`] but with
+/// divisor-constrained extents, so the result is a valid exact
+/// factorization for the energy model. Greedy: primary loops first at
+/// their largest fitting divisor, then fill with more loops while
+/// utilization improves.
+pub fn divisor_replication(shape: &Shape, df: &Dataflow, array: &ArrayShape) -> SpatialMap {
+    let mut smap = SpatialMap::scalar();
+    let mut used: Vec<crate::loopnest::Dim> = Vec::new();
+
+    for (axis_dims, size, vertical) in [
+        (&df.u, array.rows as u64, true),
+        (&df.v, array.cols as u64, false),
+    ] {
+        let mut room = size;
+        // primary loops in order
+        for &d in axis_dims {
+            let e = divisors(shape.bound(d))
+                .into_iter()
+                .filter(|&e| e <= room)
+                .max()
+                .unwrap_or(1);
+            if e > 1 {
+                if vertical {
+                    smap.u.push((d, e));
+                } else {
+                    smap.v.push((d, e));
+                }
+                room /= e;
+                used.push(d);
+            }
+        }
+        // replication fill: add loops while there is room
+        loop {
+            if room < 2 {
+                break;
+            }
+            let mut best: Option<(crate::loopnest::Dim, u64)> = None;
+            for d in crate::loopnest::ALL_DIMS {
+                if used.contains(&d) {
+                    continue;
+                }
+                let e = divisors(shape.bound(d))
+                    .into_iter()
+                    .filter(|&e| e <= room)
+                    .max()
+                    .unwrap_or(1);
+                if e > 1 && best.map(|(_, be)| e > be).unwrap_or(true) {
+                    best = Some((d, e));
+                }
+            }
+            match best {
+                Some((d, e)) => {
+                    if vertical {
+                        smap.u.push((d, e));
+                    } else {
+                        smap.v.push((d, e));
+                    }
+                    room /= e;
+                    used.push(d);
+                }
+                None => break,
+            }
+        }
+    }
+    smap
+}
+
+/// Candidate per-level orders: one stationary order per tensor.
+fn order_candidates() -> [LevelOrder; 3] {
+    [
+        LevelOrder::stationary_for(Tensor::Output),
+        LevelOrder::stationary_for(Tensor::Weight),
+        LevelOrder::stationary_for(Tensor::Input),
+    ]
+}
+
+/// Enumerate order combos across levels. When the full cartesian product
+/// (3^levels) fits the cap, use it; otherwise fall back to a structured
+/// subset — uniform stationarity plus a varied outermost level — which
+/// covers the distinctions that move energy most (inner levels multiply
+/// into every boundary below them).
+fn order_combos(levels: usize, cap: usize) -> Vec<Vec<LevelOrder>> {
+    let cands = order_candidates();
+    let full = 3usize.saturating_pow(levels as u32);
+    if full <= cap {
+        let mut combos: Vec<Vec<LevelOrder>> = vec![vec![]];
+        for _ in 0..levels {
+            let mut next = Vec::with_capacity(combos.len() * 3);
+            for c in &combos {
+                for o in cands {
+                    let mut n = c.clone();
+                    n.push(o);
+                    next.push(n);
+                }
+            }
+            combos = next;
+        }
+        return combos;
+    }
+    // structured subset: inner levels uniform `a`, outermost level `b`
+    let mut combos = Vec::new();
+    for a in cands {
+        for b in cands {
+            let mut v = vec![a; levels];
+            if levels > 0 {
+                v[levels - 1] = b;
+            }
+            combos.push(v);
+            if combos.len() >= cap {
+                return combos;
+            }
+        }
+    }
+    combos
+}
+
+/// Optimize one layer on one architecture with a fixed dataflow: search
+/// enumerated blockings × order combos, minimizing energy. Returns `None`
+/// when nothing fits (e.g. the array's spatial tiles overflow the RF).
+pub fn optimize_layer(
+    shape: &Shape,
+    arch: &Arch,
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    opts: &SearchOpts,
+    threads: usize,
+) -> Option<LayerOpt> {
+    let smap = divisor_replication(shape, df, &arch.array);
+    let spatial = smap.factors();
+    let tables = enumerate_blockings(shape, arch, spatial, opts);
+    if tables.is_empty() {
+        return None;
+    }
+    let combos = order_combos(arch.num_levels(), opts.max_order_combos);
+    let rf = arch.rf_levels();
+
+    let evaluated = tables.len() * combos.len();
+    let results = parallel_map(tables, threads, |table| {
+        // one mapping per table; orders are swapped in place (validity and
+        // capacity are order-independent, so check once)
+        let mut m = Mapping {
+            shape: *shape,
+            blocking: Blocking {
+                factors: table.clone(),
+            },
+            orders: combos[0].clone(),
+            spatial,
+            spatial_at: rf,
+        };
+        if crate::xmodel::fits(&m, arch).is_err() {
+            return None;
+        }
+        let mut best: Option<(f64, Vec<LevelOrder>, ModelResult)> = None;
+        for orders in &combos {
+            m.orders.clone_from(orders);
+            let r = evaluate_prechecked(&m, &smap, arch, cost);
+            if best.as_ref().map(|(e, _, _)| r.energy_pj < *e).unwrap_or(true) {
+                best = Some((r.energy_pj, orders.clone(), r));
+            }
+        }
+        best.map(|(e, orders, r)| {
+            m.orders = orders;
+            (e, m, r)
+        })
+    });
+
+    let mut best: Option<(f64, Mapping, ModelResult)> = None;
+    for r in results.into_iter().flatten() {
+        if best.as_ref().map(|(e, _, _)| r.0 < *e).unwrap_or(true) {
+            best = Some(r);
+        }
+    }
+    best.map(|(_, mapping, result)| LayerOpt {
+        mapping,
+        smap: smap.clone(),
+        result,
+        evaluated,
+    })
+}
+
+/// Energy of every enumerated blocking (best order each) — the Fig 10
+/// design-space distribution.
+pub fn sweep_blockings(
+    shape: &Shape,
+    arch: &Arch,
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    opts: &SearchOpts,
+    threads: usize,
+) -> Vec<f64> {
+    let smap = divisor_replication(shape, df, &arch.array);
+    let spatial = smap.factors();
+    let tables = enumerate_blockings(shape, arch, spatial, opts);
+    let combos = order_combos(arch.num_levels(), opts.max_order_combos.min(27));
+    let rf = arch.rf_levels();
+    parallel_map(tables, threads, |table| {
+        let mut best = f64::INFINITY;
+        let mut m = Mapping {
+            shape: *shape,
+            blocking: Blocking {
+                factors: table.clone(),
+            },
+            orders: combos[0].clone(),
+            spatial,
+            spatial_at: rf,
+        };
+        if crate::xmodel::fits(&m, arch).is_err() {
+            return f64::INFINITY;
+        }
+        for orders in &combos {
+            m.orders.clone_from(orders);
+            let r = evaluate_prechecked(&m, &smap, arch, cost);
+            best = best.min(r.energy_pj);
+        }
+        best
+    })
+    .into_iter()
+    .filter(|e| e.is_finite())
+    .collect()
+}
+
+/// Network-level optimization result.
+#[derive(Debug, Clone)]
+pub struct NetworkOpt {
+    /// Best mapping per layer (same order as the network's layers).
+    pub per_layer: Vec<Option<LayerOpt>>,
+    /// Total energy across all layers, pJ.
+    pub total_energy_pj: f64,
+    /// Total cycles.
+    pub total_cycles: f64,
+    /// Total MACs.
+    pub total_macs: u64,
+}
+
+impl NetworkOpt {
+    /// TOPS/W over the whole network.
+    pub fn tops_per_watt(&self) -> f64 {
+        2.0 * self.total_macs as f64 / self.total_energy_pj
+    }
+}
+
+/// Optimize every layer of a network on one architecture (dataflow fixed,
+/// default `C|K` per Observation 1). Identical layer shapes share one
+/// search (VGG's repeated convs, LSTM gate banks).
+pub fn optimize_network(
+    net: &Network,
+    arch: &Arch,
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    opts: &SearchOpts,
+    threads: usize,
+) -> NetworkOpt {
+    let mut cache: HashMap<([u64; NDIMS], u32), Option<LayerOpt>> = HashMap::new();
+    let mut per_layer = Vec::with_capacity(net.layers.len());
+    let mut total_e = 0.0;
+    let mut total_c = 0.0;
+    let mut total_m = 0u64;
+    for layer in &net.layers {
+        let key = (layer.shape.bounds, layer.shape.stride);
+        let entry = cache
+            .entry(key)
+            .or_insert_with(|| optimize_layer(&layer.shape, arch, df, cost, opts, threads))
+            .clone();
+        if let Some(ref lo) = entry {
+            total_e += lo.result.energy_pj;
+            total_c += lo.result.cycles;
+            total_m += lo.result.macs;
+        }
+        per_layer.push(entry);
+    }
+    NetworkOpt {
+        per_layer,
+        total_energy_pj: total_e,
+        total_cycles: total_c,
+        total_macs: total_m,
+    }
+}
+
+/// One point of the hierarchy search.
+#[derive(Debug, Clone)]
+pub struct HierarchyResult {
+    /// The architecture evaluated.
+    pub arch: Arch,
+    /// Its network-level optimization.
+    pub opt: NetworkOpt,
+}
+
+/// The §6.3 auto-optimizer's resource search: sweep memory hierarchies on
+/// a fixed PE array (dataflow fixed to `C|K`), pruned by Observation 2's
+/// 4–16× inter-level size-ratio rule. Returns all evaluated points sorted
+/// by energy (best first).
+pub fn search_hierarchy(
+    net: &Network,
+    array: ArrayShape,
+    cost: &dyn CostModel,
+    opts: &SearchOpts,
+    threads: usize,
+) -> Vec<HierarchyResult> {
+    let df = Dataflow::parse("C|K").unwrap();
+    let rf1_sizes = [16u64, 32, 64, 128, 512];
+    let sram_sizes = [64u64 << 10, 128 << 10, 256 << 10];
+
+    let mut candidates: Vec<Arch> = Vec::new();
+    for &rf in &rf1_sizes {
+        for &sram in &sram_sizes {
+            // single-level RF
+            candidates.push(Arch {
+                name: format!("rf{rf}-sram{}", sram >> 10),
+                levels: vec![
+                    MemLevel::reg("RF", rf),
+                    MemLevel::sram("GBUF", sram),
+                    MemLevel::dram(),
+                ],
+                array,
+                bus: crate::arch::ArrayBus::Systolic,
+                word_bytes: 2,
+                dram_bw_bytes_per_cycle: 16.0,
+            });
+            // two-level RF with ratio-rule second level (4-16x)
+            for ratio in [8u64] {
+                let rf2 = rf * ratio;
+                if rf2 > 1024 {
+                    continue;
+                }
+                candidates.push(Arch {
+                    name: format!("rf{rf}+{rf2}-sram{}", sram >> 10),
+                    levels: vec![
+                        MemLevel::reg("RF1", rf),
+                        MemLevel::reg("RF2", rf2),
+                        MemLevel::sram("GBUF", sram),
+                        MemLevel::dram(),
+                    ],
+                    array,
+                    bus: crate::arch::ArrayBus::Systolic,
+                    word_bytes: 2,
+                    dram_bw_bytes_per_cycle: 16.0,
+                });
+            }
+        }
+    }
+
+    // Observation-2 ratio pruning: on-chip level sizes should step by
+    // roughly 4-16x per level *in aggregate* (RF is per-PE).
+    let pes = array.pes();
+    candidates.retain(|a| {
+        let mut sizes: Vec<u64> = Vec::new();
+        for l in &a.levels {
+            match l.kind {
+                crate::arch::LevelKind::Reg => sizes.push(l.size_bytes * pes),
+                crate::arch::LevelKind::Sram => sizes.push(l.size_bytes),
+                crate::arch::LevelKind::Dram => {}
+            }
+        }
+        sizes.windows(2).all(|w| {
+            let r = w[1] as f64 / w[0] as f64;
+            (0.25..=64.0).contains(&r)
+        })
+    });
+
+    let mut results: Vec<HierarchyResult> = candidates
+        .into_iter()
+        .map(|arch| {
+            let opt = optimize_network(net, &arch, &df, cost, opts, threads);
+            HierarchyResult { arch, opt }
+        })
+        .collect();
+    results.sort_by(|a, b| {
+        a.opt
+            .total_energy_pj
+            .partial_cmp(&b.opt.total_energy_pj)
+            .unwrap()
+    });
+    results
+}

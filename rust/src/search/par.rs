@@ -1,0 +1,96 @@
+//! Minimal data-parallel map over std::thread (rayon is not in the
+//! offline vendor set). Used by the sweep executors.
+
+/// Apply `f` to every item on up to `nthreads` worker threads, preserving
+/// input order in the output.
+pub fn parallel_map<T, R, F>(items: Vec<T>, nthreads: usize, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let nthreads = nthreads.max(1).min(n);
+    if nthreads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let out_ptr = SyncSlice(out.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..nthreads {
+            let next = &next;
+            let f = &f;
+            let items = &items;
+            let out_ptr = &out_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                // SAFETY: each index i is claimed by exactly one thread via
+                // the atomic counter, and `out` outlives the scope.
+                unsafe {
+                    *out_ptr.0.add(i) = Some(r);
+                }
+            });
+        }
+    });
+
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+/// Wrapper making a raw pointer Sync for the disjoint-index write pattern
+/// above.
+struct SyncSlice<R>(*mut Option<R>);
+unsafe impl<R: Send> Sync for SyncSlice<R> {}
+
+/// A sensible default worker count: available parallelism minus one,
+/// at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(items, 8, |x| x * 2);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<u64> = parallel_map(Vec::<u64>::new(), 4, |x| *x);
+        assert!(out.is_empty());
+        let out = parallel_map(vec![42u64], 4, |x| x + 1);
+        assert_eq!(out, vec![43]);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = parallel_map(vec![1u64, 2, 3], 1, |x| x * x);
+        assert_eq!(out, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn heavy_work_all_items() {
+        let items: Vec<u64> = (0..200).collect();
+        let out = parallel_map(items, 16, |x| (0..*x).sum::<u64>());
+        assert_eq!(out[10], 45);
+        assert_eq!(out.len(), 200);
+    }
+}

@@ -1,0 +1,106 @@
+//! Random mapping generators for property tests and randomized search
+//! seeding.
+
+use crate::arch::Arch;
+use crate::dataflow::SpatialMap;
+use crate::loopnest::{Blocking, Dim, LevelOrder, Mapping, Shape, ALL_DIMS, NDIMS};
+use crate::util::{divisors, XorShift};
+
+/// A uniformly-ish random valid mapping: each dim's bound is split across
+/// `levels` temporal levels by repeated random divisor choice; orders are
+/// random permutations; `rf_levels` per-PE levels; no spatial unrolling.
+pub fn random_mapping(shape: Shape, levels: usize, rf_levels: usize, rng: &mut XorShift) -> Mapping {
+    assert!(levels >= 2 && rf_levels >= 1 && rf_levels < levels);
+    let mut blocking = Blocking::ones(levels);
+    for d in ALL_DIMS {
+        let mut rem = shape.bound(d);
+        for l in 0..levels - 1 {
+            let ds = divisors(rem);
+            let f = *rng.choose(&ds);
+            blocking.set(l, d, f);
+            rem /= f;
+        }
+        blocking.set(levels - 1, d, rem);
+    }
+    let orders = (0..levels)
+        .map(|_| {
+            let mut dims = ALL_DIMS;
+            rng.shuffle(&mut dims);
+            LevelOrder(dims)
+        })
+        .collect();
+    Mapping {
+        shape,
+        blocking,
+        orders,
+        spatial: [1; NDIMS],
+        spatial_at: rf_levels,
+    }
+}
+
+/// Random mapping for an architecture, including random spatial extents
+/// (divisor-constrained, fitting the array axes). Returns the mapping and
+/// the matching [`SpatialMap`].
+pub fn random_mapping_for_arch(
+    shape: Shape,
+    arch: &Arch,
+    rng: &mut XorShift,
+) -> (Mapping, SpatialMap) {
+    let levels = arch.num_levels();
+    let rf = arch.rf_levels();
+
+    // pick up to one spatial dim per axis with a random divisor extent
+    let mut smap = SpatialMap::scalar();
+    let mut taken: Vec<Dim> = Vec::new();
+    for vertical in [true, false] {
+        let size = if vertical { arch.array.rows } else { arch.array.cols } as u64;
+        if size < 2 || rng.below(4) == 0 {
+            continue; // sometimes leave an axis empty
+        }
+        let d = *rng.choose(&ALL_DIMS);
+        if taken.contains(&d) || shape.bound(d) == 1 {
+            continue;
+        }
+        let ds: Vec<u64> = divisors(shape.bound(d)).into_iter().filter(|&e| e <= size).collect();
+        let e = *rng.choose(&ds);
+        if e > 1 {
+            if vertical {
+                smap.u.push((d, e));
+            } else {
+                smap.v.push((d, e));
+            }
+            taken.push(d);
+        }
+    }
+
+    // split the remaining bounds across temporal levels
+    let spatial = smap.factors();
+    let mut blocking = Blocking::ones(levels);
+    for d in ALL_DIMS {
+        let mut rem = shape.bound(d) / spatial[d.idx()];
+        for l in 0..levels - 1 {
+            let ds = divisors(rem);
+            let f = *rng.choose(&ds);
+            blocking.set(l, d, f);
+            rem /= f;
+        }
+        blocking.set(levels - 1, d, rem);
+    }
+    let orders = (0..levels)
+        .map(|_| {
+            let mut dims = ALL_DIMS;
+            rng.shuffle(&mut dims);
+            LevelOrder(dims)
+        })
+        .collect();
+    (
+        Mapping {
+            shape,
+            blocking,
+            orders,
+            spatial,
+            spatial_at: rf,
+        },
+        smap,
+    )
+}

@@ -1,0 +1,170 @@
+//! Tests for the search / optimizer layer.
+
+use super::*;
+use crate::arch::{eyeriss_like, small_rf, ArrayShape};
+use crate::dataflow::Dataflow;
+use crate::energy::Table3;
+use crate::loopnest::{Dim, Shape};
+use crate::util::prop;
+
+fn small_conv() -> Shape {
+    Shape::new(2, 16, 16, 6, 6, 3, 3, 1)
+}
+
+#[test]
+fn divisor_replication_is_exact_factorization() {
+    let shape = Shape::new(16, 384, 256, 13, 13, 3, 3, 1);
+    let arr = ArrayShape { rows: 16, cols: 16 };
+    let df = Dataflow::parse("C|K").unwrap();
+    let m = divisor_replication(&shape, &df, &arr);
+    // C=256 -> 16, K=384 -> 16
+    assert_eq!(m.extent(Dim::C), 16);
+    assert_eq!(m.extent(Dim::K), 16);
+    for (d, e) in m.u.iter().chain(m.v.iter()) {
+        assert_eq!(shape.bound(*d) % e, 0, "extent must divide");
+    }
+    assert!(m.axis_extent(true) <= 16 && m.axis_extent(false) <= 16);
+}
+
+#[test]
+fn divisor_replication_fills_awkward_dims() {
+    // FY|Y: FY=3, Y=13 on 16x16 -> replication should add more loops
+    let shape = Shape::new(16, 384, 256, 13, 13, 3, 3, 1);
+    let arr = ArrayShape { rows: 16, cols: 16 };
+    let df = Dataflow::parse("FY|Y").unwrap();
+    let m = divisor_replication(&shape, &df, &arr);
+    assert!(m.pes_used() > 3 * 13, "replication should beat {}", 3 * 13);
+}
+
+#[test]
+fn optimize_layer_finds_fitting_low_energy_mapping() {
+    let shape = small_conv();
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").unwrap();
+    let opts = SearchOpts::capped(3000, 6);
+    let lo = optimize_layer(&shape, &arch, &df, &Table3, &opts, 2).expect("found");
+    lo.mapping.validate().unwrap();
+    assert!(lo.result.energy_pj > 0.0);
+    assert!(lo.evaluated > 0);
+    // the best mapping must beat a trivial DRAM-everything mapping by a lot
+    let trivial = crate::loopnest::Mapping::trivial(shape, 1, 2);
+    let t_res = crate::xmodel::evaluate(
+        &trivial,
+        &crate::dataflow::SpatialMap::scalar(),
+        &arch,
+        &Table3,
+    )
+    .unwrap();
+    assert!(
+        lo.result.energy_pj < t_res.energy_pj / 2.0,
+        "optimized {} vs trivial {}",
+        lo.result.energy_pj,
+        t_res.energy_pj
+    );
+}
+
+#[test]
+fn smaller_rf_wins_on_small_conv() {
+    // Observation 2 / Fig 12: the 64 B RF config beats the 512 B one.
+    let shape = small_conv();
+    let df = Dataflow::parse("C|K").unwrap();
+    let opts = SearchOpts::capped(2000, 6);
+    let big = optimize_layer(&shape, &eyeriss_like(), &df, &Table3, &opts, 2).unwrap();
+    let small = optimize_layer(&shape, &small_rf(), &df, &Table3, &opts, 2).unwrap();
+    assert!(
+        small.result.energy_pj < big.result.energy_pj,
+        "64B RF {} should beat 512B RF {}",
+        small.result.energy_pj,
+        big.result.energy_pj
+    );
+}
+
+#[test]
+fn optimize_network_caches_equal_shapes() {
+    let net = crate::nn::network("lstm-m", 1).unwrap(); // 8 identical gate layers
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").unwrap();
+    let opts = SearchOpts::capped(500, 5);
+    let opt = optimize_network(&net, &arch, &df, &Table3, &opts, 2);
+    assert_eq!(opt.per_layer.len(), 8);
+    let e0 = opt.per_layer[0].as_ref().unwrap().result.energy_pj;
+    for lo in &opt.per_layer {
+        assert_eq!(lo.as_ref().unwrap().result.energy_pj, e0);
+    }
+    assert!((opt.total_energy_pj - 8.0 * e0).abs() < 1e-6 * opt.total_energy_pj);
+    assert!(opt.tops_per_watt() > 0.0);
+}
+
+#[test]
+fn hierarchy_search_returns_sorted_and_beats_eyeriss_rf() {
+    // tiny MLP so the sweep is fast; the winner should use a small RF
+    let net = crate::nn::network("mlp-m", 16).unwrap();
+    let opts = SearchOpts::capped(300, 5);
+    let results = search_hierarchy(
+        &net,
+        ArrayShape { rows: 8, cols: 8 },
+        &Table3,
+        &opts,
+        2,
+    );
+    assert!(results.len() > 4);
+    for w in results.windows(2) {
+        assert!(w[0].opt.total_energy_pj <= w[1].opt.total_energy_pj);
+    }
+    // best RF should be small (Observation 2)
+    let best_rf = results[0].arch.levels[0].size_bytes;
+    assert!(best_rf <= 128, "winner RF was {best_rf} B");
+}
+
+#[test]
+fn sweep_blockings_has_spread() {
+    // Fig 10's premise: blocking choice spreads energy widely
+    let shape = small_conv();
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").unwrap();
+    let opts = SearchOpts::capped(1500, 5);
+    let energies = sweep_blockings(&shape, &arch, &df, &Table3, &opts, 2);
+    assert!(energies.len() > 50);
+    let lo = energies.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = energies.iter().cloned().fold(0.0, f64::max);
+    assert!(hi / lo > 1.5, "expected >1.5x spread, got {}", hi / lo);
+}
+
+#[test]
+fn prop_random_mappings_valid() {
+    prop::for_cases(0x5ea, 100, |rng| {
+        let shape = Shape::new(
+            rng.range(1, 4),
+            rng.range(1, 32),
+            rng.range(1, 32),
+            rng.range(1, 14),
+            rng.range(1, 14),
+            rng.range(1, 5),
+            rng.range(1, 5),
+            1,
+        );
+        let arch = eyeriss_like();
+        let (m, smap) = random_mapping_for_arch(shape, &arch, rng);
+        m.validate().unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(m.spatial, smap.factors());
+    });
+}
+
+#[test]
+fn factor_splits_cover_and_multiply() {
+    prop::for_cases(0xfac, 50, |rng| {
+        let n = rng.range(1, 200);
+        let levels = rng.range(2, 4) as usize;
+        let splits = factor_splits(n, levels);
+        assert!(!splits.is_empty());
+        for s in &splits {
+            assert_eq!(s.len(), levels);
+            assert_eq!(s.iter().product::<u64>(), n);
+        }
+        // no duplicates
+        let mut sorted = splits.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), splits.len());
+    });
+}

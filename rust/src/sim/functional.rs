@@ -1,0 +1,197 @@
+//! Functional simulation: compute the layer's actual outputs by walking
+//! the scheduled (blocked / reordered / unrolled) nest, and a naive
+//! seven-loop reference.
+//!
+//! Test data is small-integer-valued f32 so every sum is exact regardless
+//! of accumulation order — schedule equivalence can then be asserted
+//! bit-for-bit.
+
+use crate::loopnest::{Dim, Mapping, Shape, ALL_DIMS, NDIMS};
+use crate::util::XorShift;
+
+/// Input + weight data for one conv-shaped layer.
+#[derive(Debug, Clone)]
+pub struct ConvData {
+    /// Layer shape.
+    pub shape: Shape,
+    /// Input `[B][C][IX][IY]`, row-major.
+    pub input: Vec<f32>,
+    /// Weights `[K][C][FX][FY]`, row-major.
+    pub weight: Vec<f32>,
+}
+
+impl ConvData {
+    /// Random small-integer data (values in `{-4..4}`) from a seed.
+    pub fn random(shape: Shape, seed: u64) -> Self {
+        let mut rng = XorShift::new(seed);
+        let isz = (shape.bound(Dim::B) * shape.bound(Dim::C) * shape.input_x() * shape.input_y())
+            as usize;
+        let wsz = (shape.bound(Dim::K)
+            * shape.bound(Dim::C)
+            * shape.bound(Dim::FX)
+            * shape.bound(Dim::FY)) as usize;
+        let gen = |rng: &mut XorShift, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.range(0, 8) as f32 - 4.0).collect()
+        };
+        ConvData {
+            shape,
+            input: gen(&mut rng, isz),
+            weight: gen(&mut rng, wsz),
+        }
+    }
+
+    #[inline]
+    fn in_idx(&self, b: u64, c: u64, ix: u64, iy: u64) -> usize {
+        let s = &self.shape;
+        (((b * s.bound(Dim::C) + c) * s.input_x() + ix) * s.input_y() + iy) as usize
+    }
+
+    #[inline]
+    fn w_idx(&self, k: u64, c: u64, fx: u64, fy: u64) -> usize {
+        let s = &self.shape;
+        (((k * s.bound(Dim::C) + c) * s.bound(Dim::FX) + fx) * s.bound(Dim::FY) + fy) as usize
+    }
+
+    #[inline]
+    fn out_idx(&self, b: u64, k: u64, x: u64, y: u64) -> usize {
+        let s = &self.shape;
+        (((b * s.bound(Dim::K) + k) * s.bound(Dim::X) + x) * s.bound(Dim::Y) + y) as usize
+    }
+
+    /// Output element count.
+    pub fn out_len(&self) -> usize {
+        let s = &self.shape;
+        (s.bound(Dim::B) * s.bound(Dim::K) * s.bound(Dim::X) * s.bound(Dim::Y)) as usize
+    }
+}
+
+/// Naive seven-loop reference (Algorithm 1 order).
+pub fn reference_conv(data: &ConvData) -> Vec<f32> {
+    let s = data.shape;
+    let mut out = vec![0.0f32; data.out_len()];
+    for b in 0..s.bound(Dim::B) {
+        for k in 0..s.bound(Dim::K) {
+            for c in 0..s.bound(Dim::C) {
+                for x in 0..s.bound(Dim::X) {
+                    for y in 0..s.bound(Dim::Y) {
+                        for fx in 0..s.bound(Dim::FX) {
+                            for fy in 0..s.bound(Dim::FY) {
+                                let ix = x * s.stride as u64 + fx;
+                                let iy = y * s.stride as u64 + fy;
+                                out[data.out_idx(b, k, x, y)] += data.input
+                                    [data.in_idx(b, c, ix, iy)]
+                                    * data.weight[data.w_idx(k, c, fx, fy)];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One loop in the flattened schedule: dim + factor + the multiplier this
+/// loop's digit contributes to the dim's global index.
+#[derive(Debug, Clone, Copy)]
+struct IdxLoop {
+    dim: Dim,
+    factor: u64,
+    stride: u64,
+}
+
+/// Execute the scheduled nest: walk every loop of the mapping — temporal
+/// levels outermost-first, the spatial loops in their array position
+/// (serialized; parallel semantics are order-independent) — computing the
+/// same MACs as Algorithm 1 in the schedule's order.
+pub fn functional_conv(m: &Mapping, data: &ConvData) -> Vec<f32> {
+    assert_eq!(m.shape, data.shape, "mapping and data shapes differ");
+    m.validate().expect("mapping must validate");
+
+    // Per-dim index strides: levels are significance-ordered inner→outer
+    // (level 0 digit least significant, spatial digit sits between
+    // spatial_at-1 and spatial_at).
+    let mut strides: Vec<[u64; NDIMS]> = Vec::with_capacity(m.levels());
+    let mut spatial_stride = [0u64; NDIMS];
+    {
+        let mut acc = [1u64; NDIMS];
+        for level in 0..m.levels() {
+            if level == m.spatial_at {
+                for d in ALL_DIMS {
+                    spatial_stride[d.idx()] = acc[d.idx()];
+                    acc[d.idx()] *= m.spatial[d.idx()];
+                }
+            }
+            let mut row = [0u64; NDIMS];
+            for d in ALL_DIMS {
+                row[d.idx()] = acc[d.idx()];
+                acc[d.idx()] *= m.blocking.factor(level, d);
+            }
+            strides.push(row);
+        }
+        if m.spatial_at == m.levels() {
+            for d in ALL_DIMS {
+                spatial_stride[d.idx()] = acc[d.idx()];
+            }
+        }
+    }
+
+    // Flatten outermost-first: top temporal levels, then (at the array
+    // position) the spatial loops, then inner temporal levels.
+    let mut loops: Vec<IdxLoop> = Vec::new();
+    for level in (0..m.levels()).rev() {
+        if level + 1 == m.spatial_at {
+            // spatial loops sit just outside temporal level spatial_at - 1
+            for d in ALL_DIMS {
+                if m.spatial[d.idx()] > 1 {
+                    loops.push(IdxLoop {
+                        dim: d,
+                        factor: m.spatial[d.idx()],
+                        stride: spatial_stride[d.idx()],
+                    });
+                }
+            }
+        }
+        for &d in m.orders[level].0.iter().rev() {
+            let f = m.blocking.factor(level, d);
+            if f > 1 {
+                loops.push(IdxLoop {
+                    dim: d,
+                    factor: f,
+                    stride: strides[level][d.idx()],
+                });
+            }
+        }
+    }
+
+    let mut idx = [0u64; NDIMS]; // current global index per dim
+    let mut digits = vec![0u64; loops.len()];
+    let mut out = vec![0.0f32; data.out_len()];
+    let s = data.shape;
+
+    loop {
+        let (b, k, c, x, y, fx, fy) = (
+            idx[0], idx[1], idx[2], idx[3], idx[4], idx[5], idx[6],
+        );
+        let ix = x * s.stride as u64 + fx;
+        let iy = y * s.stride as u64 + fy;
+        out[data.out_idx(b, k, x, y)] +=
+            data.input[data.in_idx(b, c, ix, iy)] * data.weight[data.w_idx(k, c, fx, fy)];
+
+        // increment mixed-radix counter, innermost digit last
+        let mut p = loops.len();
+        loop {
+            if p == 0 {
+                return out;
+            }
+            p -= 1;
+            digits[p] += 1;
+            idx[loops[p].dim.idx()] += loops[p].stride;
+            if digits[p] < loops[p].factor {
+                break;
+            }
+            idx[loops[p].dim.idx()] -= loops[p].factor * loops[p].stride;
+            digits[p] = 0;
+        }
+    }
+}

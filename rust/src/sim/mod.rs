@@ -1,0 +1,20 @@
+//! Trace-driven simulator: executes the scheduled loop nest and counts
+//! every tile (re)load exactly, by walking the loops — no refetch
+//! formulas. This is the project's stand-in for the paper's
+//! post-synthesis validation (Fig 7): the analytical model must agree
+//! with these counts (the paper reports < 2 % error; ours is exact-match
+//! because both sides model the same machine, which the tests assert).
+//!
+//! Also provides a **functional mode** that computes the layer's actual
+//! outputs by walking the blocked nest, proving that blocking/reordering/
+//! unrolling never changes semantics, and giving a reference to
+//! cross-check the PJRT-executed artifact in the e2e example.
+
+mod functional;
+mod walk;
+
+pub use functional::{functional_conv, reference_conv, ConvData};
+pub use walk::{count_rounds, simulate, SimError};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,105 @@
+//! Simulator validation: model == sim on round tables, and functional
+//! schedule-equivalence.
+
+use super::*;
+use crate::energy::Table3;
+use crate::loopnest::{Shape, ALL_TENSORS};
+use crate::util::prop;
+use crate::xmodel::RoundTables;
+
+fn random_shape(rng: &mut crate::util::XorShift) -> Shape {
+    Shape::new(
+        rng.range(1, 3),
+        rng.range(1, 12),
+        rng.range(1, 12),
+        rng.range(1, 7),
+        rng.range(1, 7),
+        rng.range(1, 3),
+        rng.range(1, 3),
+        rng.range(1, 2) as u32,
+    )
+}
+
+#[test]
+fn prop_model_rounds_equal_sim_rounds() {
+    // THE core validation: the analytical refetch formula must equal the
+    // exact loop-walk counts for arbitrary blockings, orders, and
+    // spatial splits (Fig 7's purpose, made exact).
+    prop::for_cases(0x510, 300, |rng| {
+        let shape = random_shape(rng);
+        let levels = rng.range(2, 4) as usize;
+        let m = crate::search::random_mapping(shape, levels, 1, rng);
+        let analytic = RoundTables::analytic(&m);
+        let exact = count_rounds(&m, 50_000_000).expect("budget");
+        for t in ALL_TENSORS {
+            for i in 0..m.levels() {
+                assert_eq!(
+                    analytic.rounds[t.idx()][i], exact.rounds[t.idx()][i],
+                    "rounds {t} boundary {i}\nmapping: {m:?}"
+                );
+                assert_eq!(
+                    analytic.distinct[t.idx()][i], exact.distinct[t.idx()][i],
+                    "distinct {t} boundary {i}\nmapping: {m:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_functional_conv_matches_reference() {
+    // Blocking / reordering / unrolling never changes semantics: the
+    // scheduled walk computes bit-identical outputs (integer-valued data).
+    prop::for_cases(0xf1, 60, |rng| {
+        let shape = random_shape(rng);
+        let levels = rng.range(2, 3) as usize;
+        let m = crate::search::random_mapping(shape, levels, 1, rng);
+        let data = ConvData::random(shape, rng.next_u64());
+        let got = functional_conv(&m, &data);
+        let want = reference_conv(&data);
+        assert_eq!(got, want, "schedule changed semantics: {m:?}");
+    });
+}
+
+#[test]
+fn functional_strided_conv() {
+    let shape = Shape::new(1, 4, 3, 5, 5, 3, 3, 2);
+    let mut rng = crate::util::XorShift::new(7);
+    let m = crate::search::random_mapping(shape, 3, 1, &mut rng);
+    let data = ConvData::random(shape, 99);
+    assert_eq!(functional_conv(&m, &data), reference_conv(&data));
+}
+
+#[test]
+fn simulate_assembles_same_as_model_on_matching_tables() {
+    // When tables agree, energies agree exactly.
+    let shape = Shape::new(2, 8, 8, 4, 4, 3, 3, 1);
+    let mut rng = crate::util::XorShift::new(13);
+    let arch = crate::arch::eyeriss_like();
+    for _ in 0..10 {
+        let (m, smap) = crate::search::random_mapping_for_arch(shape, &arch, &mut rng);
+        let model = match crate::xmodel::evaluate(&m, &smap, &arch, &Table3) {
+            Ok(r) => r,
+            Err(_) => continue, // capacity misses are fine here
+        };
+        let sim = simulate(&m, &smap, &arch, &Table3, 100_000_000).unwrap();
+        assert!(
+            (model.energy_pj - sim.energy_pj).abs() <= 1e-6 * model.energy_pj.max(1.0),
+            "model {} != sim {}",
+            model.energy_pj,
+            sim.energy_pj
+        );
+    }
+}
+
+#[test]
+fn reference_conv_known_values() {
+    // 1x1x1 output with 2x2 filter over constant data
+    let shape = Shape::new(1, 1, 1, 1, 1, 2, 2, 1);
+    let data = ConvData {
+        shape,
+        input: vec![1.0, 2.0, 3.0, 4.0],
+        weight: vec![1.0, 1.0, 1.0, 1.0],
+    };
+    assert_eq!(reference_conv(&data), vec![10.0]);
+}

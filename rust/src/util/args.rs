@@ -1,0 +1,126 @@
+//! Minimal CLI argument parser (no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    pub options: HashMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option value as string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option value parsed, with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Option value parsed, with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Option value parsed, with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// String option with default.
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// True when `--flag` was passed.
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["optimize", "--net", "alexnet", "--batch=16"]);
+        assert_eq!(a.positional, vec!["optimize"]);
+        assert_eq!(a.get("net"), Some("alexnet"));
+        assert_eq!(a.get_u64("batch", 1), 16);
+    }
+
+    #[test]
+    fn flags() {
+        // a bare --flag followed by a non-flag token consumes it as a
+        // value (clap-like greedy options); put flags last or use `=`
+        let a = parse(&["cmd", "--dry-run", "--verbose"]);
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "v"]);
+        assert!(a.has_flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_u64("missing", 7), 7);
+        assert_eq!(a.get_str("missing", "x"), "x");
+        assert_eq!(a.get_f64("missing", 0.5), 0.5);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = parse(&["--k", "1", "--k=2"]);
+        assert_eq!(a.get("k"), Some("2"));
+    }
+}

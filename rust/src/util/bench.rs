@@ -1,0 +1,138 @@
+//! Tiny criterion-like timing harness (criterion is not in the offline
+//! vendor set). Benches are `harness = false` binaries that call
+//! [`Bencher::bench`] and print a stable, greppable report line.
+
+use std::time::Instant;
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Case name.
+    pub name: String,
+    /// Iterations actually run.
+    pub iters: u64,
+    /// Mean wall time per iteration, nanoseconds.
+    pub mean_ns: f64,
+    /// Min / max per-batch estimates, nanoseconds per iter.
+    pub min_ns: f64,
+    /// Max per-batch estimate, ns/iter.
+    pub max_ns: f64,
+}
+
+impl Measurement {
+    /// Report line: `bench <name> ... mean 12.3 us/iter`.
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<48} {:>10}/iter  (min {}, max {}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.max_ns),
+            self.iters
+        )
+    }
+}
+
+/// Format nanoseconds with an appropriate unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{:.1} ns", ns)
+    }
+}
+
+/// The harness: runs each case for ~`target_ms` of wall time (after a
+/// warmup batch) split over several batches, and prints a report line.
+pub struct Bencher {
+    target_ms: u64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(300)
+    }
+}
+
+impl Bencher {
+    /// Create with a wall-time budget per case, in milliseconds.
+    pub fn new(target_ms: u64) -> Self {
+        Self {
+            target_ms,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure; returns the measurement (also stored + printed).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        // Warmup + calibration: time a single run.
+        let t0 = Instant::now();
+        f();
+        let single_ns = t0.elapsed().as_nanos().max(1) as f64;
+
+        let budget_ns = (self.target_ms as f64) * 1e6;
+        let batches = 5u64;
+        let iters_per_batch = ((budget_ns / single_ns / batches as f64).floor() as u64).max(1);
+
+        let mut per_iter = Vec::with_capacity(batches as usize);
+        for _ in 0..batches {
+            let t = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            per_iter.push(t.elapsed().as_nanos() as f64 / iters_per_batch as f64);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: batches * iters_per_batch,
+            mean_ns: per_iter.iter().sum::<f64>() / per_iter.len() as f64,
+            min_ns: per_iter.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_ns: per_iter.iter().cloned().fold(0.0, f64::max),
+        };
+        println!("{}", m.report());
+        self.results.push(m.clone());
+        m
+    }
+
+    /// All measurements so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a value (ptr read trick, no
+/// dependencies on std::hint::black_box stability semantics needed —
+/// it exists on this toolchain, so just wrap it).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::new(5);
+        let m = b.bench("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(m.iters >= 5);
+        assert!(m.mean_ns >= 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("us"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with(" s"));
+    }
+}

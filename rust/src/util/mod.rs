@@ -1,0 +1,121 @@
+//! Dependency-free utilities: deterministic PRNG, stats, table formatting,
+//! CLI argument parsing, and a tiny property-testing helper.
+//!
+//! The offline vendor set only contains the `xla` crate closure, so the
+//! usual suspects (rand, clap, serde, proptest, criterion) are hand-rolled
+//! here at the small scale this project needs.
+
+pub mod args;
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use args::Args;
+pub use rng::XorShift;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// All divisors of `n`, ascending. `n` must be >= 1.
+pub fn divisors(n: u64) -> Vec<u64> {
+    debug_assert!(n >= 1);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Human-readable byte size ("64 B", "128 KB", "28 MB").
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 20 && b % (1 << 20) == 0 {
+        format!("{} MB", b >> 20)
+    } else if b >= 1 << 10 && b % (1 << 10) == 0 {
+        format!("{} KB", b >> 10)
+    } else {
+        format!("{} B", b)
+    }
+}
+
+/// Format a float with engineering-style precision for reports.
+pub fn fmt_sig(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if a >= 1e9 {
+        format!("{:.3}e9", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.3}e6", v / 1e6)
+    } else if a >= 100.0 {
+        format!("{:.1}", v)
+    } else if a >= 1.0 {
+        format!("{:.3}", v)
+    } else {
+        format!("{:.5}", v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 1), 1);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn divisors_of_1_and_prime() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(13), vec![1, 13]);
+    }
+
+    #[test]
+    fn divisors_perfect_square() {
+        assert_eq!(divisors(36), vec![1, 2, 3, 4, 6, 9, 12, 18, 36]);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(64), "64 B");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(128 << 10), "128 KB");
+        assert_eq!(fmt_bytes(28 << 20), "28 MB");
+    }
+
+    #[test]
+    fn divisors_product_pairing() {
+        // every divisor d pairs with n/d
+        let n = 360;
+        let ds = divisors(n);
+        for &d in &ds {
+            assert_eq!(n % d, 0);
+            assert!(ds.contains(&(n / d)));
+        }
+    }
+}

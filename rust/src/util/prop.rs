@@ -1,0 +1,83 @@
+//! Property-testing helper (proptest is not in the offline vendor set).
+//!
+//! [`for_cases`] runs a closure over `n` deterministic random cases and, on
+//! panic, reports the failing case index and seed so the exact case can be
+//! replayed with `replay`.
+
+use super::rng::XorShift;
+
+/// Run `f` for `n` cases with independent deterministic sub-seeds derived
+/// from `seed`. Panics with the failing case's replay seed on failure.
+pub fn for_cases<F: FnMut(&mut XorShift)>(seed: u64, n: u64, mut f: F) {
+    for case in 0..n {
+        let sub = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case + 1);
+        let mut rng = XorShift::new(sub);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case}/{n} (replay seed {sub:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by its sub-seed (printed by [`for_cases`] on
+/// failure).
+pub fn replay<F: FnMut(&mut XorShift)>(sub_seed: u64, mut f: F) {
+    let mut rng = XorShift::new(sub_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        for_cases(1, 50, |rng| {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let r = std::panic::catch_unwind(|| {
+            for_cases(2, 50, |rng| {
+                let v = rng.below(10);
+                assert!(v < 9, "v was {v}");
+            });
+        });
+        let msg = match r {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = None;
+        replay(0xdead, |rng| {
+            first = Some(rng.next_u64());
+        });
+        let mut second = None;
+        replay(0xdead, |rng| {
+            second = Some(rng.next_u64());
+        });
+        assert_eq!(first, second);
+    }
+}

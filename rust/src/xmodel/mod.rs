@@ -1,0 +1,33 @@
+//! The analytical model (§5): per-level access counts from a scheduled
+//! loop nest, energy `E = Σ_i #acc_i × e_i`, and the performance bound.
+//!
+//! ## Access-count semantics
+//!
+//! The hierarchy is: implicit per-tensor **operand registers** inside each
+//! PE (level "-1", free — they model datapath stationarity), the temporal
+//! storage levels of the [`crate::arch::Arch`] (per-PE register files,
+//! then shared SRAMs, then DRAM), and the **array fabric** between the
+//! outermost register level and the first shared level, priced in hops
+//! (the paper's "neighbor PEs as an additional level in the hierarchy").
+//!
+//! For tensor `t`, the words fetched into level `i-1` during the whole
+//! layer are `refetch(t, i) × tile(t, i-1)`, where
+//! `refetch(t, i) = Π_{j ≥ i} r_j(t)` and `r_j(t)` is the product of the
+//! factors at temporal level `j` of every dim that is *relevant* to `t`
+//! or ordered **outside** the innermost relevant dim with factor > 1 at
+//! that level (order-aware stationarity: an irrelevant loop nested
+//! innermost does not evict `t`'s tile). The trace simulator
+//! ([`crate::sim`]) counts the same quantities exactly, by construction
+//! of the loop walk — the two are cross-validated in tests and in the
+//! Fig 7 bench.
+
+mod access;
+mod result;
+
+pub use access::{
+    assemble, evaluate, evaluate_prechecked, fits, refetch_factor, EvalError, RoundTables,
+};
+pub use result::{LevelCounts, ModelResult};
+
+#[cfg(test)]
+mod tests;

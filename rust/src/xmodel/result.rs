@@ -1,0 +1,126 @@
+//! Result structures of an analytical-model evaluation.
+
+use crate::arch::Arch;
+use crate::loopnest::{Tensor, ALL_TENSORS};
+use crate::util::{fmt_sig, table::Table};
+
+/// Word accesses at one storage level, split by tensor and direction.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LevelCounts {
+    /// Reads per tensor `[I, W, O]`.
+    pub reads: [f64; 3],
+    /// Writes per tensor (only outputs write in inference).
+    pub writes: [f64; 3],
+}
+
+impl LevelCounts {
+    /// Total accesses at this level.
+    pub fn total(&self) -> f64 {
+        self.reads.iter().sum::<f64>() + self.writes.iter().sum::<f64>()
+    }
+
+    /// Accesses of one tensor.
+    pub fn tensor(&self, t: Tensor) -> f64 {
+        self.reads[t.idx()] + self.writes[t.idx()]
+    }
+}
+
+/// Full evaluation result for one (layer, mapping, arch) triple.
+#[derive(Debug, Clone)]
+pub struct ModelResult {
+    /// Per-temporal-level access counts (same indexing as `arch.levels`).
+    pub levels: Vec<LevelCounts>,
+    /// Words delivered over the array fabric per tensor.
+    pub fabric_words: [f64; 3],
+    /// Hop-weighted fabric transfers (words × hop distance).
+    pub fabric_hops: f64,
+    /// Total MACs.
+    pub macs: u64,
+    /// PEs doing useful work (product of spatial extents).
+    pub active_pes: u64,
+    /// Energy per temporal level, pJ.
+    pub energy_by_level: Vec<f64>,
+    /// Fabric (inter-PE / bus) energy, pJ.
+    pub fabric_energy: f64,
+    /// MAC energy, pJ.
+    pub mac_energy: f64,
+    /// Total energy, pJ.
+    pub energy_pj: f64,
+    /// Execution cycles (max of compute and DRAM-bandwidth bound).
+    pub cycles: f64,
+    /// PE-array utilization for the mapping's spatial extents
+    /// (ceil-fragmentation-aware).
+    pub utilization: f64,
+}
+
+impl ModelResult {
+    /// Energy in micro-joules.
+    pub fn energy_uj(&self) -> f64 {
+        self.energy_pj / 1e6
+    }
+
+    /// Throughput in TOPS at a given clock, counting 2 ops per MAC.
+    pub fn tops(&self, freq_ghz: f64) -> f64 {
+        2.0 * self.macs as f64 / self.cycles / 1e3 * freq_ghz
+    }
+
+    /// Efficiency in TOPS/W at a given clock (paper reports 0.35–1.85).
+    pub fn tops_per_watt(&self, freq_ghz: f64) -> f64 {
+        // energy per op (pJ) -> TOPS/W = 1 / (pJ/op)
+        let pj_per_op = self.energy_pj / (2.0 * self.macs as f64);
+        let _ = freq_ghz; // efficiency is frequency-independent here
+        1.0 / pj_per_op
+    }
+
+    /// Fraction of total energy at temporal level `i`.
+    pub fn level_fraction(&self, i: usize) -> f64 {
+        self.energy_by_level[i] / self.energy_pj
+    }
+
+    /// Render the energy breakdown as a table (Fig 11-style rows).
+    pub fn breakdown_table(&self, arch: &Arch) -> Table {
+        let mut t = Table::new(vec!["level", "I", "W", "O", "acc(words)", "energy(pJ)", "frac"]);
+        for (i, lc) in self.levels.iter().enumerate() {
+            t.row(vec![
+                arch.levels[i].name.clone(),
+                fmt_sig(lc.tensor(Tensor::Input)),
+                fmt_sig(lc.tensor(Tensor::Weight)),
+                fmt_sig(lc.tensor(Tensor::Output)),
+                fmt_sig(lc.total()),
+                fmt_sig(self.energy_by_level[i]),
+                format!("{:.1}%", 100.0 * self.level_fraction(i)),
+            ]);
+        }
+        t.row(vec![
+            "fabric".to_string(),
+            fmt_sig(self.fabric_words[0]),
+            fmt_sig(self.fabric_words[1]),
+            fmt_sig(self.fabric_words[2]),
+            fmt_sig(self.fabric_words.iter().sum::<f64>()),
+            fmt_sig(self.fabric_energy),
+            format!("{:.1}%", 100.0 * self.fabric_energy / self.energy_pj),
+        ]);
+        t.row(vec![
+            "MAC".to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+            fmt_sig(self.macs as f64),
+            fmt_sig(self.mac_energy),
+            format!("{:.1}%", 100.0 * self.mac_energy / self.energy_pj),
+        ]);
+        t
+    }
+
+    /// Sum of access counts per tensor over all temporal levels — used by
+    /// validation to compare against the simulator.
+    pub fn total_accesses(&self) -> [f64; 3] {
+        let mut out = [0.0; 3];
+        for lc in &self.levels {
+            for t in ALL_TENSORS {
+                out[t.idx()] += lc.tensor(t);
+            }
+        }
+        out
+    }
+}

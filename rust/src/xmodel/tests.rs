@@ -1,0 +1,375 @@
+//! Analytical model tests: hand-checked access counts and invariants.
+
+use super::*;
+use crate::arch::{eyeriss_like, no_local_reuse, Arch, ArrayShape, MemLevel};
+use crate::dataflow::SpatialMap;
+use crate::energy::Table3;
+use crate::loopnest::{Dim, LevelOrder, Mapping, Shape, Tensor};
+
+/// A 3-level arch with one PE and roomy buffers, for hand calculations.
+fn tiny_arch() -> Arch {
+    Arch {
+        name: "tiny".into(),
+        levels: vec![
+            MemLevel::reg("RF", 4096),
+            MemLevel::sram("GBUF", 1 << 20),
+            MemLevel::dram(),
+        ],
+        array: ArrayShape { rows: 1, cols: 1 },
+        bus: crate::arch::ArrayBus::Systolic,
+        word_bytes: 2,
+        dram_bw_bytes_per_cycle: 16.0,
+    }
+}
+
+#[test]
+fn refetch_factor_order_awareness() {
+    // K=4, C=3 at one level. For O (C irrelevant):
+    //   C innermost -> r = 4; C outermost -> r = 12.
+    let shape = Shape::new(1, 4, 3, 1, 1, 1, 1, 1);
+    let mut m = Mapping::trivial(shape, 1, 2);
+    m.orders[2] = LevelOrder([Dim::C, Dim::K, Dim::B, Dim::X, Dim::Y, Dim::FX, Dim::FY]);
+    assert_eq!(refetch_factor(&m, Tensor::Output, 2, false), (4, true));
+    m.orders[2] = LevelOrder([Dim::K, Dim::C, Dim::B, Dim::X, Dim::Y, Dim::FX, Dim::FY]);
+    assert_eq!(refetch_factor(&m, Tensor::Output, 2, false), (12, true));
+    // W relevant to both: 12 either way
+    assert_eq!(refetch_factor(&m, Tensor::Weight, 2, false), (12, true));
+    // with a relevant loop already seen below, even a leading irrelevant
+    // dim counts: C-innermost now contributes fully
+    m.orders[2] = LevelOrder([Dim::C, Dim::K, Dim::B, Dim::X, Dim::Y, Dim::FX, Dim::FY]);
+    assert_eq!(refetch_factor(&m, Tensor::Output, 2, true), (12, true));
+}
+
+#[test]
+fn refetch_factor_all_irrelevant_is_one() {
+    // only B and X iterate -> W is fully stationary
+    let shape = Shape::new(4, 1, 1, 5, 1, 1, 1, 1);
+    let m = Mapping::trivial(shape, 1, 2);
+    assert_eq!(refetch_factor(&m, Tensor::Weight, 2, false), (1, false));
+    assert_eq!(refetch_factor(&m, Tensor::Output, 2, false).0, 20);
+    // ...but the same loops above a W-relevant loop do force refetches
+    assert_eq!(refetch_factor(&m, Tensor::Weight, 2, true).0, 20);
+}
+
+#[test]
+fn matmul_hand_count() {
+    // FC: B=2, K=3, C=4, single PE, everything iterated at the RF level
+    // (tiles all fit). Boundary 0 rounds = r_0; canonical order is
+    // [FX,FY,C,X,Y,K,B] so the nest is B { K { C } }.
+    let shape = Shape::new(2, 3, 4, 1, 1, 1, 1, 1);
+    let mut m = Mapping::trivial(shape, 1, 2);
+    // move all iteration into level 0
+    for d in [Dim::B, Dim::K, Dim::C] {
+        m.blocking.set(0, d, shape.bound(d));
+        m.blocking.set(2, d, 1);
+    }
+    m.validate().unwrap();
+
+    let smap = SpatialMap::scalar();
+    let r = evaluate(&m, &smap, &tiny_arch(), &Table3).unwrap();
+
+    // RF (level 0) reads:
+    //   W: C innermost (relevant) then K relevant, B irrelevant above:
+    //      r_0(W) = 4*3*2 = 24 = MACs
+    //   I: C relevant, K irrelevant above C -> counts, B relevant:
+    //      24 = MACs
+    //   O: C irrelevant innermost (accumulates in operand reg), K, B:
+    //      writes per boundary-0 = 6 rounds; re-reads = rounds- distinct = 0
+    let macs = 24.0;
+    assert_eq!(r.macs, 24);
+    assert_eq!(r.levels[0].reads[Tensor::Weight.idx()], macs);
+    assert_eq!(r.levels[0].reads[Tensor::Input.idx()], macs);
+    assert_eq!(r.levels[0].writes[Tensor::Output.idx()], 6.0);
+    // no partial-sum re-reads from the MAC side, but the writeback to
+    // GBUF reads the RF once per output element
+    assert_eq!(r.levels[0].reads[Tensor::Output.idx()], 6.0);
+
+    // level 1 (GBUF): whole tensors pass once: reads I = 8, W = 12;
+    // O: 6 written up from RF... wait: boundary-1 rounds for O = 1,
+    // tile below = 6 -> writes at level1 = 6, reads at level0 += 6.
+    assert_eq!(r.levels[1].reads[Tensor::Input.idx()], 8.0);
+    assert_eq!(r.levels[1].reads[Tensor::Weight.idx()], 12.0);
+    assert_eq!(r.levels[1].writes[Tensor::Output.idx()], 6.0);
+    // DRAM: same (compulsory)
+    assert_eq!(r.levels[2].reads[Tensor::Input.idx()], 8.0);
+    assert_eq!(r.levels[2].reads[Tensor::Weight.idx()], 12.0);
+    assert_eq!(r.levels[2].writes[Tensor::Output.idx()], 6.0);
+    assert_eq!(r.levels[2].reads[Tensor::Output.idx()], 0.0);
+}
+
+#[test]
+fn output_partial_sum_rereads() {
+    // Split C across the top level with C *outside* K: the K-tile outputs
+    // are revisited per C chunk -> partial sums must be re-read.
+    let shape = Shape::new(1, 4, 6, 1, 1, 1, 1, 1);
+    let mut m = Mapping::trivial(shape, 1, 2);
+    // level 0: K=4, C=3; level 2: C=2 (outer), order K innermost then C
+    m.blocking.set(0, Dim::K, 4);
+    m.blocking.set(0, Dim::C, 3);
+    m.blocking.set(2, Dim::K, 1);
+    m.blocking.set(2, Dim::C, 2);
+    m.orders[2] = LevelOrder([Dim::K, Dim::C, Dim::B, Dim::X, Dim::Y, Dim::FX, Dim::FY]);
+    m.validate().unwrap();
+
+    let r = evaluate(&m, &SpatialMap::scalar(), &tiny_arch(), &Table3).unwrap();
+    // boundary 1: rounds(O) = r_2(O): K innermost relevant f=1 ... C outer
+    // irrelevant f=2 -> no relevant dim iterates with f>1 -> r = 1?
+    // Careful: K factor at level 2 is 1 so seen_relevant never fires and
+    // rounds = 1 -> O written up once, no re-reads at GBUF.
+    // boundary 2 (into GBUF from DRAM): rounds(O) = 1 by same logic; BUT
+    // boundary at level 2 counts r_2 itself = 1 -> writes at DRAM = 4.
+    assert_eq!(r.levels[2].writes[Tensor::Output.idx()], 4.0);
+
+    // Now force the revisit: put K at the top level too (K=2 inside, C=2
+    // outside). distinct = 2 (K tiles), rounds = 4 -> re-reads > 0.
+    let mut m2 = Mapping::trivial(shape, 1, 2);
+    m2.blocking.set(0, Dim::K, 2);
+    m2.blocking.set(0, Dim::C, 3);
+    m2.blocking.set(2, Dim::K, 2);
+    m2.blocking.set(2, Dim::C, 2);
+    m2.orders[2] = LevelOrder([Dim::K, Dim::C, Dim::B, Dim::X, Dim::Y, Dim::FX, Dim::FY]);
+    m2.validate().unwrap();
+    let r2 = evaluate(&m2, &SpatialMap::scalar(), &tiny_arch(), &Table3).unwrap();
+    // boundary 2: rounds(O) = r_2(O) = 2(K) * 2(C above) = 4; distinct = 2
+    // tile below = 2 outputs -> DRAM writes 4*2 = 8, DRAM reads (4-2)*2 = 4
+    assert_eq!(r2.levels[2].writes[Tensor::Output.idx()], 8.0);
+    assert_eq!(r2.levels[2].reads[Tensor::Output.idx()], 4.0);
+}
+
+#[test]
+fn multicast_at_array_boundary() {
+    // 2x2 array, C|K: I multicast along K (2 copies per word), W unique,
+    // O merged... with all temporal factors trivial at RF.
+    let shape = Shape::new(1, 2, 2, 1, 1, 1, 1, 1);
+    let mut m = Mapping::trivial(shape, 1, 2);
+    m.spatial[Dim::C.idx()] = 2;
+    m.spatial[Dim::K.idx()] = 2;
+    m.blocking.set(2, Dim::C, 1);
+    m.blocking.set(2, Dim::K, 1);
+    m.validate().unwrap();
+    let smap = SpatialMap {
+        u: vec![(Dim::C, 2)],
+        v: vec![(Dim::K, 2)],
+    };
+    let mut arch = tiny_arch();
+    arch.array = ArrayShape { rows: 2, cols: 2 };
+
+    let r = evaluate(&m, &smap, &arch, &Table3).unwrap();
+    // 4 MACs on 4 PEs. Each PE reads 1 I, 1 W from its RF.
+    assert_eq!(r.macs, 4);
+    assert_eq!(r.levels[0].reads[Tensor::Input.idx()], 4.0);
+    // GBUF serves unique words: I has 2 unique (C extent), W has 4.
+    assert_eq!(r.levels[1].reads[Tensor::Input.idx()], 2.0);
+    assert_eq!(r.levels[1].reads[Tensor::Weight.idx()], 4.0);
+    // O: 2 unique outputs (K extent), spatially merged over C:
+    // GBUF sees 2 writes.
+    assert_eq!(r.levels[1].writes[Tensor::Output.idx()], 2.0);
+    // fabric carried everything to 4 PEs
+    assert_eq!(r.fabric_words[Tensor::Input.idx()], 4.0);
+    assert_eq!(r.fabric_words[Tensor::Weight.idx()], 4.0);
+}
+
+#[test]
+fn broadcast_bus_costs_more() {
+    let shape = Shape::new(2, 16, 16, 6, 6, 3, 3, 1);
+    let mut rng = crate::util::XorShift::new(3);
+    for _ in 0..20 {
+        let (m, smap) = crate::search::random_mapping_for_arch(shape, &eyeriss_like(), &mut rng);
+        let sys = evaluate(&m, &smap, &eyeriss_like(), &Table3);
+        let bc = evaluate(&m, &smap, &no_local_reuse(), &Table3);
+        if let (Ok(s), Ok(b)) = (sys, bc) {
+            assert!(
+                b.energy_pj >= s.energy_pj,
+                "broadcast {} < systolic {}",
+                b.energy_pj,
+                s.energy_pj
+            );
+        }
+    }
+}
+
+#[test]
+fn energy_includes_all_components() {
+    let shape = Shape::new(1, 4, 4, 2, 2, 1, 1, 1);
+    let m = Mapping::trivial(shape, 1, 2);
+    let r = evaluate(&m, &SpatialMap::scalar(), &tiny_arch(), &Table3).unwrap();
+    let sum: f64 = r.energy_by_level.iter().sum::<f64>() + r.fabric_energy + r.mac_energy;
+    assert!((r.energy_pj - sum).abs() < 1e-9);
+    assert!(r.mac_energy > 0.0);
+    assert_eq!(r.macs, 64);
+}
+
+#[test]
+fn fits_rejects_oversized_tiles() {
+    let shape = Shape::new(1, 64, 64, 8, 8, 3, 3, 1);
+    let mut m = Mapping::trivial(shape, 1, 2);
+    // RF tile of W = 64*64*9 elems >> 4096-word RF
+    for d in [Dim::K, Dim::C, Dim::FX, Dim::FY] {
+        m.blocking.set(0, d, shape.bound(d));
+        m.blocking.set(2, d, 1);
+    }
+    m.validate().unwrap();
+    match evaluate(&m, &SpatialMap::scalar(), &tiny_arch(), &Table3) {
+        Err(EvalError::DoesNotFit { level: 0, .. }) => {}
+        other => panic!("expected DoesNotFit, got {other:?}"),
+    }
+}
+
+#[test]
+fn level_and_spatial_mismatches_rejected() {
+    let shape = Shape::new(1, 2, 2, 1, 1, 1, 1, 1);
+    let m = Mapping::trivial(shape, 1, 1); // 2 levels vs arch's 3
+    match evaluate(&m, &SpatialMap::scalar(), &tiny_arch(), &Table3) {
+        Err(EvalError::LevelMismatch { .. }) => {}
+        other => panic!("{other:?}"),
+    }
+    let m = Mapping::trivial(shape, 1, 2);
+    let bad_smap = SpatialMap {
+        u: vec![(Dim::K, 2)],
+        v: vec![],
+    };
+    match evaluate(&m, &bad_smap, &tiny_arch(), &Table3) {
+        Err(EvalError::SpatialMismatch) => {}
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn dram_bound_cycles() {
+    // FC with batch 1: DRAM-bound (paper: memory bound, Amdahl)
+    let shape = Shape::new(1, 128, 256, 1, 1, 1, 1, 1);
+    let m = Mapping::trivial(shape, 1, 2);
+    let r = evaluate(&m, &SpatialMap::scalar(), &tiny_arch(), &Table3).unwrap();
+    let compute = r.macs as f64; // 1 PE
+    assert!(r.cycles >= compute, "cycles must cover compute");
+    // weights alone are 32k words; at 8 words/cycle DRAM that dominates
+    assert!(r.cycles >= 32768.0 * 2.0 / 16.0);
+}
+
+#[test]
+fn breakdown_table_renders() {
+    let shape = Shape::new(1, 4, 4, 2, 2, 1, 1, 1);
+    let m = Mapping::trivial(shape, 1, 2);
+    let arch = tiny_arch();
+    let r = evaluate(&m, &SpatialMap::scalar(), &arch, &Table3).unwrap();
+    let txt = r.breakdown_table(&arch).to_text();
+    assert!(txt.contains("RF"));
+    assert!(txt.contains("DRAM"));
+    assert!(txt.contains("MAC"));
+    let sums = r.total_accesses();
+    assert!(sums.iter().all(|&s| s >= 0.0));
+}
+
+#[test]
+fn prop_tile_table_matches_tile_elems() {
+    // the hot-path precomputed tile table must agree with the reference
+    // per-query computation for arbitrary mappings
+    crate::util::prop::for_cases(0x7ab1e, 200, |rng| {
+        let shape = Shape::new(
+            rng.range(1, 4),
+            rng.range(1, 24),
+            rng.range(1, 24),
+            rng.range(1, 10),
+            rng.range(1, 10),
+            rng.range(1, 4),
+            rng.range(1, 4),
+            rng.range(1, 2) as u32,
+        );
+        let arch = crate::arch::eyeriss_like();
+        let (m, _) = crate::search::random_mapping_for_arch(shape, &arch, rng);
+        let tiles = super::access::tile_table(&m);
+        for t in crate::loopnest::ALL_TENSORS {
+            for i in 0..m.levels() {
+                assert_eq!(
+                    tiles[t.idx()][i],
+                    m.tile_elems(t, i) as f64,
+                    "{t} level {i}: {m:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn scaled_cost_model_shifts_balance() {
+    // quadrupling memory cost must increase total energy but leave access
+    // counts untouched
+    use crate::energy::ScaledCost;
+    let shape = Shape::new(2, 8, 8, 4, 4, 3, 3, 1);
+    let m = Mapping::trivial(shape, 1, 2);
+    let base = evaluate(&m, &SpatialMap::scalar(), &tiny_arch(), &Table3).unwrap();
+    let scaled = evaluate(
+        &m,
+        &SpatialMap::scalar(),
+        &tiny_arch(),
+        &ScaledCost {
+            mem_scale: 4.0,
+            mac_scale: 1.0,
+            dram_scale: 4.0,
+        },
+    )
+    .unwrap();
+    assert_eq!(base.total_accesses(), scaled.total_accesses());
+    assert!(scaled.energy_pj > 3.0 * base.energy_pj);
+    assert_eq!(base.mac_energy, scaled.mac_energy);
+}
+
+#[test]
+fn evaluate_prechecked_equals_evaluate() {
+    let shape = Shape::new(2, 8, 8, 4, 4, 3, 3, 1);
+    let mut rng = crate::util::XorShift::new(77);
+    for _ in 0..20 {
+        let arch = eyeriss_like();
+        let (m, smap) = crate::search::random_mapping_for_arch(shape, &arch, &mut rng);
+        if let Ok(checked) = evaluate(&m, &smap, &arch, &Table3) {
+            let fast = evaluate_prechecked(&m, &smap, &arch, &Table3);
+            assert_eq!(checked.energy_pj, fast.energy_pj);
+            assert_eq!(checked.cycles, fast.cycles);
+        }
+    }
+}
+
+#[test]
+fn tops_per_watt_sane_range() {
+    let shape = Shape::new(2, 16, 16, 6, 6, 3, 3, 1);
+    let df = crate::dataflow::Dataflow::parse("C|K").unwrap();
+    let lo = crate::search::optimize_layer(
+        &shape,
+        &crate::arch::small_rf(),
+        &df,
+        &Table3,
+        &crate::search::SearchOpts::capped(500, 5),
+        1,
+    )
+    .unwrap();
+    let tw = lo.result.tops_per_watt(0.4);
+    // 16-bit MACs at these costs land between 0.05 and 5 TOPS/W
+    assert!(tw > 0.05 && tw < 5.0, "{tw}");
+}
+
+#[test]
+fn utilization_consistent_with_dataflow_module() {
+    let shape = Shape::new(4, 384, 256, 13, 13, 3, 3, 1);
+    let df = crate::dataflow::Dataflow::parse("C|K").unwrap();
+    let arch = eyeriss_like();
+    let smap = crate::search::divisor_replication(&shape, &df, &arch.array);
+    let spatial = smap.factors();
+    let mut m = Mapping::trivial(shape, 1, 2);
+    for d in crate::loopnest::ALL_DIMS {
+        m.spatial[d.idx()] = spatial[d.idx()];
+        m.blocking.set(2, d, shape.bound(d) / spatial[d.idx()]);
+    }
+    m.validate().unwrap();
+    // won't fit RF? use a huge arch
+    let r = evaluate(&m, &smap, &tiny_arch_with_array(arch.array), &Table3).unwrap();
+    assert_eq!(
+        r.utilization,
+        crate::dataflow::utilization(&shape, &smap, &arch.array)
+    );
+}
+
+fn tiny_arch_with_array(array: ArrayShape) -> Arch {
+    let mut a = tiny_arch();
+    a.array = array;
+    a
+}

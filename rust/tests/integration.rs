@@ -1,0 +1,199 @@
+//! Cross-module integration tests: schedule DSL → lowering → model →
+//! simulator → search all composing on real layer shapes.
+
+use interstellar::arch::{eyeriss_like, optimized_mobile, small_rf, validation_designs};
+use interstellar::dataflow::{enumerate_dataflows, Dataflow};
+use interstellar::energy::Table3;
+use interstellar::halide::{eyeriss_rs, tpu_ck};
+use interstellar::loopnest::{Shape, Tensor, ALL_TENSORS};
+use interstellar::nn::{all_benchmarks, network};
+use interstellar::search::{
+    divisor_replication, optimize_layer, optimize_network, SearchOpts,
+};
+use interstellar::sim::{count_rounds, functional_conv, reference_conv, simulate, ConvData};
+use interstellar::util::prop;
+use interstellar::xmodel::{evaluate, RoundTables};
+
+fn fast_opts() -> SearchOpts {
+    SearchOpts::capped(400, 5)
+}
+
+#[test]
+fn every_benchmark_layer_is_optimizable_on_eyeriss() {
+    // Every layer of every benchmark must admit at least one feasible
+    // mapping on the Eyeriss-like config with C|K.
+    let df = Dataflow::parse("C|K").unwrap();
+    let arch = eyeriss_like();
+    for net in all_benchmarks() {
+        let mut seen = std::collections::HashSet::new();
+        for layer in &net.layers {
+            if !seen.insert((layer.shape.bounds, layer.shape.stride)) {
+                continue;
+            }
+            let lo = optimize_layer(&layer.shape, &arch, &df, &Table3, &fast_opts(), 2);
+            assert!(
+                lo.is_some(),
+                "{} / {} has no feasible mapping",
+                net.name,
+                layer.name
+            );
+        }
+    }
+}
+
+#[test]
+fn schedule_dsl_to_simulator_round_trip() {
+    // DSL-authored schedules and the trace simulator agree bit-exactly on
+    // energy for a mid-sized layer.
+    let shape = Shape::new(2, 32, 16, 8, 8, 3, 3, 1);
+    let arch = eyeriss_like();
+    for (name, sched) in [
+        ("tpu_ck", tpu_ck(shape, 16, 16)),
+        ("eyeriss_rs", eyeriss_rs(shape, 16, 16)),
+    ] {
+        let (m, smap) = sched.lower(&arch).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let model = evaluate(&m, &smap, &arch, &Table3).unwrap();
+        let sim = simulate(&m, &smap, &arch, &Table3, 500_000_000).unwrap();
+        assert_eq!(
+            model.energy_pj, sim.energy_pj,
+            "{name}: model and simulator disagree"
+        );
+    }
+}
+
+#[test]
+fn validation_designs_functionally_correct() {
+    // Table-4 designs compute correct convolutions through the full
+    // schedule machinery (functional mode).
+    let shape = Shape::new(1, 8, 6, 5, 5, 3, 3, 1);
+    for (arch, df_str) in validation_designs() {
+        let df = Dataflow::parse(df_str).unwrap();
+        let Some(lo) = optimize_layer(&shape, &arch, &df, &Table3, &fast_opts(), 2) else {
+            panic!("{}: no mapping", arch.name);
+        };
+        let data = ConvData::random(shape, 31337);
+        assert_eq!(
+            functional_conv(&lo.mapping, &data),
+            reference_conv(&data),
+            "{}: functional mismatch",
+            arch.name
+        );
+    }
+}
+
+#[test]
+fn optimizer_beats_presets_on_conv3() {
+    // The blocking search must do at least as well as the hand-written
+    // preset schedules on the same hardware.
+    let conv3 = Shape::new(4, 384, 256, 13, 13, 3, 3, 1);
+    let arch = eyeriss_like();
+    let (pm, psm) = tpu_ck(conv3, 16, 16).lower(&arch).unwrap();
+    let preset = evaluate(&pm, &psm, &arch, &Table3).unwrap();
+    let opt = optimize_layer(
+        &conv3,
+        &arch,
+        &Dataflow::parse("C|K").unwrap(),
+        &Table3,
+        &fast_opts(),
+        2,
+    )
+    .unwrap();
+    assert!(
+        opt.result.energy_pj <= preset.energy_pj,
+        "search {} worse than preset {}",
+        opt.result.energy_pj,
+        preset.energy_pj
+    );
+}
+
+#[test]
+fn two_level_rf_hierarchy_evaluates() {
+    // optimized_mobile has RF1+RF2: the 4-level path must work end to end
+    let shape = Shape::new(2, 32, 32, 7, 7, 3, 3, 1);
+    let arch = optimized_mobile();
+    let df = Dataflow::parse("C|K").unwrap();
+    let lo = optimize_layer(&shape, &arch, &df, &Table3, &fast_opts(), 2).expect("mapping");
+    assert_eq!(lo.mapping.levels(), 4);
+    assert_eq!(lo.mapping.spatial_at, 2);
+    let sim = simulate(&lo.mapping, &lo.smap, &arch, &Table3, 500_000_000).unwrap();
+    assert_eq!(lo.result.energy_pj, sim.energy_pj);
+}
+
+#[test]
+fn prop_model_equals_sim_on_benchmark_shaped_layers() {
+    // random mappings on real (scaled-down) benchmark layer shapes
+    prop::for_cases(0x1f2e, 40, |rng| {
+        let net = network("googlenet", 1).unwrap();
+        let layer = &net.layers[rng.below(net.layers.len() as u64) as usize];
+        // scale down spatial dims to keep the walk cheap
+        let mut b = layer.shape.bounds;
+        b[3] = b[3].min(4);
+        b[4] = b[4].min(4);
+        b[1] = b[1].min(32);
+        b[2] = b[2].min(32);
+        let shape = Shape {
+            bounds: b,
+            stride: layer.shape.stride,
+        };
+        let arch = small_rf();
+        let (m, _smap) = interstellar::search::random_mapping_for_arch(shape, &arch, rng);
+        let analytic = RoundTables::analytic(&m);
+        if let Ok(exact) = count_rounds(&m, 20_000_000) {
+            for t in ALL_TENSORS {
+                for i in 0..m.levels() {
+                    assert_eq!(
+                        analytic.rounds[t.idx()][i],
+                        exact.rounds[t.idx()][i],
+                        "{t} boundary {i} on {}: {m:?}",
+                        layer.name
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn network_energy_accumulates_layer_energies() {
+    let net = network("mlp-m", 16).unwrap();
+    let df = Dataflow::parse("C|K").unwrap();
+    let opt = optimize_network(&net, &eyeriss_like(), &df, &Table3, &fast_opts(), 2);
+    let sum: f64 = opt
+        .per_layer
+        .iter()
+        .flatten()
+        .map(|lo| lo.result.energy_pj)
+        .sum();
+    assert!((opt.total_energy_pj - sum).abs() < 1e-9 * sum.max(1.0));
+}
+
+#[test]
+fn dataflow_enumeration_all_evaluable_on_small_layer() {
+    // every enumerated dataflow must be lowerable + evaluable
+    let shape = Shape::new(2, 12, 12, 6, 6, 3, 3, 1);
+    let arch = eyeriss_like();
+    let mut evaluated = 0;
+    for df in enumerate_dataflows(&shape) {
+        let smap = divisor_replication(&shape, &df, &arch.array);
+        if let Some(lo) = optimize_layer(&shape, &arch, &df, &Table3, &fast_opts(), 1) {
+            assert!(lo.result.energy_pj > 0.0);
+            assert_eq!(lo.smap.factors(), smap.factors());
+            evaluated += 1;
+        }
+    }
+    assert!(evaluated >= 15, "only {evaluated}/21 dataflows evaluable");
+}
+
+#[test]
+fn output_accesses_bounded_by_compulsory_traffic() {
+    // DRAM output writes can never be below the output size (compulsory)
+    let shape = Shape::new(2, 16, 8, 6, 6, 3, 3, 1);
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").unwrap();
+    let lo = optimize_layer(&shape, &arch, &df, &Table3, &fast_opts(), 2).unwrap();
+    let dram = lo.result.levels.last().unwrap();
+    let out_words = shape.tensor_elems(Tensor::Output) as f64;
+    assert!(dram.writes[Tensor::Output.idx()] >= out_words);
+    let in_words = shape.tensor_elems(Tensor::Input) as f64;
+    assert!(dram.reads[Tensor::Input.idx()] >= in_words);
+}
