@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI entry point: format, lint, build, and the tier-1 verify.
+# Usage: ./ci.sh [--no-bench]
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo fmt --check"
+cargo fmt --all -- --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> tier-1 verify: cargo build --release && cargo test -q"
+cargo build --release
+cargo test -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "==> perf_search (pruning contract: identical winners, >=3x fewer full evals)"
+    cargo bench --bench perf_search
+fi
+
+echo "CI OK"

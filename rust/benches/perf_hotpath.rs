@@ -7,6 +7,7 @@ use interstellar::arch::eyeriss_like;
 use interstellar::coordinator::experiments;
 use interstellar::dataflow::Dataflow;
 use interstellar::energy::Table3;
+use interstellar::engine::{Engine, EvalStats};
 use interstellar::search::{
     divisor_replication, enumerate_blockings, optimize_layer, SearchOpts,
 };
@@ -38,6 +39,40 @@ fn main() {
     };
     b.bench("perf/evaluate_one_mapping", || {
         black_box(evaluate(black_box(&mapping), &smap, &arch, &Table3).unwrap());
+    });
+
+    // 1b. the staged engine's scalar path (shared footprints, no
+    // ModelResult allocation) — what the search's inner loop actually runs
+    let engine = Engine::new(&arch, &Table3);
+    let ctx = engine.context(&shape, &smap);
+    let stats = EvalStats::default();
+    let fp = engine.footprints(&mapping, &stats).expect("fits");
+    let full = engine
+        .energy_bounded(&mapping, &smap, &ctx, &fp, f64::INFINITY, &stats)
+        .energy()
+        .expect("completes");
+    b.bench("perf/engine_energy_bounded (no bound)", || {
+        black_box(engine.energy_bounded(
+            black_box(&mapping),
+            &smap,
+            &ctx,
+            &fp,
+            f64::INFINITY,
+            &stats,
+        ));
+    });
+    b.bench("perf/engine_energy_bounded (tight bound)", || {
+        black_box(engine.energy_bounded(
+            black_box(&mapping),
+            &smap,
+            &ctx,
+            &fp,
+            full * 0.5,
+            &stats,
+        ));
+    });
+    b.bench("perf/engine_footprints (stage 2)", || {
+        black_box(engine.footprints(black_box(&mapping), &stats).is_ok());
     });
 
     // 2. blocking enumeration

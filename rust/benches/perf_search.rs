@@ -1,0 +1,97 @@
+//! §Perf: staged-engine branch-and-bound effectiveness on the per-layer
+//! search. For AlexNet conv layers, runs the same blocking × order search
+//! twice — exhaustive (every candidate fully evaluated, the seed's
+//! behavior) and branch-and-bound (stage-2/3 lower bounds against a
+//! shared incumbent) — and asserts the pruning contract: the winning
+//! mapping is **identical**, while full (stage-4) evaluations drop by at
+//! least 3x. Records evaluations-pruned vs evaluations-run for
+//! EXPERIMENTS.md §Perf.
+
+use interstellar::arch::eyeriss_like;
+use interstellar::dataflow::Dataflow;
+use interstellar::energy::Table3;
+use interstellar::engine::PruneMode;
+use interstellar::nn::network;
+use interstellar::search::{optimize_layer, SearchOpts};
+use interstellar::util::bench::Bencher;
+use interstellar::util::table::Table;
+
+fn main() {
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").unwrap();
+    let net = network("alexnet", 4).unwrap();
+    let conv_layers: Vec<_> = net
+        .layers
+        .iter()
+        .filter(|l| l.name.starts_with("CONV"))
+        .collect();
+    assert!(conv_layers.len() >= 3, "need at least 3 conv layers");
+
+    let mut b = Bencher::new(1);
+    let mut t = Table::new(vec![
+        "layer",
+        "candidates",
+        "full (exhaustive)",
+        "full (b&b)",
+        "reduction",
+        "pruned@bound",
+    ]);
+    let mut reductions = Vec::new();
+
+    for layer in &conv_layers {
+        let ex_opts = SearchOpts::capped(800, 5).with_prune(PruneMode::Exhaustive);
+        let bb_opts = SearchOpts::capped(800, 5).with_prune(PruneMode::BranchAndBound);
+
+        // threads = 1: deterministic candidate order in both modes
+        let mut ex = None;
+        b.bench(&format!("perf_search/{} exhaustive", layer.name), || {
+            ex = optimize_layer(&layer.shape, &arch, &df, &Table3, &ex_opts, 1);
+        });
+        let mut bb = None;
+        b.bench(&format!("perf_search/{} b&b", layer.name), || {
+            bb = optimize_layer(&layer.shape, &arch, &df, &Table3, &bb_opts, 1);
+        });
+        let ex = ex.expect("exhaustive found a mapping");
+        let bb = bb.expect("b&b found a mapping");
+
+        // pruning contract: identical winner, bit-for-bit
+        assert_eq!(
+            ex.result.energy_pj, bb.result.energy_pj,
+            "{}: b&b energy differs from exhaustive",
+            layer.name
+        );
+        assert_eq!(
+            ex.mapping, bb.mapping,
+            "{}: b&b winner mapping differs from exhaustive",
+            layer.name
+        );
+
+        let reduction = ex.stats.full as f64 / bb.stats.full.max(1) as f64;
+        reductions.push(reduction);
+        t.row(vec![
+            layer.name.clone(),
+            format!("{}", ex.evaluated),
+            format!("{}", ex.stats.full),
+            format!("{}", bb.stats.full),
+            format!("{reduction:.1}x"),
+            format!("{}", bb.stats.pruned),
+        ]);
+    }
+
+    println!("\n=== perf_search: full evaluations, exhaustive vs branch-and-bound ===");
+    print!("{}", t.to_text());
+
+    // acceptance: >=3x fewer full (stage-4) evaluations on >=3 layers,
+    // at identical winning mappings (asserted above)
+    let at_least_3x = reductions.iter().filter(|&&r| r >= 3.0).count();
+    println!(
+        "\nlayers with >=3x fewer full evaluations: {}/{}",
+        at_least_3x,
+        reductions.len()
+    );
+    assert!(
+        at_least_3x >= 3,
+        "expected >=3x reduction on at least 3 layers, got {reductions:?}"
+    );
+    println!("perf_search OK (identical winners, >=3x fewer full evaluations)");
+}

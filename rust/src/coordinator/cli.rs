@@ -29,6 +29,7 @@ COMMANDS:
   scaling         [--full]                                    (Fig 13)
   optimizer-gains [--full]                                    (Fig 14)
   validate        model-vs-simulator validation               (Fig 7 / Table 4)
+  search-stats    staged-engine pruning: exhaustive vs b&b    (perf companion)
   table3          print the energy cost table                 (Table 3)
   schedules       print prior-work schedules lowered to IR    (Listing 2 / Fig 6)
   run-e2e         [--requests N] [--threads N] [--artifacts DIR]
@@ -110,6 +111,7 @@ pub fn run(args: Args) -> Result<()> {
         "scaling" => show(&experiments::fig13_scaling(effort, threads)),
         "optimizer-gains" => show(&experiments::fig14_optimizer(effort, threads)),
         "validate" => show(&experiments::fig7_validation(threads)),
+        "search-stats" => show(&experiments::search_pruning(effort, threads)),
         "table3" => show(&experiments::table3()),
         "schedules" => print_schedules(),
         "run-e2e" => {

@@ -10,6 +10,7 @@ use crate::dataflow::{
     best_replication, enumerate_dataflows, single_loop_map, utilization, Dataflow,
 };
 use crate::energy::{table3_anchors, CostModel, Table3};
+use crate::engine::PruneMode;
 use crate::loopnest::Shape;
 use crate::nn::{network, Network};
 use crate::search::{
@@ -431,6 +432,45 @@ fn reduce_for_effort(net: Network, effort: Effort) -> Network {
             }
         }
     }
+}
+
+/// Search-efficiency companion to Fig 14: per AlexNet layer, the staged
+/// engine's full (stage-4) evaluation counts under exhaustive evaluation
+/// vs branch-and-bound, and whether both found the identical winner (the
+/// engine's pruning contract says they must; the `perf_search` bench
+/// asserts it).
+pub fn search_pruning(effort: Effort, threads: usize) -> Table {
+    let df = Dataflow::parse("C|K").unwrap();
+    let arch = eyeriss_like();
+    let net = network("alexnet", effort.batch()).unwrap();
+    let mut t = Table::new(vec![
+        "layer",
+        "candidates",
+        "full (exhaustive)",
+        "full (b&b)",
+        "reduction",
+        "pruned@bound",
+        "same best",
+    ]);
+    for layer in &net.layers {
+        let ex_opts = effort.opts().with_prune(PruneMode::Exhaustive);
+        let bb_opts = effort.opts().with_prune(PruneMode::BranchAndBound);
+        let ex = optimize_layer(&layer.shape, &arch, &df, &Table3, &ex_opts, threads);
+        let bb = optimize_layer(&layer.shape, &arch, &df, &Table3, &bb_opts, threads);
+        let (Some(ex), Some(bb)) = (ex, bb) else { continue };
+        let same = ex.result.energy_pj == bb.result.energy_pj && ex.mapping == bb.mapping;
+        let reduction = ex.stats.full as f64 / bb.stats.full.max(1) as f64;
+        t.row(vec![
+            layer.name.clone(),
+            format!("{}", ex.evaluated),
+            format!("{}", ex.stats.full),
+            format!("{}", bb.stats.full),
+            format!("{reduction:.1}x"),
+            format!("{}", bb.stats.pruned),
+            format!("{same}"),
+        ]);
+    }
+    t
 }
 
 /// Robustness ablation (§6.1 "different energy cost models"): the Fig 8

@@ -53,6 +53,19 @@ fn fig10_metrics_present() {
 }
 
 #[test]
+fn search_pruning_table_confirms_identical_winners() {
+    let t = experiments::search_pruning(Effort::Fast, 1);
+    assert!(t.len() >= 3, "expected rows for AlexNet layers");
+    for line in t.to_csv().lines().skip(1) {
+        let cells: Vec<&str> = line.split(',').collect();
+        assert_eq!(cells[6], "true", "b&b winner diverged: {line}");
+        let ex: u64 = cells[2].parse().unwrap();
+        let bb: u64 = cells[3].parse().unwrap();
+        assert!(bb <= ex, "b&b ran more full evals than exhaustive: {line}");
+    }
+}
+
+#[test]
 fn mixed_trace_deterministic_and_mixed() {
     let a = mixed_trace(50, 7);
     let b = mixed_trace(50, 7);

@@ -1,0 +1,66 @@
+//! Per-layer memoization shared across candidates.
+//!
+//! The enumerator and the random-mapping generators repeatedly factor the
+//! same per-dim remainders; [`DivisorCache`] memoizes `divisors(n)` so a
+//! layer's whole search pays the trial division once per distinct value.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::util::divisors;
+
+/// Memoized divisor tables, typically one per layer search.
+#[derive(Debug, Default)]
+pub struct DivisorCache {
+    map: HashMap<u64, Arc<Vec<u64>>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl DivisorCache {
+    /// Fresh, empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// All divisors of `n`, ascending (memoized).
+    pub fn divisors(&mut self, n: u64) -> Arc<Vec<u64>> {
+        if let Some(d) = self.map.get(&n) {
+            self.hits += 1;
+            return d.clone();
+        }
+        self.misses += 1;
+        let d = Arc::new(divisors(n));
+        self.map.insert(n, d.clone());
+        d
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_util_divisors() {
+        let mut c = DivisorCache::new();
+        for n in [1u64, 2, 12, 13, 36, 360, 9216] {
+            assert_eq!(*c.divisors(n), divisors(n), "divisors({n})");
+        }
+    }
+
+    #[test]
+    fn caches_repeat_queries() {
+        let mut c = DivisorCache::new();
+        let a = c.divisors(720);
+        let b = c.divisors(720);
+        assert_eq!(a, b);
+        let (hits, misses) = c.stats();
+        assert_eq!(hits, 1);
+        assert_eq!(misses, 1);
+    }
+}

@@ -1,0 +1,175 @@
+//! Stage 3: per-boundary round tables and bounded access-count
+//! accumulation.
+//!
+//! The arithmetic here is an exact port of the seed's monolithic
+//! `xmodel::assemble` loop, restructured per tensor so a candidate can be
+//! abandoned the moment its running cost exceeds the incumbent: counts
+//! only ever grow, every contribution is non-negative, and f64 addition
+//! is monotone, so the canonical roll-up of a partially filled
+//! [`CountsBuf`] is an *admissible* lower bound of the final energy.
+
+use crate::arch::{Arch, ArrayBus};
+use crate::dataflow::SpatialMap;
+use crate::loopnest::{Dim, Mapping, Tensor};
+use crate::xmodel::{refetch_factor, LevelCounts, MAX_LEVELS};
+
+/// Fixed-size stage-3 accumulation buffer (no allocation on the search's
+/// hot path; only the winning candidate materializes a `ModelResult`).
+#[derive(Debug, Clone)]
+pub struct CountsBuf {
+    /// Per-level access counts (same indexing as `arch.levels`).
+    pub levels: [LevelCounts; MAX_LEVELS],
+    /// Words delivered over the array fabric per tensor.
+    pub fabric_words: [f64; 3],
+    /// Hop-weighted fabric transfers.
+    pub fabric_hops: f64,
+}
+
+impl Default for CountsBuf {
+    fn default() -> Self {
+        CountsBuf {
+            levels: [LevelCounts::default(); MAX_LEVELS],
+            fabric_words: [0.0; 3],
+            fabric_hops: 0.0,
+        }
+    }
+}
+
+/// One tensor's analytic per-boundary rounds and distinct-tile counts —
+/// one row pair of [`crate::xmodel::RoundTables`], computed lazily so a
+/// pruned candidate never pays for the remaining tensors.
+///
+/// Exact port of the per-tensor body of the seed's
+/// `RoundTables::analytic`.
+pub fn analytic_rows(m: &Mapping, t: Tensor) -> ([f64; MAX_LEVELS], [f64; MAX_LEVELS]) {
+    let nlv = m.levels();
+    assert!(nlv <= MAX_LEVELS, "more than {MAX_LEVELS} levels");
+    // per level: (r when a relevant loop was already seen below, r when
+    // not, does this level set the seen flag, relevant-only product)
+    let mut per: [(f64, f64, bool, f64); MAX_LEVELS] = [(1.0, 1.0, false, 1.0); MAX_LEVELS];
+    for j in 0..nlv {
+        let (r_unseen, sets) = refetch_factor(m, t, j, false);
+        let (r_seen, _) = refetch_factor(m, t, j, true);
+        let rel: f64 = (0..7)
+            .filter(|&i| t.relevant(Dim::from_idx(i)))
+            .map(|i| m.blocking.factors[j][i] as f64)
+            .product();
+        per[j] = (r_seen as f64, r_unseen as f64, sets, rel);
+    }
+    let mut rounds_row = [0.0; MAX_LEVELS];
+    let mut distinct_row = [0.0; MAX_LEVELS];
+    for i in 0..nlv {
+        let mut seen = false;
+        let mut rounds = 1.0;
+        let mut distinct = 1.0;
+        for (r_seen, r_unseen, sets, rel) in per.iter().take(nlv).skip(i) {
+            rounds *= if seen { *r_seen } else { *r_unseen };
+            seen |= *sets;
+            distinct *= rel;
+        }
+        rounds_row[i] = rounds;
+        distinct_row[i] = distinct;
+    }
+    (rounds_row, distinct_row)
+}
+
+/// Accumulate tensor `t`'s contributions to every boundary into `buf` —
+/// an exact port of the seed `xmodel::assemble` inner loop (same
+/// statement order, so per-cell f64 accumulation order is preserved and
+/// results bit-match the legacy model).
+///
+/// `tiles` is the stage-2 footprint table; `pes` is the mapping's active
+/// PE count as f64; `sp` its `spatial_at`.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_tensor(
+    buf: &mut CountsBuf,
+    t: Tensor,
+    rounds_row: &[f64; MAX_LEVELS],
+    distinct_row: &[f64; MAX_LEVELS],
+    tiles: &[[u64; MAX_LEVELS]; 3],
+    nlv: usize,
+    sp: usize,
+    pes: f64,
+    smap: &SpatialMap,
+    arch: &Arch,
+) {
+    let ti = t.idx();
+    // Boundary i: between level i (upper) and level i-1 / operand
+    // register (lower).
+    for i in 0..nlv {
+        let rounds = rounds_row[i];
+        let tile = if i == 0 { 1.0 } else { tiles[ti][i - 1] as f64 };
+
+        // Multiplicities on the two sides of the boundary.
+        // lower_mult: copies delivered below; upper_mult: unique words
+        // the upper level serves (multicast dedup at the array edge).
+        let (lower_mult, upper_mult, crosses_fabric) = if i < sp {
+            (pes, pes, false)
+        } else if i == sp {
+            (pes, smap.unique_factor(t) as f64, true)
+        } else {
+            (1.0, 1.0, false)
+        };
+
+        if t == Tensor::Output {
+            let wb = rounds * tile; // writeback rounds (per lower instance)
+            let rr = (rounds - distinct_row[i]).max(0.0) * tile; // partial re-reads
+
+            // Up: lower reads, upper writes.
+            buf.levels[i].writes[ti] += wb * upper_mult;
+            if i >= 1 {
+                buf.levels[i - 1].reads[ti] += wb * lower_mult;
+            }
+            // Down (partial refill): upper reads, lower writes.
+            buf.levels[i].reads[ti] += rr * upper_mult;
+            if i >= 1 {
+                buf.levels[i - 1].writes[ti] += rr * lower_mult;
+            }
+            if crosses_fabric {
+                buf.fabric_words[ti] += (wb + rr) * pes;
+                if arch.bus == ArrayBus::Broadcast {
+                    // no in-fabric accumulation: the buffer absorbs and
+                    // merges every PE's partial sums itself
+                    let extra = (wb + rr) * (pes - upper_mult).max(0.0);
+                    buf.levels[i].writes[ti] += extra;
+                    buf.levels[i].reads[ti] += extra;
+                }
+            }
+        } else {
+            let words = rounds * tile;
+            // Down: upper reads, lower writes.
+            buf.levels[i].reads[ti] += words * upper_mult;
+            if i >= 1 {
+                buf.levels[i - 1].writes[ti] += words * lower_mult;
+            }
+            if crosses_fabric {
+                buf.fabric_words[ti] += words * pes;
+            }
+        }
+    }
+
+    let hops_per_word = match arch.bus {
+        ArrayBus::Systolic => 1.0 + smap.share_hops(t),
+        ArrayBus::Broadcast => (arch.array.rows as f64 + arch.array.cols as f64) / 4.0,
+    };
+    buf.fabric_hops += buf.fabric_words[ti] * hops_per_word;
+}
+
+/// Canonical energy roll-up over a (possibly partially accumulated)
+/// counts buffer: level energies summed innermost-out, plus fabric and
+/// MAC energy — the identical summation order the legacy `assemble` used,
+/// so on a fully accumulated buffer this **is** the final `energy_pj`
+/// bit-for-bit, and on a partial buffer it is an admissible lower bound.
+pub fn energy_total(
+    buf: &CountsBuf,
+    nlv: usize,
+    level_cost: &[f64; MAX_LEVELS],
+    hop_pj: f64,
+    mac_energy: f64,
+) -> f64 {
+    let mut sum = 0.0;
+    for i in 0..nlv {
+        sum += buf.levels[i].total() * level_cost[i];
+    }
+    sum + buf.fabric_hops * hop_pj + mac_energy
+}

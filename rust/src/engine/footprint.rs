@@ -1,0 +1,144 @@
+//! Stage 2: per-level tile footprints and the capacity (fit) check.
+//!
+//! A [`Footprints`] table is computed once per blocking table and shared
+//! by every loop-order candidate of that blocking (orders never change
+//! tile sizes), and by both the fit check and the stage-3 access-count
+//! accumulation — the seed recomputed the same products three times per
+//! candidate.
+
+use crate::arch::{Arch, LevelKind};
+use crate::loopnest::{Mapping, Tensor};
+use crate::xmodel::{EvalError, MAX_LEVELS};
+
+/// Per-level, per-tensor resident tile sizes, in elements.
+///
+/// `tiles[tensor.idx()][level]`: per-PE below `spatial_at`, aggregate
+/// (array-wide, including the spatial extents) at or above it. Input
+/// tiles use halo arithmetic, clamped to the layer's input extent.
+/// Entries at levels `>= levels()` are zero.
+#[derive(Debug, Clone)]
+pub struct Footprints {
+    /// `tiles[tensor][level]`, elements.
+    pub tiles: [[u64; MAX_LEVELS]; 3],
+    levels: usize,
+}
+
+impl Footprints {
+    /// One cumulative-product pass over the blocking table (the same
+    /// arithmetic as `Mapping::tile_elems`, amortized across levels).
+    pub fn compute(m: &Mapping) -> Footprints {
+        let nlv = m.levels();
+        assert!(nlv <= MAX_LEVELS, "more than {MAX_LEVELS} levels");
+        let stride = m.shape.stride as u64;
+        let (in_x, in_y) = (m.shape.input_x(), m.shape.input_y());
+        let mut cum = [1u64; 7];
+        let mut tiles = [[0u64; MAX_LEVELS]; 3];
+        for i in 0..nlv {
+            for (d, c) in cum.iter_mut().enumerate() {
+                *c *= m.blocking.factors[i][d];
+            }
+            // at or above the first shared level the aggregate
+            // (array-wide) tile includes the spatial factors
+            let with_spatial = |d: usize| -> u64 {
+                if i >= m.spatial_at {
+                    cum[d] * m.spatial[d]
+                } else {
+                    cum[d]
+                }
+            };
+            let (b, k, c, x, y, fx, fy) = (
+                with_spatial(0),
+                with_spatial(1),
+                with_spatial(2),
+                with_spatial(3),
+                with_spatial(4),
+                with_spatial(5),
+                with_spatial(6),
+            );
+            let ix = ((x - 1) * stride + fx).min(in_x);
+            let iy = ((y - 1) * stride + fy).min(in_y);
+            tiles[Tensor::Input.idx()][i] = b * c * ix * iy;
+            tiles[Tensor::Weight.idx()][i] = k * c * fx * fy;
+            tiles[Tensor::Output.idx()][i] = b * k * x * y;
+        }
+        Footprints { tiles, levels: nlv }
+    }
+
+    /// Number of temporal levels covered.
+    pub fn levels(&self) -> usize {
+        self.levels
+    }
+
+    /// Tile of `t` at `level`, in elements.
+    pub fn tile(&self, t: Tensor, level: usize) -> u64 {
+        self.tiles[t.idx()][level]
+    }
+
+    /// Capacity check: at every on-chip level the three tiles (double
+    /// buffered, Fig 5) must fit. DRAM always fits. Same contract as the
+    /// legacy `xmodel::fits`.
+    pub fn fit(&self, arch: &Arch) -> Result<(), EvalError> {
+        for (i, lvl) in arch.levels.iter().enumerate().take(self.levels) {
+            if lvl.kind == LevelKind::Dram {
+                continue;
+            }
+            let need = (self.tiles[0][i] + self.tiles[1][i] + self.tiles[2][i]) * 2;
+            let have = arch.level_words(i);
+            if need > have {
+                return Err(EvalError::DoesNotFit { level: i, need, have });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopnest::{Shape, ALL_TENSORS};
+
+    #[test]
+    fn footprints_match_tile_elems_reference() {
+        crate::util::prop::for_cases(0xf007, 150, |rng| {
+            let shape = Shape::new(
+                rng.range(1, 4),
+                rng.range(1, 24),
+                rng.range(1, 24),
+                rng.range(1, 10),
+                rng.range(1, 10),
+                rng.range(1, 4),
+                rng.range(1, 4),
+                rng.range(1, 2) as u32,
+            );
+            let arch = crate::arch::eyeriss_like();
+            let (m, _) = crate::search::random_mapping_for_arch(shape, &arch, rng);
+            let fp = Footprints::compute(&m);
+            assert_eq!(fp.levels(), m.levels());
+            for t in ALL_TENSORS {
+                for i in 0..m.levels() {
+                    assert_eq!(fp.tile(t, i), m.tile_elems(t, i), "{t} level {i}: {m:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fit_agrees_with_legacy_fits() {
+        crate::util::prop::for_cases(0xf17, 150, |rng| {
+            let shape = Shape::new(
+                rng.range(1, 3),
+                rng.range(1, 48),
+                rng.range(1, 48),
+                rng.range(1, 12),
+                rng.range(1, 12),
+                rng.range(1, 4),
+                rng.range(1, 4),
+                1,
+            );
+            let arch = crate::arch::eyeriss_like();
+            let (m, _) = crate::search::random_mapping_for_arch(shape, &arch, rng);
+            let fp = Footprints::compute(&m);
+            assert_eq!(fp.fit(&arch), crate::xmodel::fits(&m, &arch));
+        });
+    }
+}

@@ -1,0 +1,294 @@
+//! The staged mapping-evaluation engine — the hot path of every sweep.
+//!
+//! The seed evaluated every `(blocking, order)` candidate monolithically
+//! through `xmodel::evaluate`: tile tables, round tables, access counts
+//! and a fully allocated [`ModelResult`] per candidate, millions of times
+//! per figure sweep. This module decomposes that evaluation into explicit
+//! stages so enumeration can stop paying for a candidate the moment it is
+//! provably worse than the incumbent:
+//!
+//! | stage | work | output | shared across |
+//! |-------|------|--------|---------------|
+//! | 1 | shape / level / spatial validation | `Result<(), EvalError>` | whole layer |
+//! | 2 | per-level tile footprints + fit check | [`Footprints`] | all orders of a blocking |
+//! | 3 | per-tensor round tables + access counts | scalar energy | — (bounded, abortable) |
+//! | 4 | energy/latency roll-up | [`ModelResult`] | winner only |
+//!
+//! ## Pruning contract
+//!
+//! [`Engine::energy_bounded`] accumulates tensors in canonical order
+//! (I, W, O) and, between tensors, compares an **admissible lower bound**
+//! against the caller's bound. The bound is the canonical roll-up of the
+//! partially filled counts buffer ([`counts::energy_total`]) plus the
+//! compulsory last-level (DRAM) traffic of the tensors not yet
+//! accumulated (weights and outputs must each cross the top boundary at
+//! least once in full — rigorous regardless of blocking, order or
+//! multicast; the input floor is deliberately omitted because strided
+//! halos can skip input elements). Because counts only grow, additions
+//! are non-negative, and f64 addition is monotone, the partial roll-up
+//! never exceeds the final energy; the compulsory-floor term is exact in
+//! real arithmetic, so a relative slack of `1e-9` absorbs its f64
+//! rounding. Consequences:
+//!
+//! - a candidate whose true energy is `<=` the bound is **never** pruned,
+//!   so branch-and-bound returns the identical winner (same argmin under
+//!   the same iteration order) as exhaustive evaluation;
+//! - a completed stage 3 returns the exact final energy, bit-identical to
+//!   what stage 4 / the legacy `xmodel::evaluate` reports.
+//!
+//! `xmodel::evaluate` remains the compatibility shim over the full
+//! pipeline; the search, the experiments and the sim cross-checks consume
+//! the staged API directly.
+
+mod cache;
+mod counts;
+mod footprint;
+mod rollup;
+mod stats;
+
+pub use cache::DivisorCache;
+pub use counts::{accumulate_tensor, analytic_rows, energy_total, CountsBuf};
+pub use footprint::Footprints;
+pub use rollup::{assemble, model_result};
+pub use stats::{EvalSnapshot, EvalStats, Incumbent};
+
+use crate::arch::Arch;
+use crate::dataflow::SpatialMap;
+use crate::energy::CostModel;
+use crate::loopnest::{Mapping, Shape, Tensor, ALL_TENSORS};
+use crate::xmodel::{EvalError, ModelResult, MAX_LEVELS};
+
+/// Relative slack applied to pruning comparisons: absorbs f64 rounding of
+/// the compulsory-floor bound so exact ties with the incumbent are never
+/// pruned (see the module docs' pruning contract).
+pub const PRUNE_SLACK: f64 = 1e-9;
+
+/// How a search treats the incumbent bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PruneMode {
+    /// Evaluate every candidate fully (the seed's behavior).
+    Exhaustive,
+    /// Branch-and-bound: share an incumbent and abandon candidates whose
+    /// stage-2/3 lower bounds exceed it. Identical winner, fewer full
+    /// evaluations.
+    #[default]
+    BranchAndBound,
+}
+
+/// Per-layer evaluation context: everything that is constant across the
+/// candidates of one `(shape, spatial map, arch, cost)` search, hoisted
+/// out of the per-candidate path.
+#[derive(Debug, Clone)]
+pub struct EvalCtx {
+    /// Temporal levels of the architecture.
+    pub nlv: usize,
+    /// First shared level (== `Mapping::spatial_at` of every candidate).
+    pub sp: usize,
+    /// Active PEs (product of the spatial map's extents), as f64.
+    pub pes: f64,
+    /// Energy per access per level (entries `>= nlv` unused).
+    pub level_cost: [f64; MAX_LEVELS],
+    /// Energy per fabric hop.
+    pub hop_pj: f64,
+    /// Total MAC energy of the layer.
+    pub mac_energy: f64,
+    /// Stage-1 lower bound: MAC energy plus compulsory top-level traffic
+    /// of weights and outputs.
+    pub floor_pj: f64,
+    /// Compulsory top-level energy of the tensors *after* index `k` in
+    /// canonical accumulation order (I=0, W=1, O=2).
+    pub floor_after: [f64; 3],
+}
+
+/// Outcome of a bounded stage-3 evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Staged {
+    /// Abandoned: the given admissible lower bound exceeded the caller's
+    /// bound (the candidate's true energy is at least this).
+    Pruned(f64),
+    /// Completed: the exact final energy (bit-identical to stage 4).
+    Energy(f64),
+}
+
+impl Staged {
+    /// The exact energy when the evaluation completed.
+    pub fn energy(self) -> Option<f64> {
+        match self {
+            Staged::Energy(e) => Some(e),
+            Staged::Pruned(_) => None,
+        }
+    }
+}
+
+/// The staged evaluation engine for one `(arch, cost model)` pair.
+#[derive(Clone, Copy)]
+pub struct Engine<'a> {
+    /// Target architecture.
+    pub arch: &'a Arch,
+    /// Energy cost model.
+    pub cost: &'a dyn CostModel,
+}
+
+impl<'a> Engine<'a> {
+    /// New engine over an architecture and cost model.
+    pub fn new(arch: &'a Arch, cost: &'a dyn CostModel) -> Self {
+        Engine { arch, cost }
+    }
+
+    /// Build the per-layer [`EvalCtx`] for a `(shape, spatial map)` pair.
+    pub fn context(&self, shape: &Shape, smap: &SpatialMap) -> EvalCtx {
+        let nlv = self.arch.num_levels();
+        assert!(nlv <= MAX_LEVELS, "more than {MAX_LEVELS} levels");
+        let mut level_cost = [0.0; MAX_LEVELS];
+        for (i, c) in level_cost.iter_mut().enumerate().take(nlv) {
+            *c = self.cost.level_access(self.arch, i);
+        }
+        let top_cost = level_cost[nlv - 1];
+        let mac_energy = shape.macs() as f64 * self.cost.mac();
+        let w_floor = shape.tensor_elems(Tensor::Weight) as f64 * top_cost;
+        let o_floor = shape.tensor_elems(Tensor::Output) as f64 * top_cost;
+        EvalCtx {
+            nlv,
+            sp: self.arch.rf_levels(),
+            pes: smap.pes_used() as f64,
+            level_cost,
+            hop_pj: self.cost.hop(),
+            mac_energy,
+            floor_pj: mac_energy + w_floor + o_floor,
+            floor_after: [w_floor + o_floor, o_floor, 0.0],
+        }
+    }
+
+    /// Stage 1: consistency checks (same order and errors as the legacy
+    /// `xmodel::evaluate` preamble).
+    pub fn validate(&self, m: &Mapping, smap: &SpatialMap) -> Result<(), EvalError> {
+        m.validate().map_err(EvalError::BadMapping)?;
+        if m.levels() != self.arch.num_levels() {
+            return Err(EvalError::LevelMismatch {
+                mapping: m.levels(),
+                arch: self.arch.num_levels(),
+            });
+        }
+        if m.spatial != smap.factors() {
+            return Err(EvalError::SpatialMismatch);
+        }
+        if m.spatial_at != self.arch.rf_levels() {
+            return Err(EvalError::BadMapping(format!(
+                "spatial_at {} != arch rf levels {}",
+                m.spatial_at,
+                self.arch.rf_levels()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Stage 2: tile footprints plus the capacity check. The returned
+    /// table is shared by every loop-order candidate of the blocking and
+    /// by stage 3.
+    pub fn footprints(&self, m: &Mapping, stats: &EvalStats) -> Result<Footprints, EvalError> {
+        EvalStats::bump(&stats.stage2);
+        let fp = Footprints::compute(m);
+        if let Err(e) = fp.fit(self.arch) {
+            EvalStats::bump(&stats.fit_rejected);
+            return Err(e);
+        }
+        Ok(fp)
+    }
+
+    /// Stage 3: bounded scalar evaluation. Accumulates per-tensor access
+    /// counts, checking the admissible lower bound against `bound`
+    /// between tensors (see the module docs). Returns the exact final
+    /// energy on completion — callers compare it to their own incumbent;
+    /// a completed evaluation above the bound is *not* reported as
+    /// pruned.
+    pub fn energy_bounded(
+        &self,
+        m: &Mapping,
+        smap: &SpatialMap,
+        ctx: &EvalCtx,
+        fp: &Footprints,
+        bound: f64,
+        stats: &EvalStats,
+    ) -> Staged {
+        EvalStats::bump(&stats.stage3);
+        let cutoff = bound * (1.0 + PRUNE_SLACK);
+        if ctx.floor_pj > cutoff {
+            EvalStats::bump(&stats.pruned);
+            return Staged::Pruned(ctx.floor_pj);
+        }
+        let mut buf = CountsBuf::default();
+        for (k, t) in ALL_TENSORS.into_iter().enumerate() {
+            let (rounds_row, distinct_row) = analytic_rows(m, t);
+            accumulate_tensor(
+                &mut buf,
+                t,
+                &rounds_row,
+                &distinct_row,
+                &fp.tiles,
+                ctx.nlv,
+                ctx.sp,
+                ctx.pes,
+                smap,
+                self.arch,
+            );
+            let partial =
+                energy_total(&buf, ctx.nlv, &ctx.level_cost, ctx.hop_pj, ctx.mac_energy);
+            if k + 1 == ALL_TENSORS.len() {
+                // fully accumulated: `partial` is the exact energy
+                EvalStats::bump(&stats.full);
+                return Staged::Energy(partial);
+            }
+            let lb = partial + ctx.floor_after[k];
+            if lb > cutoff {
+                EvalStats::bump(&stats.pruned);
+                return Staged::Pruned(lb);
+            }
+        }
+        unreachable!("ALL_TENSORS is non-empty")
+    }
+
+    /// Stage 4 for one candidate whose stages 1–2 already ran: full
+    /// evaluation into a [`ModelResult`] (counts, per-level energies,
+    /// cycles, utilization).
+    pub fn rollup(&self, m: &Mapping, smap: &SpatialMap, fp: &Footprints) -> ModelResult {
+        let nlv = m.levels();
+        let sp = m.spatial_at;
+        let pes = m.pe_count() as f64;
+        let mut buf = CountsBuf::default();
+        for t in ALL_TENSORS {
+            let (rounds_row, distinct_row) = analytic_rows(m, t);
+            accumulate_tensor(
+                &mut buf,
+                t,
+                &rounds_row,
+                &distinct_row,
+                &fp.tiles,
+                nlv,
+                sp,
+                pes,
+                smap,
+                self.arch,
+            );
+        }
+        model_result(m, smap, self.arch, self.cost, &buf)
+    }
+
+    /// The full pipeline (stages 1–4) with all checks — the semantics of
+    /// the legacy `xmodel::evaluate`, which now delegates here.
+    pub fn evaluate(&self, m: &Mapping, smap: &SpatialMap) -> Result<ModelResult, EvalError> {
+        self.validate(m, smap)?;
+        let fp = Footprints::compute(m);
+        fp.fit(self.arch)?;
+        Ok(self.rollup(m, smap, &fp))
+    }
+
+    /// Stages 2–4 without the consistency/capacity checks — the semantics
+    /// of the legacy `xmodel::evaluate_prechecked`.
+    pub fn evaluate_prechecked(&self, m: &Mapping, smap: &SpatialMap) -> ModelResult {
+        let fp = Footprints::compute(m);
+        self.rollup(m, smap, &fp)
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,96 @@
+//! Stage 4: energy / performance roll-up into a [`ModelResult`].
+//!
+//! Only candidates that survive pruning (in practice: the winner, plus
+//! every candidate in exhaustive mode) pay for the allocations here; the
+//! scalar energy used during the search comes from
+//! [`super::counts::energy_total`] and bit-matches this roll-up by
+//! construction (same summation order).
+
+use super::counts::{accumulate_tensor, CountsBuf};
+use super::footprint::Footprints;
+use crate::arch::Arch;
+use crate::dataflow::{utilization, SpatialMap};
+use crate::energy::CostModel;
+use crate::loopnest::{Mapping, ALL_TENSORS};
+use crate::xmodel::{ModelResult, RoundTables};
+
+/// Materialize the full [`ModelResult`] from an accumulated counts
+/// buffer — identical arithmetic to the tail of the seed's monolithic
+/// `xmodel::assemble`.
+pub fn model_result(
+    m: &Mapping,
+    smap: &SpatialMap,
+    arch: &Arch,
+    cost: &dyn CostModel,
+    buf: &CountsBuf,
+) -> ModelResult {
+    let nlv = m.levels();
+
+    // Energy.
+    let mut energy_by_level = Vec::with_capacity(nlv);
+    for (i, lc) in buf.levels.iter().enumerate().take(nlv) {
+        energy_by_level.push(lc.total() * cost.level_access(arch, i));
+    }
+    let fabric_energy = buf.fabric_hops * cost.hop();
+    let macs = m.shape.macs();
+    let mac_energy = macs as f64 * cost.mac();
+    let energy_pj = energy_by_level.iter().sum::<f64>() + fabric_energy + mac_energy;
+
+    // Performance.
+    let util = utilization(&m.shape, smap, &arch.array);
+    let compute_cycles = if util > 0.0 {
+        macs as f64 / (arch.array.pes() as f64 * util)
+    } else {
+        f64::INFINITY
+    };
+    let dram = buf.levels[..nlv].last().map(|lc| lc.total()).unwrap_or(0.0);
+    let dram_cycles = dram * arch.word_bytes as f64 / arch.dram_bw_bytes_per_cycle;
+    let cycles = compute_cycles.max(dram_cycles);
+
+    ModelResult {
+        levels: buf.levels[..nlv].to_vec(),
+        fabric_words: buf.fabric_words,
+        fabric_hops: buf.fabric_hops,
+        macs,
+        active_pes: m.pe_count(),
+        energy_by_level,
+        fabric_energy,
+        mac_energy,
+        energy_pj,
+        cycles,
+        utilization: util,
+    }
+}
+
+/// Assemble a [`ModelResult`] from externally supplied per-boundary round
+/// tables — the shared back half of the analytical model and the trace
+/// simulator ([`crate::sim::simulate`] feeds exact walked counts through
+/// here; `xmodel::assemble` is a shim over this).
+pub fn assemble(
+    m: &Mapping,
+    smap: &SpatialMap,
+    arch: &Arch,
+    cost: &dyn CostModel,
+    tables: &RoundTables,
+) -> ModelResult {
+    let fp = Footprints::compute(m);
+    let nlv = m.levels();
+    let sp = m.spatial_at;
+    let pes = m.pe_count() as f64;
+    let mut buf = CountsBuf::default();
+    for t in ALL_TENSORS {
+        accumulate_tensor(
+            &mut buf,
+            t,
+            &tables.rounds[t.idx()],
+            &tables.distinct[t.idx()],
+            &fp.tiles,
+            nlv,
+            sp,
+            pes,
+            smap,
+            arch,
+        );
+    }
+    model_result(m, smap, arch, cost, &buf)
+}

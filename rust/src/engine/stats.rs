@@ -1,0 +1,173 @@
+//! Evaluation counters and the shared incumbent bound.
+//!
+//! [`EvalStats`] counts how far candidates travel through the staged
+//! pipeline (thread-safe, relaxed atomics — the counts are telemetry, not
+//! synchronization). [`Incumbent`] is the best energy seen so far, shared
+//! across worker threads as a monotonically decreasing atomic f64.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe pipeline counters, bumped by the engine as candidates move
+/// through the stages.
+#[derive(Debug, Default)]
+pub struct EvalStats {
+    /// Stage-2 footprint computations (one per blocking table).
+    pub stage2: AtomicU64,
+    /// Candidates rejected by the stage-2 capacity check. Note: tables
+    /// coming out of `enumerate_blockings` already passed the same check
+    /// inside the enumeration recursion, so search paths report 0 here;
+    /// this counts direct engine callers (random mappings, presets).
+    pub fit_rejected: AtomicU64,
+    /// Stage-3 bounded evaluations started (one per blocking × order).
+    pub stage3: AtomicU64,
+    /// Stage-3 evaluations abandoned because a partial lower bound
+    /// exceeded the incumbent.
+    pub pruned: AtomicU64,
+    /// Full evaluations: candidates that completed stage 3 and had their
+    /// exact energy rolled up (stage 4).
+    pub full: AtomicU64,
+}
+
+impl EvalStats {
+    /// Plain-value copy of the counters.
+    pub fn snapshot(&self) -> EvalSnapshot {
+        EvalSnapshot {
+            stage2: self.stage2.load(Ordering::Relaxed),
+            fit_rejected: self.fit_rejected.load(Ordering::Relaxed),
+            stage3: self.stage3.load(Ordering::Relaxed),
+            pruned: self.pruned.load(Ordering::Relaxed),
+            full: self.full.load(Ordering::Relaxed),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Plain-value snapshot of [`EvalStats`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EvalSnapshot {
+    /// Stage-2 footprint computations.
+    pub stage2: u64,
+    /// Stage-2 capacity rejections.
+    pub fit_rejected: u64,
+    /// Stage-3 bounded evaluations started.
+    pub stage3: u64,
+    /// Stage-3 evaluations pruned by bound.
+    pub pruned: u64,
+    /// Completed full (stage-4) evaluations.
+    pub full: u64,
+}
+
+impl EvalSnapshot {
+    /// Fraction of started stage-3 evaluations that were pruned.
+    pub fn prune_rate(&self) -> f64 {
+        if self.stage3 == 0 {
+            0.0
+        } else {
+            self.pruned as f64 / self.stage3 as f64
+        }
+    }
+}
+
+impl std::fmt::Display for EvalSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "stage2 {} (fit- {}), stage3 {}, pruned {} ({:.1}%), full {}",
+            self.stage2,
+            self.fit_rejected,
+            self.stage3,
+            self.pruned,
+            100.0 * self.prune_rate(),
+            self.full
+        )
+    }
+}
+
+/// The best (lowest) energy observed so far, shared across threads.
+///
+/// Energies are positive finite f64s, stored as bits; updates are
+/// monotonic minima via compare-and-swap, so a racy read only ever
+/// returns a value that *was* the incumbent — always a correct (possibly
+/// stale, i.e. looser) pruning bound.
+#[derive(Debug)]
+pub struct Incumbent(AtomicU64);
+
+impl Incumbent {
+    /// Fresh incumbent at +infinity (nothing prunes).
+    pub fn new() -> Self {
+        Incumbent(AtomicU64::new(f64::INFINITY.to_bits()))
+    }
+
+    /// Current bound.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Lower the incumbent to `energy` if it improves on the current one.
+    pub fn observe(&self, energy: f64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                if f64::from_bits(cur) <= energy {
+                    None
+                } else {
+                    Some(energy.to_bits())
+                }
+            });
+    }
+}
+
+impl Default for Incumbent {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incumbent_takes_minimum() {
+        let inc = Incumbent::new();
+        assert_eq!(inc.get(), f64::INFINITY);
+        inc.observe(5.0);
+        inc.observe(9.0);
+        assert_eq!(inc.get(), 5.0);
+        inc.observe(2.5);
+        assert_eq!(inc.get(), 2.5);
+    }
+
+    #[test]
+    fn incumbent_concurrent_minimum() {
+        let inc = Incumbent::new();
+        std::thread::scope(|s| {
+            for k in 0..8u64 {
+                let inc = &inc;
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        inc.observe(1.0 + ((i * 7 + k * 13) % 100) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(inc.get(), 1.0);
+    }
+
+    #[test]
+    fn snapshot_and_display() {
+        let stats = EvalStats::default();
+        EvalStats::bump(&stats.stage3);
+        EvalStats::bump(&stats.stage3);
+        EvalStats::bump(&stats.pruned);
+        let snap = stats.snapshot();
+        assert_eq!(snap.stage3, 2);
+        assert_eq!(snap.pruned, 1);
+        assert!((snap.prune_rate() - 0.5).abs() < 1e-12);
+        assert!(format!("{snap}").contains("pruned 1"));
+    }
+}

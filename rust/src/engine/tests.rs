@@ -1,0 +1,176 @@
+//! Engine tests: staged results bit-match the legacy `xmodel::evaluate`
+//! and the exact trace simulator on randomized mappings, and pruning is
+//! admissible (never drops a candidate at or below the bound).
+
+use super::*;
+use crate::arch::{eyeriss_like, optimized_mobile, small_rf};
+use crate::energy::Table3;
+use crate::loopnest::Shape;
+use crate::util::prop;
+use crate::util::XorShift;
+
+fn random_shape(rng: &mut XorShift) -> Shape {
+    Shape::new(
+        rng.range(1, 3),
+        rng.range(1, 12),
+        rng.range(1, 12),
+        rng.range(1, 7),
+        rng.range(1, 7),
+        rng.range(1, 3),
+        rng.range(1, 3),
+        rng.range(1, 2) as u32,
+    )
+}
+
+fn random_arch(rng: &mut XorShift) -> crate::arch::Arch {
+    match rng.below(3) {
+        0 => eyeriss_like(),
+        1 => small_rf(),
+        _ => optimized_mobile(),
+    }
+}
+
+#[test]
+fn prop_staged_bitmatches_legacy_evaluate_and_sim() {
+    prop::for_cases(0xe41e, 120, |rng| {
+        let shape = random_shape(rng);
+        let arch = random_arch(rng);
+        let (m, smap) = crate::search::random_mapping_for_arch(shape, &arch, rng);
+        let engine = Engine::new(&arch, &Table3);
+        let legacy = match crate::xmodel::evaluate(&m, &smap, &arch, &Table3) {
+            Ok(r) => r,
+            Err(_) => return, // capacity misses are fine here
+        };
+
+        // full staged pipeline
+        let staged = engine.evaluate(&m, &smap).expect("legacy accepted it");
+        assert_eq!(staged.energy_pj, legacy.energy_pj, "energy: {m:?}");
+        assert_eq!(staged.cycles, legacy.cycles);
+        assert_eq!(staged.levels, legacy.levels);
+        assert_eq!(staged.fabric_words, legacy.fabric_words);
+        assert_eq!(staged.fabric_hops, legacy.fabric_hops);
+        assert_eq!(staged.energy_by_level, legacy.energy_by_level);
+
+        // bounded stage-3 with an infinite bound completes with the same
+        // bits as the full roll-up
+        let stats = EvalStats::default();
+        let ctx = engine.context(&shape, &smap);
+        let fp = engine.footprints(&m, &stats).expect("fits");
+        let e = engine
+            .energy_bounded(&m, &smap, &ctx, &fp, f64::INFINITY, &stats)
+            .energy()
+            .expect("infinite bound never prunes");
+        assert_eq!(e, legacy.energy_pj, "stage-3 scalar drifted: {m:?}");
+
+        // assembling from externally supplied (analytic) tables is the
+        // same arithmetic
+        let tables = crate::xmodel::RoundTables::analytic(&m);
+        let via_tables = assemble(&m, &smap, &arch, &Table3, &tables);
+        assert_eq!(via_tables.energy_pj, legacy.energy_pj);
+
+        // the exact trace walk counts the same rounds, so the simulator's
+        // energy is bit-identical too
+        if let Ok(sim) = crate::sim::simulate(&m, &smap, &arch, &Table3, 50_000_000) {
+            assert_eq!(sim.energy_pj, legacy.energy_pj, "sim drifted: {m:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_analytic_rows_match_round_tables() {
+    prop::for_cases(0xa9a, 100, |rng| {
+        let shape = random_shape(rng);
+        let levels = rng.range(2, 4) as usize;
+        let m = crate::search::random_mapping(shape, levels, 1, rng);
+        let tables = crate::xmodel::RoundTables::analytic(&m);
+        for t in crate::loopnest::ALL_TENSORS {
+            let (rounds, distinct) = analytic_rows(&m, t);
+            assert_eq!(rounds, tables.rounds[t.idx()]);
+            assert_eq!(distinct, tables.distinct[t.idx()]);
+        }
+    });
+}
+
+#[test]
+fn prop_pruning_is_admissible() {
+    prop::for_cases(0xb0d, 150, |rng| {
+        let shape = random_shape(rng);
+        let arch = random_arch(rng);
+        let (m, smap) = crate::search::random_mapping_for_arch(shape, &arch, rng);
+        let engine = Engine::new(&arch, &Table3);
+        if crate::xmodel::evaluate(&m, &smap, &arch, &Table3).is_err() {
+            return;
+        }
+        let stats = EvalStats::default();
+        let ctx = engine.context(&shape, &smap);
+        let fp = engine.footprints(&m, &stats).expect("fits");
+        let e_true = engine.evaluate(&m, &smap).unwrap().energy_pj;
+
+        // bound exactly at the candidate's own energy: must complete
+        match engine.energy_bounded(&m, &smap, &ctx, &fp, e_true, &stats) {
+            Staged::Energy(e) => assert_eq!(e, e_true),
+            Staged::Pruned(lb) => panic!("pruned at its own energy (lb {lb} vs {e_true}): {m:?}"),
+        }
+
+        // any tighter bound: either completes exactly, or reports an
+        // admissible lower bound (never above the true energy)
+        let bound = e_true * 0.7;
+        match engine.energy_bounded(&m, &smap, &ctx, &fp, bound, &stats) {
+            Staged::Energy(e) => assert_eq!(e, e_true),
+            Staged::Pruned(lb) => assert!(
+                lb <= e_true * (1.0 + PRUNE_SLACK),
+                "inadmissible bound {lb} > true {e_true}: {m:?}"
+            ),
+        }
+
+        // a bound below the MAC-energy floor always prunes before any
+        // tensor work
+        let before = stats.snapshot().pruned;
+        match engine.energy_bounded(&m, &smap, &ctx, &fp, ctx.mac_energy * 0.5, &stats) {
+            Staged::Pruned(lb) => assert!(lb >= ctx.floor_pj),
+            Staged::Energy(e) => panic!("floor check missed: {e} vs floor {}", ctx.floor_pj),
+        }
+        assert_eq!(stats.snapshot().pruned, before + 1);
+    });
+}
+
+#[test]
+fn stats_counters_track_pipeline() {
+    let shape = Shape::new(2, 8, 8, 4, 4, 3, 3, 1);
+    let arch = eyeriss_like();
+    let mut rng = XorShift::new(42);
+    let (m, smap) = crate::search::random_mapping_for_arch(shape, &arch, &mut rng);
+    let engine = Engine::new(&arch, &Table3);
+    let stats = EvalStats::default();
+    if let Ok(fp) = engine.footprints(&m, &stats) {
+        let ctx = engine.context(&shape, &smap);
+        let _ = engine.energy_bounded(&m, &smap, &ctx, &fp, f64::INFINITY, &stats);
+        let snap = stats.snapshot();
+        assert_eq!(snap.stage2, 1);
+        assert_eq!(snap.stage3, 1);
+        assert_eq!(snap.full, 1);
+        assert_eq!(snap.pruned, 0);
+    } else {
+        assert_eq!(stats.snapshot().fit_rejected, 1);
+    }
+}
+
+#[test]
+fn context_floor_is_below_any_feasible_energy() {
+    // the stage-1 floor must lower-bound every evaluable candidate
+    prop::for_cases(0xf100, 80, |rng| {
+        let shape = random_shape(rng);
+        let arch = random_arch(rng);
+        let (m, smap) = crate::search::random_mapping_for_arch(shape, &arch, rng);
+        if let Ok(r) = crate::xmodel::evaluate(&m, &smap, &arch, &Table3) {
+            let engine = Engine::new(&arch, &Table3);
+            let ctx = engine.context(&shape, &smap);
+            assert!(
+                ctx.floor_pj <= r.energy_pj * (1.0 + PRUNE_SLACK),
+                "floor {} above feasible energy {}: {m:?}",
+                ctx.floor_pj,
+                r.energy_pj
+            );
+        }
+    });
+}

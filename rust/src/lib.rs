@@ -15,6 +15,9 @@
 //! - [`energy`] — the Table 3 access-energy cost model;
 //! - [`dataflow`] — the `U | V` dataflow taxonomy with replication;
 //! - [`xmodel`] — the analytical access-count / energy / performance model;
+//! - [`engine`] — the staged, pruning-aware evaluation pipeline the
+//!   search and all sweeps run on (footprint caches, divisor memoization,
+//!   admissible partial bounds, branch-and-bound incumbents);
 //! - [`sim`] — a trace-driven simulator that counts accesses exactly
 //!   (the stand-in for the paper's post-synthesis validation, Fig 7);
 //! - [`halide`] — the schedule DSL (`split`, `reorder`, `in_`/`compute_at`,
@@ -32,6 +35,7 @@ pub mod arch;
 pub mod coordinator;
 pub mod dataflow;
 pub mod energy;
+pub mod engine;
 pub mod halide;
 pub mod loopnest;
 pub mod nn;

@@ -1,6 +1,17 @@
 //! Blocking-scheme enumeration with capacity pruning.
+//!
+//! Enumeration is the front of the staged pipeline: the recursive
+//! descent applies the engine's stage-2 capacity check to every partial
+//! level assignment (a partial tile that already overflows its level
+//! kills the whole subtree), memoizes per-layer divisor tables through
+//! [`DivisorCache`], and can either collect all surviving tables
+//! ([`enumerate_blockings`]) or stream them to a visitor as they are
+//! found ([`enumerate_blockings_visit`]) — the branch-and-bound optimizer
+//! uses the streaming form so the incumbent tightens while enumeration is
+//! still running.
 
 use crate::arch::{Arch, LevelKind};
+use crate::engine::{DivisorCache, PruneMode};
 use crate::loopnest::{Dim, Shape, ALL_DIMS, NDIMS};
 use crate::util::divisors;
 
@@ -16,6 +27,9 @@ pub struct SearchOpts {
     /// Cap on per-level loop-order combinations tried per blocking
     /// (3 stationary candidates per level, cartesian across levels).
     pub max_order_combos: usize,
+    /// How candidate evaluation treats the incumbent (see
+    /// [`PruneMode`]); branch-and-bound by default.
+    pub prune: PruneMode,
 }
 
 impl Default for SearchOpts {
@@ -24,6 +38,7 @@ impl Default for SearchOpts {
             max_blockings: 150_000,
             max_divisors: 8,
             max_order_combos: 81,
+            prune: PruneMode::BranchAndBound,
         }
     }
 }
@@ -36,6 +51,12 @@ impl SearchOpts {
             max_divisors,
             ..Default::default()
         }
+    }
+
+    /// Same options with a different [`PruneMode`].
+    pub fn with_prune(mut self, prune: PruneMode) -> Self {
+        self.prune = prune;
+        self
     }
 }
 
@@ -62,9 +83,9 @@ pub fn factor_splits(n: u64, levels: usize) -> Vec<Vec<u64>> {
 
 /// Geometrically subsample a divisor list down to at most `cap` entries,
 /// always keeping 1 and the maximum.
-fn subsample(mut ds: Vec<u64>, cap: usize) -> Vec<u64> {
+fn subsample(ds: &[u64], cap: usize) -> Vec<u64> {
     if ds.len() <= cap {
-        return ds;
+        return ds.to_vec();
     }
     let n = ds.len();
     let mut keep = Vec::with_capacity(cap);
@@ -73,23 +94,44 @@ fn subsample(mut ds: Vec<u64>, cap: usize) -> Vec<u64> {
         keep.push(ds[idx]);
     }
     keep.dedup();
-    ds = keep;
-    ds
+    keep
 }
 
 /// Enumerate temporal blocking factor tables for `shape` on `arch` with
-/// fixed spatial factors. Each returned table is `factors[level][dim]`
-/// (innermost level first, DRAM last = the leftover), and every on-chip
-/// level's three tiles fit the level capacity with double buffering.
+/// fixed spatial factors, collecting every surviving table. Each returned
+/// table is `factors[level][dim]` (innermost level first, DRAM last = the
+/// leftover), and every on-chip level's three tiles fit the level
+/// capacity with double buffering.
 pub fn enumerate_blockings(
     shape: &Shape,
     arch: &Arch,
     spatial: [u64; NDIMS],
     opts: &SearchOpts,
 ) -> Vec<Vec<[u64; NDIMS]>> {
+    let mut cache = DivisorCache::new();
+    let mut out = Vec::new();
+    enumerate_blockings_visit(shape, arch, spatial, opts, &mut cache, |table| {
+        out.push(table.to_vec());
+        true
+    });
+    out
+}
+
+/// Streaming form of [`enumerate_blockings`]: `visit` is called with each
+/// complete, capacity-feasible table (borrowed; copy it to keep it) and
+/// returns `false` to stop enumeration early. The divisor cache is
+/// caller-supplied so a layer's repeated enumerations share the memoized
+/// tables.
+pub fn enumerate_blockings_visit<F: FnMut(&[[u64; NDIMS]]) -> bool>(
+    shape: &Shape,
+    arch: &Arch,
+    spatial: [u64; NDIMS],
+    opts: &SearchOpts,
+    cache: &mut DivisorCache,
+    visit: F,
+) {
     let nlv = arch.num_levels();
     let sp = arch.rf_levels();
-    let mut out: Vec<Vec<[u64; NDIMS]>> = Vec::new();
 
     // per-dim remaining bound after spatial unrolling
     let mut total = [0u64; NDIMS];
@@ -99,20 +141,27 @@ pub fn enumerate_blockings(
     }
 
     // recursive enumeration: level by level, dim by dim within a level
-    struct Ctx<'a> {
+    struct Ctx<'a, F> {
         shape: &'a Shape,
         arch: &'a Arch,
         spatial: [u64; NDIMS],
         sp: usize,
         nlv: usize,
         opts: &'a SearchOpts,
+        cache: &'a mut DivisorCache,
         table: Vec<[u64; NDIMS]>,
         cum: [u64; NDIMS], // cumulative incl. spatial once past sp
         rem: [u64; NDIMS],
-        out: Vec<Vec<[u64; NDIMS]>>,
+        emitted: usize,
+        stopped: bool,
+        visit: F,
     }
 
-    impl Ctx<'_> {
+    impl<F: FnMut(&[[u64; NDIMS]]) -> bool> Ctx<'_, F> {
+        /// Stage-2 partial capacity check: even a partially assigned
+        /// level must fit (unset dims contribute at least their current
+        /// cumulative product), so an overflowing prefix prunes its whole
+        /// subtree.
         fn tiles_fit(&self, level: usize) -> bool {
             if self.arch.levels[level].kind == LevelKind::Dram {
                 return true;
@@ -127,8 +176,12 @@ pub fn enumerate_blockings(
             2 * (w + o + i) <= self.arch.level_words(level)
         }
 
+        fn done(&self) -> bool {
+            self.stopped || self.emitted >= self.opts.max_blockings
+        }
+
         fn rec_dim(&mut self, level: usize, di: usize) {
-            if self.out.len() >= self.opts.max_blockings {
+            if self.done() {
                 return;
             }
             if di == NDIMS {
@@ -150,7 +203,8 @@ pub fn enumerate_blockings(
                 self.table[level][di] = 1;
                 return;
             }
-            let ds = subsample(divisors(self.rem[di]), self.opts.max_divisors);
+            let all = self.cache.divisors(self.rem[di]);
+            let ds = subsample(all.as_slice(), self.opts.max_divisors);
             for f in ds {
                 self.table[level][di] = f;
                 let keep_cum = self.cum[di];
@@ -165,18 +219,21 @@ pub fn enumerate_blockings(
                 self.cum[di] = keep_cum;
                 self.rem[di] = keep_rem;
                 self.table[level][di] = 1;
-                if self.out.len() >= self.opts.max_blockings {
+                if self.done() {
                     return;
                 }
             }
         }
 
         fn rec_level(&mut self, level: usize) {
-            if self.out.len() >= self.opts.max_blockings {
+            if self.done() {
                 return;
             }
             if level == self.nlv {
-                self.out.push(self.table.clone());
+                self.emitted += 1;
+                if !(self.visit)(&self.table) {
+                    self.stopped = true;
+                }
                 return;
             }
             if level == self.sp {
@@ -201,14 +258,15 @@ pub fn enumerate_blockings(
         sp,
         nlv,
         opts,
+        cache,
         table: vec![[1; NDIMS]; nlv],
         cum: [1; NDIMS],
         rem: total,
-        out: Vec::new(),
+        emitted: 0,
+        stopped: false,
+        visit,
     };
     ctx.rec_level(0);
-    out.append(&mut ctx.out);
-    out
 }
 
 /// Convenience: bound of dim `d` in a factor table (product over levels).
@@ -242,7 +300,7 @@ mod unit {
     #[test]
     fn subsample_keeps_ends() {
         let ds = divisors(720720);
-        let s = subsample(ds.clone(), 6);
+        let s = subsample(&ds, 6);
         assert!(s.len() <= 6);
         assert_eq!(s[0], 1);
         assert_eq!(*s.last().unwrap(), 720720);
@@ -275,5 +333,36 @@ mod unit {
         let tables = enumerate_blockings(&shape, &arch, [1; NDIMS], &opts);
         assert!(tables.len() <= 100);
         assert!(!tables.is_empty());
+    }
+
+    #[test]
+    fn visitor_streams_same_tables_as_collection() {
+        let shape = Shape::new(2, 16, 16, 6, 6, 3, 3, 1);
+        let arch = eyeriss_like();
+        let opts = SearchOpts::capped(800, 5);
+        let collected = enumerate_blockings(&shape, &arch, [1; NDIMS], &opts);
+        let mut streamed = Vec::new();
+        let mut cache = DivisorCache::new();
+        enumerate_blockings_visit(&shape, &arch, [1; NDIMS], &opts, &mut cache, |t| {
+            streamed.push(t.to_vec());
+            true
+        });
+        assert_eq!(collected, streamed);
+        let (hits, misses) = cache.stats();
+        assert!(hits > misses, "divisor memoization should mostly hit");
+    }
+
+    #[test]
+    fn visitor_can_stop_early() {
+        let shape = Shape::new(2, 16, 16, 6, 6, 3, 3, 1);
+        let arch = eyeriss_like();
+        let opts = SearchOpts::capped(5000, 6);
+        let mut cache = DivisorCache::new();
+        let mut seen = 0usize;
+        enumerate_blockings_visit(&shape, &arch, [1; NDIMS], &opts, &mut cache, |_| {
+            seen += 1;
+            seen < 10
+        });
+        assert_eq!(seen, 10);
     }
 }

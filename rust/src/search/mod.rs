@@ -2,13 +2,20 @@
 //! order selection, divisor-constrained replication, the per-layer
 //! optimizer, and the §6.3 auto-optimizer (fix `C|K`, 4–16 size-ratio
 //! rule) over whole networks.
+//!
+//! All candidate evaluation goes through the staged engine
+//! ([`crate::engine`]); searches run branch-and-bound by default (see
+//! [`crate::engine::PruneMode`]) and report pipeline counters in
+//! [`LayerOpt::stats`].
 
 mod enumerate;
 mod optimize;
 mod par;
 mod random;
 
-pub use enumerate::{enumerate_blockings, factor_splits, table_bound, SearchOpts};
+pub use enumerate::{
+    enumerate_blockings, enumerate_blockings_visit, factor_splits, table_bound, SearchOpts,
+};
 pub use optimize::{
     divisor_replication, optimize_layer, optimize_network, search_hierarchy, sweep_blockings,
     HierarchyResult, LayerOpt, NetworkOpt,

@@ -1,17 +1,25 @@
 //! Per-layer and per-network optimizers, and the §6.3 auto-optimizer's
-//! memory-hierarchy search.
+//! memory-hierarchy search — all running on the staged evaluation engine
+//! ([`crate::engine`]): footprints are computed once per blocking and
+//! shared across order candidates, access counting is abandoned as soon
+//! as a partial lower bound exceeds the incumbent (branch-and-bound, the
+//! default), and only the winning candidate materializes a full
+//! [`ModelResult`].
 
 use std::collections::HashMap;
 
-use super::enumerate::{enumerate_blockings, SearchOpts};
+use super::enumerate::{enumerate_blockings, enumerate_blockings_visit, SearchOpts};
 use super::par::parallel_map;
 use crate::arch::{Arch, ArrayShape, MemLevel};
 use crate::dataflow::{Dataflow, SpatialMap};
 use crate::energy::CostModel;
+use crate::engine::{
+    DivisorCache, Engine, EvalCtx, EvalSnapshot, EvalStats, Incumbent, PruneMode, Staged,
+};
 use crate::loopnest::{Blocking, LevelOrder, Mapping, Shape, Tensor, NDIMS};
 use crate::nn::Network;
 use crate::util::divisors;
-use crate::xmodel::{evaluate_prechecked, ModelResult};
+use crate::xmodel::ModelResult;
 
 /// Best mapping found for one layer.
 #[derive(Debug, Clone)]
@@ -22,8 +30,11 @@ pub struct LayerOpt {
     pub smap: SpatialMap,
     /// Model evaluation of the winner.
     pub result: ModelResult,
-    /// Number of candidate (blocking × order) points evaluated.
+    /// Number of candidate (blocking × order) points considered.
     pub evaluated: usize,
+    /// Staged-engine pipeline counters for the search (how many
+    /// candidates were pruned vs fully evaluated).
+    pub stats: EvalSnapshot,
 }
 
 /// Replication like [`crate::dataflow::best_replication`] but with
@@ -142,9 +153,77 @@ fn order_combos(levels: usize, cap: usize) -> Vec<Vec<LevelOrder>> {
     combos
 }
 
+/// One layer search: the per-candidate staged evaluation shared by the
+/// streaming (branch-and-bound) and parallel paths. `Sync`, so worker
+/// threads share the incumbent and the counters.
+struct LayerSearch<'a> {
+    engine: Engine<'a>,
+    ctx: EvalCtx,
+    smap: &'a SpatialMap,
+    spatial: [u64; NDIMS],
+    combos: &'a [Vec<LevelOrder>],
+    rf: usize,
+    shape: Shape,
+    stats: &'a EvalStats,
+    incumbent: &'a Incumbent,
+    bnb: bool,
+}
+
+impl LayerSearch<'_> {
+    /// Evaluate one blocking table against every order combo. Stage 2
+    /// runs once (footprints shared across orders); stage 3 runs bounded
+    /// by the tighter of the global incumbent and the local best. Returns
+    /// the best `(energy, combo index)`, or `None` when the table does
+    /// not fit (or every order was pruned).
+    fn eval_table(&self, table: &[[u64; NDIMS]]) -> Option<(f64, usize)> {
+        let mut m = Mapping {
+            shape: self.shape,
+            blocking: Blocking {
+                factors: table.to_vec(),
+            },
+            orders: self.combos[0].clone(),
+            spatial: self.spatial,
+            spatial_at: self.rf,
+        };
+        let fp = self.engine.footprints(&m, self.stats).ok()?;
+        let mut best: Option<(f64, usize)> = None;
+        for (ci, orders) in self.combos.iter().enumerate() {
+            m.orders.clone_from(orders);
+            let bound = if self.bnb {
+                match best {
+                    Some((b, _)) => self.incumbent.get().min(b),
+                    None => self.incumbent.get(),
+                }
+            } else {
+                f64::INFINITY
+            };
+            if let Staged::Energy(e) =
+                self.engine
+                    .energy_bounded(&m, self.smap, &self.ctx, &fp, bound, self.stats)
+            {
+                if best.map(|(b, _)| e < b).unwrap_or(true) {
+                    best = Some((e, ci));
+                    if self.bnb {
+                        self.incumbent.observe(e);
+                    }
+                }
+            }
+        }
+        best
+    }
+}
+
 /// Optimize one layer on one architecture with a fixed dataflow: search
 /// enumerated blockings × order combos, minimizing energy. Returns `None`
 /// when nothing fits (e.g. the array's spatial tiles overflow the RF).
+///
+/// With `opts.prune == PruneMode::BranchAndBound` (the default) the
+/// engine's stage-2/stage-3 lower bounds drop candidates against a
+/// shared incumbent; the winner is identical to exhaustive evaluation
+/// (see the engine's pruning contract) while full evaluations drop by an
+/// order of magnitude. Single-threaded branch-and-bound streams
+/// candidates straight out of the enumerator so pruning starts before
+/// enumeration finishes.
 pub fn optimize_layer(
     shape: &Shape,
     arch: &Arch,
@@ -155,59 +234,76 @@ pub fn optimize_layer(
 ) -> Option<LayerOpt> {
     let smap = divisor_replication(shape, df, &arch.array);
     let spatial = smap.factors();
-    let tables = enumerate_blockings(shape, arch, spatial, opts);
-    if tables.is_empty() {
-        return None;
-    }
     let combos = order_combos(arch.num_levels(), opts.max_order_combos);
-    let rf = arch.rf_levels();
+    let engine = Engine::new(arch, cost);
+    let stats = EvalStats::default();
+    let incumbent = Incumbent::new();
+    let bnb = opts.prune == PruneMode::BranchAndBound;
+    let search = LayerSearch {
+        engine,
+        ctx: engine.context(shape, &smap),
+        smap: &smap,
+        spatial,
+        combos: &combos,
+        rf: arch.rf_levels(),
+        shape: *shape,
+        stats: &stats,
+        incumbent: &incumbent,
+        bnb,
+    };
 
-    let evaluated = tables.len() * combos.len();
-    let results = parallel_map(tables, threads, |table| {
-        // one mapping per table; orders are swapped in place (validity and
-        // capacity are order-independent, so check once)
-        let mut m = Mapping {
-            shape: *shape,
-            blocking: Blocking {
-                factors: table.clone(),
-            },
-            orders: combos[0].clone(),
-            spatial,
-            spatial_at: rf,
-        };
-        if crate::xmodel::fits(&m, arch).is_err() {
-            return None;
-        }
-        let mut best: Option<(f64, Vec<LevelOrder>, ModelResult)> = None;
-        for orders in &combos {
-            m.orders.clone_from(orders);
-            let r = evaluate_prechecked(&m, &smap, arch, cost);
-            if best.as_ref().map(|(e, _, _)| r.energy_pj < *e).unwrap_or(true) {
-                best = Some((r.energy_pj, orders.clone(), r));
+    let mut evaluated = 0usize;
+    let mut win: Option<(f64, Vec<[u64; NDIMS]>, usize)> = None;
+    if bnb && threads <= 1 {
+        // streaming branch-and-bound over the enumerator
+        let mut cache = DivisorCache::new();
+        enumerate_blockings_visit(shape, arch, spatial, opts, &mut cache, |table| {
+            evaluated += search.combos.len();
+            if let Some((e, ci)) = search.eval_table(table) {
+                if win.as_ref().map(|(we, _, _)| e < *we).unwrap_or(true) {
+                    win = Some((e, table.to_vec(), ci));
+                }
+            }
+            true
+        });
+    } else {
+        let tables = enumerate_blockings(shape, arch, spatial, opts);
+        evaluated = tables.len() * combos.len();
+        let results = parallel_map(tables, threads, |table| {
+            search.eval_table(table).map(|(e, ci)| (e, table.clone(), ci))
+        });
+        // deterministic reduction in enumeration order (strict improvement)
+        for r in results.into_iter().flatten() {
+            if win.as_ref().map(|(we, _, _)| r.0 < *we).unwrap_or(true) {
+                win = Some(r);
             }
         }
-        best.map(|(e, orders, r)| {
-            m.orders = orders;
-            (e, m, r)
-        })
-    });
-
-    let mut best: Option<(f64, Mapping, ModelResult)> = None;
-    for r in results.into_iter().flatten() {
-        if best.as_ref().map(|(e, _, _)| r.0 < *e).unwrap_or(true) {
-            best = Some(r);
-        }
     }
-    best.map(|(_, mapping, result)| LayerOpt {
+
+    let (energy, table, ci) = win?;
+    let mapping = Mapping {
+        shape: *shape,
+        blocking: Blocking { factors: table },
+        orders: combos[ci].clone(),
+        spatial,
+        spatial_at: arch.rf_levels(),
+    };
+    // stage 4: materialize the winner's full evaluation
+    let result = engine.evaluate(&mapping, &smap).ok()?;
+    debug_assert_eq!(result.energy_pj, energy);
+    Some(LayerOpt {
         mapping,
         smap: smap.clone(),
         result,
         evaluated,
+        stats: stats.snapshot(),
     })
 }
 
 /// Energy of every enumerated blocking (best order each) — the Fig 10
-/// design-space distribution.
+/// design-space distribution. Per-blocking order scans share the stage-2
+/// footprints and prune against the blocking's own best (which preserves
+/// each blocking's exact minimum).
 pub fn sweep_blockings(
     shape: &Shape,
     arch: &Arch,
@@ -221,8 +317,10 @@ pub fn sweep_blockings(
     let tables = enumerate_blockings(shape, arch, spatial, opts);
     let combos = order_combos(arch.num_levels(), opts.max_order_combos.min(27));
     let rf = arch.rf_levels();
+    let engine = Engine::new(arch, cost);
+    let ctx = engine.context(shape, &smap);
+    let stats = EvalStats::default();
     parallel_map(tables, threads, |table| {
-        let mut best = f64::INFINITY;
         let mut m = Mapping {
             shape: *shape,
             blocking: Blocking {
@@ -232,13 +330,15 @@ pub fn sweep_blockings(
             spatial,
             spatial_at: rf,
         };
-        if crate::xmodel::fits(&m, arch).is_err() {
+        let Ok(fp) = engine.footprints(&m, &stats) else {
             return f64::INFINITY;
-        }
+        };
+        let mut best = f64::INFINITY;
         for orders in &combos {
             m.orders.clone_from(orders);
-            let r = evaluate_prechecked(&m, &smap, arch, cost);
-            best = best.min(r.energy_pj);
+            if let Staged::Energy(e) = engine.energy_bounded(&m, &smap, &ctx, &fp, best, &stats) {
+                best = best.min(e);
+            }
         }
         best
     })
@@ -264,6 +364,19 @@ impl NetworkOpt {
     /// TOPS/W over the whole network.
     pub fn tops_per_watt(&self) -> f64 {
         2.0 * self.total_macs as f64 / self.total_energy_pj
+    }
+
+    /// Aggregated engine counters across the per-layer searches.
+    pub fn stats(&self) -> EvalSnapshot {
+        let mut out = EvalSnapshot::default();
+        for lo in self.per_layer.iter().flatten() {
+            out.stage2 += lo.stats.stage2;
+            out.fit_rejected += lo.stats.fit_rejected;
+            out.stage3 += lo.stats.stage3;
+            out.pruned += lo.stats.pruned;
+            out.full += lo.stats.full;
+        }
+        out
     }
 }
 

@@ -1,5 +1,19 @@
-//! Minimal data-parallel map over std::thread (rayon is not in the
-//! offline vendor set). Used by the sweep executors.
+//! Minimal data-parallel map over `std::thread::scope` (rayon is not in
+//! the offline vendor set). Used by the sweep executors.
+//!
+//! The implementation is fully safe: the input is split into disjoint
+//! contiguous chunks (`slice::chunks`), each scoped worker maps its own
+//! chunk into an owned `Vec`, and the results are re-joined in spawn
+//! order — no shared output buffer, no raw pointers. A panicking worker
+//! propagates its panic to the caller at join time (after the remaining
+//! workers finish), so partially computed results are never observed.
+//!
+//! Trade-off vs the previous unsafe work-stealing version: static chunks
+//! can load-imbalance when per-item cost is skewed toward one end of the
+//! input. The sweep workloads here are wide (hundreds to thousands of
+//! items per chunk) and per-item variance is bounded by the staged
+//! engine's pruning, so the imbalance stays small; revisit with an
+//! index-tagged atomic-counter design if a profile ever says otherwise.
 
 /// Apply `f` to every item on up to `nthreads` worker threads, preserving
 /// input order in the output.
@@ -15,41 +29,25 @@ where
     }
     let nthreads = nthreads.max(1).min(n);
     if nthreads == 1 {
-        return items.iter().map(|t| f(t)).collect();
+        return items.iter().map(f).collect();
     }
 
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let out_ptr = SyncSlice(out.as_mut_ptr());
-
+    let chunk_len = n.div_ceil(nthreads);
+    let mut out: Vec<R> = Vec::with_capacity(n);
     std::thread::scope(|scope| {
-        for _ in 0..nthreads {
-            let next = &next;
-            let f = &f;
-            let items = &items;
-            let out_ptr = &out_ptr;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                // SAFETY: each index i is claimed by exactly one thread via
-                // the atomic counter, and `out` outlives the scope.
-                unsafe {
-                    *out_ptr.0.add(i) = Some(r);
-                }
-            });
+        let handles: Vec<_> = items
+            .chunks(chunk_len)
+            .map(|chunk| {
+                let f = &f;
+                scope.spawn(move || chunk.iter().map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("parallel_map worker panicked"));
         }
     });
-
-    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+    out
 }
-
-/// Wrapper making a raw pointer Sync for the disjoint-index write pattern
-/// above.
-struct SyncSlice<R>(*mut Option<R>);
-unsafe impl<R: Send> Sync for SyncSlice<R> {}
 
 /// A sensible default worker count: available parallelism minus one,
 /// at least 1.
@@ -73,6 +71,21 @@ mod tests {
     }
 
     #[test]
+    fn preserves_order_with_uneven_chunks() {
+        // n not divisible by nthreads: the tail chunk is shorter
+        for n in [1usize, 7, 97, 1001] {
+            for threads in [2usize, 3, 5, 16] {
+                let items: Vec<u64> = (0..n as u64).collect();
+                let out = parallel_map(items, threads, |x| x + 1);
+                assert_eq!(out.len(), n);
+                for (i, v) in out.iter().enumerate() {
+                    assert_eq!(*v, i as u64 + 1, "n={n} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn empty_and_single() {
         let out: Vec<u64> = parallel_map(Vec::<u64>::new(), 4, |x| *x);
         assert!(out.is_empty());
@@ -92,5 +105,21 @@ mod tests {
         let out = parallel_map(items, 16, |x| (0..*x).sum::<u64>());
         assert_eq!(out[10], 45);
         assert_eq!(out.len(), 200);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        // a panicking closure must panic the caller, not hang or return
+        // partial results
+        let result = std::panic::catch_unwind(|| {
+            let items: Vec<u64> = (0..64).collect();
+            parallel_map(items, 4, |x| {
+                if *x == 13 {
+                    panic!("boom at 13");
+                }
+                *x
+            })
+        });
+        assert!(result.is_err(), "panic must propagate out of parallel_map");
     }
 }

@@ -3,20 +3,22 @@
 
 use crate::arch::Arch;
 use crate::dataflow::SpatialMap;
+use crate::engine::DivisorCache;
 use crate::loopnest::{Blocking, Dim, LevelOrder, Mapping, Shape, ALL_DIMS, NDIMS};
-use crate::util::{divisors, XorShift};
+use crate::util::XorShift;
 
 /// A uniformly-ish random valid mapping: each dim's bound is split across
 /// `levels` temporal levels by repeated random divisor choice; orders are
 /// random permutations; `rf_levels` per-PE levels; no spatial unrolling.
 pub fn random_mapping(shape: Shape, levels: usize, rf_levels: usize, rng: &mut XorShift) -> Mapping {
     assert!(levels >= 2 && rf_levels >= 1 && rf_levels < levels);
+    let mut dc = DivisorCache::new();
     let mut blocking = Blocking::ones(levels);
     for d in ALL_DIMS {
         let mut rem = shape.bound(d);
         for l in 0..levels - 1 {
-            let ds = divisors(rem);
-            let f = *rng.choose(&ds);
+            let ds = dc.divisors(rem);
+            let f = *rng.choose(ds.as_slice());
             blocking.set(l, d, f);
             rem /= f;
         }
@@ -48,6 +50,7 @@ pub fn random_mapping_for_arch(
 ) -> (Mapping, SpatialMap) {
     let levels = arch.num_levels();
     let rf = arch.rf_levels();
+    let mut dc = DivisorCache::new();
 
     // pick up to one spatial dim per axis with a random divisor extent
     let mut smap = SpatialMap::scalar();
@@ -61,7 +64,8 @@ pub fn random_mapping_for_arch(
         if taken.contains(&d) || shape.bound(d) == 1 {
             continue;
         }
-        let ds: Vec<u64> = divisors(shape.bound(d)).into_iter().filter(|&e| e <= size).collect();
+        let all = dc.divisors(shape.bound(d));
+        let ds: Vec<u64> = all.iter().copied().filter(|&e| e <= size).collect();
         let e = *rng.choose(&ds);
         if e > 1 {
             if vertical {
@@ -79,8 +83,8 @@ pub fn random_mapping_for_arch(
     for d in ALL_DIMS {
         let mut rem = shape.bound(d) / spatial[d.idx()];
         for l in 0..levels - 1 {
-            let ds = divisors(rem);
-            let f = *rng.choose(&ds);
+            let ds = dc.divisors(rem);
+            let f = *rng.choose(ds.as_slice());
             blocking.set(l, d, f);
             rem /= f;
         }

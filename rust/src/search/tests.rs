@@ -4,6 +4,7 @@ use super::*;
 use crate::arch::{eyeriss_like, small_rf, ArrayShape};
 use crate::dataflow::Dataflow;
 use crate::energy::Table3;
+use crate::engine::PruneMode;
 use crate::loopnest::{Dim, Shape};
 use crate::util::prop;
 
@@ -128,6 +129,50 @@ fn sweep_blockings_has_spread() {
     let lo = energies.iter().cloned().fold(f64::INFINITY, f64::min);
     let hi = energies.iter().cloned().fold(0.0, f64::max);
     assert!(hi / lo > 1.5, "expected >1.5x spread, got {}", hi / lo);
+}
+
+#[test]
+fn branch_and_bound_matches_exhaustive_with_fewer_full_evals() {
+    // the engine's pruning contract, end to end: identical winner
+    // (bit-for-bit energy AND mapping), strictly fewer stage-4 completions
+    let shape = small_conv();
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").unwrap();
+    for threads in [1usize, 3] {
+        let ex_opts = SearchOpts::capped(1500, 5).with_prune(PruneMode::Exhaustive);
+        let bb_opts = SearchOpts::capped(1500, 5).with_prune(PruneMode::BranchAndBound);
+        let ex = optimize_layer(&shape, &arch, &df, &Table3, &ex_opts, threads).unwrap();
+        let bb = optimize_layer(&shape, &arch, &df, &Table3, &bb_opts, threads).unwrap();
+        assert_eq!(
+            ex.result.energy_pj, bb.result.energy_pj,
+            "threads={threads}: b&b lost the optimum"
+        );
+        assert_eq!(ex.mapping, bb.mapping, "threads={threads}: different winner");
+        assert_eq!(ex.evaluated, bb.evaluated, "same candidate space");
+        assert!(
+            bb.stats.full < ex.stats.full,
+            "threads={threads}: b&b should complete fewer full evals ({} vs {})",
+            bb.stats.full,
+            ex.stats.full
+        );
+        assert!(bb.stats.pruned > 0, "threads={threads}: nothing pruned");
+        // exhaustive mode never prunes
+        assert_eq!(ex.stats.pruned, 0);
+        assert_eq!(ex.stats.full, ex.stats.stage3);
+    }
+}
+
+#[test]
+fn layer_opt_reports_pipeline_stats() {
+    let shape = small_conv();
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").unwrap();
+    let opts = SearchOpts::capped(500, 5);
+    let lo = optimize_layer(&shape, &arch, &df, &Table3, &opts, 2).unwrap();
+    let s = lo.stats;
+    assert!(s.stage2 > 0);
+    assert_eq!(s.stage3, s.full + s.pruned);
+    assert!(s.full >= 1, "at least the winner completed");
 }
 
 #[test]

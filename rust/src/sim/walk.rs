@@ -4,7 +4,7 @@ use crate::arch::Arch;
 use crate::dataflow::SpatialMap;
 use crate::energy::CostModel;
 use crate::loopnest::{Mapping, ALL_TENSORS};
-use crate::xmodel::{assemble, ModelResult, RoundTables};
+use crate::xmodel::{ModelResult, RoundTables};
 
 /// Simulator failure modes.
 #[derive(Debug, Clone, PartialEq)]
@@ -141,7 +141,8 @@ pub fn count_rounds(m: &Mapping, budget: u64) -> Result<RoundTables, SimError> {
 }
 
 /// Full simulation: exact round counting + the shared assembly into
-/// energy/performance (same assembly as the analytical model, so any
+/// energy/performance (the engine's stage-3/4 back half — the same
+/// accumulation and roll-up the analytical model uses, so any
 /// disagreement is in the round counts — the part being validated).
 pub fn simulate(
     m: &Mapping,
@@ -151,7 +152,7 @@ pub fn simulate(
     budget: u64,
 ) -> Result<ModelResult, SimError> {
     let tables = count_rounds(m, budget)?;
-    Ok(assemble(m, smap, arch, cost, &tables))
+    Ok(crate::engine::assemble(m, smap, arch, cost, &tables))
 }
 
 #[cfg(test)]

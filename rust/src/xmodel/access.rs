@@ -7,12 +7,19 @@
 //! operand register inside the PE datapath (it models stationarity:
 //! an irrelevant loop nested innermost reuses the operand without an RF
 //! access). The trace simulator counts identically.
+//!
+//! Since the staged-engine refactor the heavy lifting lives in
+//! [`crate::engine`]; [`evaluate`], [`evaluate_prechecked`] and
+//! [`assemble`] are thin compatibility shims over the full pipeline.
+//! [`fits`] keeps its original monolithic implementation as an
+//! independent reference that the engine's footprint/fit path is
+//! property-tested against.
 
-use super::result::{LevelCounts, ModelResult};
-use crate::arch::{Arch, ArrayBus, LevelKind};
-use crate::dataflow::{utilization, SpatialMap};
+use super::result::ModelResult;
+use crate::arch::{Arch, LevelKind};
+use crate::dataflow::SpatialMap;
 use crate::energy::CostModel;
-use crate::loopnest::{Dim, Mapping, Tensor, ALL_TENSORS};
+use crate::loopnest::{Mapping, Tensor, ALL_TENSORS};
 
 /// Why a (mapping, arch) pair cannot be evaluated.
 #[derive(Debug, Clone, PartialEq)]
@@ -84,48 +91,9 @@ pub fn refetch_factor(m: &Mapping, t: Tensor, level: usize, seen_below: bool) ->
     (if seen { r } else { 1 }, seen)
 }
 
-/// Precomputed per-level tile sizes: `tiles[t][i]` = elements of `t`
-/// resident at temporal level `i` (one cumulative-product pass instead of
-/// re-deriving `cum` per query — the search's hot loop).
-pub(crate) fn tile_table(m: &Mapping) -> [[f64; MAX_LEVELS]; 3] {
-    let nlv = m.levels();
-    let stride = m.shape.stride as u64;
-    let (in_x, in_y) = (m.shape.input_x(), m.shape.input_y());
-    let mut cum = [1u64; 7];
-    let mut tiles = [[0.0; MAX_LEVELS]; 3];
-    for i in 0..nlv {
-        for (d, c) in cum.iter_mut().enumerate() {
-            *c *= m.blocking.factors[i][d];
-        }
-        // at or above the first shared level the aggregate (array-wide)
-        // tile includes the spatial factors
-        let with_spatial = |d: usize| -> u64 {
-            if i >= m.spatial_at {
-                cum[d] * m.spatial[d]
-            } else {
-                cum[d]
-            }
-        };
-        let (b, k, c, x, y, fx, fy) = (
-            with_spatial(0),
-            with_spatial(1),
-            with_spatial(2),
-            with_spatial(3),
-            with_spatial(4),
-            with_spatial(5),
-            with_spatial(6),
-        );
-        let ix = ((x - 1) * stride + fx).min(in_x);
-        let iy = ((y - 1) * stride + fy).min(in_y);
-        tiles[Tensor::Input.idx()][i] = (b * c * ix * iy) as f64;
-        tiles[Tensor::Weight.idx()][i] = (k * c * fx * fy) as f64;
-        tiles[Tensor::Output.idx()][i] = (b * k * x * y) as f64;
-    }
-    tiles
-}
-
 /// Check capacity: at every on-chip level the three tiles (double
-/// buffered, Fig 5) must fit. DRAM always fits.
+/// buffered, Fig 5) must fit. DRAM always fits. Independent reference
+/// for [`crate::engine::Footprints::fit`].
 pub fn fits(m: &Mapping, arch: &Arch) -> Result<(), EvalError> {
     for (i, lvl) in arch.levels.iter().enumerate() {
         if lvl.kind == LevelKind::Dram {
@@ -147,44 +115,30 @@ pub fn fits(m: &Mapping, arch: &Arch) -> Result<(), EvalError> {
 /// Evaluate the analytical model for one (mapping, spatial map, arch)
 /// triple. The mapping's `spatial` must equal `smap.factors()` and its
 /// level count must match the architecture.
+///
+/// Compatibility shim over the staged pipeline
+/// ([`crate::engine::Engine::evaluate`]) — identical checks, identical
+/// results.
 pub fn evaluate(
     m: &Mapping,
     smap: &SpatialMap,
     arch: &Arch,
     cost: &dyn CostModel,
 ) -> Result<ModelResult, EvalError> {
-    m.validate().map_err(EvalError::BadMapping)?;
-    if m.levels() != arch.num_levels() {
-        return Err(EvalError::LevelMismatch {
-            mapping: m.levels(),
-            arch: arch.num_levels(),
-        });
-    }
-    if m.spatial != smap.factors() {
-        return Err(EvalError::SpatialMismatch);
-    }
-    if m.spatial_at != arch.rf_levels() {
-        return Err(EvalError::BadMapping(format!(
-            "spatial_at {} != arch rf levels {}",
-            m.spatial_at,
-            arch.rf_levels()
-        )));
-    }
-    fits(m, arch)?;
-    Ok(evaluate_prechecked(m, smap, arch, cost))
+    crate::engine::Engine::new(arch, cost).evaluate(m, smap)
 }
 
-/// [`evaluate`] without the consistency/capacity checks — the search's
-/// inner loop calls this after validating each blocking table once
-/// (orders never affect validity or capacity).
+/// [`evaluate`] without the consistency/capacity checks — the legacy
+/// fast path for callers that validated the blocking table once (orders
+/// never affect validity or capacity). Shim over
+/// [`crate::engine::Engine::evaluate_prechecked`].
 pub fn evaluate_prechecked(
     m: &Mapping,
     smap: &SpatialMap,
     arch: &Arch,
     cost: &dyn CostModel,
 ) -> ModelResult {
-    let tables = RoundTables::analytic(m);
-    assemble(m, smap, arch, cost, &tables)
+    crate::engine::Engine::new(arch, cost).evaluate_prechecked(m, smap)
 }
 
 /// Maximum temporal levels supported (fixed-size tables keep the search's
@@ -214,48 +168,24 @@ impl Default for RoundTables {
 }
 
 impl RoundTables {
-    /// Analytical tables from the refetch formulas. Per tensor, one
-    /// inner-to-outer pass precomputes each level's refetch factor in both
-    /// seen-states, then boundary values are suffix products.
+    /// Analytical tables from the refetch formulas — one
+    /// [`crate::engine::analytic_rows`] row pair per tensor (the engine
+    /// computes rows lazily so pruned candidates skip the rest; this
+    /// assembles the full table for the simulator cross-checks).
     pub fn analytic(m: &Mapping) -> Self {
-        let nlv = m.levels();
-        assert!(nlv <= MAX_LEVELS, "more than {MAX_LEVELS} levels");
         let mut out = RoundTables::default();
         for t in ALL_TENSORS {
-            let ti = t.idx();
-            // per level: (r when a relevant loop was already seen below,
-            // r when not, does this level set the seen flag, relevant-only
-            // product)
-            let mut per: [(f64, f64, bool, f64); MAX_LEVELS] =
-                [(1.0, 1.0, false, 1.0); MAX_LEVELS];
-            for j in 0..nlv {
-                let (r_unseen, sets) = refetch_factor(m, t, j, false);
-                let (r_seen, _) = refetch_factor(m, t, j, true);
-                let rel: f64 = (0..7)
-                    .filter(|&i| t.relevant(Dim::from_idx(i)))
-                    .map(|i| m.blocking.factors[j][i] as f64)
-                    .product();
-                per[j] = (r_seen as f64, r_unseen as f64, sets, rel);
-            }
-            for i in 0..nlv {
-                let mut seen = false;
-                let mut rounds = 1.0;
-                let mut distinct = 1.0;
-                for (r_seen, r_unseen, sets, rel) in per.iter().take(nlv).skip(i) {
-                    rounds *= if seen { *r_seen } else { *r_unseen };
-                    seen |= *sets;
-                    distinct *= rel;
-                }
-                out.rounds[ti][i] = rounds;
-                out.distinct[ti][i] = distinct;
-            }
+            let (rounds, distinct) = crate::engine::analytic_rows(m, t);
+            out.rounds[t.idx()] = rounds;
+            out.distinct[t.idx()] = distinct;
         }
         out
     }
 }
 
 /// Assemble a [`ModelResult`] from per-boundary round tables (shared by
-/// the analytical model and the trace simulator).
+/// the analytical model and the trace simulator). Shim over
+/// [`crate::engine::assemble`].
 pub fn assemble(
     m: &Mapping,
     smap: &SpatialMap,
@@ -263,109 +193,5 @@ pub fn assemble(
     cost: &dyn CostModel,
     tables: &RoundTables,
 ) -> ModelResult {
-    let pes = m.pe_count() as f64;
-    let sp = m.spatial_at;
-    let nlv = m.levels();
-    let tiles = tile_table(m);
-    let mut levels = vec![LevelCounts::default(); nlv];
-    let mut fabric_words = [0.0f64; 3];
-    let mut fabric_hops = 0.0f64;
-
-    for t in ALL_TENSORS {
-        let ti = t.idx();
-        // Boundary i: between level i (upper) and level i-1 / operand
-        // register (lower).
-        for i in 0..nlv {
-            let rounds = tables.rounds[ti][i];
-            let tile = if i == 0 { 1.0 } else { tiles[ti][i - 1] };
-
-            // Multiplicities on the two sides of the boundary.
-            // lower_mult: copies delivered below; upper_mult: unique words
-            // the upper level serves (multicast dedup at the array edge).
-            let (lower_mult, upper_mult, crosses_fabric) = if i < sp {
-                (pes, pes, false)
-            } else if i == sp {
-                (pes, smap.unique_factor(t) as f64, true)
-            } else {
-                (1.0, 1.0, false)
-            };
-
-            if t == Tensor::Output {
-                let wb = rounds * tile; // writeback rounds (per lower instance)
-                let rr = (rounds - tables.distinct[ti][i]).max(0.0) * tile; // partial re-reads
-
-                // Up: lower reads, upper writes.
-                levels[i].writes[ti] += wb * upper_mult;
-                if i >= 1 {
-                    levels[i - 1].reads[ti] += wb * lower_mult;
-                }
-                // Down (partial refill): upper reads, lower writes.
-                levels[i].reads[ti] += rr * upper_mult;
-                if i >= 1 {
-                    levels[i - 1].writes[ti] += rr * lower_mult;
-                }
-                if crosses_fabric {
-                    fabric_words[ti] += (wb + rr) * pes;
-                    if arch.bus == ArrayBus::Broadcast {
-                        // no in-fabric accumulation: the buffer absorbs and
-                        // merges every PE's partial sums itself
-                        let extra = (wb + rr) * (pes - upper_mult).max(0.0);
-                        levels[i].writes[ti] += extra;
-                        levels[i].reads[ti] += extra;
-                    }
-                }
-            } else {
-                let words = rounds * tile;
-                // Down: upper reads, lower writes.
-                levels[i].reads[ti] += words * upper_mult;
-                if i >= 1 {
-                    levels[i - 1].writes[ti] += words * lower_mult;
-                }
-                if crosses_fabric {
-                    fabric_words[ti] += words * pes;
-                }
-            }
-        }
-
-        let hops_per_word = match arch.bus {
-            ArrayBus::Systolic => 1.0 + smap.share_hops(t),
-            ArrayBus::Broadcast => (arch.array.rows as f64 + arch.array.cols as f64) / 4.0,
-        };
-        fabric_hops += fabric_words[ti] * hops_per_word;
-    }
-
-    // Energy.
-    let mut energy_by_level = Vec::with_capacity(nlv);
-    for (i, lc) in levels.iter().enumerate() {
-        energy_by_level.push(lc.total() * cost.level_access(arch, i));
-    }
-    let fabric_energy = fabric_hops * cost.hop();
-    let macs = m.shape.macs();
-    let mac_energy = macs as f64 * cost.mac();
-    let energy_pj = energy_by_level.iter().sum::<f64>() + fabric_energy + mac_energy;
-
-    // Performance.
-    let util = utilization(&m.shape, smap, &arch.array);
-    let compute_cycles = if util > 0.0 {
-        macs as f64 / (arch.array.pes() as f64 * util)
-    } else {
-        f64::INFINITY
-    };
-    let dram = levels.last().map(|lc| lc.total()).unwrap_or(0.0);
-    let dram_cycles = dram * arch.word_bytes as f64 / arch.dram_bw_bytes_per_cycle;
-    let cycles = compute_cycles.max(dram_cycles);
-
-    ModelResult {
-        levels,
-        fabric_words,
-        fabric_hops,
-        macs,
-        active_pes: m.pe_count(),
-        energy_by_level,
-        fabric_energy,
-        mac_energy,
-        energy_pj,
-        cycles,
-        utilization: util,
-    }
+    crate::engine::assemble(m, smap, arch, cost, tables)
 }

@@ -26,6 +26,7 @@ mod result;
 
 pub use access::{
     assemble, evaluate, evaluate_prechecked, fits, refetch_factor, EvalError, RoundTables,
+    MAX_LEVELS,
 };
 pub use result::{LevelCounts, ModelResult};
 

@@ -260,35 +260,8 @@ fn breakdown_table_renders() {
     assert!(sums.iter().all(|&s| s >= 0.0));
 }
 
-#[test]
-fn prop_tile_table_matches_tile_elems() {
-    // the hot-path precomputed tile table must agree with the reference
-    // per-query computation for arbitrary mappings
-    crate::util::prop::for_cases(0x7ab1e, 200, |rng| {
-        let shape = Shape::new(
-            rng.range(1, 4),
-            rng.range(1, 24),
-            rng.range(1, 24),
-            rng.range(1, 10),
-            rng.range(1, 10),
-            rng.range(1, 4),
-            rng.range(1, 4),
-            rng.range(1, 2) as u32,
-        );
-        let arch = crate::arch::eyeriss_like();
-        let (m, _) = crate::search::random_mapping_for_arch(shape, &arch, rng);
-        let tiles = super::access::tile_table(&m);
-        for t in crate::loopnest::ALL_TENSORS {
-            for i in 0..m.levels() {
-                assert_eq!(
-                    tiles[t.idx()][i],
-                    m.tile_elems(t, i) as f64,
-                    "{t} level {i}: {m:?}"
-                );
-            }
-        }
-    });
-}
+// (the tile-table property test lives with the engine now:
+// `engine::footprint::tests::footprints_match_tile_elems_reference`)
 
 #[test]
 fn scaled_cost_model_shifts_balance() {
