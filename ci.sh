@@ -17,6 +17,9 @@ cargo test -q
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "==> perf_search (pruning contract: identical winners, >=3x fewer full evals)"
     cargo bench --bench perf_search
+
+    echo "==> perf_netopt (network B&B: identical winner, strictly fewer arch points; emits BENCH_netopt.json)"
+    cargo bench --bench perf_netopt
 fi
 
 echo "CI OK"

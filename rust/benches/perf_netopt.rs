@@ -1,0 +1,114 @@
+//! §Perf: network-level branch-and-bound effectiveness. Runs the §6.3
+//! hierarchy co-optimization twice on the same design space — network-
+//! level exhaustive (every architecture point fully evaluated, the old
+//! `search_hierarchy` behavior) and cross-architecture branch-and-bound
+//! (shared incumbent + compulsory-floor bound + seeded layer searches) —
+//! and asserts the netopt winner-identity contract: the winning
+//! (architecture, per-layer mappings) pair is **identical** while
+//! strictly fewer architecture points are fully evaluated. Emits
+//! `BENCH_netopt.json` for the perf trajectory.
+
+use interstellar::arch::ArrayShape;
+use interstellar::energy::Table3;
+use interstellar::netopt::{co_optimize, DesignSpace, NetOptConfig};
+use interstellar::nn::network;
+use interstellar::search::SearchOpts;
+use interstellar::util::bench::Bencher;
+
+fn main() {
+    // mlp-m: three distinct FC shapes whose DRAM-dominated floors make
+    // the network bound bite; threads = 1 keeps candidate order (and so
+    // the pruning trace) deterministic.
+    let net = network("mlp-m", 32).unwrap();
+    let space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+    let mut opts = SearchOpts::capped(400, 5);
+    opts.max_order_combos = 9;
+
+    let mut b = Bencher::new(1);
+    let mut ex = None;
+    let m_ex = b.bench("perf_netopt/mlp-m exhaustive", || {
+        ex = Some(co_optimize(
+            &net,
+            &space,
+            &Table3,
+            &NetOptConfig::exhaustive(opts.clone(), 1),
+        ));
+    });
+    let mut bb = None;
+    let m_bb = b.bench("perf_netopt/mlp-m b&b", || {
+        bb = Some(co_optimize(
+            &net,
+            &space,
+            &Table3,
+            &NetOptConfig::new(opts.clone(), 1),
+        ));
+    });
+    let ex = ex.expect("exhaustive ran");
+    let bb = bb.expect("b&b ran");
+
+    // winner-identity contract: same architecture, bit-identical energy,
+    // identical per-layer mappings
+    let we = ex.best().expect("exhaustive found a feasible winner");
+    let wb = bb.best().expect("b&b found a feasible winner");
+    assert_eq!(we.arch.name, wb.arch.name, "winner arch differs");
+    assert_eq!(
+        we.opt.total_energy_pj, wb.opt.total_energy_pj,
+        "winner energy differs"
+    );
+    assert_eq!(we.opt.unmapped, 0);
+    for (le, lb) in we.opt.per_layer.iter().zip(wb.opt.per_layer.iter()) {
+        let (le, lb) = (le.as_ref().unwrap(), lb.as_ref().unwrap());
+        assert_eq!(le.mapping, lb.mapping, "winner mapping differs");
+        assert_eq!(le.result.energy_pj, lb.result.energy_pj);
+    }
+
+    // acceptance: strictly fewer fully evaluated architecture points
+    assert_eq!(ex.stats.evaluated_full, ex.stats.candidates);
+    assert_eq!(
+        bb.stats.pruned + bb.stats.evaluated_full,
+        bb.stats.candidates
+    );
+    assert!(
+        bb.stats.evaluated_full < ex.stats.evaluated_full,
+        "b&b must fully evaluate strictly fewer arch points ({} vs {})",
+        bb.stats.evaluated_full,
+        ex.stats.evaluated_full
+    );
+
+    println!("\n=== perf_netopt: architecture points, exhaustive vs branch-and-bound ===");
+    println!(
+        "candidates {}  full(exhaustive) {}  full(b&b) {}  pruned {}  seed reruns {}",
+        bb.stats.candidates,
+        ex.stats.evaluated_full,
+        bb.stats.evaluated_full,
+        bb.stats.pruned,
+        bb.stats.layer_reruns
+    );
+    println!(
+        "engine full evals: {} (exhaustive) vs {} (b&b)",
+        ex.stats.engine.full, bb.stats.engine.full
+    );
+
+    let json = format!(
+        "{{\"bench\":\"perf_netopt\",\"network\":\"mlp-m\",\"batch\":32,\
+         \"candidates\":{},\"full_exhaustive\":{},\"full_bnb\":{},\"pruned_bnb\":{},\
+         \"seed_reruns\":{},\"engine_full_exhaustive\":{},\"engine_full_bnb\":{},\
+         \"winner\":\"{}\",\"winner_energy_pj\":{},\
+         \"mean_ns_exhaustive\":{},\"mean_ns_bnb\":{}}}",
+        bb.stats.candidates,
+        ex.stats.evaluated_full,
+        bb.stats.evaluated_full,
+        bb.stats.pruned,
+        bb.stats.layer_reruns,
+        ex.stats.engine.full,
+        bb.stats.engine.full,
+        wb.arch.name,
+        wb.opt.total_energy_pj,
+        m_ex.mean_ns,
+        m_bb.mean_ns
+    );
+    let path = "BENCH_netopt.json";
+    std::fs::write(path, &json).expect("write bench json");
+    println!("wrote {path}");
+    println!("perf_netopt OK (identical winner, strictly fewer fully evaluated arch points)");
+}

@@ -128,6 +128,32 @@ impl Arch {
         }
     }
 
+    /// Aggregate on-chip size of each non-DRAM level, innermost first:
+    /// per-PE register levels count `size × PEs`, shared SRAM levels
+    /// their plain size. The single source of truth for both the
+    /// capacity budget ([`onchip_bytes`]) and `netopt`'s Observation-2
+    /// inter-level ratio filter.
+    ///
+    /// [`onchip_bytes`]: Arch::onchip_bytes
+    pub fn onchip_level_bytes(&self) -> Vec<u64> {
+        let pes = self.array.pes();
+        self.levels
+            .iter()
+            .filter_map(|l| match l.kind {
+                LevelKind::Reg => Some(l.size_bytes * pes),
+                LevelKind::Sram => Some(l.size_bytes),
+                LevelKind::Dram => None,
+            })
+            .collect()
+    }
+
+    /// Total on-chip storage in bytes: per-PE register levels times the
+    /// PE count plus shared SRAM levels (DRAM excluded). The capacity
+    /// measure `netopt`'s design-space budget is checked against.
+    pub fn onchip_bytes(&self) -> u64 {
+        self.onchip_level_bytes().iter().sum()
+    }
+
     /// Validate the level ordering contract.
     pub fn validate(&self) -> Result<(), String> {
         let mut seen_sram = false;
@@ -351,6 +377,22 @@ mod tests {
     #[test]
     fn two_level_rf_counts() {
         assert_eq!(optimized_mobile().rf_levels(), 2);
+    }
+
+    #[test]
+    fn onchip_bytes_aggregates_registers() {
+        // eyeriss-like: 512 B x 256 PEs + 128 KB shared
+        assert_eq!(eyeriss_like().onchip_bytes(), 512 * 256 + (128 << 10));
+        // optimized mobile: (16 + 128) B x 256 PEs + 256 KB shared
+        assert_eq!(
+            optimized_mobile().onchip_bytes(),
+            (16 + 128) * 256 + (256 << 10)
+        );
+        // per-level aggregates, innermost first, DRAM excluded
+        assert_eq!(
+            optimized_mobile().onchip_level_bytes(),
+            vec![16 * 256, 128 * 256, 256 << 10]
+        );
     }
 
     #[test]

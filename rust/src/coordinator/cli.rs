@@ -10,7 +10,9 @@ use super::serve;
 use crate::arch::{eyeriss_like, ArrayShape};
 use crate::dataflow::Dataflow;
 use crate::energy::Table3;
-use crate::nn::network;
+use crate::engine::PruneMode;
+use crate::netopt::{co_optimize, CoOptResult, DesignSpace, NetOptConfig};
+use crate::nn::{network, Network};
 use crate::search::{default_threads, optimize_network, search_hierarchy, SearchOpts};
 use crate::util::{fmt_sig, Args};
 
@@ -21,6 +23,10 @@ USAGE: interstellar <command> [options]
 COMMANDS:
   optimize        --net <name> [--batch N] [--rows 16 --cols 16] [--full]
                   run the auto-optimizer (fix C|K + ratio rule) on a network
+  co-opt          --net <name> [--batch N] [--rows 16 --cols 16] [--full]
+                  [--budget BYTES] [--min-tops T] [--clock-ghz G] [--json]
+                  network-level co-optimizer: cross-architecture b&b over
+                  the design space, with capacity/throughput constraints
   sweep-dataflow  [--layer conv3|4c3r] [--batch N] [--full]   (Fig 8)
   utilization     [--layer conv3|4c3r] [--batch N]            (Fig 9)
   sweep-blocking  [--layer conv3|4c3r] [--batch N] [--full]   (Fig 10)
@@ -29,7 +35,7 @@ COMMANDS:
   scaling         [--full]                                    (Fig 13)
   optimizer-gains [--full]                                    (Fig 14)
   validate        model-vs-simulator validation               (Fig 7 / Table 4)
-  search-stats    staged-engine pruning: exhaustive vs b&b    (perf companion)
+  search-stats    staged-engine + network-level pruning counters
   table3          print the energy cost table                 (Table 3)
   schedules       print prior-work schedules lowered to IR    (Listing 2 / Fig 6)
   run-e2e         [--requests N] [--threads N] [--artifacts DIR]
@@ -86,21 +92,51 @@ pub fn run(args: Args) -> Result<()> {
             let Some(best) = results.first() else {
                 bail!("no feasible hierarchy found");
             };
-            println!("baseline (Eyeriss-like): {} uJ", fmt_sig(baseline.total_energy_pj / 1e6));
             println!(
-                "optimized: {} uJ on {}  ({:.2}x better, {:.2} TOPS/W)",
+                "baseline (Eyeriss-like): {} uJ{}",
+                fmt_sig(baseline.total_energy_pj / 1e6),
+                experiments::unmapped_note(baseline.unmapped)
+            );
+            println!(
+                "optimized: {} uJ on {}  ({:.2}x better, {:.2} TOPS/W){}",
                 fmt_sig(best.opt.total_energy_pj / 1e6),
                 best.arch.describe(),
                 baseline.total_energy_pj / best.opt.total_energy_pj,
                 best.opt.tops_per_watt(),
+                experiments::unmapped_note(best.opt.unmapped),
             );
             println!("\ntop-5 hierarchies:");
             for r in results.iter().take(5) {
                 println!(
-                    "  {:<24} {} uJ",
+                    "  {:<24} {} uJ{}",
                     r.arch.name,
-                    fmt_sig(r.opt.total_energy_pj / 1e6)
+                    fmt_sig(r.opt.total_energy_pj / 1e6),
+                    experiments::unmapped_note(r.opt.unmapped)
                 );
+            }
+        }
+        "co-opt" => {
+            let name = args.get_str("net", "alexnet");
+            let batch = args.get_u64("batch", 4);
+            let Some(net) = network(name, batch) else {
+                bail!("unknown network {name} (try: {:?})", crate::nn::network_names());
+            };
+            let rows = args.get_u64("rows", 16) as u32;
+            let cols = args.get_u64("cols", 16) as u32;
+            let mut space = DesignSpace::paper_default(ArrayShape { rows, cols });
+            if args.get("budget").is_some() {
+                space.max_onchip_bytes = Some(args.get_u64("budget", u64::MAX));
+            }
+            let mut cfg = NetOptConfig::new(effort_opts(effort), threads);
+            cfg.clock_ghz = args.get_f64("clock-ghz", 1.0);
+            if args.get("min-tops").is_some() {
+                cfg.min_tops = Some(args.get_f64("min-tops", 0.0));
+            }
+            let res = co_optimize(&net, &space, &Table3, &cfg);
+            if args.has_flag("json") {
+                println!("{}", co_opt_json(&net, &res, &cfg));
+            } else {
+                print_co_opt(&net, &res, &cfg);
             }
         }
         "sweep-dataflow" => show(&experiments::fig8_dataflow(layer_shape(&args), effort, threads)),
@@ -111,7 +147,12 @@ pub fn run(args: Args) -> Result<()> {
         "scaling" => show(&experiments::fig13_scaling(effort, threads)),
         "optimizer-gains" => show(&experiments::fig14_optimizer(effort, threads)),
         "validate" => show(&experiments::fig7_validation(threads)),
-        "search-stats" => show(&experiments::search_pruning(effort, threads)),
+        "search-stats" => {
+            println!("== per-layer staged-engine pruning (exhaustive vs b&b) ==");
+            show(&experiments::search_pruning(effort, threads));
+            println!("\n== network-level co-optimizer (arch points, b&b vs exhaustive) ==");
+            show(&experiments::netopt_pruning(effort, threads));
+        }
         "table3" => show(&experiments::table3()),
         "schedules" => print_schedules(),
         "run-e2e" => {
@@ -179,6 +220,121 @@ impl Effort {
             Effort::Full => 16,
         }
     }
+}
+
+/// Human-readable `co-opt` report: winner, top-5, stats line.
+fn print_co_opt(net: &Network, res: &CoOptResult, cfg: &NetOptConfig) {
+    println!(
+        "co-optimizing {} (batch {}, {} layers)...",
+        net.name,
+        net.batch,
+        net.layers.len()
+    );
+    match res.best() {
+        Some(best) => {
+            println!(
+                "best: {} — {} uJ, {:.2} TOPS/W, {:.3} TOPS @ {} GHz",
+                best.arch.describe(),
+                fmt_sig(best.opt.total_energy_pj / 1e6),
+                best.opt.tops_per_watt(),
+                best.opt.tops(cfg.clock_ghz),
+                cfg.clock_ghz
+            );
+        }
+        None => println!("no feasible architecture point (see stats below)"),
+    }
+    println!("\ntop-5 points:");
+    for r in res.ranked.iter().take(5) {
+        println!(
+            "  {:<24} {} uJ{}",
+            r.arch.name,
+            fmt_sig(r.opt.total_energy_pj / 1e6),
+            experiments::unmapped_note(r.opt.unmapped)
+        );
+    }
+    if cfg.prune == PruneMode::BranchAndBound {
+        println!("(b&b ranking: pruned points omitted; only the best point's");
+        println!(" energy is exact — `optimize` prints a fully exact ranking)");
+    }
+    println!("\n{}", res.stats);
+}
+
+/// Minimal JSON escaping for the hand-rolled reports (arch and network
+/// names are plain ASCII, but stay safe on quotes and backslashes).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format a float as a JSON number — `null` for non-finite values
+/// (e.g. the NaN TOPS of a point whose every layer is unmapped).
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Machine-readable `co-opt` report (the `--json` flag): every ranked
+/// point plus the netopt counters.
+fn co_opt_json(net: &Network, res: &CoOptResult, cfg: &NetOptConfig) -> String {
+    let mut points = Vec::with_capacity(res.ranked.len());
+    for r in &res.ranked {
+        points.push(format!(
+            "{{\"arch\":{},\"energy_pj\":{},\"cycles\":{},\"macs\":{},\
+             \"tops_per_watt\":{},\"tops\":{},\"unmapped\":{}}}",
+            json_str(&r.arch.name),
+            json_num(r.opt.total_energy_pj),
+            json_num(r.opt.total_cycles),
+            r.opt.total_macs,
+            json_num(r.opt.tops_per_watt()),
+            json_num(r.opt.tops(cfg.clock_ghz)),
+            r.opt.unmapped
+        ));
+    }
+    let s = &res.stats;
+    format!(
+        "{{\"network\":{},\"batch\":{},\"layers\":{},\"clock_ghz\":{},\
+         \"best\":{},\"points\":[{}],\
+         \"stats\":{{\"generated\":{},\"budget_filtered\":{},\"ratio_filtered\":{},\
+         \"candidates\":{},\"pruned\":{},\"evaluated_full\":{},\"infeasible\":{},\
+         \"throughput_filtered\":{},\"layer_searches\":{},\"layer_reruns\":{},\
+         \"engine\":{{\"stage2\":{},\"stage3\":{},\"pruned\":{},\"full\":{}}}}}}}",
+        json_str(&net.name),
+        net.batch,
+        net.layers.len(),
+        cfg.clock_ghz,
+        res.best()
+            .map(|b| json_str(&b.arch.name))
+            .unwrap_or_else(|| "null".into()),
+        points.join(","),
+        s.generated,
+        s.budget_filtered,
+        s.ratio_filtered,
+        s.candidates,
+        s.pruned,
+        s.evaluated_full,
+        s.infeasible,
+        s.throughput_filtered,
+        s.layer_searches,
+        s.layer_reruns,
+        s.engine.stage2,
+        s.engine.stage3,
+        s.engine.pruned,
+        s.engine.full
+    )
 }
 
 fn print_schedules() {

@@ -12,6 +12,7 @@ use crate::dataflow::{
 use crate::energy::{table3_anchors, CostModel, Table3};
 use crate::engine::PruneMode;
 use crate::loopnest::Shape;
+use crate::netopt::{co_optimize, CoOptResult, DesignSpace, NetOptConfig};
 use crate::nn::{network, Network};
 use crate::search::{
     optimize_layer, optimize_network, search_hierarchy, sweep_blockings, SearchOpts,
@@ -303,7 +304,8 @@ pub fn fig12_memory(effort: Effort, threads: usize) -> Table {
                 dram_bw_bytes_per_cycle: 16.0,
             };
             let opt = optimize_network(&net, &arch, &df, &Table3, &opts, threads);
-            row.push(fmt_sig(opt.total_energy_pj / 1e6));
+            let cell = fmt_sig(opt.total_energy_pj / 1e6) + &unmapped_note(opt.unmapped);
+            row.push(cell);
         }
         t.row(row);
     }
@@ -341,11 +343,13 @@ pub fn fig13_scaling(effort: Effort, threads: usize) -> Table {
                 .find(|l| l.kind == crate::arch::LevelKind::Sram)
                 .map(|l| l.size_bytes)
                 .unwrap_or(0);
+            let energy =
+                fmt_sig(best.opt.total_energy_pj / 1e6) + &unmapped_note(best.opt.unmapped);
             t.row(vec![
                 format!("{n}x{n}"),
                 fmt_bytes(rf),
                 fmt_bytes(sram),
-                fmt_sig(best.opt.total_energy_pj / 1e6),
+                energy,
                 format!("{rf}"),
             ]);
         }
@@ -387,15 +391,20 @@ pub fn fig14_optimizer(effort: Effort, threads: usize) -> Table {
             threads,
         );
         if let Some(best) = results.first() {
+            // flag each side's unmapped layers on its own column, so an
+            // incomplete baseline is not misread as an optimizer defect
+            let base_cell =
+                fmt_sig(baseline.total_energy_pj / 1e6) + &unmapped_note(baseline.unmapped);
+            let arch_name = best.arch.name.clone() + &unmapped_note(best.opt.unmapped);
             t.row(vec![
                 name.to_string(),
-                fmt_sig(baseline.total_energy_pj / 1e6),
+                base_cell,
                 fmt_sig(best.opt.total_energy_pj / 1e6),
                 format!(
                     "{:.2}x",
                     baseline.total_energy_pj / best.opt.total_energy_pj
                 ),
-                best.arch.name.clone(),
+                arch_name,
                 format!("{:.2}", best.opt.tops_per_watt()),
             ]);
         }
@@ -404,11 +413,16 @@ pub fn fig14_optimizer(effort: Effort, threads: usize) -> Table {
 }
 
 /// Fig 14 companion: the large (TPU-like) baseline for one network.
+/// Returns `None` for unknown networks *and* when any layer came back
+/// unmappable — a partial total would silently under-report the chip.
 pub fn large_chip_energy(name: &str, effort: Effort, threads: usize) -> Option<f64> {
     let df = Dataflow::parse("C|K").unwrap();
     let opts = effort.opts();
     let net = reduce_for_effort(network(name, effort.batch())?, effort);
     let opt = optimize_network(&net, &tpu_like(), &df, &Table3, &opts, threads);
+    if opt.unmapped > 0 {
+        return None;
+    }
     Some(opt.total_energy_pj)
 }
 
@@ -418,19 +432,18 @@ pub fn large_chip_energy(name: &str, effort: Effort, threads: usize) -> Option<f
 fn reduce_for_effort(net: Network, effort: Effort) -> Network {
     match effort {
         Effort::Full => net,
-        Effort::Fast => {
-            let mut seen = std::collections::HashSet::new();
-            let layers = net
-                .layers
-                .into_iter()
-                .filter(|l| seen.insert((l.shape.bounds, l.shape.stride)))
-                .collect();
-            Network {
-                name: net.name,
-                layers,
-                batch: net.batch,
-            }
-        }
+        Effort::Fast => net.dedup_shapes(),
+    }
+}
+
+/// Cell/line annotation for results with unmappable layers: empty when
+/// fully mapped, `" (N unmapped)"` otherwise — their totals under-report
+/// and must not read as valid design points.
+pub(crate) fn unmapped_note(unmapped: usize) -> String {
+    if unmapped == 0 {
+        String::new()
+    } else {
+        format!(" ({unmapped} unmapped)")
     }
 }
 
@@ -470,6 +483,58 @@ pub fn search_pruning(effort: Effort, threads: usize) -> Table {
             format!("{same}"),
         ]);
     }
+    t
+}
+
+/// Network-level companion to [`search_pruning`] (CLI `search-stats`):
+/// runs the §6.3 hierarchy sweep once with the cross-architecture
+/// branch-and-bound and once exhaustively, and reports the aggregated
+/// [`crate::netopt::NetOptStats`] counters side by side — architecture
+/// points generated / ratio-filtered / pruned / fully evaluated, plus
+/// the rolled-up engine counters and whether the winners matched (the
+/// netopt winner-identity contract says they must; `perf_netopt`
+/// asserts it).
+pub fn netopt_pruning(effort: Effort, threads: usize) -> Table {
+    let mut opts = effort.opts();
+    opts.max_order_combos = 9;
+    let net = reduce_for_effort(network("mlp-m", 32).unwrap(), effort);
+    let space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+    let bb_cfg = NetOptConfig::new(opts.clone(), threads);
+    let ex_cfg = NetOptConfig::exhaustive(opts, threads);
+    let bb = co_optimize(&net, &space, &Table3, &bb_cfg);
+    let ex = co_optimize(&net, &space, &Table3, &ex_cfg);
+    let same = match (bb.best(), ex.best()) {
+        (Some(a), Some(b)) => {
+            a.arch.name == b.arch.name && a.opt.total_energy_pj == b.opt.total_energy_pj
+        }
+        _ => false,
+    };
+    let (sb, se) = (&bb.stats, &ex.stats);
+    let mut t = Table::new(vec!["metric", "b&b", "exhaustive"]);
+    let counters: Vec<(&str, u64, u64)> = vec![
+        ("arch points generated", sb.generated as u64, se.generated as u64),
+        ("budget-filtered", sb.budget_filtered as u64, se.budget_filtered as u64),
+        ("ratio-filtered (Obs 2)", sb.ratio_filtered as u64, se.ratio_filtered as u64),
+        ("candidates", sb.candidates as u64, se.candidates as u64),
+        ("pruned (network bound)", sb.pruned as u64, se.pruned as u64),
+        ("fully evaluated", sb.evaluated_full as u64, se.evaluated_full as u64),
+        ("infeasible", sb.infeasible as u64, se.infeasible as u64),
+        ("layer searches", sb.layer_searches as u64, se.layer_searches as u64),
+        ("seed reruns", sb.layer_reruns as u64, se.layer_reruns as u64),
+        ("engine full evals", sb.engine.full, se.engine.full),
+        ("engine pruned@bound", sb.engine.pruned, se.engine.pruned),
+    ];
+    for (metric, b, e) in counters {
+        t.row(vec![metric.to_string(), format!("{b}"), format!("{e}")]);
+    }
+    let winner = |r: &CoOptResult| -> String {
+        r.best()
+            .map(|w| w.arch.name.clone())
+            .unwrap_or_else(|| "-".into())
+    };
+    t.row(vec!["winner".to_string(), winner(&bb), winner(&ex)]);
+    let same_cell = format!("{same}");
+    t.row(vec!["same winner".to_string(), same_cell, String::new()]);
     t
 }
 

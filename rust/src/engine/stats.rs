@@ -62,6 +62,17 @@ pub struct EvalSnapshot {
 }
 
 impl EvalSnapshot {
+    /// Accumulate another snapshot's counters — the roll-up used by
+    /// network- and fleet-level reports ([`crate::search::NetworkOpt`],
+    /// [`crate::netopt::NetOptStats`]).
+    pub fn absorb(&mut self, other: &EvalSnapshot) {
+        self.stage2 += other.stage2;
+        self.fit_rejected += other.fit_rejected;
+        self.stage3 += other.stage3;
+        self.pruned += other.pruned;
+        self.full += other.full;
+    }
+
     /// Fraction of started stage-3 evaluations that were pruned.
     pub fn prune_rate(&self) -> f64 {
         if self.stage3 == 0 {
@@ -99,7 +110,18 @@ pub struct Incumbent(AtomicU64);
 impl Incumbent {
     /// Fresh incumbent at +infinity (nothing prunes).
     pub fn new() -> Self {
-        Incumbent(AtomicU64::new(f64::INFINITY.to_bits()))
+        Self::with_bound(f64::INFINITY)
+    }
+
+    /// Incumbent pre-seeded at `bound` — e.g. a best-known energy carried
+    /// over from an earlier search. `f64::INFINITY` behaves like [`new`].
+    /// Seeding prunes candidates against `bound` from the start, so the
+    /// search result is only guaranteed to equal the unseeded optimum
+    /// when that optimum is `<= bound` (see `netopt`'s rerun fallback).
+    ///
+    /// [`new`]: Incumbent::new
+    pub fn with_bound(bound: f64) -> Self {
+        Incumbent(AtomicU64::new(bound.to_bits()))
     }
 
     /// Current bound.
@@ -156,6 +178,40 @@ mod tests {
             }
         });
         assert_eq!(inc.get(), 1.0);
+    }
+
+    #[test]
+    fn seeded_incumbent_prunes_from_the_start() {
+        let inc = Incumbent::with_bound(10.0);
+        assert_eq!(inc.get(), 10.0);
+        inc.observe(12.0); // worse than the seed: ignored
+        assert_eq!(inc.get(), 10.0);
+        inc.observe(4.0);
+        assert_eq!(inc.get(), 4.0);
+    }
+
+    #[test]
+    fn snapshot_absorb_sums_counters() {
+        let mut a = EvalSnapshot {
+            stage2: 1,
+            fit_rejected: 2,
+            stage3: 3,
+            pruned: 4,
+            full: 5,
+        };
+        let b = EvalSnapshot {
+            stage2: 10,
+            fit_rejected: 20,
+            stage3: 30,
+            pruned: 40,
+            full: 50,
+        };
+        a.absorb(&b);
+        assert_eq!(a.stage2, 11);
+        assert_eq!(a.fit_rejected, 22);
+        assert_eq!(a.stage3, 33);
+        assert_eq!(a.pruned, 44);
+        assert_eq!(a.full, 55);
     }
 
     #[test]

@@ -22,8 +22,12 @@
 //!   (the stand-in for the paper's post-synthesis validation, Fig 7);
 //! - [`halide`] — the schedule DSL (`split`, `reorder`, `in_`/`compute_at`,
 //!   `unroll`, `systolic`, `accelerate`) and its lowering;
-//! - [`search`] — design-space enumeration and the efficient auto-optimizer
-//!   (§6.3: fix `C|K`, 4–16 size-ratio rule);
+//! - [`search`] — design-space enumeration and the efficient per-layer
+//!   auto-optimizer;
+//! - [`netopt`] — network-level resource co-optimization (§6.3: fix
+//!   `C|K`, 4–16 size-ratio rule): architecture design-space generation
+//!   and a cross-architecture branch-and-bound sharing one incumbent
+//!   across the whole memory-hierarchy sweep;
 //! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
 //!   artifacts (the request-path compute; Python is build-time only);
 //! - [`coordinator`] — CLI, sweep orchestration, reports.
@@ -38,6 +42,7 @@ pub mod energy;
 pub mod engine;
 pub mod halide;
 pub mod loopnest;
+pub mod netopt;
 pub mod nn;
 pub mod runtime;
 pub mod search;

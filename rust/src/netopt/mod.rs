@@ -1,0 +1,543 @@
+//! Network-level resource co-optimization — the paper's headline §6.3
+//! result (up to 4.2× CNN / 1.6× LSTM / 1.8× MLP energy at constant
+//! throughput comes from *resource allocation*, not per-layer mapping).
+//!
+//! The subsystem has four parts:
+//!
+//! 1. **[`DesignSpace`]** — enumerates architecture points (RF / RF2 /
+//!    GBUF sizes, array shapes, bus styles) under an optional on-chip
+//!    capacity budget and the Observation-2 aggregate size-ratio rule
+//!    ([`OBS2_RATIO_MIN`]..[`OBS2_RATIO_MAX`], widenable through
+//!    documented knobs), replacing the grid that used to be hardcoded in
+//!    `search_hierarchy`.
+//! 2. **Cross-architecture branch-and-bound** ([`co_optimize`]) — all
+//!    architecture points share one network-level
+//!    [`Incumbent`](crate::engine::Incumbent). A point is abandoned as
+//!    soon as its partial per-layer energy sum plus the remaining
+//!    layers' compulsory-DRAM floors (the same floor formula as
+//!    `EvalCtx::floor_pj` — MAC energy plus full weight and output
+//!    top-level traffic, an admissible lower bound) exceeds the best
+//!    completed network. Each surviving layer search additionally seeds
+//!    its layer-level incumbent from the best-known architecture's
+//!    same-layer result; because that borrowed seed is *not* admissible
+//!    at the network level, a search whose result does not beat the seed
+//!    is rerun against the admissible network bound alone, which
+//!    restores exactness.
+//! 3. **Sharded parallel evaluation** — architecture points are split
+//!    into contiguous shards over the safe
+//!    [`parallel_map`](crate::search::parallel_map); the per-layer-shape
+//!    dedup profile is computed once for the whole run and each shard
+//!    shares one [`DivisorCache`] across all of its points.
+//! 4. **Iso-throughput mode** — [`NetOptConfig::min_tops`] excludes
+//!    points below a throughput floor (the paper's constant-throughput
+//!    comparison), and [`NetOptStats`] rolls up arch-point and engine
+//!    counters for the `search-stats` report.
+//!
+//! ## Winner-identity contract
+//!
+//! With `NetOptConfig::prune == BranchAndBound` the returned best point
+//! (architecture *and* per-layer mappings, bit-for-bit) is identical to
+//! the network-level exhaustive sweep, by the same argument as the
+//! engine's layer-level pruning contract: the floors are admissible
+//! (weights and outputs must each cross the top boundary at least once
+//! in full), the per-layer bound only ever discards candidates that
+//! cannot be part of a network beating the incumbent, and the seed-rerun
+//! fallback removes the one inadmissible shortcut. Ties are broken by
+//! enumeration order in both modes (stable sort over a shared
+//! accumulation code path). `netopt::tests` asserts this equivalence on
+//! small spaces; `benches/perf_netopt.rs` gates it in CI together with a
+//! strict reduction in fully evaluated points.
+//!
+//! `search::optimize_network` and `search::search_hierarchy` are thin
+//! compatibility shims over [`evaluate_network`] and [`co_optimize`].
+
+mod space;
+mod stats;
+
+pub use space::{DesignSpace, SpaceEnumeration, OBS2_RATIO_MAX, OBS2_RATIO_MIN};
+pub use stats::NetOptStats;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::arch::Arch;
+use crate::dataflow::Dataflow;
+use crate::energy::CostModel;
+use crate::engine::{DivisorCache, EvalSnapshot, Incumbent, PruneMode, PRUNE_SLACK};
+use crate::loopnest::{Shape, Tensor, NDIMS};
+use crate::nn::Network;
+use crate::search::{
+    optimize_layer_seeded, parallel_map, HierarchyResult, LayerOpt, NetworkOpt, SearchOpts,
+};
+
+/// Configuration of one [`co_optimize`] run.
+#[derive(Debug, Clone)]
+pub struct NetOptConfig {
+    /// The fixed dataflow (Observation 1: `C|K` is near-optimal across
+    /// hierarchies, so the co-optimizer does not sweep it).
+    pub df: Dataflow,
+    /// Per-layer search options. `opts.prune` controls the *layer-level*
+    /// candidate pruning, independent of the network-level mode below.
+    pub opts: SearchOpts,
+    /// Worker threads: architecture points are sharded across them; any
+    /// leftover parallelism goes to the per-layer searches.
+    pub threads: usize,
+    /// Network-level mode: branch-and-bound (default) abandons
+    /// architecture points against the shared incumbent; exhaustive
+    /// fully evaluates every point (the `search_hierarchy` shim's
+    /// behavior, needed when the caller wants the whole ranking).
+    pub prune: PruneMode,
+    /// Iso-throughput constraint: fully evaluated points below this
+    /// many TOPS (at [`clock_ghz`](Self::clock_ghz)) are excluded from
+    /// the ranking and never set the incumbent.
+    pub min_tops: Option<f64>,
+    /// Clock used to convert cycles to TOPS for `min_tops`.
+    pub clock_ghz: f64,
+}
+
+impl NetOptConfig {
+    /// Default configuration: `C|K` dataflow, network-level
+    /// branch-and-bound, no throughput constraint, 1 GHz clock.
+    pub fn new(opts: SearchOpts, threads: usize) -> Self {
+        NetOptConfig {
+            df: Dataflow::parse("C|K").unwrap(),
+            opts,
+            threads,
+            prune: PruneMode::BranchAndBound,
+            min_tops: None,
+            clock_ghz: 1.0,
+        }
+    }
+
+    /// Like [`new`](Self::new) but with network-level pruning disabled,
+    /// so every architecture point is fully evaluated and ranked.
+    pub fn exhaustive(opts: SearchOpts, threads: usize) -> Self {
+        NetOptConfig {
+            prune: PruneMode::Exhaustive,
+            ..Self::new(opts, threads)
+        }
+    }
+
+    /// Same configuration with an iso-throughput floor.
+    pub fn with_min_tops(mut self, min_tops: f64) -> Self {
+        self.min_tops = Some(min_tops);
+        self
+    }
+}
+
+/// The outcome of [`co_optimize`].
+#[derive(Debug, Clone)]
+pub struct CoOptResult {
+    /// Completed (non-abandoned, throughput-passing) architecture
+    /// points: fully mapped points first, each group sorted by ascending
+    /// network energy, ties in enumeration order. Under branch-and-bound
+    /// this omits the abandoned points, and the *first* element is the
+    /// identical, exact winner the exhaustive mode finds; later entries
+    /// are upper bounds — their layer searches ran under the network
+    /// bound, so a non-winning point's energies may exceed its true
+    /// optima. Use the exhaustive mode (the `search_hierarchy` shim)
+    /// when the whole ranking must be exact.
+    pub ranked: Vec<HierarchyResult>,
+    /// Arch-point and engine counter roll-up.
+    pub stats: NetOptStats,
+}
+
+impl CoOptResult {
+    /// The winning fully-mapped point, if any architecture mapped every
+    /// layer (and passed the throughput constraint).
+    pub fn best(&self) -> Option<&HierarchyResult> {
+        self.ranked.first().filter(|r| r.opt.unmapped == 0)
+    }
+}
+
+/// Layer-shape dedup key: identical `(bounds, stride)` layers share one
+/// search per architecture point.
+type LayerKey = ([u64; NDIMS], u32);
+
+/// One layer of the shared network profile.
+struct ProfLayer {
+    shape: Shape,
+    key: LayerKey,
+    /// Occurrences of this shape at this index or later (>= 1); tightens
+    /// the per-occurrence bound for repeated layers (LSTM gate banks,
+    /// VGG's repeated convs).
+    remaining_same: usize,
+}
+
+/// Shape-dedup profile of the network, computed once and shared across
+/// every architecture point of a run.
+struct NetProfile {
+    layers: Vec<ProfLayer>,
+}
+
+impl NetProfile {
+    fn new(net: &Network) -> Self {
+        let mut layers: Vec<ProfLayer> = net
+            .layers
+            .iter()
+            .map(|l| ProfLayer {
+                shape: l.shape,
+                key: (l.shape.bounds, l.shape.stride),
+                remaining_same: 0,
+            })
+            .collect();
+        let mut seen: HashMap<LayerKey, usize> = HashMap::new();
+        for pl in layers.iter_mut().rev() {
+            let c = seen.entry(pl.key).or_insert(0);
+            *c += 1;
+            pl.remaining_same = *c;
+        }
+        NetProfile { layers }
+    }
+
+    /// Per-layer compulsory energy floors and their suffix sums
+    /// (`suffix[i]` = floors of layers `i..`; `suffix[len]` = 0). The
+    /// floor is `EvalCtx::floor_pj`'s formula: MAC energy plus full
+    /// weight and output traffic across the top (DRAM) boundary — a
+    /// rigorous lower bound on any mapping's energy (the input floor is
+    /// deliberately omitted, exactly as in the engine).
+    fn floors(&self, arch: &Arch, cost: &dyn CostModel) -> (Vec<f64>, Vec<f64>) {
+        let top = cost.level_access(arch, arch.num_levels() - 1);
+        let n = self.layers.len();
+        let mut per = Vec::with_capacity(n);
+        for pl in &self.layers {
+            let mac_energy = pl.shape.macs() as f64 * cost.mac();
+            let w_floor = pl.shape.tensor_elems(Tensor::Weight) as f64 * top;
+            let o_floor = pl.shape.tensor_elems(Tensor::Output) as f64 * top;
+            per.push(mac_energy + w_floor + o_floor);
+        }
+        let mut suffix = vec![0.0; n + 1];
+        for i in (0..n).rev() {
+            suffix[i] = per[i] + suffix[i + 1];
+        }
+        (per, suffix)
+    }
+}
+
+/// How one architecture point ended.
+enum PointEval {
+    /// Every layer evaluated (possibly with unmapped layers, which make
+    /// the point infeasible). `passes_tops` is the `min_tops` gate,
+    /// computed once here so incumbent admission and ranking admission
+    /// can never disagree.
+    Complete { opt: NetworkOpt, passes_tops: bool },
+    /// Abandoned by the network-level bound (or a bounded layer search
+    /// that came back empty): this point cannot beat the incumbent.
+    Pruned,
+}
+
+/// Per-point evaluation report.
+struct PointReport {
+    eval: PointEval,
+    engine: EvalSnapshot,
+    searches: usize,
+    reruns: usize,
+}
+
+/// Everything shared by the worker shards of one run.
+struct NetRun<'a> {
+    profile: &'a NetProfile,
+    df: &'a Dataflow,
+    cost: &'a dyn CostModel,
+    opts: &'a SearchOpts,
+    /// Threads handed to each per-layer search.
+    threads: usize,
+    /// Network-level branch-and-bound enabled?
+    net_bnb: bool,
+    min_tops: Option<f64>,
+    clock_ghz: f64,
+    incumbent: &'a Incumbent,
+    /// Best-known per-layer-shape energies (from incumbent-setting
+    /// points), used to seed layer searches on other architectures.
+    seeds: &'a Mutex<HashMap<LayerKey, f64>>,
+}
+
+impl NetRun<'_> {
+    fn evaluate_point(&self, arch: &Arch, cache: &mut DivisorCache) -> PointReport {
+        let (floor_l, suffix) = self.profile.floors(arch, self.cost);
+        let layer_bnb = self.opts.prune == PruneMode::BranchAndBound;
+        let nlayers = self.profile.layers.len();
+        let mut shape_results: HashMap<LayerKey, Option<LayerOpt>> = HashMap::new();
+        let mut per_layer: Vec<Option<LayerOpt>> = Vec::with_capacity(nlayers);
+        let mut total_e = 0.0;
+        let mut total_c = 0.0;
+        let mut total_m = 0u64;
+        let mut unmapped_layers: Vec<usize> = Vec::new();
+        let mut engine = EvalSnapshot::default();
+        let mut searches = 0usize;
+        let mut reruns = 0usize;
+
+        for (li, pl) in self.profile.layers.iter().enumerate() {
+            let inc = if self.net_bnb {
+                self.incumbent.get()
+            } else {
+                f64::INFINITY
+            };
+            // Admissible abandon check: even if every remaining layer
+            // only paid its compulsory floor, the point cannot beat the
+            // incumbent.
+            if total_e + suffix[li] > inc * (1.0 + PRUNE_SLACK) {
+                return PointReport {
+                    eval: PointEval::Pruned,
+                    engine,
+                    searches,
+                    reruns,
+                };
+            }
+            // Admissible per-occurrence bound for this layer's search:
+            // the incumbent minus what is already spent and the floors
+            // of the *other* remaining layers, split across the
+            // remaining occurrences of this same shape.
+            let rem = pl.remaining_same as f64;
+            let net_bound = if inc.is_finite() {
+                (inc - total_e - suffix[li + 1] + (rem - 1.0) * floor_l[li]) / rem
+            } else {
+                f64::INFINITY
+            };
+            let cached = shape_results.get(&pl.key).cloned();
+            let entry = match cached {
+                Some(e) => e,
+                None => {
+                    let seed = if self.net_bnb && layer_bnb {
+                        let m = self.seeds.lock().expect("netopt seeds lock");
+                        m.get(&pl.key).copied().unwrap_or(f64::INFINITY)
+                    } else {
+                        f64::INFINITY
+                    };
+                    let bound0 = if layer_bnb {
+                        net_bound.min(seed)
+                    } else {
+                        f64::INFINITY
+                    };
+                    searches += 1;
+                    let (mut lo, snap) = optimize_layer_seeded(
+                        &pl.shape,
+                        arch,
+                        self.df,
+                        self.cost,
+                        self.opts,
+                        self.threads,
+                        bound0,
+                        cache,
+                    );
+                    engine.absorb(&snap);
+                    // The borrowed cross-architecture seed is not
+                    // admissible at the network level: if it was the
+                    // binding constraint and no candidate beat it, the
+                    // result may be clipped — rerun against the
+                    // admissible network bound alone.
+                    let clipped = match lo {
+                        Some(ref l) => l.result.energy_pj > seed,
+                        None => true,
+                    };
+                    if layer_bnb && seed < net_bound && clipped {
+                        reruns += 1;
+                        let (lo2, snap2) = optimize_layer_seeded(
+                            &pl.shape,
+                            arch,
+                            self.df,
+                            self.cost,
+                            self.opts,
+                            self.threads,
+                            net_bound,
+                            cache,
+                        );
+                        engine.absorb(&snap2);
+                        lo = lo2;
+                    }
+                    if lo.is_none() && layer_bnb && net_bound.is_finite() {
+                        // Unmappable or fully pruned under an admissible
+                        // bound — either way the point cannot win.
+                        return PointReport {
+                            eval: PointEval::Pruned,
+                            engine,
+                            searches,
+                            reruns,
+                        };
+                    }
+                    shape_results.insert(pl.key, lo.clone());
+                    lo
+                }
+            };
+            match entry {
+                Some(lo) => {
+                    total_e += lo.result.energy_pj;
+                    total_c += lo.result.cycles;
+                    total_m += lo.result.macs;
+                    per_layer.push(Some(lo));
+                }
+                None => {
+                    unmapped_layers.push(li);
+                    per_layer.push(None);
+                }
+            }
+        }
+
+        let opt = NetworkOpt {
+            per_layer,
+            total_energy_pj: total_e,
+            total_cycles: total_c,
+            total_macs: total_m,
+            unmapped: unmapped_layers.len(),
+            unmapped_layers,
+        };
+        let meets_tops = match self.min_tops {
+            Some(mt) => opt.tops(self.clock_ghz) >= mt,
+            None => true,
+        };
+        let feasible = opt.unmapped == 0 && meets_tops;
+        if self.net_bnb && feasible {
+            self.incumbent.observe(opt.total_energy_pj);
+            let mut m = self.seeds.lock().expect("netopt seeds lock");
+            for (k, v) in &shape_results {
+                if let Some(lo) = v {
+                    let e = m.entry(*k).or_insert(f64::INFINITY);
+                    if lo.result.energy_pj < *e {
+                        *e = lo.result.energy_pj;
+                    }
+                }
+            }
+        }
+        PointReport {
+            eval: PointEval::Complete {
+                opt,
+                passes_tops: meets_tops,
+            },
+            engine,
+            searches,
+            reruns,
+        }
+    }
+}
+
+/// Evaluate one network on one architecture — shape-deduplicated
+/// per-layer searches, unmapped-layer tracking, no cross-architecture
+/// bound. The backend of the `search::optimize_network` shim.
+pub fn evaluate_network(
+    net: &Network,
+    arch: &Arch,
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    opts: &SearchOpts,
+    threads: usize,
+) -> NetworkOpt {
+    let profile = NetProfile::new(net);
+    let incumbent = Incumbent::new();
+    let seeds: Mutex<HashMap<LayerKey, f64>> = Mutex::new(HashMap::new());
+    let run = NetRun {
+        profile: &profile,
+        df,
+        cost,
+        opts,
+        threads,
+        net_bnb: false,
+        min_tops: None,
+        clock_ghz: 1.0,
+        incumbent: &incumbent,
+        seeds: &seeds,
+    };
+    let mut cache = DivisorCache::new();
+    match run.evaluate_point(arch, &mut cache).eval {
+        PointEval::Complete { opt, .. } => opt,
+        PointEval::Pruned => unreachable!("no network bound when net_bnb is off"),
+    }
+}
+
+/// Co-optimize a network across a whole architecture design space: run
+/// the per-layer optimizer on every (surviving) architecture point,
+/// sharing a network-level incumbent, layer-shape dedup, and per-shard
+/// divisor caches. See the module docs for the bound construction and
+/// the winner-identity contract.
+pub fn co_optimize(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+) -> CoOptResult {
+    let enumeration = space.enumerate();
+    let mut stats = NetOptStats {
+        generated: enumeration.generated,
+        budget_filtered: enumeration.budget_filtered,
+        ratio_filtered: enumeration.ratio_filtered,
+        candidates: enumeration.candidates.len(),
+        ..Default::default()
+    };
+    let n = enumeration.candidates.len();
+    if n == 0 {
+        return CoOptResult {
+            ranked: Vec::new(),
+            stats,
+        };
+    }
+    let profile = NetProfile::new(net);
+    let incumbent = Incumbent::new();
+    let seeds: Mutex<HashMap<LayerKey, f64>> = Mutex::new(HashMap::new());
+    let nshards = cfg.threads.max(1).min(n);
+    let run = NetRun {
+        profile: &profile,
+        df: &cfg.df,
+        cost,
+        opts: &cfg.opts,
+        threads: (cfg.threads / nshards).max(1),
+        net_bnb: cfg.prune == PruneMode::BranchAndBound,
+        min_tops: cfg.min_tops,
+        clock_ghz: cfg.clock_ghz,
+        incumbent: &incumbent,
+        seeds: &seeds,
+    };
+
+    // Contiguous shards in enumeration order; each shard shares one
+    // divisor cache across all of its architecture points.
+    let mut indexed: Vec<(usize, Arch)> = Vec::with_capacity(n);
+    for (i, a) in enumeration.candidates.iter().enumerate() {
+        indexed.push((i, a.clone()));
+    }
+    let chunk = n.div_ceil(nshards);
+    let shards: Vec<Vec<(usize, Arch)>> = indexed.chunks(chunk).map(|c| c.to_vec()).collect();
+    let reports: Vec<(usize, PointReport)> = parallel_map(shards, nshards, |shard| {
+        let mut cache = DivisorCache::new();
+        shard
+            .iter()
+            .map(|(i, arch)| (*i, run.evaluate_point(arch, &mut cache)))
+            .collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+
+    let mut ranked: Vec<HierarchyResult> = Vec::new();
+    for (idx, report) in reports {
+        stats.engine.absorb(&report.engine);
+        stats.layer_searches += report.searches;
+        stats.layer_reruns += report.reruns;
+        match report.eval {
+            PointEval::Pruned => stats.pruned += 1,
+            PointEval::Complete { opt, passes_tops } => {
+                stats.evaluated_full += 1;
+                if opt.unmapped > 0 {
+                    stats.infeasible += 1;
+                }
+                if !passes_tops {
+                    stats.throughput_filtered += 1;
+                    continue;
+                }
+                ranked.push(HierarchyResult {
+                    arch: enumeration.candidates[idx].clone(),
+                    opt,
+                });
+            }
+        }
+    }
+    // Fully mapped points first, then ascending energy; the sort is
+    // stable, so ties keep enumeration order (the exhaustive/B&B
+    // winner-identity contract relies on this).
+    ranked.sort_by(|a, b| {
+        let feasibility = a.opt.unmapped.cmp(&b.opt.unmapped);
+        let energy = a.opt.total_energy_pj.partial_cmp(&b.opt.total_energy_pj);
+        feasibility.then(energy.unwrap())
+    });
+    CoOptResult { ranked, stats }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,248 @@
+//! Architecture design-space generation for the network-level resource
+//! co-optimizer: the RF / RF2 / GBUF / array / bus grid, an optional
+//! on-chip capacity budget, and the paper's Observation-2 inter-level
+//! size-ratio rule.
+
+use crate::arch::{Arch, ArrayBus, ArrayShape, MemLevel};
+
+/// Observation 2 (§6.3): each on-chip storage level should be roughly
+/// 4×–16× larger than the level below it **in aggregate** (register
+/// levels are per-PE, so their aggregate size is `size × PEs`). These
+/// constants are the paper's bounds; widen them only through the
+/// documented [`DesignSpace::ratio_min`] / [`DesignSpace::ratio_max`]
+/// knobs.
+pub const OBS2_RATIO_MIN: f64 = 4.0;
+/// Upper bound of the Observation-2 ratio rule (see [`OBS2_RATIO_MIN`]).
+pub const OBS2_RATIO_MAX: f64 = 16.0;
+
+/// The architecture grid the co-optimizer sweeps: memory sizes, array
+/// shapes, and bus styles, filtered by an optional on-chip capacity
+/// budget and the Observation-2 ratio rule.
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    /// First-level (per-PE) register file sizes, bytes.
+    pub rf1_sizes: Vec<u64>,
+    /// Second-level RF sizes as multiples of the first level (Observation
+    /// 2 applied between the two register levels). Empty disables
+    /// two-level points; single-level points are always generated.
+    pub rf2_ratios: Vec<u64>,
+    /// Cap on the second-level RF size, bytes (larger points skipped).
+    pub rf2_max_bytes: u64,
+    /// Shared buffer sizes, bytes.
+    pub gbuf_sizes: Vec<u64>,
+    /// PE array shapes to sweep.
+    pub arrays: Vec<ArrayShape>,
+    /// Interconnect styles to sweep.
+    pub buses: Vec<ArrayBus>,
+    /// Word size in bytes.
+    pub word_bytes: u32,
+    /// DRAM bandwidth, bytes per cycle.
+    pub dram_bw_bytes_per_cycle: f64,
+    /// Optional on-chip capacity budget: points whose
+    /// [`Arch::onchip_bytes`] exceeds it are dropped (counted in
+    /// [`SpaceEnumeration::budget_filtered`]).
+    pub max_onchip_bytes: Option<u64>,
+    /// Lower bound of the aggregate inter-level size-ratio filter.
+    /// Defaults to [`OBS2_RATIO_MIN`]; lowering it is a deliberate,
+    /// documented widening of the paper's rule (e.g. for equivalence
+    /// tests that want the unfiltered grid).
+    pub ratio_min: f64,
+    /// Upper bound of the ratio filter; defaults to [`OBS2_RATIO_MAX`].
+    pub ratio_max: f64,
+}
+
+/// The outcome of [`DesignSpace::enumerate`]: surviving candidates plus
+/// the filter counts the `search-stats` report and [`super::NetOptStats`]
+/// surface.
+#[derive(Debug, Clone)]
+pub struct SpaceEnumeration {
+    /// Candidates that passed every filter, in deterministic grid order.
+    pub candidates: Vec<Arch>,
+    /// Raw grid points before filtering.
+    pub generated: usize,
+    /// Points dropped by the capacity budget.
+    pub budget_filtered: usize,
+    /// Points dropped by the Observation-2 ratio rule.
+    pub ratio_filtered: usize,
+}
+
+impl DesignSpace {
+    /// The §6.3 auto-optimizer's default grid on a fixed PE array: the
+    /// paper's RF sizes, 4/8/16× second-level RF steps, the three mobile
+    /// buffer sizes, a systolic bus, and the strict Observation-2 filter.
+    /// (This replaces the old `search_hierarchy` hardcoded grid, whose
+    /// ratio loop only ever ran at 8× and whose filter accepted
+    /// 0.25–64×.)
+    pub fn paper_default(array: ArrayShape) -> Self {
+        DesignSpace {
+            rf1_sizes: vec![16, 32, 64, 128, 512],
+            rf2_ratios: vec![4, 8, 16],
+            rf2_max_bytes: 1024,
+            gbuf_sizes: vec![64 << 10, 128 << 10, 256 << 10],
+            arrays: vec![array],
+            buses: vec![ArrayBus::Systolic],
+            word_bytes: 2,
+            dram_bw_bytes_per_cycle: 16.0,
+            max_onchip_bytes: None,
+            ratio_min: OBS2_RATIO_MIN,
+            ratio_max: OBS2_RATIO_MAX,
+        }
+    }
+
+    /// Does `arch` satisfy this space's aggregate inter-level size-ratio
+    /// rule (Observation 2, possibly widened)?
+    pub fn obs2_ok(&self, arch: &Arch) -> bool {
+        arch.onchip_level_bytes().windows(2).all(|w| {
+            let r = w[1] as f64 / w[0] as f64;
+            r >= self.ratio_min && r <= self.ratio_max
+        })
+    }
+
+    /// Enumerate the grid and apply the budget and ratio filters,
+    /// reporting how many points each filter removed.
+    pub fn enumerate(&self) -> SpaceEnumeration {
+        let mut raw: Vec<Arch> = Vec::new();
+        for &array in &self.arrays {
+            for &bus in &self.buses {
+                for &rf in &self.rf1_sizes {
+                    for &gbuf in &self.gbuf_sizes {
+                        raw.push(self.point(array, bus, &[rf], gbuf));
+                        for &ratio in &self.rf2_ratios {
+                            let rf2 = rf * ratio;
+                            if rf2 > self.rf2_max_bytes {
+                                continue;
+                            }
+                            raw.push(self.point(array, bus, &[rf, rf2], gbuf));
+                        }
+                    }
+                }
+            }
+        }
+        let generated = raw.len();
+        if let Some(budget) = self.max_onchip_bytes {
+            raw.retain(|a| a.onchip_bytes() <= budget);
+        }
+        let budget_filtered = generated - raw.len();
+        raw.retain(|a| self.obs2_ok(a));
+        let ratio_filtered = generated - budget_filtered - raw.len();
+        SpaceEnumeration {
+            candidates: raw,
+            generated,
+            budget_filtered,
+            ratio_filtered,
+        }
+    }
+
+    /// Build one architecture point. `rfs` is one or two register levels,
+    /// innermost first.
+    fn point(&self, array: ArrayShape, bus: ArrayBus, rfs: &[u64], gbuf: u64) -> Arch {
+        let mut name = match rfs {
+            [rf] => format!("rf{rf}-sram{}", gbuf >> 10),
+            [rf, rf2] => format!("rf{rf}+{rf2}-sram{}", gbuf >> 10),
+            _ => unreachable!("one or two RF levels"),
+        };
+        if self.arrays.len() > 1 {
+            name.push_str(&format!("-{}x{}", array.rows, array.cols));
+        }
+        if self.buses.len() > 1 && bus == ArrayBus::Broadcast {
+            name.push_str("-bcast");
+        }
+        let mut levels = Vec::with_capacity(rfs.len() + 2);
+        match rfs {
+            [rf] => levels.push(MemLevel::reg("RF", *rf)),
+            [rf, rf2] => {
+                levels.push(MemLevel::reg("RF1", *rf));
+                levels.push(MemLevel::reg("RF2", *rf2));
+            }
+            _ => unreachable!(),
+        }
+        levels.push(MemLevel::sram("GBUF", gbuf));
+        levels.push(MemLevel::dram());
+        Arch {
+            name,
+            levels,
+            array,
+            bus,
+            word_bytes: self.word_bytes,
+            dram_bw_bytes_per_cycle: self.dram_bw_bytes_per_cycle,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_counts_add_up() {
+        let space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+        let e = space.enumerate();
+        // 1 bus x 5 RF sizes x 3 buffers x (1 single + 3 ratios), minus
+        // the points whose rf2 overflows 1024 B (rf128x16, all of rf512)
+        assert_eq!(e.generated, 5 * 3 * 4 - 3 * 4);
+        assert_eq!(e.budget_filtered, 0);
+        assert_eq!(
+            e.generated,
+            e.budget_filtered + e.ratio_filtered + e.candidates.len()
+        );
+        assert!(!e.candidates.is_empty());
+        for a in &e.candidates {
+            a.validate().unwrap_or_else(|m| panic!("{}: {m}", a.name));
+            assert!(space.obs2_ok(a), "{} violates the ratio rule", a.name);
+        }
+        // the paper's optimized mobile configuration survives the strict
+        // filter (16 B + 128 B RF, 256 KB buffer on 16x16 PEs)
+        assert!(
+            e.candidates.iter().any(|a| a.name == "rf16+128-sram256"),
+            "expected the paper's winner in the space"
+        );
+    }
+
+    #[test]
+    fn strict_filter_rejects_what_widened_accepts() {
+        let array = ArrayShape { rows: 16, cols: 16 };
+        let strict = DesignSpace::paper_default(array);
+        let mut wide = DesignSpace::paper_default(array);
+        wide.ratio_min = 0.25;
+        wide.ratio_max = 64.0;
+        let ns = strict.enumerate();
+        let nw = wide.enumerate();
+        assert!(ns.candidates.len() < nw.candidates.len());
+        assert_eq!(nw.ratio_filtered, 0, "64x window keeps the whole grid");
+    }
+
+    #[test]
+    fn capacity_budget_filters_points() {
+        let array = ArrayShape { rows: 16, cols: 16 };
+        let mut space = DesignSpace::paper_default(array);
+        space.ratio_min = 0.0;
+        space.ratio_max = f64::INFINITY;
+        let all = space.enumerate();
+        // 100 KB keeps the 64 KB buffer points with small RFs only
+        space.max_onchip_bytes = Some(100 << 10);
+        let capped = space.enumerate();
+        assert!(capped.budget_filtered > 0);
+        assert!(capped.candidates.len() < all.candidates.len());
+        for a in &capped.candidates {
+            assert!(a.onchip_bytes() <= 100 << 10, "{} over budget", a.name);
+        }
+    }
+
+    #[test]
+    fn multi_array_and_bus_names_disambiguate() {
+        let mut space = DesignSpace::paper_default(ArrayShape { rows: 8, cols: 8 });
+        space.arrays = vec![
+            ArrayShape { rows: 8, cols: 8 },
+            ArrayShape { rows: 16, cols: 16 },
+        ];
+        space.buses = vec![ArrayBus::Systolic, ArrayBus::Broadcast];
+        space.ratio_min = 0.0;
+        space.ratio_max = f64::INFINITY;
+        let e = space.enumerate();
+        let names: std::collections::HashSet<&str> =
+            e.candidates.iter().map(|a| a.name.as_str()).collect();
+        assert_eq!(names.len(), e.candidates.len(), "names must be unique");
+        assert!(names.iter().any(|n| n.ends_with("-bcast")));
+        assert!(names.iter().any(|n| n.contains("-16x16")));
+    }
+}

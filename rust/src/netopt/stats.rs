@@ -1,0 +1,81 @@
+//! Counters for the network-level co-optimizer: how many architecture
+//! points the design space generated, how many each filter removed, how
+//! many the cross-architecture branch-and-bound abandoned, and the
+//! aggregated per-layer engine counters.
+
+use crate::engine::EvalSnapshot;
+
+/// Roll-up of one [`super::co_optimize`] run. `generated ==
+/// budget_filtered + ratio_filtered + candidates` and `candidates ==
+/// pruned + evaluated_full` always hold.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct NetOptStats {
+    /// Raw design-space grid points.
+    pub generated: usize,
+    /// Points dropped by the on-chip capacity budget.
+    pub budget_filtered: usize,
+    /// Points dropped by the Observation-2 ratio rule.
+    pub ratio_filtered: usize,
+    /// Points that entered evaluation.
+    pub candidates: usize,
+    /// Points abandoned by the network-level bound before completing all
+    /// layers (branch-and-bound only; includes points whose bounded layer
+    /// search came back empty).
+    pub pruned: usize,
+    /// Points evaluated through every layer.
+    pub evaluated_full: usize,
+    /// Fully evaluated points with at least one unmappable layer (their
+    /// totals under-report; they never win).
+    pub infeasible: usize,
+    /// Fully evaluated points excluded by the `min_tops` constraint.
+    pub throughput_filtered: usize,
+    /// Per-layer searches actually run (shape-deduplicated).
+    pub layer_searches: usize,
+    /// Seeded layer searches that had to rerun because the borrowed
+    /// cross-architecture seed clipped the result.
+    pub layer_reruns: usize,
+    /// Aggregated staged-engine counters across every layer search.
+    pub engine: EvalSnapshot,
+}
+
+impl std::fmt::Display for NetOptStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "arch points: {} generated, {} budget-filtered, {} ratio-filtered, \
+             {} candidates, {} pruned, {} fully evaluated ({} infeasible, \
+             {} below min-tops); {} layer searches ({} seed reruns); engine: {}",
+            self.generated,
+            self.budget_filtered,
+            self.ratio_filtered,
+            self.candidates,
+            self.pruned,
+            self.evaluated_full,
+            self.infeasible,
+            self.throughput_filtered,
+            self.layer_searches,
+            self.layer_reruns,
+            self.engine
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_mentions_counts() {
+        let s = NetOptStats {
+            generated: 10,
+            candidates: 7,
+            pruned: 4,
+            evaluated_full: 3,
+            ..Default::default()
+        };
+        let text = format!("{s}");
+        assert!(text.contains("10 generated"));
+        assert!(text.contains("4 pruned"));
+        assert!(text.contains("3 fully evaluated"));
+    }
+}

@@ -1,0 +1,226 @@
+//! Netopt tests: the cross-architecture branch-and-bound returns the
+//! *identical* best (architecture, per-layer mappings) as the exhaustive
+//! sweep on small design spaces × {alexnet subset, lstm-m, mlp-m},
+//! mirroring the layer-level equivalence tests in `engine::tests` — plus
+//! floor admissibility and the iso-throughput constraint.
+
+use super::*;
+use crate::arch::ArrayShape;
+use crate::energy::Table3;
+use crate::nn::network;
+
+/// A compact grid with the ratio filter deliberately widened (documented
+/// knob), so the equivalence claim exercises the search, not the filter:
+/// the deliberately-bad rf512 points stay in play and must be pruned by
+/// the bound, never mis-ranked.
+fn small_space() -> DesignSpace {
+    let mut s = DesignSpace::paper_default(ArrayShape { rows: 8, cols: 8 });
+    s.rf1_sizes = vec![16, 64, 512];
+    s.rf2_ratios = vec![8];
+    s.gbuf_sizes = vec![64 << 10, 256 << 10];
+    s.ratio_min = 0.25;
+    s.ratio_max = 64.0;
+    s
+}
+
+fn small_opts() -> SearchOpts {
+    let mut o = SearchOpts::capped(150, 4);
+    o.max_order_combos = 9;
+    o
+}
+
+fn workloads() -> Vec<Network> {
+    vec![
+        network("alexnet", 1).unwrap().head(3),
+        network("lstm-m", 1).unwrap(),
+        network("mlp-m", 16).unwrap(),
+    ]
+}
+
+#[test]
+fn bnb_matches_exhaustive_on_small_spaces() {
+    let space = small_space();
+    for net in workloads() {
+        for threads in [1usize, 3] {
+            let ex = co_optimize(
+                &net,
+                &space,
+                &Table3,
+                &NetOptConfig::exhaustive(small_opts(), threads),
+            );
+            let bb = co_optimize(
+                &net,
+                &space,
+                &Table3,
+                &NetOptConfig::new(small_opts(), threads),
+            );
+            let (Some(we), Some(wb)) = (ex.best(), bb.best()) else {
+                panic!("{}: no feasible winner (t={threads})", net.name);
+            };
+            assert_eq!(
+                we.arch.name, wb.arch.name,
+                "{}: winner arch differs (t={threads})",
+                net.name
+            );
+            assert_eq!(
+                we.opt.total_energy_pj, wb.opt.total_energy_pj,
+                "{}: winner energy differs (t={threads})",
+                net.name
+            );
+            assert_eq!(we.opt.unmapped, 0);
+            assert_eq!(wb.opt.unmapped, 0);
+            assert_eq!(we.opt.per_layer.len(), wb.opt.per_layer.len());
+            for (a, b) in we.opt.per_layer.iter().zip(wb.opt.per_layer.iter()) {
+                let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+                assert_eq!(a.mapping, b.mapping, "{}: winner mapping differs", net.name);
+                assert_eq!(a.smap, b.smap, "{}: winner spatial map differs", net.name);
+                assert_eq!(a.result.energy_pj, b.result.energy_pj);
+            }
+            // exhaustive mode fully evaluates the whole space...
+            assert_eq!(ex.stats.evaluated_full, ex.stats.candidates);
+            assert_eq!(ex.stats.pruned, 0);
+            // ...and branch-and-bound accounts for every candidate
+            assert_eq!(
+                bb.stats.pruned + bb.stats.evaluated_full,
+                bb.stats.candidates
+            );
+            assert!(bb.stats.evaluated_full <= ex.stats.evaluated_full);
+        }
+    }
+}
+
+#[test]
+fn bnb_prunes_architecture_points() {
+    // Deterministic single-thread run. The MLP's DRAM-dominated floors
+    // make the network bound strong, so the oversized-RF points must be
+    // abandoned before completing every layer.
+    let net = network("mlp-m", 16).unwrap();
+    let bb = co_optimize(
+        &net,
+        &small_space(),
+        &Table3,
+        &NetOptConfig::new(small_opts(), 1),
+    );
+    assert!(
+        bb.stats.pruned > 0,
+        "expected network-level pruning, got {}",
+        bb.stats
+    );
+    assert!(bb.stats.evaluated_full < bb.stats.candidates);
+}
+
+#[test]
+fn network_floor_lower_bounds_every_point() {
+    let space = small_space();
+    for net in workloads() {
+        let profile = NetProfile::new(&net);
+        let ex = co_optimize(
+            &net,
+            &space,
+            &Table3,
+            &NetOptConfig::exhaustive(small_opts(), 2),
+        );
+        assert!(!ex.ranked.is_empty());
+        for r in &ex.ranked {
+            if r.opt.unmapped > 0 {
+                continue;
+            }
+            let (_, suffix) = profile.floors(&r.arch, &Table3);
+            assert!(
+                suffix[0] <= r.opt.total_energy_pj * (1.0 + PRUNE_SLACK),
+                "{} on {}: floor {} above total {}",
+                net.name,
+                r.arch.name,
+                suffix[0],
+                r.opt.total_energy_pj
+            );
+        }
+    }
+}
+
+#[test]
+fn min_tops_constraint_filters_and_preserves_winner() {
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    let plain = co_optimize(
+        &net,
+        &space,
+        &Table3,
+        &NetOptConfig::exhaustive(small_opts(), 2),
+    );
+    let winner = plain.best().expect("feasible winner").arch.name.clone();
+
+    // a floor below every point changes nothing
+    let tiny = co_optimize(
+        &net,
+        &space,
+        &Table3,
+        &NetOptConfig::exhaustive(small_opts(), 2).with_min_tops(1e-12),
+    );
+    assert_eq!(tiny.best().expect("still feasible").arch.name, winner);
+    assert_eq!(tiny.stats.throughput_filtered, 0);
+
+    // a floor above every point empties the ranking
+    let huge = co_optimize(
+        &net,
+        &space,
+        &Table3,
+        &NetOptConfig::exhaustive(small_opts(), 2).with_min_tops(1e12),
+    );
+    assert!(huge.ranked.is_empty());
+    assert_eq!(huge.stats.throughput_filtered, huge.stats.evaluated_full);
+    assert!(huge.stats.throughput_filtered > 0);
+
+    // iso-throughput at the best achieved TOPS keeps only points that
+    // actually meet it (branch-and-bound mode)
+    let best_tops = plain
+        .ranked
+        .iter()
+        .map(|r| r.opt.tops(1.0))
+        .fold(f64::NEG_INFINITY, f64::max);
+    let constrained = co_optimize(
+        &net,
+        &space,
+        &Table3,
+        &NetOptConfig::new(small_opts(), 2).with_min_tops(best_tops),
+    );
+    assert!(!constrained.ranked.is_empty());
+    for r in &constrained.ranked {
+        assert!(r.opt.tops(1.0) >= best_tops);
+    }
+}
+
+#[test]
+fn search_hierarchy_shim_matches_co_optimize() {
+    let net = network("mlp-m", 16).unwrap();
+    let opts = small_opts();
+    let array = ArrayShape { rows: 8, cols: 8 };
+    let shim = crate::search::search_hierarchy(&net, array, &Table3, &opts, 2);
+    let direct = co_optimize(
+        &net,
+        &DesignSpace::paper_default(array),
+        &Table3,
+        &NetOptConfig::exhaustive(opts, 2),
+    );
+    assert_eq!(shim.len(), direct.ranked.len());
+    for (a, b) in shim.iter().zip(direct.ranked.iter()) {
+        assert_eq!(a.arch.name, b.arch.name);
+        assert_eq!(a.opt.total_energy_pj, b.opt.total_energy_pj);
+        assert_eq!(a.opt.unmapped, b.opt.unmapped);
+    }
+}
+
+#[test]
+fn empty_space_returns_no_points() {
+    let mut space = small_space();
+    space.rf1_sizes.clear();
+    let res = co_optimize(
+        &network("mlp-m", 16).unwrap(),
+        &space,
+        &Table3,
+        &NetOptConfig::new(small_opts(), 2),
+    );
+    assert!(res.ranked.is_empty());
+    assert!(res.best().is_none());
+    assert_eq!(res.stats.generated, 0);
+}

@@ -28,6 +28,35 @@ impl Network {
     pub fn macs(&self) -> u64 {
         self.layers.iter().map(|l| l.macs()).sum()
     }
+
+    /// The first `n` layers (all of them when `n` exceeds the depth) —
+    /// e.g. the AlexNet conv subset `netopt`'s equivalence tests sweep.
+    pub fn head(&self, n: usize) -> Network {
+        let n = n.min(self.layers.len());
+        Network {
+            name: format!("{}[..{n}]", self.name),
+            layers: self.layers[..n].to_vec(),
+            batch: self.batch,
+        }
+    }
+
+    /// One layer per distinct `(bounds, stride)` shape, first-occurrence
+    /// order. Bounds sweep time on very deep networks while keeping
+    /// per-layer energies representative (repeated shapes share one
+    /// search result anyway).
+    pub fn dedup_shapes(&self) -> Network {
+        let mut seen = std::collections::HashSet::new();
+        Network {
+            name: self.name.clone(),
+            layers: self
+                .layers
+                .iter()
+                .filter(|l| seen.insert((l.shape.bounds, l.shape.stride)))
+                .cloned()
+                .collect(),
+            batch: self.batch,
+        }
+    }
 }
 
 /// Names of all nine benchmarks, in the paper's Figure 14 order.

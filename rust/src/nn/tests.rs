@@ -122,6 +122,30 @@ fn unknown_network_is_none() {
 }
 
 #[test]
+fn head_truncates_and_clamps() {
+    let net = network("alexnet", 4).unwrap();
+    let sub = net.head(3);
+    assert_eq!(sub.layers.len(), 3);
+    assert_eq!(sub.layers[0].name, net.layers[0].name);
+    assert_eq!(sub.batch, net.batch);
+    assert!(sub.name.contains("alexnet"));
+    // n beyond the depth keeps everything
+    assert_eq!(net.head(1000).layers.len(), net.layers.len());
+}
+
+#[test]
+fn dedup_shapes_keeps_first_occurrences() {
+    let net = network("lstm-m", 1).unwrap(); // 8 identical gate banks
+    let unique = net.dedup_shapes();
+    assert_eq!(unique.layers.len(), 1);
+    assert_eq!(unique.layers[0].name, net.layers[0].name);
+    assert_eq!(unique.name, net.name);
+    // a mixed-shape net keeps every distinct shape in order
+    let mlp = network("mlp-m", 128).unwrap();
+    assert_eq!(mlp.dedup_shapes().layers.len(), mlp.layers.len());
+}
+
+#[test]
 fn batch_scales_macs_linearly() {
     let m1 = network("alexnet", 1).unwrap().macs();
     let m16 = network("alexnet", 16).unwrap().macs();

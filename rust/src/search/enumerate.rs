@@ -109,8 +109,21 @@ pub fn enumerate_blockings(
     opts: &SearchOpts,
 ) -> Vec<Vec<[u64; NDIMS]>> {
     let mut cache = DivisorCache::new();
+    enumerate_blockings_cached(shape, arch, spatial, opts, &mut cache)
+}
+
+/// [`enumerate_blockings`] with a caller-supplied divisor cache, so
+/// repeated enumerations (the same layer shape across many architecture
+/// points in a `netopt` shard) share the memoized divisor tables.
+pub fn enumerate_blockings_cached(
+    shape: &Shape,
+    arch: &Arch,
+    spatial: [u64; NDIMS],
+    opts: &SearchOpts,
+    cache: &mut DivisorCache,
+) -> Vec<Vec<[u64; NDIMS]>> {
     let mut out = Vec::new();
-    enumerate_blockings_visit(shape, arch, spatial, opts, &mut cache, |table| {
+    enumerate_blockings_visit(shape, arch, spatial, opts, cache, |table| {
         out.push(table.to_vec());
         true
     });

@@ -1,7 +1,9 @@
 //! Design-space search: blocking enumeration with capacity pruning,
-//! order selection, divisor-constrained replication, the per-layer
-//! optimizer, and the §6.3 auto-optimizer (fix `C|K`, 4–16 size-ratio
-//! rule) over whole networks.
+//! order selection, divisor-constrained replication, and the per-layer
+//! optimizer. The §6.3 auto-optimizer over whole networks (fix `C|K`,
+//! 4–16 size-ratio rule) lives in [`crate::netopt`];
+//! [`optimize_network`] and [`search_hierarchy`] remain here as thin
+//! shims over it.
 //!
 //! All candidate evaluation goes through the staged engine
 //! ([`crate::engine`]); searches run branch-and-bound by default (see
@@ -14,11 +16,12 @@ mod par;
 mod random;
 
 pub use enumerate::{
-    enumerate_blockings, enumerate_blockings_visit, factor_splits, table_bound, SearchOpts,
+    enumerate_blockings, enumerate_blockings_cached, enumerate_blockings_visit, factor_splits,
+    table_bound, SearchOpts,
 };
 pub use optimize::{
-    divisor_replication, optimize_layer, optimize_network, search_hierarchy, sweep_blockings,
-    HierarchyResult, LayerOpt, NetworkOpt,
+    divisor_replication, optimize_layer, optimize_layer_seeded, optimize_network,
+    search_hierarchy, sweep_blockings, HierarchyResult, LayerOpt, NetworkOpt,
 };
 pub use par::{default_threads, parallel_map};
 pub use random::{random_mapping, random_mapping_for_arch};

@@ -5,12 +5,17 @@
 //! as a partial lower bound exceeds the incumbent (branch-and-bound, the
 //! default), and only the winning candidate materializes a full
 //! [`ModelResult`].
+//!
+//! Network-level resource co-optimization lives in [`crate::netopt`];
+//! [`optimize_network`] and [`search_hierarchy`] are kept as thin
+//! compatibility shims over it (the same pattern `xmodel::evaluate`
+//! follows over the engine).
 
-use std::collections::HashMap;
-
-use super::enumerate::{enumerate_blockings, enumerate_blockings_visit, SearchOpts};
+use super::enumerate::{
+    enumerate_blockings, enumerate_blockings_cached, enumerate_blockings_visit, SearchOpts,
+};
 use super::par::parallel_map;
-use crate::arch::{Arch, ArrayShape, MemLevel};
+use crate::arch::{Arch, ArrayShape};
 use crate::dataflow::{Dataflow, SpatialMap};
 use crate::energy::CostModel;
 use crate::engine::{
@@ -232,12 +237,45 @@ pub fn optimize_layer(
     opts: &SearchOpts,
     threads: usize,
 ) -> Option<LayerOpt> {
+    let mut cache = DivisorCache::new();
+    let seed = f64::INFINITY;
+    optimize_layer_seeded(shape, arch, df, cost, opts, threads, seed, &mut cache).0
+}
+
+/// [`optimize_layer`] with a caller-supplied starting incumbent and a
+/// shared divisor cache — the entry point `netopt`'s network-level
+/// branch-and-bound uses. Returns the winner (if any) **and** the
+/// engine's pipeline counters, which are reported even when every
+/// candidate was pruned or nothing fit, so network-level roll-ups count
+/// the work of empty searches too.
+///
+/// `seed_bound` pre-seeds the shared [`Incumbent`], so candidates whose
+/// lower bound exceeds it are pruned from the start (a completed
+/// evaluation above the seed is still accepted as the local best).
+/// Consequently the result equals the unseeded optimum **only when that
+/// optimum is `<= seed_bound`**; with a tighter seed the search may
+/// return a worse mapping or `None`. Callers that need exactness must
+/// either pass an admissible bound (one no better than the true optimum
+/// whenever the result matters) or detect the clipped case and rerun —
+/// see `netopt`'s seeding fallback. With `f64::INFINITY` this is exactly
+/// [`optimize_layer`]. Exhaustive mode (`opts.prune`) ignores the seed.
+#[allow(clippy::too_many_arguments)]
+pub fn optimize_layer_seeded(
+    shape: &Shape,
+    arch: &Arch,
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    opts: &SearchOpts,
+    threads: usize,
+    seed_bound: f64,
+    cache: &mut DivisorCache,
+) -> (Option<LayerOpt>, EvalSnapshot) {
     let smap = divisor_replication(shape, df, &arch.array);
     let spatial = smap.factors();
     let combos = order_combos(arch.num_levels(), opts.max_order_combos);
     let engine = Engine::new(arch, cost);
     let stats = EvalStats::default();
-    let incumbent = Incumbent::new();
+    let incumbent = Incumbent::with_bound(seed_bound);
     let bnb = opts.prune == PruneMode::BranchAndBound;
     let search = LayerSearch {
         engine,
@@ -256,8 +294,7 @@ pub fn optimize_layer(
     let mut win: Option<(f64, Vec<[u64; NDIMS]>, usize)> = None;
     if bnb && threads <= 1 {
         // streaming branch-and-bound over the enumerator
-        let mut cache = DivisorCache::new();
-        enumerate_blockings_visit(shape, arch, spatial, opts, &mut cache, |table| {
+        enumerate_blockings_visit(shape, arch, spatial, opts, cache, |table| {
             evaluated += search.combos.len();
             if let Some((e, ci)) = search.eval_table(table) {
                 if win.as_ref().map(|(we, _, _)| e < *we).unwrap_or(true) {
@@ -267,7 +304,7 @@ pub fn optimize_layer(
             true
         });
     } else {
-        let tables = enumerate_blockings(shape, arch, spatial, opts);
+        let tables = enumerate_blockings_cached(shape, arch, spatial, opts, cache);
         evaluated = tables.len() * combos.len();
         let results = parallel_map(tables, threads, |table| {
             search.eval_table(table).map(|(e, ci)| (e, table.clone(), ci))
@@ -280,7 +317,10 @@ pub fn optimize_layer(
         }
     }
 
-    let (energy, table, ci) = win?;
+    let snap = stats.snapshot();
+    let Some((energy, table, ci)) = win else {
+        return (None, snap);
+    };
     let mapping = Mapping {
         shape: *shape,
         blocking: Blocking { factors: table },
@@ -289,15 +329,19 @@ pub fn optimize_layer(
         spatial_at: arch.rf_levels(),
     };
     // stage 4: materialize the winner's full evaluation
-    let result = engine.evaluate(&mapping, &smap).ok()?;
+    let result = match engine.evaluate(&mapping, &smap) {
+        Ok(r) => r,
+        Err(_) => return (None, snap),
+    };
     debug_assert_eq!(result.energy_pj, energy);
-    Some(LayerOpt {
+    let lo = LayerOpt {
         mapping,
         smap: smap.clone(),
         result,
         evaluated,
-        stats: stats.snapshot(),
-    })
+        stats: snap,
+    };
+    (Some(lo), snap)
 }
 
 /// Energy of every enumerated blocking (best order each) — the Fig 10
@@ -358,6 +402,14 @@ pub struct NetworkOpt {
     pub total_cycles: f64,
     /// Total MACs.
     pub total_macs: u64,
+    /// Number of layers whose search found **no** feasible mapping. Their
+    /// contribution is absent from the totals, so any `unmapped > 0`
+    /// result under-reports the network and must not be compared against
+    /// fully mapped ones (the netopt ranking sorts them last; drivers
+    /// report or reject them).
+    pub unmapped: usize,
+    /// Indices (into `per_layer`) of the unmapped layers.
+    pub unmapped_layers: Vec<usize>,
 }
 
 impl NetworkOpt {
@@ -366,15 +418,16 @@ impl NetworkOpt {
         2.0 * self.total_macs as f64 / self.total_energy_pj
     }
 
+    /// Achieved throughput in TOPS at a clock of `freq_ghz`.
+    pub fn tops(&self, freq_ghz: f64) -> f64 {
+        2.0 * self.total_macs as f64 * freq_ghz / self.total_cycles / 1e3
+    }
+
     /// Aggregated engine counters across the per-layer searches.
     pub fn stats(&self) -> EvalSnapshot {
         let mut out = EvalSnapshot::default();
         for lo in self.per_layer.iter().flatten() {
-            out.stage2 += lo.stats.stage2;
-            out.fit_rejected += lo.stats.fit_rejected;
-            out.stage3 += lo.stats.stage3;
-            out.pruned += lo.stats.pruned;
-            out.full += lo.stats.full;
+            out.absorb(&lo.stats);
         }
         out
     }
@@ -383,6 +436,10 @@ impl NetworkOpt {
 /// Optimize every layer of a network on one architecture (dataflow fixed,
 /// default `C|K` per Observation 1). Identical layer shapes share one
 /// search (VGG's repeated convs, LSTM gate banks).
+///
+/// Compatibility shim over [`crate::netopt::evaluate_network`] — the
+/// single-architecture case of the network co-optimizer, with no
+/// cross-architecture bound.
 pub fn optimize_network(
     net: &Network,
     arch: &Arch,
@@ -391,30 +448,7 @@ pub fn optimize_network(
     opts: &SearchOpts,
     threads: usize,
 ) -> NetworkOpt {
-    let mut cache: HashMap<([u64; NDIMS], u32), Option<LayerOpt>> = HashMap::new();
-    let mut per_layer = Vec::with_capacity(net.layers.len());
-    let mut total_e = 0.0;
-    let mut total_c = 0.0;
-    let mut total_m = 0u64;
-    for layer in &net.layers {
-        let key = (layer.shape.bounds, layer.shape.stride);
-        let entry = cache
-            .entry(key)
-            .or_insert_with(|| optimize_layer(&layer.shape, arch, df, cost, opts, threads))
-            .clone();
-        if let Some(ref lo) = entry {
-            total_e += lo.result.energy_pj;
-            total_c += lo.result.cycles;
-            total_m += lo.result.macs;
-        }
-        per_layer.push(entry);
-    }
-    NetworkOpt {
-        per_layer,
-        total_energy_pj: total_e,
-        total_cycles: total_c,
-        total_macs: total_m,
-    }
+    crate::netopt::evaluate_network(net, arch, df, cost, opts, threads)
 }
 
 /// One point of the hierarchy search.
@@ -427,9 +461,17 @@ pub struct HierarchyResult {
 }
 
 /// The §6.3 auto-optimizer's resource search: sweep memory hierarchies on
-/// a fixed PE array (dataflow fixed to `C|K`), pruned by Observation 2's
-/// 4–16× inter-level size-ratio rule. Returns all evaluated points sorted
-/// by energy (best first).
+/// a fixed PE array (dataflow fixed to `C|K`), filtered by Observation
+/// 2's 4–16× aggregate inter-level size-ratio rule. Returns every
+/// evaluated point, fully mapped points first, each group sorted by
+/// energy (best first).
+///
+/// Compatibility shim over [`crate::netopt`]: builds the paper-default
+/// [`crate::netopt::DesignSpace`] for `array` and runs
+/// [`crate::netopt::co_optimize`] with network-level pruning disabled, so
+/// — like the pre-netopt implementation — every architecture point is
+/// fully evaluated and returned. Callers that only need the winner should
+/// prefer `co_optimize` with its default branch-and-bound mode.
 pub fn search_hierarchy(
     net: &Network,
     array: ArrayShape,
@@ -437,79 +479,7 @@ pub fn search_hierarchy(
     opts: &SearchOpts,
     threads: usize,
 ) -> Vec<HierarchyResult> {
-    let df = Dataflow::parse("C|K").unwrap();
-    let rf1_sizes = [16u64, 32, 64, 128, 512];
-    let sram_sizes = [64u64 << 10, 128 << 10, 256 << 10];
-
-    let mut candidates: Vec<Arch> = Vec::new();
-    for &rf in &rf1_sizes {
-        for &sram in &sram_sizes {
-            // single-level RF
-            candidates.push(Arch {
-                name: format!("rf{rf}-sram{}", sram >> 10),
-                levels: vec![
-                    MemLevel::reg("RF", rf),
-                    MemLevel::sram("GBUF", sram),
-                    MemLevel::dram(),
-                ],
-                array,
-                bus: crate::arch::ArrayBus::Systolic,
-                word_bytes: 2,
-                dram_bw_bytes_per_cycle: 16.0,
-            });
-            // two-level RF with ratio-rule second level (4-16x)
-            for ratio in [8u64] {
-                let rf2 = rf * ratio;
-                if rf2 > 1024 {
-                    continue;
-                }
-                candidates.push(Arch {
-                    name: format!("rf{rf}+{rf2}-sram{}", sram >> 10),
-                    levels: vec![
-                        MemLevel::reg("RF1", rf),
-                        MemLevel::reg("RF2", rf2),
-                        MemLevel::sram("GBUF", sram),
-                        MemLevel::dram(),
-                    ],
-                    array,
-                    bus: crate::arch::ArrayBus::Systolic,
-                    word_bytes: 2,
-                    dram_bw_bytes_per_cycle: 16.0,
-                });
-            }
-        }
-    }
-
-    // Observation-2 ratio pruning: on-chip level sizes should step by
-    // roughly 4-16x per level *in aggregate* (RF is per-PE).
-    let pes = array.pes();
-    candidates.retain(|a| {
-        let mut sizes: Vec<u64> = Vec::new();
-        for l in &a.levels {
-            match l.kind {
-                crate::arch::LevelKind::Reg => sizes.push(l.size_bytes * pes),
-                crate::arch::LevelKind::Sram => sizes.push(l.size_bytes),
-                crate::arch::LevelKind::Dram => {}
-            }
-        }
-        sizes.windows(2).all(|w| {
-            let r = w[1] as f64 / w[0] as f64;
-            (0.25..=64.0).contains(&r)
-        })
-    });
-
-    let mut results: Vec<HierarchyResult> = candidates
-        .into_iter()
-        .map(|arch| {
-            let opt = optimize_network(net, &arch, &df, cost, opts, threads);
-            HierarchyResult { arch, opt }
-        })
-        .collect();
-    results.sort_by(|a, b| {
-        a.opt
-            .total_energy_pj
-            .partial_cmp(&b.opt.total_energy_pj)
-            .unwrap()
-    });
-    results
+    let space = crate::netopt::DesignSpace::paper_default(array);
+    let cfg = crate::netopt::NetOptConfig::exhaustive(opts.clone(), threads);
+    crate::netopt::co_optimize(net, &space, cost, &cfg).ranked
 }

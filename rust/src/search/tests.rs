@@ -97,6 +97,85 @@ fn optimize_network_caches_equal_shapes() {
 }
 
 #[test]
+fn optimize_network_reports_unmapped_layers() {
+    // a 4 B RF cannot hold even one double-buffered element per tensor,
+    // so no blocking fits and every layer comes back unmapped
+    let arch = crate::arch::Arch {
+        name: "rf-too-small".into(),
+        levels: vec![
+            crate::arch::MemLevel::reg("RF", 4),
+            crate::arch::MemLevel::sram("GBUF", 128 << 10),
+            crate::arch::MemLevel::dram(),
+        ],
+        array: ArrayShape { rows: 4, cols: 4 },
+        bus: crate::arch::ArrayBus::Systolic,
+        word_bytes: 2,
+        dram_bw_bytes_per_cycle: 16.0,
+    };
+    let net = crate::nn::network("mlp-m", 4).unwrap();
+    let df = Dataflow::parse("C|K").unwrap();
+    let opt = optimize_network(&net, &arch, &df, &Table3, &SearchOpts::capped(200, 4), 2);
+    assert_eq!(opt.unmapped, net.layers.len());
+    assert_eq!(opt.unmapped_layers, vec![0, 1, 2]);
+    assert_eq!(opt.total_energy_pj, 0.0);
+    assert!(opt.per_layer.iter().all(|l| l.is_none()));
+
+    // and a normal architecture maps everything
+    let ok = optimize_network(
+        &net,
+        &eyeriss_like(),
+        &df,
+        &Table3,
+        &SearchOpts::capped(200, 4),
+        2,
+    );
+    assert_eq!(ok.unmapped, 0);
+    assert!(ok.unmapped_layers.is_empty());
+}
+
+#[test]
+fn seeded_layer_search_respects_admissible_and_clipping_bounds() {
+    let shape = small_conv();
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").unwrap();
+    let opts = SearchOpts::capped(800, 5);
+    let plain = optimize_layer(&shape, &arch, &df, &Table3, &opts, 1).unwrap();
+
+    // seeding exactly at the optimum is admissible: identical winner
+    let mut cache = crate::engine::DivisorCache::new();
+    let (seeded, _) = optimize_layer_seeded(
+        &shape,
+        &arch,
+        &df,
+        &Table3,
+        &opts,
+        1,
+        plain.result.energy_pj,
+        &mut cache,
+    );
+    let seeded = seeded.expect("seed at the optimum keeps the winner");
+    assert_eq!(seeded.result.energy_pj, plain.result.energy_pj);
+    assert_eq!(seeded.mapping, plain.mapping);
+
+    // a sub-floor seed prunes every candidate away (the clipped case
+    // netopt's rerun fallback exists for) — and the empty search still
+    // reports the engine work it did
+    let mut cache = crate::engine::DivisorCache::new();
+    let (clipped, snap) = optimize_layer_seeded(
+        &shape,
+        &arch,
+        &df,
+        &Table3,
+        &opts,
+        1,
+        plain.result.energy_pj * 1e-6,
+        &mut cache,
+    );
+    assert!(clipped.is_none(), "sub-floor seed must clip the search");
+    assert!(snap.pruned > 0, "clipped search must report its pruning");
+}
+
+#[test]
 fn hierarchy_search_returns_sorted_and_beats_eyeriss_rf() {
     // tiny MLP so the sweep is fast; the winner should use a small RF
     let net = crate::nn::network("mlp-m", 16).unwrap();
