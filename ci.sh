@@ -1,8 +1,20 @@
 #!/usr/bin/env bash
-# CI entry point: format, lint, build, and the tier-1 verify.
-# Usage: ./ci.sh [--no-bench]
+# CI entry point. Three tiers (documented in ARCHITECTURE.md):
+#
+#   ./ci.sh --quick      fmt + clippy + `cargo test -q` (fast inner loop)
+#   ./ci.sh --no-bench   quick + release build (the tier-1 verify; PR gate)
+#   ./ci.sh              full: tier-1 + perf gates + BENCH_*.json schema
+#                        check (main-branch gate; emits the perf trajectory)
 set -euo pipefail
 cd "$(dirname "$0")"
+
+MODE=full
+case "${1:-}" in
+    --quick) MODE=quick ;;
+    --no-bench) MODE=tier1 ;;
+    "") ;;
+    *) echo "usage: ./ci.sh [--quick|--no-bench]" >&2; exit 2 ;;
+esac
 
 echo "==> cargo fmt --check"
 cargo fmt --all -- --check
@@ -10,16 +22,32 @@ cargo fmt --all -- --check
 echo "==> cargo clippy -- -D warnings"
 cargo clippy --all-targets -- -D warnings
 
+if [[ "$MODE" == "quick" ]]; then
+    echo "==> cargo test -q"
+    cargo test -q
+    echo "CI OK (quick)"
+    exit 0
+fi
+
 echo "==> tier-1 verify: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
 
-if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "==> perf_search (pruning contract: identical winners, >=3x fewer full evals)"
-    cargo bench --bench perf_search
-
-    echo "==> perf_netopt (network B&B: identical winner, strictly fewer arch points; emits BENCH_netopt.json)"
-    cargo bench --bench perf_netopt
+if [[ "$MODE" == "tier1" ]]; then
+    echo "CI OK (tier-1, benches skipped)"
+    exit 0
 fi
+
+echo "==> perf_search (pruning contract: identical winners, >=3x fewer full evals)"
+cargo bench --bench perf_search
+
+echo "==> perf_netopt (network B&B: identical winner, strictly fewer arch points; emits BENCH_netopt.json)"
+cargo bench --bench perf_netopt
+
+echo "==> perf_shard (multi-process shard equivalence: N workers + merge == single process, bit for bit; emits BENCH_shard.json)"
+cargo bench --bench perf_shard
+
+echo "==> bench_schema (every BENCH_*.json conforms to the documented schema)"
+cargo bench --bench bench_schema
 
 echo "CI OK"

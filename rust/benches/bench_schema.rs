@@ -1,0 +1,48 @@
+//! CI gate: validate every emitted `BENCH_*.json` against the documented
+//! perf-trajectory schema (see ARCHITECTURE.md, "CI tiers and the perf
+//! trajectory", and `util::bench::validate_bench_json`, whose unit tests
+//! pin the rules): a single flat JSON object with a required non-empty
+//! `"bench"` string; every other field a scalar (string, bool, finite
+//! number).
+//!
+//! Keeping the files machine-readable is the point — trend tooling can
+//! ingest any conforming file without per-bench parsers. Run after the
+//! perf benches (`ci.sh` orders this); zero files found is a failure so
+//! the gate can never pass vacuously.
+
+use interstellar::util::bench::validate_bench_json;
+
+fn main() {
+    let mut checked = 0usize;
+    let mut failures = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(".")
+        .expect("read cwd")
+        .map(|e| e.expect("dir entry"))
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        let text = std::fs::read_to_string(entry.path())
+            .unwrap_or_else(|e| panic!("reading {name}: {e}"));
+        match validate_bench_json(&text) {
+            Ok(()) => {
+                println!("bench_schema: {name} conforms");
+                checked += 1;
+            }
+            Err(e) => failures.push(format!("{name}: {e}")),
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "bench schema violations:\n{}",
+        failures.join("\n")
+    );
+    assert!(
+        checked > 0,
+        "no BENCH_*.json found — run the perf benches first (full ./ci.sh does)"
+    );
+    println!("bench_schema OK ({checked} files validated)");
+}

@@ -1,0 +1,255 @@
+//! §Perf/CI gate: multi-process shard equivalence. For each fixture
+//! (small design space × {alexnet head, lstm-m, mlp-m}) this bench
+//!
+//! 1. runs the single-process `co_optimize` reference in-process,
+//! 2. spawns `NSHARDS` **separate OS processes** of the release binary,
+//!    each running `co-opt --shard I/N --checkpoint PATH` over the same
+//!    space,
+//! 3. merges their checkpoint files with a `co-opt-merge` process, and
+//! 4. asserts the cross-process contract: the merged winner is
+//!    **bit-identical** to the single-process winner (architecture,
+//!    energy bits, per-layer mappings), the checkpoint merge is
+//!    associative and order-free, and the merged stats satisfy the
+//!    `NetOptStats` partition identities.
+//!
+//! Emits `BENCH_shard.json` for the perf trajectory (validated by the
+//! `bench_schema` gate).
+
+use std::path::Path;
+use std::process::Command;
+use std::time::Instant;
+
+use interstellar::arch::ArrayShape;
+use interstellar::energy::Table3;
+use interstellar::netopt::{
+    co_optimize, merge_all, merge_checkpoints, DesignSpace, NetOptConfig, ShardCheckpoint,
+};
+use interstellar::nn::{network, Network};
+use interstellar::search::SearchOpts;
+use interstellar::util::bench::Bencher;
+use interstellar::util::json::Json;
+
+const NSHARDS: usize = 3;
+const THREADS: usize = 2;
+
+/// Must mirror `space_cli_args` exactly — the in-process reference and
+/// the worker processes sweep the same space.
+fn small_space() -> DesignSpace {
+    let mut s = DesignSpace::paper_default(ArrayShape { rows: 8, cols: 8 });
+    s.rf1_sizes = vec![16, 64, 512];
+    s.rf2_ratios = vec![8];
+    s.gbuf_sizes = vec![64 << 10, 256 << 10];
+    s.ratio_min = 0.25;
+    s.ratio_max = 64.0;
+    s
+}
+
+/// Must mirror the `--cap/--divisors/--orders` CLI args below.
+fn small_opts() -> SearchOpts {
+    let mut o = SearchOpts::capped(150, 4);
+    o.max_order_combos = 9;
+    o
+}
+
+/// CLI flags reproducing `small_space()` + `small_opts()` for the worker
+/// processes.
+fn space_cli_args() -> Vec<String> {
+    let flags = "--rows 8 --cols 8 --rf1 16,64,512 --rf2-ratio 8 --gbuf 65536,262144 \
+                 --ratio-min 0.25 --ratio-max 64 --cap 150 --divisors 4 --orders 9 --threads 2";
+    flags.split_whitespace().map(str::to_string).collect()
+}
+
+struct Fixture {
+    /// Filesystem/JSON-key-safe label.
+    label: &'static str,
+    net: Network,
+    /// Network-selection CLI flags for the worker processes.
+    cli: &'static [&'static str],
+}
+
+fn fixtures() -> Vec<Fixture> {
+    vec![
+        Fixture {
+            label: "alexnet_head3",
+            net: network("alexnet", 1).unwrap().head(3),
+            cli: &["--net", "alexnet", "--batch", "1", "--head", "3"],
+        },
+        Fixture {
+            label: "lstm_m",
+            net: network("lstm-m", 1).unwrap(),
+            cli: &["--net", "lstm-m", "--batch", "1"],
+        },
+        Fixture {
+            label: "mlp_m",
+            net: network("mlp-m", 16).unwrap(),
+            cli: &["--net", "mlp-m", "--batch", "16"],
+        },
+    ]
+}
+
+fn read_checkpoint(path: &Path) -> ShardCheckpoint {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    ShardCheckpoint::from_json(&text)
+        .unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
+}
+
+fn main() {
+    let bin = env!("CARGO_BIN_EXE_interstellar");
+    let dir = std::env::temp_dir().join(format!("interstellar-perf-shard-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+
+    let mut b = Bencher::new(1);
+    let mut bench_fields: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str("perf_shard")),
+        ("nshards".into(), Json::int(NSHARDS as u64)),
+        ("fixtures".into(), Json::int(fixtures().len() as u64)),
+    ];
+
+    for fx in fixtures() {
+        // 1. single-process reference (identical config to the workers)
+        let mut single = None;
+        let m_single = b.bench(&format!("perf_shard/{} single-process", fx.label), || {
+            single = Some(co_optimize(
+                &fx.net,
+                &small_space(),
+                &Table3,
+                &NetOptConfig::new(small_opts(), THREADS),
+            ));
+        });
+        let single = single.expect("single-process run");
+
+        // 2. N concurrent worker processes, one shard each
+        let t0 = Instant::now();
+        let mut children = Vec::new();
+        let mut paths = Vec::new();
+        for i in 0..NSHARDS {
+            let path = dir.join(format!("{}_{i}.json", fx.label));
+            let child = Command::new(bin)
+                .arg("co-opt")
+                .args(fx.cli)
+                .args(space_cli_args())
+                .arg("--shard")
+                .arg(format!("{i}/{NSHARDS}"))
+                .arg("--checkpoint")
+                .arg(&path)
+                .spawn()
+                .unwrap_or_else(|e| panic!("spawning worker {i}: {e}"));
+            children.push((i, child));
+            paths.push(path);
+        }
+        for (i, mut child) in children {
+            let status = child.wait().expect("waiting for worker");
+            assert!(status.success(), "{}: worker {i} failed: {status}", fx.label);
+        }
+        let workers_ns = t0.elapsed().as_nanos() as f64;
+
+        // 3. merge in a separate process
+        let merged_path = dir.join(format!("{}_merged.json", fx.label));
+        let status = Command::new(bin)
+            .arg("co-opt-merge")
+            .args(&paths)
+            .arg("--out")
+            .arg(&merged_path)
+            .status()
+            .expect("running co-opt-merge");
+        assert!(status.success(), "{}: co-opt-merge failed: {status}", fx.label);
+        let merged = read_checkpoint(&merged_path);
+
+        // 4a. cross-process winner identity, bit for bit: architecture,
+        // network totals, and every per-layer (mapping, smap, result).
+        // Search counters are excluded — pruning histories legitimately
+        // differ across process layouts; the optimum must not.
+        let sw = single.best().expect("single-process winner");
+        let mw = merged.winner_result().expect("merged winner");
+        assert_eq!(sw.arch, mw.arch, "{}: winner arch differs", fx.label);
+        assert_eq!(
+            sw.opt.total_energy_pj.to_bits(),
+            mw.opt.total_energy_pj.to_bits(),
+            "{}: winner energy bits differ ({} vs {})",
+            fx.label,
+            sw.opt.total_energy_pj,
+            mw.opt.total_energy_pj
+        );
+        assert_eq!(
+            sw.opt.total_cycles.to_bits(),
+            mw.opt.total_cycles.to_bits(),
+            "{}: winner cycle bits differ",
+            fx.label
+        );
+        assert_eq!(sw.opt.total_macs, mw.opt.total_macs);
+        assert_eq!(sw.opt.unmapped, 0);
+        assert_eq!(mw.opt.unmapped, 0);
+        assert_eq!(sw.opt.per_layer.len(), mw.opt.per_layer.len());
+        for (x, y) in sw.opt.per_layer.iter().zip(mw.opt.per_layer.iter()) {
+            let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+            assert_eq!(x.mapping, y.mapping, "{}: winner mapping differs", fx.label);
+            assert_eq!(x.smap, y.smap, "{}: winner smap differs", fx.label);
+            assert_eq!(x.result, y.result, "{}: winner result differs", fx.label);
+        }
+
+        // 4b. the merge is associative and order-free, and the separate
+        // merge process agrees with the in-process merge
+        let ckpts: Vec<ShardCheckpoint> = paths.iter().map(|p| read_checkpoint(p)).collect();
+        let left =
+            merge_checkpoints(&merge_checkpoints(&ckpts[0], &ckpts[1]).unwrap(), &ckpts[2])
+                .unwrap();
+        let right =
+            merge_checkpoints(&ckpts[0], &merge_checkpoints(&ckpts[1], &ckpts[2]).unwrap())
+                .unwrap();
+        let reversed =
+            merge_all(&[ckpts[2].clone(), ckpts[1].clone(), ckpts[0].clone()]).unwrap();
+        assert_eq!(left, right, "{}: merge not associative", fx.label);
+        assert_eq!(left, reversed, "{}: merge not order-free", fx.label);
+        assert_eq!(left, merged, "{}: process merge diverges", fx.label);
+
+        // 4c. merged stats identities
+        assert!(
+            merged.stats.invariants_hold(),
+            "{}: merged stats break invariants: {}",
+            fx.label,
+            merged.stats
+        );
+        assert_eq!(merged.shards, (0..NSHARDS).collect::<Vec<_>>());
+        assert_eq!(merged.stats.generated, single.stats.generated);
+        assert_eq!(merged.stats.candidates, single.stats.candidates);
+
+        println!(
+            "perf_shard/{}: winner {} ({} uJ) identical across {} processes",
+            fx.label,
+            mw.arch.name,
+            mw.opt.total_energy_pj / 1e6,
+            NSHARDS
+        );
+        bench_fields.push((format!("{}_winner", fx.label), Json::str(&mw.arch.name)));
+        bench_fields.push((
+            format!("{}_winner_energy_pj", fx.label),
+            Json::num(mw.opt.total_energy_pj),
+        ));
+        bench_fields.push((
+            format!("{}_candidates", fx.label),
+            Json::int(merged.stats.candidates as u64),
+        ));
+        bench_fields.push((
+            format!("{}_evaluated_full", fx.label),
+            Json::int(merged.stats.evaluated_full as u64),
+        ));
+        bench_fields.push((
+            format!("{}_mean_ns_single", fx.label),
+            Json::num(m_single.mean_ns),
+        ));
+        bench_fields.push((
+            format!("{}_ns_workers_e2e", fx.label),
+            Json::num(workers_ns),
+        ));
+    }
+
+    let path = "BENCH_shard.json";
+    std::fs::write(path, Json::Obj(bench_fields).to_string()).expect("write bench json");
+    println!("wrote {path}");
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "perf_shard OK ({NSHARDS}-process winners bit-identical to single-process, \
+         merge associative)"
+    );
+}

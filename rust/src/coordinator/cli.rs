@@ -3,7 +3,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::experiments::{self, Effort};
 use super::serve;
@@ -11,7 +11,10 @@ use crate::arch::{eyeriss_like, ArrayShape};
 use crate::dataflow::Dataflow;
 use crate::energy::Table3;
 use crate::engine::PruneMode;
-use crate::netopt::{co_optimize, CoOptResult, DesignSpace, NetOptConfig};
+use crate::netopt::{
+    co_optimize, co_optimize_shard, merge_all, CoOptResult, DesignSpace, NetOptConfig,
+    ShardCheckpoint,
+};
 use crate::nn::{network, Network};
 use crate::search::{default_threads, optimize_network, search_hierarchy, SearchOpts};
 use crate::util::{fmt_sig, Args};
@@ -23,10 +26,18 @@ USAGE: interstellar <command> [options]
 COMMANDS:
   optimize        --net <name> [--batch N] [--rows 16 --cols 16] [--full]
                   run the auto-optimizer (fix C|K + ratio rule) on a network
-  co-opt          --net <name> [--batch N] [--rows 16 --cols 16] [--full]
-                  [--budget BYTES] [--min-tops T] [--clock-ghz G] [--json]
+  co-opt          --net <name> [--batch N] [--head N] [--rows 16 --cols 16]
+                  [--full] [--budget BYTES] [--min-tops T] [--clock-ghz G]
+                  [--rf1 L] [--rf2-ratio L] [--gbuf L] [--ratio-min R]
+                  [--ratio-max R] [--cap N] [--divisors N] [--orders N]
+                  [--shard I/N --checkpoint PATH] [--json]
                   network-level co-optimizer: cross-architecture b&b over
-                  the design space, with capacity/throughput constraints
+                  the design space, with capacity/throughput constraints;
+                  L are comma-separated byte sizes. --shard runs one
+                  worker slice and writes a mergeable JSON checkpoint
+  co-opt-merge    <ckpt.json>... [--out PATH] [--json]
+                  merge shard checkpoints (any order): winner is
+                  bit-identical to the single-process co-opt run
   sweep-dataflow  [--layer conv3|4c3r] [--batch N] [--full]   (Fig 8)
   utilization     [--layer conv3|4c3r] [--batch N]            (Fig 9)
   sweep-blocking  [--layer conv3|4c3r] [--batch N] [--full]   (Fig 10)
@@ -118,25 +129,124 @@ pub fn run(args: Args) -> Result<()> {
         "co-opt" => {
             let name = args.get_str("net", "alexnet");
             let batch = args.get_u64("batch", 4);
-            let Some(net) = network(name, batch) else {
+            let Some(mut net) = network(name, batch) else {
                 bail!("unknown network {name} (try: {:?})", crate::nn::network_names());
             };
+            if args.get("head").is_some() {
+                net = net.head(args.get_usize("head", net.layers.len()));
+            }
             let rows = args.get_u64("rows", 16) as u32;
             let cols = args.get_u64("cols", 16) as u32;
             let mut space = DesignSpace::paper_default(ArrayShape { rows, cols });
             if args.get("budget").is_some() {
                 space.max_onchip_bytes = Some(args.get_u64("budget", u64::MAX));
             }
-            let mut cfg = NetOptConfig::new(effort_opts(effort), threads);
+            if let Some(list) = args.get("rf1") {
+                space.rf1_sizes = parse_u64_list(list)?;
+            }
+            if let Some(list) = args.get("rf2-ratio") {
+                space.rf2_ratios = parse_u64_list(list)?;
+            }
+            if let Some(list) = args.get("gbuf") {
+                space.gbuf_sizes = parse_u64_list(list)?;
+            }
+            space.ratio_min = args.get_f64("ratio-min", space.ratio_min);
+            space.ratio_max = args.get_f64("ratio-max", space.ratio_max);
+            let mut opts = effort_opts(effort);
+            opts.max_blockings = args.get_usize("cap", opts.max_blockings);
+            opts.max_divisors = args.get_usize("divisors", opts.max_divisors);
+            opts.max_order_combos = args.get_usize("orders", opts.max_order_combos);
+            let mut cfg = NetOptConfig::new(opts, threads);
             cfg.clock_ghz = args.get_f64("clock-ghz", 1.0);
             if args.get("min-tops").is_some() {
                 cfg.min_tops = Some(args.get_f64("min-tops", 0.0));
             }
-            let res = co_optimize(&net, &space, &Table3, &cfg);
-            if args.has_flag("json") {
-                println!("{}", co_opt_json(&net, &res, &cfg));
+            if let Some(spec) = args.get("shard") {
+                let (index, nshards) = parse_shard_spec(spec)?;
+                let Some(path) = args.get("checkpoint") else {
+                    bail!("--shard needs --checkpoint PATH to write to");
+                };
+                let run = co_optimize_shard(&net, &space, &Table3, &cfg, index, nshards);
+                std::fs::write(path, run.checkpoint.to_json())
+                    .with_context(|| format!("writing checkpoint {path}"))?;
+                if args.has_flag("json") {
+                    println!("{}", run.checkpoint.to_json());
+                } else {
+                    match run.checkpoint.winner_result() {
+                        Some(w) => println!(
+                            "shard {index}/{nshards}: winner {} — {} uJ",
+                            w.arch.describe(),
+                            fmt_sig(w.opt.total_energy_pj / 1e6)
+                        ),
+                        None => println!("shard {index}/{nshards}: no feasible point"),
+                    }
+                    println!("{}", run.checkpoint.stats);
+                    println!("wrote {path}");
+                }
             } else {
-                print_co_opt(&net, &res, &cfg);
+                let res = co_optimize(&net, &space, &Table3, &cfg);
+                if args.has_flag("json") {
+                    println!("{}", co_opt_json(&net, &res, &cfg));
+                } else {
+                    print_co_opt(&net, &res, &cfg);
+                }
+            }
+        }
+        "co-opt-merge" => {
+            let mut paths: Vec<String> = args.positional[1..].to_vec();
+            let mut want_json = args.has_flag("json");
+            // `--json` takes no value, but the greedy option parser binds
+            // `--json a.json b.json` as json="a.json" (see util::args) —
+            // recover the swallowed path instead of silently dropping it.
+            if let Some(stolen) = args.get("json") {
+                want_json = true;
+                paths.insert(0, stolen.to_string());
+            }
+            if paths.is_empty() {
+                bail!("usage: co-opt-merge <ckpt.json>... [--out PATH] [--json]");
+            }
+            let mut ckpts = Vec::with_capacity(paths.len());
+            for p in &paths {
+                let text = std::fs::read_to_string(p)
+                    .with_context(|| format!("reading checkpoint {p}"))?;
+                ckpts.push(
+                    ShardCheckpoint::from_json(&text)
+                        .map_err(|e| e.context(format!("parsing checkpoint {p}")))?,
+                );
+            }
+            let merged = merge_all(&ckpts)?;
+            if let Some(out) = args.get("out") {
+                std::fs::write(out, merged.to_json())
+                    .with_context(|| format!("writing merged checkpoint {out}"))?;
+            }
+            if want_json {
+                println!("{}", merged.to_json());
+            } else {
+                println!(
+                    "merged {} checkpoints covering shards {:?} of {} ({} @ batch {})",
+                    paths.len(),
+                    merged.shards,
+                    merged.nshards,
+                    merged.network,
+                    merged.batch
+                );
+                if merged.shards.len() < merged.nshards {
+                    println!(
+                        "note: {} of {} shards still missing — winner is provisional",
+                        merged.nshards - merged.shards.len(),
+                        merged.nshards
+                    );
+                }
+                match merged.winner_result() {
+                    Some(w) => println!(
+                        "winner: {} — {} uJ, {:.2} TOPS/W",
+                        w.arch.describe(),
+                        fmt_sig(w.opt.total_energy_pj / 1e6),
+                        w.opt.tops_per_watt()
+                    ),
+                    None => println!("no feasible point in the covered shards"),
+                }
+                println!("{}", merged.stats);
             }
         }
         "sweep-dataflow" => show(&experiments::fig8_dataflow(layer_shape(&args), effort, threads)),
@@ -162,11 +272,13 @@ pub fn run(args: Args) -> Result<()> {
             println!("serving {n} requests from {} on {threads} workers...", dir.display());
             let stats = serve::serve(&dir, trace, threads)?;
             println!(
-                "completed {}  wall {:.2}s  mean {:.2} ms  p95 {:.2} ms  {:.1} req/s  checksum {:.3}",
+                "completed {}  wall {:.2}s  mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  {:.1} req/s  checksum {:.3}",
                 stats.completed,
                 stats.wall_s,
                 stats.mean_latency_ms,
+                stats.p50_latency_ms,
                 stats.p95_latency_ms,
+                stats.p99_latency_ms,
                 stats.rps,
                 stats.checksum
             );
@@ -204,6 +316,37 @@ pub fn run(args: Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Comma-separated byte-size list for the design-space knobs
+/// (`--rf1 16,64,512`).
+fn parse_u64_list(list: &str) -> Result<Vec<u64>> {
+    list.split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("bad list entry `{tok}`: {e}"))
+        })
+        .collect()
+}
+
+/// `I/N` shard spec for `co-opt --shard`.
+fn parse_shard_spec(spec: &str) -> Result<(usize, usize)> {
+    let Some((index, nshards)) = spec.split_once('/') else {
+        bail!("--shard wants I/N (e.g. 0/4), got `{spec}`");
+    };
+    let index: usize = index
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad shard index `{index}`: {e}"))?;
+    let nshards: usize = nshards
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad shard count `{nshards}`: {e}"))?;
+    if nshards == 0 || index >= nshards {
+        bail!("shard index {index} out of range 0..{nshards}");
+    }
+    Ok((index, nshards))
 }
 
 fn effort_opts(e: Effort) -> SearchOpts {

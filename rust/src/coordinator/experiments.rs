@@ -2,9 +2,10 @@
 //! a [`Table`] whose rows mirror what the paper plots, so the benches and
 //! the CLI print the same data that EXPERIMENTS.md records.
 
+use std::collections::HashMap;
+
 use crate::arch::{
-    eyeriss_like, no_local_reuse, small_rf, tpu_like, validation_designs, Arch, ArrayShape,
-    MemLevel,
+    eyeriss_like, no_local_reuse, small_rf, tpu_like, validation_designs, ArrayShape,
 };
 use crate::dataflow::{
     best_replication, enumerate_dataflows, single_loop_map, utilization, Dataflow,
@@ -12,10 +13,12 @@ use crate::dataflow::{
 use crate::energy::{table3_anchors, CostModel, Table3};
 use crate::engine::PruneMode;
 use crate::loopnest::Shape;
-use crate::netopt::{co_optimize, CoOptResult, DesignSpace, NetOptConfig};
+use crate::netopt::{
+    co_optimize, co_optimize_arches, co_optimize_sharded, CoOptResult, DesignSpace, NetOptConfig,
+};
 use crate::nn::{network, Network};
 use crate::search::{
-    optimize_layer, optimize_network, search_hierarchy, sweep_blockings, SearchOpts,
+    optimize_layer, optimize_network, sweep_blockings, HierarchyResult, SearchOpts,
 };
 use crate::sim::simulate;
 use crate::util::{fmt_bytes, fmt_sig, stats, table::Table};
@@ -43,6 +46,37 @@ impl Effort {
             Effort::Fast => 4,
             Effort::Full => 16,
         }
+    }
+}
+
+/// Sharding knob for the sweep drivers: when `INTERSTELLAR_SHARDS` is
+/// set above 1, the fig12–14 hierarchy sweeps (and anything else calling
+/// `sweep_space`) run through the in-process sharded runner
+/// ([`co_optimize_sharded`]) — the same partition/merge machinery the
+/// multi-process `co-opt --shard` CLI path uses, whose winner-identity
+/// contract guarantees identical tables either way.
+pub fn shard_count() -> usize {
+    std::env::var("INTERSTELLAR_SHARDS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// Exhaustively sweep a design space, via the sharded path when
+/// [`shard_count`] asks for it. Exhaustive mode has no cross-point
+/// state, so the sharded union equals the single-process ranking point
+/// for point — the drivers below index into it freely.
+fn sweep_space(
+    net: &Network,
+    space: &DesignSpace,
+    opts: &SearchOpts,
+    threads: usize,
+) -> CoOptResult {
+    let cfg = NetOptConfig::exhaustive(opts.clone(), threads);
+    match shard_count() {
+        1 => co_optimize(net, space, &Table3, &cfg),
+        n => co_optimize_sharded(net, space, &Table3, &cfg, n),
     }
 }
 
@@ -278,33 +312,38 @@ pub fn fig11_breakdown(effort: Effort, threads: usize) -> Table {
 }
 
 /// Fig 12: memory-hierarchy exploration — total AlexNet energy as a
-/// function of RF size (columns) and SRAM buffer size (rows).
+/// function of RF size (columns) and SRAM buffer size (rows). The grid
+/// is expressed as a [`DesignSpace`] (single-level RFs, ratio filter
+/// wide open) and swept through the netopt runner — sharded when
+/// `INTERSTELLAR_SHARDS` asks for it.
 pub fn fig12_memory(effort: Effort, threads: usize) -> Table {
-    let df = Dataflow::parse("C|K").unwrap();
     let opts = effort.opts();
     let net = network("alexnet", effort.batch()).unwrap();
     let rf_sizes = [32u64, 64, 128, 256, 512];
     let sram_sizes = [64u64 << 10, 128 << 10, 256 << 10, 512 << 10];
+    let mut space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+    space.rf1_sizes = rf_sizes.to_vec();
+    space.rf2_ratios = Vec::new();
+    space.gbuf_sizes = sram_sizes.to_vec();
+    space.ratio_min = 0.0;
+    space.ratio_max = f64::INFINITY;
+    let res = sweep_space(&net, &space, &opts, threads);
+    let by_name: HashMap<&str, &HierarchyResult> = res
+        .ranked
+        .iter()
+        .map(|r| (r.arch.name.as_str(), r))
+        .collect();
     let mut header = vec!["SRAM \\ RF".to_string()];
     header.extend(rf_sizes.iter().map(|r| format!("{} B", r)));
     let mut t = Table::new(header);
     for &sram in &sram_sizes {
         let mut row = vec![fmt_bytes(sram)];
         for &rf in &rf_sizes {
-            let arch = Arch {
-                name: format!("rf{rf}"),
-                levels: vec![
-                    MemLevel::reg("RF", rf),
-                    MemLevel::sram("GBUF", sram),
-                    MemLevel::dram(),
-                ],
-                array: ArrayShape { rows: 16, cols: 16 },
-                bus: crate::arch::ArrayBus::Systolic,
-                word_bytes: 2,
-                dram_bw_bytes_per_cycle: 16.0,
+            let name = format!("rf{rf}-sram{}", sram >> 10);
+            let cell = match by_name.get(name.as_str()) {
+                Some(r) => fmt_sig(r.opt.total_energy_pj / 1e6) + &unmapped_note(r.opt.unmapped),
+                None => "-".into(),
             };
-            let opt = optimize_network(&net, &arch, &df, &Table3, &opts, threads);
-            let cell = fmt_sig(opt.total_energy_pj / 1e6) + &unmapped_note(opt.unmapped);
             row.push(cell);
         }
         t.row(row);
@@ -327,13 +366,8 @@ pub fn fig13_scaling(effort: Effort, threads: usize) -> Table {
         Effort::Full => &[8, 16, 32, 64],
     };
     for &n in sizes {
-        let results = search_hierarchy(
-            &net,
-            ArrayShape { rows: n, cols: n },
-            &Table3,
-            &opts,
-            threads,
-        );
+        let space = DesignSpace::paper_default(ArrayShape { rows: n, cols: n });
+        let results = sweep_space(&net, &space, &opts, threads).ranked;
         if let Some(best) = results.first() {
             let rf = best.arch.levels[0].size_bytes;
             let sram = best
@@ -383,13 +417,8 @@ pub fn fig14_optimizer(effort: Effort, threads: usize) -> Table {
         let Some(net) = network(name, batch) else { continue };
         let net = reduce_for_effort(net, effort);
         let baseline = optimize_network(&net, &eyeriss_like(), &df, &Table3, &opts, threads);
-        let results = search_hierarchy(
-            &net,
-            ArrayShape { rows: 16, cols: 16 },
-            &Table3,
-            &opts,
-            threads,
-        );
+        let space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+        let results = sweep_space(&net, &space, &opts, threads).ranked;
         if let Some(best) = results.first() {
             // flag each side's unmapped layers on its own column, so an
             // incomplete baseline is not misread as an optimizer defect
@@ -415,15 +444,20 @@ pub fn fig14_optimizer(effort: Effort, threads: usize) -> Table {
 /// Fig 14 companion: the large (TPU-like) baseline for one network.
 /// Returns `None` for unknown networks *and* when any layer came back
 /// unmappable — a partial total would silently under-report the chip.
+/// The TPU-like point has two SRAM levels, which the grid generator
+/// cannot express, so it rides the explicit-architecture entry point of
+/// the same netopt runner the sharded sweeps use
+/// ([`co_optimize_arches`]).
 pub fn large_chip_energy(name: &str, effort: Effort, threads: usize) -> Option<f64> {
-    let df = Dataflow::parse("C|K").unwrap();
     let opts = effort.opts();
     let net = reduce_for_effort(network(name, effort.batch())?, effort);
-    let opt = optimize_network(&net, &tpu_like(), &df, &Table3, &opts, threads);
-    if opt.unmapped > 0 {
+    let cfg = NetOptConfig::exhaustive(opts, threads);
+    let res = co_optimize_arches(&net, &[tpu_like()], &Table3, &cfg);
+    let point = res.ranked.first()?;
+    if point.opt.unmapped > 0 {
         return None;
     }
-    Some(opt.total_energy_pj)
+    Some(point.opt.total_energy_pj)
 }
 
 /// In Fast mode, trim very deep networks to their unique layer shapes to

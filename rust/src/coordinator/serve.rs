@@ -1,17 +1,24 @@
 //! Batched request serving over the PJRT runtime — the request-path loop
-//! of the e2e driver. Worker threads pull layer-inference requests from a
-//! shared queue, batch-execute the AOT artifact, and report per-request
+//! of the e2e driver. Worker threads serve interleaved slices of the
+//! request trace, batch-execute the AOT artifact, and report per-request
 //! latency; Python is never involved.
+//!
+//! Results flow through the order-preserving
+//! [`parallel_map`](crate::search::parallel_map) used by every other
+//! sweep in the codebase — no shared `Mutex<Vec<_>>` accumulator, no
+//! lock-order nondeterminism: the latency vector and the checksum are
+//! reduced from the returned per-worker vectors in deterministic trace
+//! order, so two runs with the same trace and worker count produce
+//! byte-identical stats.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::runtime::Runtime;
-use crate::util::XorShift;
+use crate::search::parallel_map;
+use crate::util::{stats, XorShift};
 
 /// One serving request: which artifact to run (inputs are generated
 /// per-request from the seed).
@@ -32,8 +39,12 @@ pub struct ServeStats {
     pub wall_s: f64,
     /// Mean per-request latency, milliseconds.
     pub mean_latency_ms: f64,
+    /// p50 (median) per-request latency, milliseconds.
+    pub p50_latency_ms: f64,
     /// p95 per-request latency, milliseconds.
     pub p95_latency_ms: f64,
+    /// p99 per-request latency, milliseconds.
+    pub p99_latency_ms: f64,
     /// Throughput, requests/second.
     pub rps: f64,
     /// Output checksum (sum of all output elements) for determinism
@@ -44,66 +55,68 @@ pub struct ServeStats {
 /// Run `requests` against the artifact registry in `artifacts_dir` using
 /// `threads` workers. PJRT clients are not `Sync`, so each worker owns a
 /// full runtime replica (the standard per-worker-model-replica serving
-/// layout); request pulling is work-stealing over a shared counter.
+/// layout). The trace is dealt to workers round-robin — a mixed trace
+/// keeps per-worker load balanced without work stealing — and each
+/// worker returns its `(latency_ms, checksum)` vector through
+/// [`parallel_map`], which preserves worker order.
 pub fn serve(artifacts_dir: &Path, requests: Vec<Request>, threads: usize) -> Result<ServeStats> {
     let n = requests.len();
-    let next = AtomicUsize::new(0);
-    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(n));
-    let checksum = Mutex::new(0.0f64);
+    let threads = threads.max(1).min(n.max(1));
+    let mut shards: Vec<Vec<Request>> = (0..threads)
+        .map(|_| Vec::with_capacity(n / threads + 1))
+        .collect();
+    for (i, req) in requests.into_iter().enumerate() {
+        shards[i % threads].push(req);
+    }
 
     let t0 = Instant::now();
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::new();
-        for _ in 0..threads.max(1) {
-            let requests = &requests;
-            let next = &next;
-            let latencies = &latencies;
-            let checksum = &checksum;
-            handles.push(scope.spawn(move || -> Result<()> {
-                let rt = Runtime::load(artifacts_dir)?; // per-worker replica
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        return Ok(());
-                    }
-                    let req = &requests[i];
-                    let entry = rt
-                        .entry(&req.artifact)
-                        .ok_or_else(|| anyhow::anyhow!("unknown artifact {}", req.artifact))?
-                        .clone();
-                    let mut rng = XorShift::new(req.seed);
-                    let inputs: Vec<Vec<f32>> = entry
-                        .inputs
-                        .iter()
-                        .map(|spec| rng.f32_vec(spec.elems() as usize))
-                        .collect();
-                    let t = Instant::now();
-                    let outs = rt.execute_f32(&req.artifact, &inputs)?;
-                    let dt = t.elapsed().as_secs_f64() * 1e3;
-                    let s: f64 = outs
-                        .iter()
-                        .map(|o| o.iter().map(|&v| v as f64).sum::<f64>())
-                        .sum();
-                    latencies.lock().unwrap().push(dt);
-                    *checksum.lock().unwrap() += s;
-                }
-            }));
+    let per_worker: Vec<Result<Vec<(f64, f64)>>> = parallel_map(shards, threads, |shard| {
+        if shard.is_empty() {
+            return Ok(Vec::new());
         }
-        for h in handles {
-            h.join().expect("worker panicked")?;
+        let rt = Runtime::load(artifacts_dir)?; // per-worker replica
+        let mut out = Vec::with_capacity(shard.len());
+        for req in shard {
+            let entry = rt
+                .entry(&req.artifact)
+                .ok_or_else(|| anyhow::anyhow!("unknown artifact {}", req.artifact))?
+                .clone();
+            let mut rng = XorShift::new(req.seed);
+            let inputs: Vec<Vec<f32>> = entry
+                .inputs
+                .iter()
+                .map(|spec| rng.f32_vec(spec.elems() as usize))
+                .collect();
+            let t = Instant::now();
+            let outs = rt.execute_f32(&req.artifact, &inputs)?;
+            let dt = t.elapsed().as_secs_f64() * 1e3;
+            let s: f64 = outs
+                .iter()
+                .map(|o| o.iter().map(|&v| v as f64).sum::<f64>())
+                .sum();
+            out.push((dt, s));
         }
-        Ok(())
-    })?;
+        Ok(out)
+    });
     let wall = t0.elapsed().as_secs_f64();
 
-    let lat = latencies.into_inner().unwrap();
+    let mut lat = Vec::with_capacity(n);
+    let mut checksum = 0.0f64;
+    for worker in per_worker {
+        for (dt, s) in worker? {
+            lat.push(dt);
+            checksum += s;
+        }
+    }
     Ok(ServeStats {
         completed: lat.len(),
         wall_s: wall,
-        mean_latency_ms: crate::util::stats::mean(&lat),
-        p95_latency_ms: crate::util::stats::percentile(&lat, 95.0),
+        mean_latency_ms: stats::mean(&lat),
+        p50_latency_ms: stats::percentile(&lat, 50.0),
+        p95_latency_ms: stats::percentile(&lat, 95.0),
+        p99_latency_ms: stats::percentile(&lat, 99.0),
         rps: lat.len() as f64 / wall,
-        checksum: checksum.into_inner().unwrap(),
+        checksum,
     })
 }
 

@@ -23,15 +23,21 @@
 //!    at the network level, a search whose result does not beat the seed
 //!    is rerun against the admissible network bound alone, which
 //!    restores exactness.
-//! 3. **Sharded parallel evaluation** — architecture points are split
-//!    into contiguous shards over the safe
+//! 3. **Chunked parallel evaluation** — architecture points are split
+//!    into contiguous chunks over the safe
 //!    [`parallel_map`](crate::search::parallel_map); the per-layer-shape
-//!    dedup profile is computed once for the whole run and each shard
+//!    dedup profile is computed once for the whole run and each chunk
 //!    shares one [`DivisorCache`] across all of its points.
 //! 4. **Iso-throughput mode** — [`NetOptConfig::min_tops`] excludes
 //!    points below a throughput floor (the paper's constant-throughput
 //!    comparison), and [`NetOptStats`] rolls up arch-point and engine
 //!    counters for the `search-stats` report.
+//! 5. **Multi-process sharding** (CLI `co-opt --shard I/N` +
+//!    `co-opt-merge`) — [`DesignSpace::shard`] deterministically
+//!    interleaves the grid across worker processes; each writes a
+//!    [`ShardCheckpoint`] (winner, incumbent bound, seeds table, stats)
+//!    as JSON, and [`merge_checkpoints`] combines them associatively
+//!    into the bit-identical single-process winner.
 //!
 //! ## Winner-identity contract
 //!
@@ -51,10 +57,15 @@
 //! `search::optimize_network` and `search::search_hierarchy` are thin
 //! compatibility shims over [`evaluate_network`] and [`co_optimize`].
 
+mod shard;
 mod space;
 mod stats;
 
-pub use space::{DesignSpace, SpaceEnumeration, OBS2_RATIO_MAX, OBS2_RATIO_MIN};
+pub use shard::{
+    co_optimize_shard, co_optimize_sharded, merge_all, merge_checkpoints, ShardCheckpoint,
+    ShardRun, CHECKPOINT_FORMAT,
+};
+pub use space::{DesignSpace, ShardEnumeration, SpaceEnumeration, OBS2_RATIO_MAX, OBS2_RATIO_MIN};
 pub use stats::NetOptStats;
 
 use std::collections::HashMap;
@@ -151,8 +162,9 @@ impl CoOptResult {
 }
 
 /// Layer-shape dedup key: identical `(bounds, stride)` layers share one
-/// search per architecture point.
-type LayerKey = ([u64; NDIMS], u32);
+/// search per architecture point. Also the key of the cross-architecture
+/// seeds table that shard checkpoints serialize.
+pub(crate) type LayerKey = ([u64; NDIMS], u32);
 
 /// One layer of the shared network profile.
 struct ProfLayer {
@@ -443,42 +455,78 @@ pub fn evaluate_network(
     }
 }
 
-/// Co-optimize a network across a whole architecture design space: run
-/// the per-layer optimizer on every (surviving) architecture point,
-/// sharing a network-level incumbent, layer-shape dedup, and per-shard
-/// divisor caches. See the module docs for the bound construction and
-/// the winner-identity contract.
-pub fn co_optimize(
+/// Output of [`run_points`]: the evaluator's view of one candidate set,
+/// before the caller layers on the space-generation counters. The shard
+/// path serializes `incumbent_pj` and `seeds` into its checkpoint so a
+/// future resume (or the merge report) can see the final bounds.
+pub(crate) struct RunOutput {
+    /// Completed, throughput-passing points tagged with their **global**
+    /// candidate index, sorted fully-mapped-first, then ascending energy,
+    /// ties by ascending index (== enumeration order).
+    pub ranked: Vec<(usize, HierarchyResult)>,
+    /// Evaluation counters: `candidates`, `pruned`, `evaluated_full`,
+    /// `infeasible`, `throughput_filtered`, layer-search and engine
+    /// roll-ups. The three space counters (`generated`,
+    /// `budget_filtered`, `ratio_filtered`) are left zero for the caller.
+    pub stats: NetOptStats,
+    /// Final network-level incumbent bound (+inf when nothing completed
+    /// or network-level pruning was off).
+    pub incumbent_pj: f64,
+    /// Final best-known per-layer-shape energies, sorted by key for
+    /// deterministic serialization.
+    pub seeds: Vec<(LayerKey, f64)>,
+}
+
+/// The contract-critical total order over completed points: fully mapped
+/// first, then ascending energy, ties by ascending **global** candidate
+/// index (== enumeration order). The single source of truth shared by
+/// [`run_points`] and the sharded union re-sort — the sharded /
+/// single-process winner-identity contract requires the two to stay
+/// bit-identical forever.
+pub(crate) fn rank_order(
+    (ia, a): &(usize, HierarchyResult),
+    (ib, b): &(usize, HierarchyResult),
+) -> std::cmp::Ordering {
+    let feasibility = a.opt.unmapped.cmp(&b.opt.unmapped);
+    let energy = a.opt.total_energy_pj.partial_cmp(&b.opt.total_energy_pj);
+    feasibility.then(energy.unwrap()).then(ia.cmp(ib))
+}
+
+/// Evaluate an explicit, index-tagged candidate list (ascending indices)
+/// under one shared network incumbent — the core of [`co_optimize`],
+/// [`co_optimize_arches`], and the per-shard runner
+/// ([`co_optimize_shard`]). Work is split into contiguous chunks over
+/// [`parallel_map`]; each chunk shares one divisor cache across all of
+/// its architecture points.
+pub(crate) fn run_points(
     net: &Network,
-    space: &DesignSpace,
+    cands: Vec<(usize, Arch)>,
     cost: &dyn CostModel,
     cfg: &NetOptConfig,
-) -> CoOptResult {
-    let enumeration = space.enumerate();
+) -> RunOutput {
+    let n = cands.len();
     let mut stats = NetOptStats {
-        generated: enumeration.generated,
-        budget_filtered: enumeration.budget_filtered,
-        ratio_filtered: enumeration.ratio_filtered,
-        candidates: enumeration.candidates.len(),
+        candidates: n,
         ..Default::default()
     };
-    let n = enumeration.candidates.len();
     if n == 0 {
-        return CoOptResult {
+        return RunOutput {
             ranked: Vec::new(),
             stats,
+            incumbent_pj: f64::INFINITY,
+            seeds: Vec::new(),
         };
     }
     let profile = NetProfile::new(net);
     let incumbent = Incumbent::new();
     let seeds: Mutex<HashMap<LayerKey, f64>> = Mutex::new(HashMap::new());
-    let nshards = cfg.threads.max(1).min(n);
+    let nchunks = cfg.threads.max(1).min(n);
     let run = NetRun {
         profile: &profile,
         df: &cfg.df,
         cost,
         opts: &cfg.opts,
-        threads: (cfg.threads / nshards).max(1),
+        threads: (cfg.threads / nchunks).max(1),
         net_bnb: cfg.prune == PruneMode::BranchAndBound,
         min_tops: cfg.min_tops,
         clock_ghz: cfg.clock_ghz,
@@ -486,17 +534,11 @@ pub fn co_optimize(
         seeds: &seeds,
     };
 
-    // Contiguous shards in enumeration order; each shard shares one
-    // divisor cache across all of its architecture points.
-    let mut indexed: Vec<(usize, Arch)> = Vec::with_capacity(n);
-    for (i, a) in enumeration.candidates.iter().enumerate() {
-        indexed.push((i, a.clone()));
-    }
-    let chunk = n.div_ceil(nshards);
-    let shards: Vec<Vec<(usize, Arch)>> = indexed.chunks(chunk).map(|c| c.to_vec()).collect();
-    let reports: Vec<(usize, PointReport)> = parallel_map(shards, nshards, |shard| {
+    let chunk = n.div_ceil(nchunks);
+    let chunks: Vec<Vec<(usize, Arch)>> = cands.chunks(chunk).map(|c| c.to_vec()).collect();
+    let reports: Vec<(usize, PointReport)> = parallel_map(chunks, nchunks, |chunk| {
         let mut cache = DivisorCache::new();
-        shard
+        chunk
             .iter()
             .map(|(i, arch)| (*i, run.evaluate_point(arch, &mut cache)))
             .collect::<Vec<_>>()
@@ -505,7 +547,8 @@ pub fn co_optimize(
     .flatten()
     .collect();
 
-    let mut ranked: Vec<HierarchyResult> = Vec::new();
+    let arch_by_idx: HashMap<usize, &Arch> = cands.iter().map(|(i, a)| (*i, a)).collect();
+    let mut ranked: Vec<(usize, HierarchyResult)> = Vec::new();
     for (idx, report) in reports {
         stats.engine.absorb(&report.engine);
         stats.layer_searches += report.searches;
@@ -521,22 +564,72 @@ pub fn co_optimize(
                     stats.throughput_filtered += 1;
                     continue;
                 }
-                ranked.push(HierarchyResult {
-                    arch: enumeration.candidates[idx].clone(),
-                    opt,
-                });
+                ranked.push((
+                    idx,
+                    HierarchyResult {
+                        arch: arch_by_idx[&idx].clone(),
+                        opt,
+                    },
+                ));
             }
         }
     }
-    // Fully mapped points first, then ascending energy; the sort is
-    // stable, so ties keep enumeration order (the exhaustive/B&B
-    // winner-identity contract relies on this).
-    ranked.sort_by(|a, b| {
-        let feasibility = a.opt.unmapped.cmp(&b.opt.unmapped);
-        let energy = a.opt.total_energy_pj.partial_cmp(&b.opt.total_energy_pj);
-        feasibility.then(energy.unwrap())
-    });
-    CoOptResult { ranked, stats }
+    // The exhaustive/B&B and the sharded/single-process winner-identity
+    // contracts both rely on `rank_order` being reconstructible from any
+    // subset of points.
+    ranked.sort_by(rank_order);
+    let seeds = seeds.into_inner().expect("netopt seeds lock");
+    let mut seeds: Vec<(LayerKey, f64)> = seeds.into_iter().collect();
+    seeds.sort_by(|a, b| a.0.cmp(&b.0));
+    RunOutput {
+        ranked,
+        stats,
+        incumbent_pj: incumbent.get(),
+        seeds,
+    }
+}
+
+/// Co-optimize a network across a whole architecture design space: run
+/// the per-layer optimizer on every (surviving) architecture point,
+/// sharing a network-level incumbent, layer-shape dedup, and per-chunk
+/// divisor caches. See the module docs for the bound construction and
+/// the winner-identity contract.
+pub fn co_optimize(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+) -> CoOptResult {
+    let enumeration = space.enumerate();
+    let cands: Vec<(usize, Arch)> = enumeration.candidates.into_iter().enumerate().collect();
+    let mut out = run_points(net, cands, cost, cfg);
+    out.stats.generated = enumeration.generated;
+    out.stats.budget_filtered = enumeration.budget_filtered;
+    out.stats.ratio_filtered = enumeration.ratio_filtered;
+    CoOptResult {
+        ranked: out.ranked.into_iter().map(|(_, r)| r).collect(),
+        stats: out.stats,
+    }
+}
+
+/// [`co_optimize`] over an explicit architecture list instead of a
+/// generated [`DesignSpace`] — the entry point for callers whose points
+/// are not grid-expressible (multi-SRAM hierarchies like the TPU-like
+/// baseline, serving-time remapping candidates). The list is the whole
+/// "space": `generated == candidates == arches.len()`, no filters.
+pub fn co_optimize_arches(
+    net: &Network,
+    arches: &[Arch],
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+) -> CoOptResult {
+    let cands: Vec<(usize, Arch)> = arches.iter().cloned().enumerate().collect();
+    let mut out = run_points(net, cands, cost, cfg);
+    out.stats.generated = arches.len();
+    CoOptResult {
+        ranked: out.ranked.into_iter().map(|(_, r)| r).collect(),
+        stats: out.stats,
+    }
 }
 
 #[cfg(test)]

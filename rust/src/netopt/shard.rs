@@ -1,0 +1,755 @@
+//! Sharded, multi-process design-space sweeps with mergeable incumbents.
+//!
+//! The §6.3 resource sweep is embarrassingly partitionable: architecture
+//! points are independent except for the *shared incumbent* (which only
+//! makes branch-and-bound faster, never changes the winner) and the
+//! *seeds table* (which is rerun-corrected, never trusted). So a sweep
+//! can be split across OS processes with no coordination at all:
+//!
+//! 1. **Partition** — [`DesignSpace::shard`] assigns raw grid point `i`
+//!    to shard `i % nshards` (stable interleaving, balanced loads).
+//! 2. **Run** — each worker process runs [`co_optimize_shard`] over its
+//!    slice and writes a [`ShardCheckpoint`] as JSON (CLI:
+//!    `co-opt --shard I/N --checkpoint PATH`).
+//! 3. **Merge** — [`merge_checkpoints`] combines checkpoints pairwise
+//!    (CLI: `co-opt-merge`): stats add field-wise, incumbents and seeds
+//!    take minima, and the winner is the minimum by
+//!    `(energy, global index)`. Every operation is associative and
+//!    commutative, so any merge tree over any shard grouping produces
+//!    the identical result.
+//!
+//! ## Winner-identity contract (cross-process)
+//!
+//! Within one shard, the branch-and-bound winner equals the shard's
+//! exhaustive winner — the per-shard incumbent only ever discards points
+//! that cannot beat it, and the borrowed cross-architecture seeds are
+//! inadmissible *only* until the existing rerun fallback fires (see the
+//! parent module's docs), which restores exactness shard-locally.
+//! The global winner is then the minimum over exact shard winners, with
+//! ties broken by the global raw-grid index — the same total order the
+//! single-process sort uses. Checkpoint JSON writes every float with
+//! Rust's shortest round-trip formatting ([`crate::util::json`]), so the
+//! merged winner is **bit-for-bit** identical to the single-process
+//! [`co_optimize`](super::co_optimize) winner: architecture, energy
+//! bits, and per-layer mappings. `netopt::tests` asserts this in-process
+//! and `benches/perf_shard.rs` asserts it across real OS processes.
+//!
+//! ## Checkpoint JSON format (v1)
+//!
+//! ```json
+//! {
+//!   "format": "interstellar-shard-checkpoint-v1",
+//!   "network": "mlp-m", "batch": 16,
+//!   "nshards": 3, "shards": [0],
+//!   "incumbent_pj": 1234.5,            // null == +inf (nothing completed)
+//!   "stats": { ...NetOptStats fields..., "engine": {...} },
+//!   "seeds": [ {"bounds": [7 ints], "stride": 1, "energy_pj": 12.5}, ... ],
+//!   "winner": null | {
+//!     "index": 17,                     // global raw-grid index
+//!     "arch": { "name", "levels": [{"name","kind","size_bytes"}...],
+//!               "array": {"rows","cols"}, "bus", "word_bytes",
+//!               "dram_bw_bytes_per_cycle" },
+//!     "opt": { "total_energy_pj", "total_cycles", "total_macs",
+//!              "unmapped", "unmapped_layers": [...],
+//!              "per_layer": [ null | {
+//!                 "mapping": { "shape": {"bounds","stride"},
+//!                              "blocking": [[7 ints]...],
+//!                              "orders": [["FX","FY",...]...],
+//!                              "spatial": [7 ints], "spatial_at": 1 },
+//!                 "smap": { "u": [["K", 4]...], "v": [...] },
+//!                 "evaluated": 600, "stats": {engine counters},
+//!                 "result": { "levels": [{"reads":[3],"writes":[3]}...],
+//!                             "fabric_words":[3], "fabric_hops", "macs",
+//!                             "active_pes", "energy_by_level":[...],
+//!                             "fabric_energy", "mac_energy", "energy_pj",
+//!                             "cycles", "utilization" } } ] } }
+//! }
+//! ```
+//!
+//! The format is documented in `ARCHITECTURE.md`; bump
+//! [`CHECKPOINT_FORMAT`] on any incompatible change.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::arch::{Arch, ArrayBus, ArrayShape, LevelKind, MemLevel};
+use crate::dataflow::SpatialMap;
+use crate::energy::CostModel;
+use crate::engine::EvalSnapshot;
+use crate::loopnest::{Blocking, Dim, LevelOrder, Mapping, Shape, NDIMS};
+use crate::nn::Network;
+use crate::search::{HierarchyResult, LayerOpt, NetworkOpt};
+use crate::util::json::Json;
+use crate::xmodel::{LevelCounts, ModelResult};
+
+use super::{run_points, CoOptResult, DesignSpace, LayerKey, NetOptConfig, NetOptStats};
+
+/// Checkpoint schema identifier; readers reject anything else.
+pub const CHECKPOINT_FORMAT: &str = "interstellar-shard-checkpoint-v1";
+
+/// Everything one worker (or a merge of workers) knows about its slice of
+/// a [`co_optimize`](super::co_optimize) run: the exact winner of the
+/// covered shards, the final incumbent bound, the best-known per-shape
+/// seed energies, and the stats roll-up. Serializable as JSON
+/// ([`to_json`](Self::to_json) / [`from_json`](Self::from_json)) and
+/// mergeable associatively ([`merge_checkpoints`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardCheckpoint {
+    /// Network name the run was over (merge identity guard).
+    pub network: String,
+    /// Batch size of the run (merge identity guard).
+    pub batch: u64,
+    /// Total shard count of the partition this checkpoint belongs to.
+    pub nshards: usize,
+    /// Shard indices covered (sorted; one entry per worker checkpoint,
+    /// the union after merging). Merging overlapping shard sets is an
+    /// error — points would be double-counted.
+    pub shards: Vec<usize>,
+    /// Stats over the covered shards (space counters included, so the
+    /// full merge reproduces the single-process counters' identities).
+    pub stats: NetOptStats,
+    /// Final network-level incumbent bound (+inf when nothing completed).
+    pub incumbent_pj: f64,
+    /// Best-known `(shape, stride) → energy` seeds, sorted by key.
+    pub seeds: Vec<(LayerKey, f64)>,
+    /// The covered shards' exact winner and its global raw-grid index
+    /// (`None` when no fully-mapped, throughput-passing point exists).
+    pub winner: Option<(usize, HierarchyResult)>,
+}
+
+/// [`co_optimize_shard`]'s full in-process return: the serializable
+/// checkpoint plus the shard's complete ranked list (which the
+/// in-process [`co_optimize_sharded`] merges so exhaustive callers keep
+/// per-point energies; worker *processes* persist only the checkpoint).
+#[derive(Debug, Clone)]
+pub struct ShardRun {
+    /// The mergeable, serializable summary.
+    pub checkpoint: ShardCheckpoint,
+    /// All completed points of this shard, `(global index, result)`,
+    /// in the run's ranked order.
+    pub ranked: Vec<(usize, HierarchyResult)>,
+}
+
+/// Run shard `index` of `nshards` of a co-optimization — the worker body
+/// behind `co-opt --shard I/N`. Identical configuration across workers
+/// (network, space, cost, cfg) is the caller's contract; the merge step
+/// re-checks the cheap identity fields.
+pub fn co_optimize_shard(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    index: usize,
+    nshards: usize,
+) -> ShardRun {
+    let se = space.shard(index, nshards);
+    let mut out = run_points(net, se.candidates, cost, cfg);
+    out.stats.generated = se.generated;
+    out.stats.budget_filtered = se.budget_filtered;
+    out.stats.ratio_filtered = se.ratio_filtered;
+    let winner = out
+        .ranked
+        .first()
+        .filter(|(_, r)| r.opt.unmapped == 0)
+        .cloned();
+    ShardRun {
+        checkpoint: ShardCheckpoint {
+            network: net.name.clone(),
+            batch: net.batch,
+            nshards,
+            shards: vec![index],
+            stats: out.stats,
+            incumbent_pj: out.incumbent_pj,
+            seeds: out.seeds,
+            winner,
+        },
+        ranked: out.ranked,
+    }
+}
+
+/// Associatively combine two checkpoints of the same run: stats add,
+/// incumbent and per-key seeds take minima, the winner is the minimum by
+/// `(energy, global index)`. Errors on mismatched run identity or
+/// overlapping shard sets.
+pub fn merge_checkpoints(a: &ShardCheckpoint, b: &ShardCheckpoint) -> Result<ShardCheckpoint> {
+    if a.network != b.network || a.batch != b.batch {
+        bail!(
+            "checkpoint mismatch: {}@{} vs {}@{}",
+            a.network,
+            a.batch,
+            b.network,
+            b.batch
+        );
+    }
+    if a.nshards != b.nshards {
+        bail!("shard-count mismatch: {} vs {}", a.nshards, b.nshards);
+    }
+    let mut shards: Vec<usize> = a.shards.iter().chain(b.shards.iter()).copied().collect();
+    shards.sort_unstable();
+    if shards.windows(2).any(|w| w[0] == w[1]) {
+        bail!("overlapping shard sets: {:?} and {:?}", a.shards, b.shards);
+    }
+
+    let mut stats = a.stats.clone();
+    stats.merge(&b.stats);
+
+    let mut seeds: Vec<(LayerKey, f64)> = Vec::with_capacity(a.seeds.len() + b.seeds.len());
+    let (mut ia, mut ib) = (0usize, 0usize);
+    while ia < a.seeds.len() || ib < b.seeds.len() {
+        // merge two key-sorted tables, minimum on shared keys
+        let pick_a = match (a.seeds.get(ia), b.seeds.get(ib)) {
+            (Some(x), Some(y)) => match x.0.cmp(&y.0) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => {
+                    seeds.push((x.0, x.1.min(y.1)));
+                    ia += 1;
+                    ib += 1;
+                    continue;
+                }
+            },
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => unreachable!(),
+        };
+        if pick_a {
+            seeds.push(a.seeds[ia]);
+            ia += 1;
+        } else {
+            seeds.push(b.seeds[ib]);
+            ib += 1;
+        }
+    }
+
+    let winner = match (&a.winner, &b.winner) {
+        (None, w) | (w, None) => w.clone(),
+        (Some(wa), Some(wb)) => {
+            let a_wins = (wa.1.opt.total_energy_pj, wa.0) <= (wb.1.opt.total_energy_pj, wb.0);
+            Some(if a_wins { wa.clone() } else { wb.clone() })
+        }
+    };
+
+    Ok(ShardCheckpoint {
+        network: a.network.clone(),
+        batch: a.batch,
+        nshards: a.nshards,
+        shards,
+        stats,
+        incumbent_pj: a.incumbent_pj.min(b.incumbent_pj),
+        seeds,
+        winner,
+    })
+}
+
+/// Merge a whole set of checkpoints (any order — the operation is
+/// associative and commutative). Errors on an empty set.
+pub fn merge_all(ckpts: &[ShardCheckpoint]) -> Result<ShardCheckpoint> {
+    let (first, rest) = ckpts
+        .split_first()
+        .ok_or_else(|| anyhow!("no checkpoints to merge"))?;
+    let mut acc = first.clone();
+    for c in rest {
+        acc = merge_checkpoints(&acc, c)?;
+    }
+    Ok(acc)
+}
+
+/// In-process sharded co-optimization: run every shard (sequentially —
+/// each shard parallelizes internally over `cfg.threads`; incumbents are
+/// deliberately **not** shared across shards, exactly mirroring the
+/// process-isolated deployment), merge the checkpoints, and return a
+/// [`CoOptResult`] whose ranked list is the union of all shards in the
+/// global total order. With `nshards == 1` this is `co_optimize` with
+/// shard bookkeeping.
+pub fn co_optimize_sharded(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    nshards: usize,
+) -> CoOptResult {
+    assert!(nshards >= 1, "need at least one shard");
+    let mut merged: Option<ShardCheckpoint> = None;
+    let mut ranked: Vec<(usize, HierarchyResult)> = Vec::new();
+    for i in 0..nshards {
+        let run = co_optimize_shard(net, space, cost, cfg, i, nshards);
+        ranked.extend(run.ranked);
+        merged = Some(match merged {
+            None => run.checkpoint,
+            Some(m) => merge_checkpoints(&m, &run.checkpoint)
+                .expect("same-run shard checkpoints must merge"),
+        });
+    }
+    let merged = merged.expect("nshards >= 1");
+    ranked.sort_by(super::rank_order);
+    CoOptResult {
+        ranked: ranked.into_iter().map(|(_, r)| r).collect(),
+        stats: merged.stats,
+    }
+}
+
+impl ShardCheckpoint {
+    /// The winner's result, if any shard found a feasible point.
+    pub fn winner_result(&self) -> Option<&HierarchyResult> {
+        self.winner.as_ref().map(|(_, r)| r)
+    }
+
+    /// Serialize to the v1 checkpoint JSON (see the module docs).
+    pub fn to_json(&self) -> String {
+        let seeds = self
+            .seeds
+            .iter()
+            .map(|((bounds, stride), e)| {
+                Json::Obj(vec![
+                    ("bounds".into(), u64_arr(bounds)),
+                    ("stride".into(), Json::int(*stride as u64)),
+                    ("energy_pj".into(), Json::num(*e)),
+                ])
+            })
+            .collect();
+        let winner = match &self.winner {
+            None => Json::Null,
+            Some((idx, r)) => Json::Obj(vec![
+                ("index".into(), Json::int(*idx as u64)),
+                ("arch".into(), arch_to_json(&r.arch)),
+                ("opt".into(), opt_to_json(&r.opt)),
+            ]),
+        };
+        Json::Obj(vec![
+            ("format".into(), Json::str(CHECKPOINT_FORMAT)),
+            ("network".into(), Json::str(&self.network)),
+            ("batch".into(), Json::int(self.batch)),
+            ("nshards".into(), Json::int(self.nshards as u64)),
+            (
+                "shards".into(),
+                Json::Arr(self.shards.iter().map(|s| Json::int(*s as u64)).collect()),
+            ),
+            ("incumbent_pj".into(), Json::num(self.incumbent_pj)),
+            ("stats".into(), stats_to_json(&self.stats)),
+            ("seeds".into(), Json::Arr(seeds)),
+            ("winner".into(), winner),
+        ])
+        .to_string()
+    }
+
+    /// Parse a v1 checkpoint JSON document.
+    pub fn from_json(text: &str) -> Result<ShardCheckpoint> {
+        let v = Json::parse(text).map_err(|e| e.context("checkpoint is not valid JSON"))?;
+        let format = v.field("format")?.as_str()?;
+        if format != CHECKPOINT_FORMAT {
+            bail!("unknown checkpoint format `{format}` (want `{CHECKPOINT_FORMAT}`)");
+        }
+        let mut seeds = Vec::new();
+        for s in v.field("seeds")?.as_arr()? {
+            seeds.push((
+                (u64_fixed::<NDIMS>(s.field("bounds")?)?, s.field("stride")?.as_u64()? as u32),
+                s.field("energy_pj")?.as_f64()?,
+            ));
+        }
+        let winner = match v.field("winner")? {
+            Json::Null => None,
+            w => Some((
+                w.field("index")?.as_usize()?,
+                HierarchyResult {
+                    arch: arch_from_json(w.field("arch")?)?,
+                    opt: opt_from_json(w.field("opt")?)?,
+                },
+            )),
+        };
+        let mut shards = Vec::new();
+        for s in v.field("shards")?.as_arr()? {
+            shards.push(s.as_usize()?);
+        }
+        Ok(ShardCheckpoint {
+            network: v.field("network")?.as_str()?.to_string(),
+            batch: v.field("batch")?.as_u64()?,
+            nshards: v.field("nshards")?.as_usize()?,
+            shards,
+            stats: stats_from_json(v.field("stats")?)?,
+            incumbent_pj: v.field("incumbent_pj")?.as_f64()?,
+            seeds,
+            winner,
+        })
+    }
+}
+
+// ---- JSON codecs for the winner payload ------------------------------
+
+fn u64_arr(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::int(x)).collect())
+}
+
+fn f64_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x)).collect())
+}
+
+fn u64s(v: &Json) -> Result<Vec<u64>> {
+    v.as_arr()?.iter().map(|x| x.as_u64()).collect()
+}
+
+fn f64s(v: &Json) -> Result<Vec<f64>> {
+    v.as_arr()?.iter().map(|x| x.as_f64()).collect()
+}
+
+fn u64_fixed<const N: usize>(v: &Json) -> Result<[u64; N]> {
+    u64s(v)?
+        .try_into()
+        .map_err(|xs: Vec<u64>| anyhow!("expected {N} ints, got {}", xs.len()))
+}
+
+fn f64_fixed<const N: usize>(v: &Json) -> Result<[f64; N]> {
+    f64s(v)?
+        .try_into()
+        .map_err(|xs: Vec<f64>| anyhow!("expected {N} numbers, got {}", xs.len()))
+}
+
+fn arch_to_json(a: &Arch) -> Json {
+    let levels = a
+        .levels
+        .iter()
+        .map(|l| {
+            let kind = match l.kind {
+                LevelKind::Reg => "reg",
+                LevelKind::Sram => "sram",
+                LevelKind::Dram => "dram",
+            };
+            let mut m = vec![
+                ("name".into(), Json::str(&l.name)),
+                ("kind".into(), Json::str(kind)),
+            ];
+            // DRAM capacity is the u64::MAX sentinel — implied by kind
+            if l.kind != LevelKind::Dram {
+                m.push(("size_bytes".into(), Json::int(l.size_bytes)));
+            }
+            Json::Obj(m)
+        })
+        .collect();
+    Json::Obj(vec![
+        ("name".into(), Json::str(&a.name)),
+        ("levels".into(), Json::Arr(levels)),
+        (
+            "array".into(),
+            Json::Obj(vec![
+                ("rows".into(), Json::int(a.array.rows as u64)),
+                ("cols".into(), Json::int(a.array.cols as u64)),
+            ]),
+        ),
+        (
+            "bus".into(),
+            Json::str(match a.bus {
+                ArrayBus::Systolic => "systolic",
+                ArrayBus::Broadcast => "broadcast",
+            }),
+        ),
+        ("word_bytes".into(), Json::int(a.word_bytes as u64)),
+        (
+            "dram_bw_bytes_per_cycle".into(),
+            Json::num(a.dram_bw_bytes_per_cycle),
+        ),
+    ])
+}
+
+fn arch_from_json(v: &Json) -> Result<Arch> {
+    let mut levels = Vec::new();
+    for l in v.field("levels")?.as_arr()? {
+        let name = l.field("name")?.as_str()?;
+        levels.push(match l.field("kind")?.as_str()? {
+            "reg" => MemLevel::reg(name, l.field("size_bytes")?.as_u64()?),
+            "sram" => MemLevel::sram(name, l.field("size_bytes")?.as_u64()?),
+            "dram" => MemLevel::dram(),
+            other => bail!("unknown level kind `{other}`"),
+        });
+    }
+    let array = v.field("array")?;
+    Ok(Arch {
+        name: v.field("name")?.as_str()?.to_string(),
+        levels,
+        array: ArrayShape {
+            rows: array.field("rows")?.as_u64()? as u32,
+            cols: array.field("cols")?.as_u64()? as u32,
+        },
+        bus: match v.field("bus")?.as_str()? {
+            "systolic" => ArrayBus::Systolic,
+            "broadcast" => ArrayBus::Broadcast,
+            other => bail!("unknown bus `{other}`"),
+        },
+        word_bytes: v.field("word_bytes")?.as_u64()? as u32,
+        dram_bw_bytes_per_cycle: v.field("dram_bw_bytes_per_cycle")?.as_f64()?,
+    })
+}
+
+fn shape_to_json(s: &Shape) -> Json {
+    Json::Obj(vec![
+        ("bounds".into(), u64_arr(&s.bounds)),
+        ("stride".into(), Json::int(s.stride as u64)),
+    ])
+}
+
+fn shape_from_json(v: &Json) -> Result<Shape> {
+    Ok(Shape {
+        bounds: u64_fixed::<NDIMS>(v.field("bounds")?)?,
+        stride: v.field("stride")?.as_u64()? as u32,
+    })
+}
+
+fn order_to_json(o: &LevelOrder) -> Json {
+    Json::Arr(o.0.iter().map(|d| Json::str(d.name())).collect())
+}
+
+fn order_from_json(v: &Json) -> Result<LevelOrder> {
+    let names = v.as_arr()?;
+    if names.len() != NDIMS {
+        bail!("level order needs {NDIMS} dims");
+    }
+    let mut dims = [Dim::B; NDIMS];
+    for (i, n) in names.iter().enumerate() {
+        let n = n.as_str()?;
+        dims[i] = Dim::parse(n).ok_or_else(|| anyhow!("unknown dim `{n}`"))?;
+    }
+    let o = LevelOrder(dims);
+    if !o.is_valid() {
+        bail!("level order is not a permutation");
+    }
+    Ok(o)
+}
+
+fn mapping_to_json(m: &Mapping) -> Json {
+    Json::Obj(vec![
+        ("shape".into(), shape_to_json(&m.shape)),
+        (
+            "blocking".into(),
+            Json::Arr(m.blocking.factors.iter().map(|f| u64_arr(f.as_slice())).collect()),
+        ),
+        (
+            "orders".into(),
+            Json::Arr(m.orders.iter().map(order_to_json).collect()),
+        ),
+        ("spatial".into(), u64_arr(&m.spatial)),
+        ("spatial_at".into(), Json::int(m.spatial_at as u64)),
+    ])
+}
+
+fn mapping_from_json(v: &Json) -> Result<Mapping> {
+    let mut factors = Vec::new();
+    for f in v.field("blocking")?.as_arr()? {
+        factors.push(u64_fixed::<NDIMS>(f)?);
+    }
+    let mut orders = Vec::new();
+    for o in v.field("orders")?.as_arr()? {
+        orders.push(order_from_json(o)?);
+    }
+    let m = Mapping {
+        shape: shape_from_json(v.field("shape")?)?,
+        blocking: Blocking { factors },
+        orders,
+        spatial: u64_fixed::<NDIMS>(v.field("spatial")?)?,
+        spatial_at: v.field("spatial_at")?.as_usize()?,
+    };
+    m.validate().map_err(|e| anyhow!("invalid mapping: {e}"))?;
+    Ok(m)
+}
+
+fn smap_axis_to_json(axis: &[(Dim, u64)]) -> Json {
+    Json::Arr(
+        axis.iter()
+            .map(|(d, e)| Json::Arr(vec![Json::str(d.name()), Json::int(*e)]))
+            .collect(),
+    )
+}
+
+fn smap_axis_from_json(v: &Json) -> Result<Vec<(Dim, u64)>> {
+    let mut out = Vec::new();
+    for pair in v.as_arr()? {
+        let pair = pair.as_arr()?;
+        if pair.len() != 2 {
+            bail!("spatial-map entry must be [dim, extent]");
+        }
+        let n = pair[0].as_str()?;
+        out.push((
+            Dim::parse(n).ok_or_else(|| anyhow!("unknown dim `{n}`"))?,
+            pair[1].as_u64()?,
+        ));
+    }
+    Ok(out)
+}
+
+fn smap_to_json(s: &SpatialMap) -> Json {
+    Json::Obj(vec![
+        ("u".into(), smap_axis_to_json(&s.u)),
+        ("v".into(), smap_axis_to_json(&s.v)),
+    ])
+}
+
+fn smap_from_json(v: &Json) -> Result<SpatialMap> {
+    Ok(SpatialMap {
+        u: smap_axis_from_json(v.field("u")?)?,
+        v: smap_axis_from_json(v.field("v")?)?,
+    })
+}
+
+fn snapshot_to_json(s: &EvalSnapshot) -> Json {
+    Json::Obj(vec![
+        ("stage2".into(), Json::int(s.stage2)),
+        ("fit_rejected".into(), Json::int(s.fit_rejected)),
+        ("stage3".into(), Json::int(s.stage3)),
+        ("pruned".into(), Json::int(s.pruned)),
+        ("full".into(), Json::int(s.full)),
+    ])
+}
+
+fn snapshot_from_json(v: &Json) -> Result<EvalSnapshot> {
+    Ok(EvalSnapshot {
+        stage2: v.field("stage2")?.as_u64()?,
+        fit_rejected: v.field("fit_rejected")?.as_u64()?,
+        stage3: v.field("stage3")?.as_u64()?,
+        pruned: v.field("pruned")?.as_u64()?,
+        full: v.field("full")?.as_u64()?,
+    })
+}
+
+fn result_to_json(r: &ModelResult) -> Json {
+    let levels = r
+        .levels
+        .iter()
+        .map(|l| {
+            Json::Obj(vec![
+                ("reads".into(), f64_arr(&l.reads)),
+                ("writes".into(), f64_arr(&l.writes)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("levels".into(), Json::Arr(levels)),
+        ("fabric_words".into(), f64_arr(&r.fabric_words)),
+        ("fabric_hops".into(), Json::num(r.fabric_hops)),
+        ("macs".into(), Json::int(r.macs)),
+        ("active_pes".into(), Json::int(r.active_pes)),
+        ("energy_by_level".into(), f64_arr(&r.energy_by_level)),
+        ("fabric_energy".into(), Json::num(r.fabric_energy)),
+        ("mac_energy".into(), Json::num(r.mac_energy)),
+        ("energy_pj".into(), Json::num(r.energy_pj)),
+        ("cycles".into(), Json::num(r.cycles)),
+        ("utilization".into(), Json::num(r.utilization)),
+    ])
+}
+
+fn result_from_json(v: &Json) -> Result<ModelResult> {
+    let mut levels = Vec::new();
+    for l in v.field("levels")?.as_arr()? {
+        levels.push(LevelCounts {
+            reads: f64_fixed::<3>(l.field("reads")?)?,
+            writes: f64_fixed::<3>(l.field("writes")?)?,
+        });
+    }
+    Ok(ModelResult {
+        levels,
+        fabric_words: f64_fixed::<3>(v.field("fabric_words")?)?,
+        fabric_hops: v.field("fabric_hops")?.as_f64()?,
+        macs: v.field("macs")?.as_u64()?,
+        active_pes: v.field("active_pes")?.as_u64()?,
+        energy_by_level: f64s(v.field("energy_by_level")?)?,
+        fabric_energy: v.field("fabric_energy")?.as_f64()?,
+        mac_energy: v.field("mac_energy")?.as_f64()?,
+        energy_pj: v.field("energy_pj")?.as_f64()?,
+        cycles: v.field("cycles")?.as_f64()?,
+        utilization: v.field("utilization")?.as_f64()?,
+    })
+}
+
+fn layer_opt_to_json(lo: &LayerOpt) -> Json {
+    Json::Obj(vec![
+        ("mapping".into(), mapping_to_json(&lo.mapping)),
+        ("smap".into(), smap_to_json(&lo.smap)),
+        ("result".into(), result_to_json(&lo.result)),
+        ("evaluated".into(), Json::int(lo.evaluated as u64)),
+        ("stats".into(), snapshot_to_json(&lo.stats)),
+    ])
+}
+
+fn layer_opt_from_json(v: &Json) -> Result<LayerOpt> {
+    Ok(LayerOpt {
+        mapping: mapping_from_json(v.field("mapping")?)?,
+        smap: smap_from_json(v.field("smap")?)?,
+        result: result_from_json(v.field("result")?)?,
+        evaluated: v.field("evaluated")?.as_usize()?,
+        stats: snapshot_from_json(v.field("stats")?)?,
+    })
+}
+
+fn opt_to_json(o: &NetworkOpt) -> Json {
+    let per_layer = o
+        .per_layer
+        .iter()
+        .map(|l| match l {
+            Some(lo) => layer_opt_to_json(lo),
+            None => Json::Null,
+        })
+        .collect();
+    Json::Obj(vec![
+        ("total_energy_pj".into(), Json::num(o.total_energy_pj)),
+        ("total_cycles".into(), Json::num(o.total_cycles)),
+        ("total_macs".into(), Json::int(o.total_macs)),
+        ("unmapped".into(), Json::int(o.unmapped as u64)),
+        (
+            "unmapped_layers".into(),
+            Json::Arr(o.unmapped_layers.iter().map(|&i| Json::int(i as u64)).collect()),
+        ),
+        ("per_layer".into(), Json::Arr(per_layer)),
+    ])
+}
+
+fn opt_from_json(v: &Json) -> Result<NetworkOpt> {
+    let mut per_layer = Vec::new();
+    for l in v.field("per_layer")?.as_arr()? {
+        per_layer.push(match l {
+            Json::Null => None,
+            lo => Some(layer_opt_from_json(lo)?),
+        });
+    }
+    let mut unmapped_layers = Vec::new();
+    for i in v.field("unmapped_layers")?.as_arr()? {
+        unmapped_layers.push(i.as_usize()?);
+    }
+    Ok(NetworkOpt {
+        per_layer,
+        total_energy_pj: v.field("total_energy_pj")?.as_f64()?,
+        total_cycles: v.field("total_cycles")?.as_f64()?,
+        total_macs: v.field("total_macs")?.as_u64()?,
+        unmapped: v.field("unmapped")?.as_usize()?,
+        unmapped_layers,
+    })
+}
+
+fn stats_to_json(s: &NetOptStats) -> Json {
+    Json::Obj(vec![
+        ("generated".into(), Json::int(s.generated as u64)),
+        ("budget_filtered".into(), Json::int(s.budget_filtered as u64)),
+        ("ratio_filtered".into(), Json::int(s.ratio_filtered as u64)),
+        ("candidates".into(), Json::int(s.candidates as u64)),
+        ("pruned".into(), Json::int(s.pruned as u64)),
+        ("evaluated_full".into(), Json::int(s.evaluated_full as u64)),
+        ("infeasible".into(), Json::int(s.infeasible as u64)),
+        (
+            "throughput_filtered".into(),
+            Json::int(s.throughput_filtered as u64),
+        ),
+        ("layer_searches".into(), Json::int(s.layer_searches as u64)),
+        ("layer_reruns".into(), Json::int(s.layer_reruns as u64)),
+        ("engine".into(), snapshot_to_json(&s.engine)),
+    ])
+}
+
+fn stats_from_json(v: &Json) -> Result<NetOptStats> {
+    Ok(NetOptStats {
+        generated: v.field("generated")?.as_usize()?,
+        budget_filtered: v.field("budget_filtered")?.as_usize()?,
+        ratio_filtered: v.field("ratio_filtered")?.as_usize()?,
+        candidates: v.field("candidates")?.as_usize()?,
+        pruned: v.field("pruned")?.as_usize()?,
+        evaluated_full: v.field("evaluated_full")?.as_usize()?,
+        infeasible: v.field("infeasible")?.as_usize()?,
+        throughput_filtered: v.field("throughput_filtered")?.as_usize()?,
+        layer_searches: v.field("layer_searches")?.as_usize()?,
+        layer_reruns: v.field("layer_reruns")?.as_usize()?,
+        engine: snapshot_from_json(v.field("engine")?)?,
+    })
+}

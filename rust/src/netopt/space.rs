@@ -66,6 +66,27 @@ pub struct SpaceEnumeration {
     pub ratio_filtered: usize,
 }
 
+/// One shard of the design space ([`DesignSpace::shard`]): the candidates
+/// assigned to shard `index` of `nshards`, each tagged with its **global
+/// raw-grid index** (the cross-shard tie-break key for the merge step),
+/// plus this shard's share of the filter counts. Because assignment is
+/// per-raw-point, the counts satisfy the same partition identity as the
+/// whole space (`generated == budget_filtered + ratio_filtered +
+/// candidates.len()`) shard-by-shard, and summing any disjoint set of
+/// shards reproduces the corresponding [`SpaceEnumeration`] counts
+/// exactly — the associativity the checkpoint merge relies on.
+#[derive(Debug, Clone)]
+pub struct ShardEnumeration {
+    /// `(global raw-grid index, arch)` pairs, ascending by index.
+    pub candidates: Vec<(usize, Arch)>,
+    /// Raw grid points assigned to this shard.
+    pub generated: usize,
+    /// Assigned points dropped by the capacity budget.
+    pub budget_filtered: usize,
+    /// Assigned points dropped by the Observation-2 ratio rule.
+    pub ratio_filtered: usize,
+}
+
 impl DesignSpace {
     /// The §6.3 auto-optimizer's default grid on a fixed PE array: the
     /// paper's RF sizes, 4/8/16× second-level RF steps, the three mobile
@@ -98,9 +119,11 @@ impl DesignSpace {
         })
     }
 
-    /// Enumerate the grid and apply the budget and ratio filters,
-    /// reporting how many points each filter removed.
-    pub fn enumerate(&self) -> SpaceEnumeration {
+    /// The raw grid in deterministic enumeration order, before any
+    /// filtering. Shared by [`enumerate`](Self::enumerate) (the whole
+    /// space) and [`shard`](Self::shard) (one interleaved slice), so a
+    /// point's raw-grid index is identical however the space is consumed.
+    fn raw_grid(&self) -> Vec<Arch> {
         let mut raw: Vec<Arch> = Vec::new();
         for &array in &self.arrays {
             for &bus in &self.buses {
@@ -118,6 +141,13 @@ impl DesignSpace {
                 }
             }
         }
+        raw
+    }
+
+    /// Enumerate the grid and apply the budget and ratio filters,
+    /// reporting how many points each filter removed.
+    pub fn enumerate(&self) -> SpaceEnumeration {
+        let mut raw = self.raw_grid();
         let generated = raw.len();
         if let Some(budget) = self.max_onchip_bytes {
             raw.retain(|a| a.onchip_bytes() <= budget);
@@ -127,6 +157,45 @@ impl DesignSpace {
         let ratio_filtered = generated - budget_filtered - raw.len();
         SpaceEnumeration {
             candidates: raw,
+            generated,
+            budget_filtered,
+            ratio_filtered,
+        }
+    }
+
+    /// Deterministic shard `index` of `nshards`: raw grid point `i` is
+    /// assigned to shard `i % nshards` (stable interleaving — neighboring
+    /// grid points have similar search cost, so round-robin balances the
+    /// shard loads far better than contiguous ranges), then the budget and
+    /// ratio filters run on the assigned subset. The union of all
+    /// `nshards` shards is exactly [`enumerate`](Self::enumerate), with
+    /// candidates tagged by their global raw-grid index.
+    pub fn shard(&self, index: usize, nshards: usize) -> ShardEnumeration {
+        assert!(nshards >= 1, "need at least one shard");
+        assert!(index < nshards, "shard index {index} out of 0..{nshards}");
+        let mut generated = 0usize;
+        let mut budget_filtered = 0usize;
+        let mut ratio_filtered = 0usize;
+        let mut candidates = Vec::new();
+        for (i, a) in self.raw_grid().into_iter().enumerate() {
+            if i % nshards != index {
+                continue;
+            }
+            generated += 1;
+            if self
+                .max_onchip_bytes
+                .map(|budget| a.onchip_bytes() > budget)
+                .unwrap_or(false)
+            {
+                budget_filtered += 1;
+            } else if !self.obs2_ok(&a) {
+                ratio_filtered += 1;
+            } else {
+                candidates.push((i, a));
+            }
+        }
+        ShardEnumeration {
+            candidates,
             generated,
             budget_filtered,
             ratio_filtered,
@@ -226,6 +295,57 @@ mod tests {
         for a in &capped.candidates {
             assert!(a.onchip_bytes() <= 100 << 10, "{} over budget", a.name);
         }
+    }
+
+    #[test]
+    fn shards_partition_the_enumeration() {
+        let mut space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+        space.max_onchip_bytes = Some(300 << 10); // exercise all three outcomes
+        let whole = space.enumerate();
+        for nshards in [1usize, 2, 3, 5, 7, whole.generated + 3] {
+            let shards: Vec<ShardEnumeration> =
+                (0..nshards).map(|i| space.shard(i, nshards)).collect();
+            // counts sum to the whole space, shard by shard
+            assert_eq!(
+                shards.iter().map(|s| s.generated).sum::<usize>(),
+                whole.generated
+            );
+            assert_eq!(
+                shards.iter().map(|s| s.budget_filtered).sum::<usize>(),
+                whole.budget_filtered
+            );
+            assert_eq!(
+                shards.iter().map(|s| s.ratio_filtered).sum::<usize>(),
+                whole.ratio_filtered
+            );
+            // per-shard partition identity (the stats invariant)
+            for s in &shards {
+                assert_eq!(
+                    s.generated,
+                    s.budget_filtered + s.ratio_filtered + s.candidates.len()
+                );
+            }
+            // interleaving balances assignment to within one point
+            let lo = shards.iter().map(|s| s.generated).min().unwrap();
+            let hi = shards.iter().map(|s| s.generated).max().unwrap();
+            assert!(hi - lo <= 1, "unbalanced raw assignment ({lo}..{hi})");
+            // union of candidates == whole enumeration, in global order
+            let mut merged: Vec<(usize, &Arch)> = shards
+                .iter()
+                .flat_map(|s| s.candidates.iter().map(|(i, a)| (*i, a)))
+                .collect();
+            merged.sort_by_key(|(i, _)| *i);
+            assert_eq!(merged.len(), whole.candidates.len());
+            for ((_, a), b) in merged.iter().zip(whole.candidates.iter()) {
+                assert_eq!(**a, *b, "shard union diverges from enumerate()");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of 0..")]
+    fn shard_index_out_of_range_panics() {
+        DesignSpace::paper_default(ArrayShape { rows: 8, cols: 8 }).shard(3, 3);
     }
 
     #[test]

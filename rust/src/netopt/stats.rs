@@ -38,6 +38,37 @@ pub struct NetOptStats {
     pub engine: EvalSnapshot,
 }
 
+impl NetOptStats {
+    /// Field-wise accumulation of another run's counters — the roll-up
+    /// used when merging shard checkpoints. Addition is associative and
+    /// commutative per field, so any merge order yields identical totals,
+    /// and both [`invariants_hold`](Self::invariants_hold) identities are
+    /// preserved (each is a sum equation, stable under summation).
+    pub fn merge(&mut self, other: &NetOptStats) {
+        self.generated += other.generated;
+        self.budget_filtered += other.budget_filtered;
+        self.ratio_filtered += other.ratio_filtered;
+        self.candidates += other.candidates;
+        self.pruned += other.pruned;
+        self.evaluated_full += other.evaluated_full;
+        self.infeasible += other.infeasible;
+        self.throughput_filtered += other.throughput_filtered;
+        self.layer_searches += other.layer_searches;
+        self.layer_reruns += other.layer_reruns;
+        self.engine.absorb(&other.engine);
+    }
+
+    /// The two structural identities every (shard or merged) stats value
+    /// must satisfy: the space filters partition the grid
+    /// (`generated == budget_filtered + ratio_filtered + candidates`) and
+    /// the evaluator accounts for every candidate
+    /// (`candidates == pruned + evaluated_full`).
+    pub fn invariants_hold(&self) -> bool {
+        self.generated == self.budget_filtered + self.ratio_filtered + self.candidates
+            && self.candidates == self.pruned + self.evaluated_full
+    }
+}
+
 impl std::fmt::Display for NetOptStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -63,6 +94,43 @@ impl std::fmt::Display for NetOptStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::for_cases;
+    use crate::util::XorShift;
+
+    /// A random stats value that satisfies both structural invariants by
+    /// construction (counts partitioned bottom-up).
+    fn random_stats(rng: &mut XorShift) -> NetOptStats {
+        let pruned = rng.below(50) as usize;
+        let evaluated_full = rng.below(50) as usize;
+        let candidates = pruned + evaluated_full;
+        let budget_filtered = rng.below(20) as usize;
+        let ratio_filtered = rng.below(20) as usize;
+        NetOptStats {
+            generated: budget_filtered + ratio_filtered + candidates,
+            budget_filtered,
+            ratio_filtered,
+            candidates,
+            pruned,
+            evaluated_full,
+            infeasible: rng.below(1 + evaluated_full as u64) as usize,
+            throughput_filtered: rng.below(1 + evaluated_full as u64) as usize,
+            layer_searches: rng.below(1000) as usize,
+            layer_reruns: rng.below(100) as usize,
+            engine: EvalSnapshot {
+                stage2: rng.below(10_000),
+                fit_rejected: rng.below(100),
+                stage3: rng.below(100_000),
+                pruned: rng.below(50_000),
+                full: rng.below(10_000),
+            },
+        }
+    }
+
+    fn merged(a: &NetOptStats, b: &NetOptStats) -> NetOptStats {
+        let mut out = a.clone();
+        out.merge(b);
+        out
+    }
 
     #[test]
     fn display_mentions_counts() {
@@ -77,5 +145,46 @@ mod tests {
         assert!(text.contains("10 generated"));
         assert!(text.contains("4 pruned"));
         assert!(text.contains("3 fully evaluated"));
+    }
+
+    #[test]
+    fn merge_preserves_invariants() {
+        for_cases(0x57A7, 200, |rng| {
+            let a = random_stats(rng);
+            let b = random_stats(rng);
+            assert!(a.invariants_hold() && b.invariants_hold());
+            let m = merged(&a, &b);
+            assert!(m.invariants_hold(), "merge broke invariants: {m}");
+            assert_eq!(m.generated, a.generated + b.generated);
+            assert_eq!(m.engine.full, a.engine.full + b.engine.full);
+        });
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        for_cases(0xC0117, 200, |rng| {
+            let a = random_stats(rng);
+            let b = random_stats(rng);
+            assert_eq!(merged(&a, &b), merged(&b, &a));
+        });
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        for_cases(0xA550C, 200, |rng| {
+            let a = random_stats(rng);
+            let b = random_stats(rng);
+            let c = random_stats(rng);
+            assert_eq!(merged(&merged(&a, &b), &c), merged(&a, &merged(&b, &c)));
+        });
+    }
+
+    #[test]
+    fn merge_identity_is_default() {
+        for_cases(0x1D, 50, |rng| {
+            let a = random_stats(rng);
+            assert_eq!(merged(&a, &NetOptStats::default()), a);
+            assert_eq!(merged(&NetOptStats::default(), &a), a);
+        });
     }
 }

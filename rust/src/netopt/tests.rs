@@ -210,6 +210,191 @@ fn search_hierarchy_shim_matches_co_optimize() {
     }
 }
 
+/// Assert two winners are bit-identical on the contract surface:
+/// architecture, network totals, and every per-layer (mapping, smap,
+/// model result). Search *counters* (`LayerOpt::evaluated`/`stats`) are
+/// deliberately excluded — pruning histories legitimately differ across
+/// sharding and thread layouts; the optimum must not.
+fn assert_winner_payload_eq(tag: &str, wa: &HierarchyResult, wb: &HierarchyResult) {
+    assert_eq!(wa.arch, wb.arch, "{tag}: winner arch differs");
+    assert_eq!(
+        wa.opt.total_energy_pj.to_bits(),
+        wb.opt.total_energy_pj.to_bits(),
+        "{tag}: winner energy bits differ"
+    );
+    assert_eq!(
+        wa.opt.total_cycles.to_bits(),
+        wb.opt.total_cycles.to_bits(),
+        "{tag}: winner cycle bits differ"
+    );
+    assert_eq!(wa.opt.total_macs, wb.opt.total_macs, "{tag}: macs differ");
+    assert_eq!(wa.opt.unmapped, 0, "{tag}: winner must be fully mapped");
+    assert_eq!(wb.opt.unmapped, 0, "{tag}: winner must be fully mapped");
+    assert_eq!(wa.opt.per_layer.len(), wb.opt.per_layer.len());
+    for (x, y) in wa.opt.per_layer.iter().zip(wb.opt.per_layer.iter()) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.mapping, y.mapping, "{tag}: winner mapping differs");
+        assert_eq!(x.smap, y.smap, "{tag}: winner spatial map differs");
+        assert_eq!(x.result, y.result, "{tag}: winner model result differs");
+    }
+}
+
+/// Assert two results agree on the winner bit-for-bit.
+fn assert_same_winner(tag: &str, a: &CoOptResult, b: &CoOptResult) {
+    let (Some(wa), Some(wb)) = (a.best(), b.best()) else {
+        panic!("{tag}: missing winner");
+    };
+    assert_winner_payload_eq(tag, wa, wb);
+}
+
+#[test]
+fn sharded_matches_single_process() {
+    let space = small_space();
+    for net in workloads() {
+        let single = co_optimize(&net, &space, &Table3, &NetOptConfig::new(small_opts(), 2));
+        for nshards in [1usize, 2, 3, 5] {
+            let sharded = co_optimize_sharded(
+                &net,
+                &space,
+                &Table3,
+                &NetOptConfig::new(small_opts(), 2),
+                nshards,
+            );
+            assert_same_winner(&format!("{} n={nshards}", net.name), &single, &sharded);
+            // every candidate is accounted for across the shards
+            assert!(sharded.stats.invariants_hold(), "{}", sharded.stats);
+            assert_eq!(sharded.stats.generated, single.stats.generated);
+            assert_eq!(sharded.stats.candidates, single.stats.candidates);
+        }
+    }
+}
+
+#[test]
+fn sharded_exhaustive_reproduces_full_ranking() {
+    // Exhaustive mode has no cross-point state at all, so the sharded
+    // union must equal the single-process ranking point for point.
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    let single = co_optimize(
+        &net,
+        &space,
+        &Table3,
+        &NetOptConfig::exhaustive(small_opts(), 2),
+    );
+    let sharded = co_optimize_sharded(
+        &net,
+        &space,
+        &Table3,
+        &NetOptConfig::exhaustive(small_opts(), 2),
+        3,
+    );
+    assert_eq!(single.ranked.len(), sharded.ranked.len());
+    for (a, b) in single.ranked.iter().zip(sharded.ranked.iter()) {
+        assert_eq!(a.arch, b.arch);
+        assert_eq!(
+            a.opt.total_energy_pj.to_bits(),
+            b.opt.total_energy_pj.to_bits()
+        );
+    }
+}
+
+#[test]
+fn checkpoint_json_roundtrip_is_lossless() {
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    for (index, nshards) in [(0usize, 2usize), (1, 2), (2, 7)] {
+        let run = co_optimize_shard(
+            &net,
+            &space,
+            &Table3,
+            &NetOptConfig::new(small_opts(), 1),
+            index,
+            nshards,
+        );
+        let text = run.checkpoint.to_json();
+        let back = ShardCheckpoint::from_json(&text)
+            .unwrap_or_else(|e| panic!("shard {index}/{nshards}: {e}\n{text}"));
+        assert_eq!(run.checkpoint, back, "shard {index}/{nshards} round-trip");
+        // and the serialized form is stable (write → parse → write)
+        assert_eq!(text, back.to_json());
+    }
+}
+
+#[test]
+fn checkpoint_merge_is_associative_and_order_free() {
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    let cfg = NetOptConfig::new(small_opts(), 1);
+    let ckpts: Vec<ShardCheckpoint> = (0..3)
+        .map(|i| co_optimize_shard(&net, &space, &Table3, &cfg, i, 3).checkpoint)
+        .collect();
+    let left = merge_checkpoints(&merge_checkpoints(&ckpts[0], &ckpts[1]).unwrap(), &ckpts[2])
+        .unwrap();
+    let right = merge_checkpoints(&ckpts[0], &merge_checkpoints(&ckpts[1], &ckpts[2]).unwrap())
+        .unwrap();
+    let rev = merge_all(&[ckpts[2].clone(), ckpts[0].clone(), ckpts[1].clone()]).unwrap();
+    assert_eq!(left, right, "merge must be associative");
+    assert_eq!(left, rev, "merge must be order-free");
+    assert_eq!(left.shards, vec![0, 1, 2]);
+    assert!(left.stats.invariants_hold(), "{}", left.stats);
+    // the merged winner is the single-process winner, bit for bit
+    let single = co_optimize(&net, &space, &Table3, &cfg);
+    let sw = single.best().unwrap();
+    let mw = left.winner_result().expect("merged winner");
+    assert_winner_payload_eq("merged", sw, mw);
+}
+
+#[test]
+fn checkpoint_merge_rejects_mismatches() {
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    let cfg = NetOptConfig::new(small_opts(), 1);
+    let c0 = co_optimize_shard(&net, &space, &Table3, &cfg, 0, 2).checkpoint;
+    let c1 = co_optimize_shard(&net, &space, &Table3, &cfg, 1, 2).checkpoint;
+    // overlapping shard sets
+    assert!(merge_checkpoints(&c0, &c0).is_err());
+    // different shard count
+    let c_other_n = co_optimize_shard(&net, &space, &Table3, &cfg, 1, 3).checkpoint;
+    assert!(merge_checkpoints(&c0, &c_other_n).is_err());
+    // different network
+    let other = network("lstm-m", 1).unwrap();
+    let c_other_net = co_optimize_shard(&other, &space, &Table3, &cfg, 1, 2).checkpoint;
+    assert!(merge_checkpoints(&c0, &c_other_net).is_err());
+    // sane pair still merges
+    assert!(merge_checkpoints(&c0, &c1).is_ok());
+}
+
+#[test]
+fn co_optimize_arches_matches_evaluate_network() {
+    let net = network("mlp-m", 16).unwrap();
+    let arches = [crate::arch::eyeriss_like(), crate::arch::tpu_like()];
+    let res = co_optimize_arches(
+        &net,
+        &arches,
+        &Table3,
+        &NetOptConfig::exhaustive(small_opts(), 2),
+    );
+    assert_eq!(res.stats.generated, 2);
+    assert_eq!(res.stats.candidates, 2);
+    assert_eq!(res.stats.evaluated_full, 2);
+    for r in &res.ranked {
+        let direct = evaluate_network(
+            &net,
+            &r.arch,
+            &NetOptConfig::new(small_opts(), 2).df,
+            &Table3,
+            &small_opts(),
+            2,
+        );
+        assert_eq!(
+            r.opt.total_energy_pj.to_bits(),
+            direct.total_energy_pj.to_bits(),
+            "{}: arch-list path diverges from evaluate_network",
+            r.arch.name
+        );
+    }
+}
+
 #[test]
 fn empty_space_returns_no_points() {
     let mut space = small_space();

@@ -27,7 +27,7 @@ use crate::util::divisors;
 use crate::xmodel::ModelResult;
 
 /// Best mapping found for one layer.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerOpt {
     /// The winning mapping.
     pub mapping: Mapping,
@@ -392,7 +392,7 @@ pub fn sweep_blockings(
 }
 
 /// Network-level optimization result.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NetworkOpt {
     /// Best mapping per layer (same order as the network's layers).
     pub per_layer: Vec<Option<LayerOpt>>,
@@ -452,7 +452,7 @@ pub fn optimize_network(
 }
 
 /// One point of the hierarchy search.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HierarchyResult {
     /// The architecture evaluated.
     pub arch: Arch,

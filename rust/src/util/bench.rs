@@ -113,6 +113,41 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Validate one `BENCH_*.json` document against the documented
+/// perf-trajectory schema (ARCHITECTURE.md, "CI tiers and the perf
+/// trajectory"): a single **flat** JSON object with a required non-empty
+/// `"bench"` string naming the emitter; every other field a scalar
+/// (string, bool, or finite number). The `bench_schema` CI gate runs
+/// this over every emitted file; it lives in the library so the schema
+/// rules themselves are unit-tested by tier-1.
+pub fn validate_bench_json(text: &str) -> Result<(), String> {
+    use super::json::Json;
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    let members = v
+        .as_obj()
+        .map_err(|_| "top level must be a JSON object".to_string())?;
+    let bench = v
+        .get("bench")
+        .ok_or_else(|| "missing required `bench` field".to_string())?
+        .as_str()
+        .map_err(|_| "`bench` must be a string".to_string())?;
+    if bench.is_empty() {
+        return Err("`bench` must be non-empty".to_string());
+    }
+    for (key, value) in members {
+        match value {
+            Json::Str(_) | Json::Bool(_) => {}
+            Json::Num(x) if x.is_finite() => {}
+            other => {
+                return Err(format!(
+                    "field `{key}` must be a scalar (string, bool, finite number), got {other:?}"
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +169,24 @@ mod tests {
         assert!(fmt_ns(12_000.0).ends_with("us"));
         assert!(fmt_ns(12_000_000.0).ends_with("ms"));
         assert!(fmt_ns(2_000_000_000.0).ends_with(" s"));
+    }
+
+    #[test]
+    fn bench_schema_accepts_flat_scalar_objects() {
+        validate_bench_json(r#"{"bench":"perf_x","n":3,"winner":"rf16","ok":true}"#).unwrap();
+    }
+
+    #[test]
+    fn bench_schema_rejects_bad_documents() {
+        assert!(validate_bench_json("[]").is_err());
+        assert!(validate_bench_json(r#"{"n":3}"#).is_err(), "missing bench");
+        assert!(validate_bench_json(r#"{"bench":""}"#).is_err(), "empty bench");
+        assert!(validate_bench_json(r#"{"bench":"x","nested":{"a":1}}"#).is_err());
+        assert!(validate_bench_json(r#"{"bench":"x","xs":[1]}"#).is_err(), "array");
+        assert!(
+            validate_bench_json(r#"{"bench":"x","inf":null}"#).is_err(),
+            "non-finite / null"
+        );
+        assert!(validate_bench_json("{\"bench\":\"x\"").is_err(), "truncated");
     }
 }

@@ -1,0 +1,427 @@
+//! Minimal JSON tree, writer, and recursive-descent parser (serde is not
+//! in the offline vendor set). Built for the shard-checkpoint files and
+//! the `BENCH_*.json` schema gate, where the load-bearing property is
+//! **exact f64 round-tripping**: numbers are written with Rust's shortest
+//! round-trip `Display` for `f64` and parsed with `str::parse::<f64>`,
+//! so `write → parse` reproduces the original bits (the cross-process
+//! shard-merge winner-identity contract depends on this).
+//!
+//! Deliberately small: no streaming, no borrowed values, objects keep
+//! insertion order (writers emit deterministic files; `git diff`-able
+//! checkpoints matter more than lookup speed at these sizes).
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed or under-construction JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null` — also how non-finite floats are written (JSON has no
+    /// Infinity/NaN literals).
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any number. Integers up to 2^53 round-trip exactly through the
+    /// f64 payload; [`Json::int`] guards the writer side.
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object, insertion-ordered (duplicate keys are not merged).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Integer constructor with an exactness guard: values above 2^53
+    /// would silently lose bits in the f64 payload, so refuse them loudly
+    /// (nothing in this codebase emits such counts).
+    pub fn int(v: u64) -> Json {
+        assert!(v <= (1u64 << 53), "u64 {v} exceeds exact f64 range");
+        Json::Num(v as f64)
+    }
+
+    /// Float constructor; non-finite values become [`Json::Null`].
+    pub fn num(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// String constructor.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Object member by key (first occurrence).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Object member by key, or an error naming the missing field.
+    pub fn field(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing field `{key}`"))
+    }
+
+    /// The f64 payload of a number; `Null` reads as +infinity (the
+    /// writer's encoding for non-finite values — see [`Json::num`]).
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            Json::Null => Ok(f64::INFINITY),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    /// A number as an exact unsigned integer.
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= (1u64 << 53) as f64 => {
+                Ok(*v as u64)
+            }
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    /// A number as a usize.
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    /// String payload.
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    /// Array payload.
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    /// Object payload.
+    pub fn as_obj(&self) -> Result<&[(String, Json)]> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            other => bail!("expected object, got {other:?}"),
+        }
+    }
+
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    /// Serialize without whitespace (stable, diff-friendly key order —
+    /// whatever order the object was built in).
+    pub fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    // Rust's Display for f64 is the shortest string that
+                    // parses back to the identical bits.
+                    out.push_str(&format!("{v}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(members) => {
+                out.push('{');
+                for (i, (k, v)) in members.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<()> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("expected `{lit}` at byte {pos}")
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some(b'n') => {
+            expect(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        Some(b't') => {
+            expect(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') => {
+            expect(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("expected `,` or `]` at byte {pos}"),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut members = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(members));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, ":")?;
+                members.push((key, parse_value(b, pos)?));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(members));
+                    }
+                    _ => bail!("expected `,` or `}}` at byte {pos}"),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if b.get(*pos) != Some(&b'"') {
+        bail!("expected string at byte {pos}");
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                        let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or_else(|| anyhow!("invalid \\u escape {code:#x}"))?,
+                        );
+                        *pos += 4;
+                    }
+                    other => bail!("bad escape {other:?}"),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // consume one UTF-8 scalar (multi-byte sequences are
+                // copied verbatim)
+                let start = *pos;
+                *pos += 1;
+                while *pos < b.len() && (b[*pos] & 0xC0) == 0x80 {
+                    *pos += 1;
+                }
+                out.push_str(std::str::from_utf8(&b[start..*pos])?);
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    if start == *pos {
+        bail!("expected value at byte {start}");
+    }
+    let text = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Json::Num(text.parse::<f64>().map_err(|e| {
+        anyhow!("bad number `{text}` at byte {start}: {e}")
+    })?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_structure() {
+        let v = Json::Obj(vec![
+            ("name".into(), Json::str("rf16+128-sram256")),
+            ("n".into(), Json::int(42)),
+            ("e".into(), Json::num(1.25e-3)),
+            ("inf".into(), Json::num(f64::INFINITY)),
+            ("ok".into(), Json::Bool(true)),
+            (
+                "xs".into(),
+                Json::Arr(vec![Json::int(1), Json::Null, Json::str("a\"b\\c\nd")]),
+            ),
+        ]);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        // Null-encoded infinity parses back as Null; everything else is
+        // structurally identical
+        assert_eq!(back.get("name").unwrap().as_str().unwrap(), "rf16+128-sram256");
+        assert_eq!(back.get("n").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(back.get("e").unwrap().as_f64().unwrap(), 1.25e-3);
+        assert_eq!(back.get("inf").unwrap().as_f64().unwrap(), f64::INFINITY);
+        assert_eq!(back.get("xs").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            back.get("xs").unwrap().as_arr().unwrap()[2]
+                .as_str()
+                .unwrap(),
+            "a\"b\\c\nd"
+        );
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_exactly() {
+        // awkward values: shortest-Display must reparse to identical bits
+        let cases = [
+            0.1,
+            1.0 / 3.0,
+            6.02214076e23,
+            f64::MIN_POSITIVE,
+            1.7976931348623157e308,
+            123456789.123456789,
+            2f64.powi(53) - 1.0,
+        ];
+        for v in cases {
+            let text = Json::num(v).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "{v} -> {text} -> {back}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\":1} x").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_nesting() {
+        let v = Json::parse(" { \"a\" : [ 1 , { \"b\" : null } ] } ").unwrap();
+        assert_eq!(v.field("a").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unicode_strings_roundtrip() {
+        let v = Json::Str("héllo ☃ \u{1F600}".into());
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, back);
+        // \u escapes parse too
+        assert_eq!(
+            Json::parse("\"\\u2603\"").unwrap().as_str().unwrap(),
+            "☃"
+        );
+    }
+}

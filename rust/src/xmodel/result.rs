@@ -26,7 +26,7 @@ impl LevelCounts {
 }
 
 /// Full evaluation result for one (layer, mapping, arch) triple.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelResult {
     /// Per-temporal-level access counts (same indexing as `arch.levels`).
     pub levels: Vec<LevelCounts>,
