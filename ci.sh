@@ -23,6 +23,9 @@ echo "==> cargo clippy -- -D warnings"
 cargo clippy --all-targets -- -D warnings
 
 if [[ "$MODE" == "quick" ]]; then
+    # `cargo test -q` is the whole tier-1 test set, including the serve
+    # determinism, remap equivalence, and seeded-vs-cold suites
+    # (coordinator::tests, netopt::tests) — all artifact-free.
     echo "==> cargo test -q"
     cargo test -q
     echo "CI OK (quick)"
@@ -47,7 +50,10 @@ cargo bench --bench perf_netopt
 echo "==> perf_shard (multi-process shard equivalence: N workers + merge == single process, bit for bit; emits BENCH_shard.json)"
 cargo bench --bench perf_shard
 
-echo "==> bench_schema (every BENCH_*.json conforms to the documented schema)"
+echo "==> perf_remap (serving-time remapping: deterministic serving, warm-started online plan == offline optimizer, drift tracked; emits BENCH_remap.json)"
+cargo bench --bench perf_remap
+
+echo "==> bench_schema (every BENCH_*.json conforms to the documented schema; netopt/shard/remap files required)"
 cargo bench --bench bench_schema
 
 echo "CI OK"

@@ -12,9 +12,15 @@
 
 use interstellar::util::bench::validate_bench_json;
 
+/// Files the full `ci.sh` perf tier is guaranteed to have produced by
+/// the time this gate runs (it is ordered after the perf benches) —
+/// their absence means a perf gate silently stopped emitting.
+const REQUIRED: &[&str] = &["BENCH_netopt.json", "BENCH_remap.json", "BENCH_shard.json"];
+
 fn main() {
     let mut checked = 0usize;
     let mut failures = Vec::new();
+    let mut seen: Vec<String> = Vec::new();
     let mut entries: Vec<_> = std::fs::read_dir(".")
         .expect("read cwd")
         .map(|e| e.expect("dir entry"))
@@ -31,6 +37,7 @@ fn main() {
             Ok(()) => {
                 println!("bench_schema: {name} conforms");
                 checked += 1;
+                seen.push(name);
             }
             Err(e) => failures.push(format!("{name}: {e}")),
         }
@@ -44,5 +51,15 @@ fn main() {
         checked > 0,
         "no BENCH_*.json found — run the perf benches first (full ./ci.sh does)"
     );
-    println!("bench_schema OK ({checked} files validated)");
+    let missing: Vec<&str> = REQUIRED
+        .iter()
+        .filter(|r| !seen.iter().any(|s| s == *r))
+        .copied()
+        .collect();
+    assert!(
+        missing.is_empty(),
+        "required perf-trajectory files missing: {missing:?} — run the perf benches first \
+         (full ./ci.sh does)"
+    );
+    println!("bench_schema OK ({checked} files validated, all required files present)");
 }

@@ -1,0 +1,186 @@
+//! §Perf/CI gate: serving-time remapping. Asserts the online-remapping
+//! contracts on the synthetic (artifact-free) executor and measures the
+//! cost of a request-path re-optimization:
+//!
+//! 1. **Serve determinism** — `ServeStats.checksum` is bit-identical
+//!    across worker counts {1, 2, 4} with remapping enabled, and the
+//!    remap count is identical too (remap decisions are pure functions
+//!    of the trace).
+//! 2. **Static-mix equivalence** — the warm-started online optimizer
+//!    (`co_optimize_arches_seeded` fed the cold run's seeds) returns the
+//!    bit-identical winner with at most as many fully evaluated
+//!    architecture points.
+//! 3. **Drift convergence** — on the synthetic drift trace the remapper
+//!    re-optimizes and its final plan equals the offline optimum for the
+//!    post-drift mix, bit for bit.
+//!
+//! Emits `BENCH_remap.json` for the perf trajectory (validated — and
+//! required — by the `bench_schema` gate).
+
+use interstellar::coordinator::remap::{mix_network, RemapPolicy, Remapper};
+use interstellar::coordinator::serve::{
+    drift_trace, mixed_trace, serve_with, Request, ServeConfig, ServeStats, SyntheticExecutor,
+};
+use interstellar::energy::Table3;
+use interstellar::netopt::{co_optimize_arches, co_optimize_arches_seeded, NetOptConfig};
+use interstellar::util::bench::Bencher;
+use interstellar::util::json::Json;
+
+fn serve_synthetic(
+    trace: Vec<Request>,
+    threads: usize,
+    batch: usize,
+    remapper: Option<&mut Remapper>,
+) -> ServeStats {
+    serve_with(
+        trace,
+        &ServeConfig::new(threads).with_batch(batch),
+        || Ok(SyntheticExecutor),
+        remapper,
+    )
+    .expect("synthetic serve")
+}
+
+fn remapper() -> Remapper {
+    Remapper::new(RemapPolicy::new(24, 0.4), Remapper::default_candidates())
+}
+
+fn main() {
+    let mut b = Bencher::new(200);
+    let mut fields: Vec<(String, Json)> = vec![("bench".into(), Json::str("perf_remap"))];
+
+    // 1. determinism across worker counts, remap enabled
+    let trace = mixed_trace(200, 99);
+    let mut base: Option<(u64, usize)> = None;
+    for threads in [1usize, 2, 4] {
+        let mut r = remapper();
+        let stats = serve_synthetic(trace.clone(), threads, 25, Some(&mut r));
+        assert_eq!(stats.completed, 200);
+        match base {
+            None => base = Some((stats.checksum.to_bits(), stats.remaps)),
+            Some((bits, remaps)) => {
+                assert_eq!(
+                    stats.checksum.to_bits(),
+                    bits,
+                    "checksum bits differ at threads={threads}"
+                );
+                assert_eq!(stats.remaps, remaps, "remap count differs at threads={threads}");
+            }
+        }
+    }
+    let (_, mixed_remaps) = base.expect("three runs");
+    fields.push(("mixed_trace_remaps".into(), Json::int(mixed_remaps as u64)));
+
+    // 2. static-mix equivalence: warm == cold winner, never more points
+    let mut r = remapper();
+    serve_synthetic(mixed_trace(48, 9), 2, 48, Some(&mut r));
+    let plan = r.plan().expect("static-mix plan");
+    let (net, weights, _) = mix_network(&plan.mix);
+    let cfg = NetOptConfig::new(r.policy().opts.clone(), 1).with_layer_weights(weights);
+    let mut cold = None;
+    let m_cold = b.bench("perf_remap/co-opt cold", || {
+        cold = Some(co_optimize_arches(&net, r.candidates(), &Table3, &cfg));
+    });
+    let cold = cold.expect("cold run");
+    let warm_seeds = cold.seeds.clone();
+    let mut warm = None;
+    let m_warm = b.bench("perf_remap/co-opt warm-started", || {
+        warm = Some(co_optimize_arches_seeded(
+            &net,
+            r.candidates(),
+            &Table3,
+            &cfg,
+            &warm_seeds,
+        ));
+    });
+    let warm = warm.expect("warm run");
+    let (cw, ww) = (
+        cold.best().expect("cold winner"),
+        warm.best().expect("warm winner"),
+    );
+    assert_eq!(cw.arch, ww.arch, "warm start moved the winner arch");
+    assert_eq!(
+        cw.opt.total_energy_pj.to_bits(),
+        ww.opt.total_energy_pj.to_bits(),
+        "warm start moved the winner energy bits"
+    );
+    for (x, y) in cw.opt.per_layer.iter().zip(ww.opt.per_layer.iter()) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.mapping, y.mapping, "warm start moved a winner mapping");
+        assert_eq!(x.result, y.result, "warm start moved a winner result");
+    }
+    assert!(
+        warm.stats.evaluated_full <= cold.stats.evaluated_full,
+        "warm start evaluated more points ({} > {})",
+        warm.stats.evaluated_full,
+        cold.stats.evaluated_full
+    );
+    // the online plan itself equals the offline run on its mix
+    assert_eq!(
+        plan.winner.opt.total_energy_pj.to_bits(),
+        cw.opt.total_energy_pj.to_bits(),
+        "online plan diverges from offline optimizer"
+    );
+
+    // 3. drift convergence to the post-drift optimum
+    let mut r = remapper();
+    let stats = serve_synthetic(
+        drift_trace(96, 48, &["conv3x3", "fc"], &["lstm_cell"], 11),
+        2,
+        12,
+        Some(&mut r),
+    );
+    assert!(r.remaps >= 2, "drift never triggered a remap");
+    assert_eq!(stats.remaps, r.remaps);
+    let plan = r.plan().expect("post-drift plan");
+    assert_eq!(
+        plan.mix,
+        vec![("lstm_cell".to_string(), 24)],
+        "final window is not pure post-drift traffic"
+    );
+    let (net, weights, _) = mix_network(&plan.mix);
+    let cfg = NetOptConfig::new(r.policy().opts.clone(), 1).with_layer_weights(weights);
+    let offline = co_optimize_arches(&net, r.candidates(), &Table3, &cfg);
+    let ow = offline.best().expect("offline post-drift winner");
+    assert_eq!(plan.winner.arch, ow.arch, "post-drift plan arch diverges");
+    assert_eq!(
+        plan.winner.opt.total_energy_pj.to_bits(),
+        ow.opt.total_energy_pj.to_bits(),
+        "post-drift plan energy diverges from offline optimum"
+    );
+
+    // serve-loop throughput measurement (no remap, pure loop cost)
+    let m_serve = b.bench("perf_remap/serve 200 synthetic", || {
+        serve_synthetic(mixed_trace(200, 5), 2, 25, None);
+    });
+
+    fields.push(("drift_remaps".into(), Json::int(r.remaps as u64)));
+    fields.push(("drift_checks".into(), Json::int(r.checks as u64)));
+    fields.push(("seeded_shapes".into(), Json::int(r.seeds().len() as u64)));
+    fields.push(("final_arch".into(), Json::str(&plan.winner.arch.name)));
+    fields.push((
+        "final_energy_pj".into(),
+        Json::num(plan.winner.opt.total_energy_pj),
+    ));
+    fields.push((
+        "cold_evaluated_full".into(),
+        Json::int(cold.stats.evaluated_full as u64),
+    ));
+    fields.push((
+        "warm_evaluated_full".into(),
+        Json::int(warm.stats.evaluated_full as u64),
+    ));
+    fields.push(("cold_engine_full".into(), Json::int(cold.stats.engine.full)));
+    fields.push(("warm_engine_full".into(), Json::int(warm.stats.engine.full)));
+    fields.push(("mean_ns_co_opt_cold".into(), Json::num(m_cold.mean_ns)));
+    fields.push(("mean_ns_co_opt_warm".into(), Json::num(m_warm.mean_ns)));
+    fields.push(("mean_ns_serve_200".into(), Json::num(m_serve.mean_ns)));
+
+    let path = "BENCH_remap.json";
+    std::fs::write(path, Json::Obj(fields).to_string()).expect("write bench json");
+    println!("wrote {path}");
+    println!(
+        "perf_remap OK (deterministic serving, warm-started remap bit-identical to offline, \
+         drift tracked to the post-drift optimum)"
+    );
+}

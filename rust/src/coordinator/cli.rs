@@ -6,6 +6,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use super::experiments::{self, Effort};
+use super::remap::{RemapPolicy, Remapper};
 use super::serve;
 use crate::arch::{eyeriss_like, ArrayShape};
 use crate::dataflow::Dataflow;
@@ -51,6 +52,13 @@ COMMANDS:
   schedules       print prior-work schedules lowered to IR    (Listing 2 / Fig 6)
   run-e2e         [--requests N] [--threads N] [--artifacts DIR]
                   serve a mixed trace through the PJRT artifacts
+  serve           [--requests N] [--threads N] [--artifacts DIR]
+                  [--batch-requests B] [--synthetic] [--remap]
+                  [--window W] [--drift D]
+                  batched serving loop; --remap re-optimizes mappings
+                  online when the window mix drifts past D (plans swap
+                  between batches); --synthetic runs the deterministic
+                  stand-in executor (no artifacts needed)
   report          run every experiment at fast effort
 
 Common options: --threads N (default: cores-1), --csv (CSV output), --full";
@@ -271,17 +279,56 @@ pub fn run(args: Args) -> Result<()> {
             let trace = serve::mixed_trace(n, 42);
             println!("serving {n} requests from {} on {threads} workers...", dir.display());
             let stats = serve::serve(&dir, trace, threads)?;
+            print_serve_stats(&stats);
+        }
+        "serve" => {
+            let n = args.get_usize("requests", 200);
+            let dir = PathBuf::from(args.get_str("artifacts", "artifacts"));
+            let batch = args.get_usize("batch-requests", 64);
+            let trace = serve::mixed_trace(n, 42);
+            let cfg = serve::ServeConfig::new(threads).with_batch(batch);
+            let mut remapper = if args.has_flag("remap") {
+                let window = args.get_usize("window", 64);
+                let drift = args.get_f64("drift", 0.25);
+                Some(Remapper::new(
+                    RemapPolicy::new(window, drift),
+                    Remapper::default_candidates(),
+                ))
+            } else {
+                None
+            };
             println!(
-                "completed {}  wall {:.2}s  mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  {:.1} req/s  checksum {:.3}",
-                stats.completed,
-                stats.wall_s,
-                stats.mean_latency_ms,
-                stats.p50_latency_ms,
-                stats.p95_latency_ms,
-                stats.p99_latency_ms,
-                stats.rps,
-                stats.checksum
+                "serving {n} requests on {threads} workers (batches of {batch}{})...",
+                if remapper.is_some() { ", remap on" } else { "" }
             );
+            let stats = if args.has_flag("synthetic") {
+                serve::serve_with(
+                    trace,
+                    &cfg,
+                    || Ok(serve::SyntheticExecutor),
+                    remapper.as_mut(),
+                )?
+            } else {
+                serve::serve_with(
+                    trace,
+                    &cfg,
+                    || serve::PjrtExecutor::load(&dir),
+                    remapper.as_mut(),
+                )?
+            };
+            print_serve_stats(&stats);
+            if let Some(r) = &remapper {
+                match r.plan() {
+                    Some(p) => println!(
+                        "active plan (epoch {}): {} for mix {:?} ({} shapes seeded)",
+                        p.epoch,
+                        p.winner.arch.describe(),
+                        p.mix,
+                        r.seeds().len()
+                    ),
+                    None => println!("no feasible plan for the observed mix"),
+                }
+            }
         }
         "report" => {
             println!("== Table 3 ==");
@@ -310,12 +357,31 @@ pub fn run(args: Args) -> Result<()> {
             show(&experiments::fig13_scaling(effort, threads));
             println!("\n== Fig 14 (optimizer gains) ==");
             show(&experiments::fig14_optimizer(effort, threads));
+            println!("\n== Serving-time remapping (drift trace) ==");
+            show(&experiments::remap_drift(threads));
         }
         other => {
             println!("unknown command: {other}\n\n{USAGE}");
         }
     }
     Ok(())
+}
+
+/// One-line serving report shared by `run-e2e` and `serve`.
+fn print_serve_stats(stats: &serve::ServeStats) {
+    println!(
+        "completed {}  wall {:.2}s  mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  {:.1} req/s  checksum {:.3}  batches {}  remaps {}",
+        stats.completed,
+        stats.wall_s,
+        stats.mean_latency_ms,
+        stats.p50_latency_ms,
+        stats.p95_latency_ms,
+        stats.p99_latency_ms,
+        stats.rps,
+        stats.checksum,
+        stats.batches,
+        stats.remaps
+    );
 }
 
 /// Comma-separated byte-size list for the design-space knobs

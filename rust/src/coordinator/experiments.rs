@@ -572,6 +572,48 @@ pub fn netopt_pruning(effort: Effort, threads: usize) -> Table {
     t
 }
 
+/// Serving-time remapping companion (CLI `report`, `perf_remap` bench):
+/// drive a synthetic drift trace — front half `{conv3x3, fc}`, back half
+/// pure `lstm_cell` — through the batched serve loop with remapping
+/// enabled (synthetic executor, so no artifacts or `pjrt` are needed)
+/// and report how the plan tracked the mix. The equivalence contract
+/// (online plan == offline `co_optimize_arches` on the final mix, bit
+/// for bit) is asserted by `coordinator::tests` and gated in CI by
+/// `benches/perf_remap.rs`, which emits `BENCH_remap.json`.
+pub fn remap_drift(threads: usize) -> Table {
+    use super::remap::{RemapPolicy, Remapper};
+    use super::serve::{drift_trace, serve_with, ServeConfig, SyntheticExecutor};
+    let trace = drift_trace(96, 48, &["conv3x3", "fc"], &["lstm_cell"], 11);
+    let mut r = Remapper::new(RemapPolicy::new(24, 0.4), Remapper::default_candidates());
+    let stats = serve_with(
+        trace,
+        &ServeConfig::new(threads).with_batch(12),
+        || Ok(SyntheticExecutor),
+        Some(&mut r),
+    )
+    .expect("synthetic serving cannot fail");
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["requests served".into(), format!("{}", stats.completed)]);
+    t.row(vec!["scheduling batches".into(), format!("{}", stats.batches)]);
+    t.row(vec!["plan swaps".into(), format!("{}", stats.remaps)]);
+    t.row(vec!["drift checks".into(), format!("{}", r.checks)]);
+    t.row(vec!["seeded shapes".into(), format!("{}", r.seeds().len())]);
+    match r.plan() {
+        Some(p) => {
+            t.row(vec!["final plan arch".into(), p.winner.arch.describe()]);
+            t.row(vec![
+                "final plan energy (uJ)".into(),
+                fmt_sig(p.winner.opt.total_energy_pj / 1e6),
+            ]);
+            t.row(vec!["final mix".into(), format!("{:?}", p.mix)]);
+        }
+        None => {
+            t.row(vec!["final plan arch".into(), "-".into()]);
+        }
+    }
+    t
+}
+
 /// Robustness ablation (§6.1 "different energy cost models"): the Fig 8
 /// dataflow spread under scaled cost models.
 pub fn ablation_cost_models(shape: Shape, threads: usize) -> Table {

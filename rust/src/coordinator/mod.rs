@@ -1,9 +1,10 @@
 //! The L3 coordinator: experiment drivers that regenerate every paper
-//! table/figure, the batched-serving loop over the PJRT runtime, and the
-//! CLI that fronts it all.
+//! table/figure, the batched-serving loop over the PJRT runtime with
+//! serving-time remapping, and the CLI that fronts it all.
 
 pub mod cli;
 pub mod experiments;
+pub mod remap;
 pub mod serve;
 
 pub use experiments::Effort;

@@ -1,0 +1,491 @@
+//! Serving-time remapping: mix-aware online re-optimization of the
+//! active accelerator mapping plan.
+//!
+//! The paper's central result is that resource allocation and mapping —
+//! not dataflow — dominate energy, which means a serving system whose
+//! workload mix shifts should *re-derive* its mappings online rather
+//! than pin the offline winner. This module closes that loop:
+//!
+//! 1. **Mix tracking** — a [`MixWindow`] holds the last `W` served
+//!    artifact names and their counts (deterministic `BTreeMap`
+//!    ordering, so every downstream decision is a pure function of the
+//!    trace).
+//! 2. **Drift detection** — after every serving batch the
+//!    [`Remapper`] compares the window mix against the mix the active
+//!    plan was optimized for; when the total-variation distance
+//!    ([`mix_drift`]) exceeds [`RemapPolicy::drift`], it re-optimizes.
+//! 3. **Re-optimization** — the window counts become a *mix network*
+//!    ([`mix_network`]: each artifact's representative layers, weighted
+//!    by its window count) and
+//!    [`co_optimize_arches_seeded`](crate::netopt::co_optimize_arches_seeded)
+//!    searches the candidate architecture list **warm-started from the
+//!    [`SeedTable`]** accumulated across every earlier remap — the same
+//!    seeds representation the sharded sweeps checkpoint. Seeds only
+//!    prune (the netopt rerun fallback keeps the argmin exact), so the
+//!    online winner is bit-identical to an offline
+//!    [`co_optimize_arches`](crate::netopt::co_optimize_arches) run on
+//!    the same mix — `coordinator::tests` asserts it.
+//! 4. **Plan swap** — the new [`MappingPlan`] is published through an
+//!    mpsc plan-swap channel; the serving loop
+//!    ([`serve_with`](super::serve::serve_with)) drains it **between
+//!    batches** and hands it to every worker's executor via
+//!    [`Executor::adopt_plan`](super::serve::Executor::adopt_plan) at
+//!    the next batch's start, so worker replicas are never stopped and
+//!    an in-flight batch always completes under the plan it started
+//!    with (the swap itself is an `Arc` pointer move — no worker ever
+//!    observes a partially built plan).
+//!
+//! Because observation, drift, and re-optimization are all pure
+//! functions of the request trace (never of timing or thread count),
+//! serving statistics — including the remap count — stay byte-identical
+//! across worker counts, extending the serve-loop determinism contract.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::arch::{eyeriss_like, no_local_reuse, small_rf, Arch};
+use crate::energy::Table3;
+use crate::netopt::{co_optimize_arches_seeded, NetOptConfig, SeedTable};
+use crate::nn::{Layer, Network};
+use crate::search::{HierarchyResult, LayerOpt, SearchOpts};
+
+/// When to re-optimize: window size and drift threshold, plus the
+/// search budget each re-optimization is allowed.
+#[derive(Debug, Clone)]
+pub struct RemapPolicy {
+    /// Sliding-window length, in requests (`>= 1`).
+    pub window: usize,
+    /// Total-variation drift threshold in `[0, 1]`: re-optimize when the
+    /// window mix moved further than this from the active plan's mix.
+    pub drift: f64,
+    /// Per-layer search options for re-optimizations (request-path
+    /// budget: keep the caps small).
+    pub opts: SearchOpts,
+    /// Worker threads for the re-optimization search (independent of
+    /// the serving worker count — determinism across serving thread
+    /// counts never depends on this).
+    pub threads: usize,
+}
+
+impl RemapPolicy {
+    /// A policy with the default request-path search budget.
+    pub fn new(window: usize, drift: f64) -> RemapPolicy {
+        let mut opts = SearchOpts::capped(150, 4);
+        opts.max_order_combos = 9;
+        RemapPolicy {
+            window,
+            drift,
+            opts,
+            threads: 1,
+        }
+    }
+}
+
+/// Sliding window over served artifact names with deterministic
+/// (name-sorted) counts.
+#[derive(Debug, Clone)]
+pub struct MixWindow {
+    cap: usize,
+    order: VecDeque<String>,
+    counts: BTreeMap<String, usize>,
+}
+
+impl MixWindow {
+    /// An empty window holding at most `cap` requests.
+    pub fn new(cap: usize) -> MixWindow {
+        assert!(cap >= 1, "mix window must hold at least one request");
+        MixWindow {
+            cap,
+            order: VecDeque::with_capacity(cap),
+            counts: BTreeMap::new(),
+        }
+    }
+
+    /// Record one served request, evicting the oldest once full.
+    pub fn push(&mut self, artifact: &str) {
+        if self.order.len() == self.cap {
+            let old = self.order.pop_front().expect("full window");
+            let emptied = match self.counts.get_mut(&old) {
+                Some(c) if *c > 1 => {
+                    *c -= 1;
+                    false
+                }
+                _ => true,
+            };
+            if emptied {
+                self.counts.remove(&old);
+            }
+        }
+        self.order.push_back(artifact.to_string());
+        *self.counts.entry(artifact.to_string()).or_insert(0) += 1;
+    }
+
+    /// Requests currently in the window.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    /// True before any request was observed.
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Name-sorted `(artifact, count)` pairs.
+    pub fn counts(&self) -> Vec<(String, usize)> {
+        self.counts.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Name-sorted `(artifact, frequency)` pairs (frequencies sum to 1).
+    pub fn mix(&self) -> Vec<(String, f64)> {
+        let n = self.order.len().max(1) as f64;
+        self.counts
+            .iter()
+            .map(|(k, v)| (k.clone(), *v as f64 / n))
+            .collect()
+    }
+}
+
+/// Total-variation distance between two name-sorted frequency vectors:
+/// `0.5 × Σ |p − q|` over the union of artifact names, in `[0, 1]`.
+pub fn mix_drift(a: &[(String, f64)], b: &[(String, f64)]) -> f64 {
+    let mut sum = 0.0;
+    let (mut ia, mut ib) = (0usize, 0usize);
+    while ia < a.len() || ib < b.len() {
+        match (a.get(ia), b.get(ib)) {
+            (Some(x), Some(y)) => match x.0.cmp(&y.0) {
+                std::cmp::Ordering::Less => {
+                    sum += x.1;
+                    ia += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    sum += y.1;
+                    ib += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    sum += (x.1 - y.1).abs();
+                    ia += 1;
+                    ib += 1;
+                }
+            },
+            (Some(x), None) => {
+                sum += x.1;
+                ia += 1;
+            }
+            (None, Some(y)) => {
+                sum += y.1;
+                ib += 1;
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+    0.5 * sum
+}
+
+/// The analytical layer model of one serving artifact — the same shapes
+/// `python/compile/aot.py` lowers to HLO (reduced-scale stand-ins for
+/// the paper's workload families), expressed in the seven-loop nest so
+/// the netopt machinery can optimize them.
+pub fn artifact_network(name: &str) -> Option<Network> {
+    let layers = match name {
+        // input (2,10,10,16) ⊛ (3,3,16,32), stride 1 → 8×8 output
+        "conv3x3" => vec![Layer::conv("conv3x3", 2, 32, 16, 8, 8, 3, 1)],
+        // input (2,8,8,32) × (32,16) pointwise reduction
+        "conv1x1" => vec![Layer::conv("conv1x1", 2, 16, 32, 8, 8, 1, 1)],
+        // input (1,13,13,8) ⊛ (5,5,8,16), stride 2 → 5×5 output
+        "conv5x5_s2" => vec![Layer::conv("conv5x5_s2", 1, 16, 8, 5, 5, 5, 2)],
+        // input (2,10,10,16) ⊛ (3,3,16) depthwise → 8×8 output
+        "depthwise" => vec![Layer::depthwise("depthwise", 2, 16, 8, 8, 3, 1)],
+        // (8,64) × (64,32)
+        "fc" => vec![Layer::fc("fc", 8, 32, 64)],
+        // x(4,32) × w_ih(32,128) and h(4,32) × w_hh(32,128): two gate
+        // banks of hidden size 32
+        "lstm_cell" => vec![
+            Layer::lstm_gate("lstm_ih", 4, 32, 32),
+            Layer::lstm_gate("lstm_hh", 4, 32, 32),
+        ],
+        // (1,8,8,8) ⊛ (3,3,8,16) → 6×6, then ⊛ (3,3,16,16) → 4×4
+        "conv_chain" => vec![
+            Layer::conv("chain1", 1, 16, 8, 6, 6, 3, 1),
+            Layer::conv("chain2", 1, 16, 16, 4, 4, 3, 1),
+        ],
+        _ => return None,
+    };
+    Some(Network {
+        name: name.to_string(),
+        layers,
+        batch: 1,
+    })
+}
+
+/// Build the mix network for a window: each artifact's representative
+/// layers concatenated in name order, every layer weighted by its
+/// artifact's window count. Returns the network, the per-layer weight
+/// vector (for [`NetOptConfig::layer_weights`]) and the per-artifact
+/// `(name, start, len)` spans into the layer list.
+pub fn mix_network(counts: &[(String, usize)]) -> (Network, Vec<f64>, Vec<(String, usize, usize)>) {
+    let mut layers = Vec::new();
+    let mut weights = Vec::new();
+    let mut spans = Vec::new();
+    for (name, count) in counts {
+        assert!(*count > 0, "zero-count artifact `{name}` in mix");
+        let net = artifact_network(name)
+            .unwrap_or_else(|| panic!("unknown artifact `{name}` in serving mix"));
+        spans.push((name.clone(), layers.len(), net.layers.len()));
+        for l in net.layers {
+            layers.push(l);
+            weights.push(*count as f64);
+        }
+    }
+    (
+        Network {
+            name: "mix".to_string(),
+            layers,
+            batch: 1,
+        },
+        weights,
+        spans,
+    )
+}
+
+/// One generation of the active serving plan: the mix it was optimized
+/// for, the winning architecture point with its per-layer mappings, and
+/// where each artifact's layers live in that result.
+#[derive(Debug, Clone)]
+pub struct MappingPlan {
+    /// Monotonic plan generation (0 = first plan of a remapper).
+    pub epoch: usize,
+    /// The window counts the plan was optimized for (name-sorted).
+    pub mix: Vec<(String, usize)>,
+    /// The winning architecture and the mix network's optimization.
+    pub winner: HierarchyResult,
+    /// Per-artifact `(name, start, len)` spans into
+    /// `winner.opt.per_layer`.
+    pub spans: Vec<(String, usize, usize)>,
+}
+
+impl MappingPlan {
+    /// The per-layer mappings chosen for one artifact under this plan.
+    pub fn artifact_layers(&self, name: &str) -> Option<&[Option<LayerOpt>]> {
+        self.spans
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, start, len)| &self.winner.opt.per_layer[*start..*start + *len])
+    }
+}
+
+/// The serving-time remapper: tracks the request mix, detects drift,
+/// re-optimizes warm-started from the accumulated [`SeedTable`], and
+/// publishes new [`MappingPlan`]s through the plan-swap channel.
+pub struct Remapper {
+    policy: RemapPolicy,
+    arches: Vec<Arch>,
+    window: MixWindow,
+    /// The window mix at the last re-optimization (`None` until the
+    /// first plan exists — any traffic then triggers the initial plan).
+    last_mix: Option<Vec<(String, f64)>>,
+    seeds: SeedTable,
+    plan: Option<Arc<MappingPlan>>,
+    epoch: usize,
+    tx: Sender<Arc<MappingPlan>>,
+    rx: Receiver<Arc<MappingPlan>>,
+    /// Drift checks performed.
+    pub checks: usize,
+    /// Re-optimizations that produced (and published) a plan.
+    pub remaps: usize,
+}
+
+impl Remapper {
+    /// A remapper over an explicit candidate architecture list.
+    pub fn new(policy: RemapPolicy, arches: Vec<Arch>) -> Remapper {
+        assert!(!arches.is_empty(), "need at least one candidate arch");
+        let window = MixWindow::new(policy.window);
+        let (tx, rx) = channel();
+        Remapper {
+            policy,
+            arches,
+            window,
+            last_mix: None,
+            seeds: SeedTable::new(),
+            plan: None,
+            epoch: 0,
+            tx,
+            rx,
+            checks: 0,
+            remaps: 0,
+        }
+    }
+
+    /// Default candidate points for serving: the paper's three
+    /// small-chip configurations (grid-inexpressible candidates ride the
+    /// same explicit-list entry point the TPU-like baseline uses).
+    pub fn default_candidates() -> Vec<Arch> {
+        vec![eyeriss_like(), no_local_reuse(), small_rf()]
+    }
+
+    /// Record one served request into the sliding window.
+    pub fn observe(&mut self, artifact: &str) {
+        self.window.push(artifact);
+    }
+
+    /// Current drift of the window mix from the active plan's mix
+    /// (`1.0` when no plan exists yet).
+    pub fn drift(&self) -> f64 {
+        match &self.last_mix {
+            None => 1.0,
+            Some(m) => mix_drift(m, &self.window.mix()),
+        }
+    }
+
+    /// Batch-boundary hook: re-optimize when the mix drifted past the
+    /// policy threshold (or no plan exists yet). Returns whether a
+    /// remap ran. A pure function of the observed trace — never of
+    /// timing or thread count.
+    pub fn maybe_remap(&mut self) -> bool {
+        if self.window.is_empty() {
+            return false;
+        }
+        self.checks += 1;
+        let trigger = match &self.last_mix {
+            None => true,
+            Some(m) => mix_drift(m, &self.window.mix()) > self.policy.drift,
+        };
+        if !trigger {
+            return false;
+        }
+        self.remap_now().is_some()
+    }
+
+    /// Re-optimize for the current window mix unconditionally,
+    /// warm-started from the accumulated seeds, and publish the new plan
+    /// through the plan-swap channel. Returns `None` (keeping the old
+    /// plan active) when no candidate architecture maps every layer of
+    /// the mix.
+    pub fn remap_now(&mut self) -> Option<Arc<MappingPlan>> {
+        let counts = self.window.counts();
+        if counts.is_empty() {
+            return None;
+        }
+        let (net, weights, spans) = mix_network(&counts);
+        let cfg = NetOptConfig::new(self.policy.opts.clone(), self.policy.threads)
+            .with_layer_weights(weights);
+        let res = co_optimize_arches_seeded(&net, &self.arches, &Table3, &cfg, &self.seeds);
+        // carry everything this run learned into the next warm start
+        self.seeds.merge(&res.seeds);
+        let winner = res.best()?.clone();
+        let plan = Arc::new(MappingPlan {
+            epoch: self.epoch,
+            mix: counts,
+            winner,
+            spans,
+        });
+        self.epoch += 1;
+        self.remaps += 1;
+        self.last_mix = Some(self.window.mix());
+        self.plan = Some(plan.clone());
+        // receiver lives in self, so the channel can never be closed
+        self.tx.send(plan.clone()).expect("plan-swap channel");
+        Some(plan)
+    }
+
+    /// Drain one pending plan from the plan-swap channel (the serving
+    /// loop calls this between batches until it returns `None`).
+    pub fn take_plan(&mut self) -> Option<Arc<MappingPlan>> {
+        self.rx.try_recv().ok()
+    }
+
+    /// The active plan, if any remap has succeeded.
+    pub fn plan(&self) -> Option<Arc<MappingPlan>> {
+        self.plan.clone()
+    }
+
+    /// The accumulated cross-remap seeds table.
+    pub fn seeds(&self) -> &SeedTable {
+        &self.seeds
+    }
+
+    /// The candidate architecture list.
+    pub fn candidates(&self) -> &[Arch] {
+        &self.arches
+    }
+
+    /// The policy in force.
+    pub fn policy(&self) -> &RemapPolicy {
+        &self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_evicts_oldest_and_counts_deterministically() {
+        let mut w = MixWindow::new(3);
+        for a in ["x", "y", "x", "z"] {
+            w.push(a);
+        }
+        // "x" (the first) evicted; window = [y, x, z]
+        assert_eq!(w.len(), 3);
+        assert_eq!(
+            w.counts(),
+            vec![
+                ("x".to_string(), 1),
+                ("y".to_string(), 1),
+                ("z".to_string(), 1)
+            ]
+        );
+        w.push("z");
+        w.push("z");
+        // window = [z, z, z]
+        assert_eq!(w.counts(), vec![("z".to_string(), 3)]);
+        assert_eq!(w.mix(), vec![("z".to_string(), 1.0)]);
+    }
+
+    #[test]
+    fn drift_is_total_variation() {
+        let a = vec![("a".to_string(), 0.5), ("b".to_string(), 0.5)];
+        let b = vec![("b".to_string(), 0.5), ("c".to_string(), 0.5)];
+        assert!((mix_drift(&a, &a)).abs() < 1e-12);
+        assert!((mix_drift(&a, &b) - 0.5).abs() < 1e-12);
+        let c = vec![("c".to_string(), 1.0)];
+        assert!((mix_drift(&a, &c) - 1.0).abs() < 1e-12);
+        // symmetric
+        assert_eq!(mix_drift(&a, &b), mix_drift(&b, &a));
+    }
+
+    #[test]
+    fn every_serving_artifact_has_a_network() {
+        for name in [
+            "conv3x3",
+            "conv1x1",
+            "conv5x5_s2",
+            "depthwise",
+            "fc",
+            "lstm_cell",
+            "conv_chain",
+        ] {
+            let net = artifact_network(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(!net.layers.is_empty());
+            for l in &net.layers {
+                assert!(l.macs() > 0, "{name}/{} has zero MACs", l.name);
+            }
+        }
+        assert!(artifact_network("bogus").is_none());
+    }
+
+    #[test]
+    fn mix_network_concatenates_with_count_weights() {
+        let counts = vec![("conv3x3".to_string(), 3), ("lstm_cell".to_string(), 2)];
+        let (net, weights, spans) = mix_network(&counts);
+        assert_eq!(net.layers.len(), 3); // 1 conv + 2 gate banks
+        assert_eq!(weights, vec![3.0, 2.0, 2.0]);
+        assert_eq!(
+            spans,
+            vec![
+                ("conv3x3".to_string(), 0, 1),
+                ("lstm_cell".to_string(), 1, 2)
+            ]
+        );
+    }
+}

@@ -1,21 +1,52 @@
-//! Batched request serving over the PJRT runtime — the request-path loop
-//! of the e2e driver. Worker threads serve interleaved slices of the
-//! request trace, batch-execute the AOT artifact, and report per-request
-//! latency; Python is never involved.
+//! Batched request serving — the request-path loop of the e2e driver.
+//! Worker threads serve interleaved slices of the request trace in
+//! scheduling batches, execute each request on a per-worker executor
+//! replica, and report per-request latency; Python is never involved.
+//!
+//! ## Determinism contract
 //!
 //! Results flow through the order-preserving
 //! [`parallel_map`](crate::search::parallel_map) used by every other
 //! sweep in the codebase — no shared `Mutex<Vec<_>>` accumulator, no
-//! lock-order nondeterminism: the latency vector and the checksum are
-//! reduced from the returned per-worker vectors in deterministic trace
-//! order, so two runs with the same trace and worker count produce
-//! byte-identical stats.
+//! lock-order nondeterminism — and the per-worker result vectors are
+//! re-interleaved into **trace order** before reduction. The checksum is
+//! therefore a fixed-order f64 sum over the trace: byte-identical across
+//! runs *and across worker counts* (f64 addition is not associative, so
+//! summing in worker order — as the pre-remap implementation did — would
+//! tie the bits to `threads`). The latency *count* is likewise exactly
+//! the trace length. `coordinator::tests` locks both down at the
+//! `serve()` level.
+//!
+//! ## Executors
+//!
+//! The executor is pluggable ([`Executor`]): [`PjrtExecutor`] runs the
+//! AOT artifacts through the PJRT runtime (the production path; one
+//! replica per worker, since PJRT clients are not `Sync`), and
+//! [`SyntheticExecutor`] computes a deterministic, dependency-free
+//! checksum from the request seed, so the serving loop itself — shard
+//! layout, batch scheduling, plan swaps, stat reduction — is testable
+//! without the `pjrt` feature or built artifacts.
+//!
+//! ## Serving-time remapping
+//!
+//! [`serve_with`] accepts a [`Remapper`](super::remap::Remapper): after
+//! each scheduling batch the coordinator feeds the batch's artifacts
+//! into the remapper's mix window, lets it re-optimize on drift, and
+//! drains the plan-swap channel — the active [`MappingPlan`] is swapped
+//! **between** batches (an `Arc` pointer move) and distributed to every
+//! worker's executor through [`Executor::adopt_plan`] at the start of
+//! the next batch, so worker replicas are never restarted and an
+//! in-flight batch always completes under the plan it started with.
+//! Remap decisions are pure functions of the trace, so enabling
+//! remapping preserves the determinism contract.
 
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
+use super::remap::{MappingPlan, Remapper};
 use crate::runtime::Runtime;
 use crate::search::parallel_map;
 use crate::util::{stats, XorShift};
@@ -47,67 +78,221 @@ pub struct ServeStats {
     pub p99_latency_ms: f64,
     /// Throughput, requests/second.
     pub rps: f64,
-    /// Output checksum (sum of all output elements) for determinism
-    /// checks.
+    /// Output checksum (trace-ordered sum of all output elements) for
+    /// determinism checks.
     pub checksum: f64,
+    /// Scheduling batches served.
+    pub batches: usize,
+    /// Plan swaps received from the remapper (0 without `--remap`).
+    pub remaps: usize,
+    /// Epoch of the plan active when serving finished (`None` when no
+    /// remapper was attached or no plan was ever produced).
+    pub plan_epoch: Option<usize>,
+}
+
+/// A per-worker request executor. Implementations must be pure in the
+/// checksum: the returned value may depend only on the request, never on
+/// the worker, batch, or wall clock — the determinism contract sums it
+/// in trace order.
+pub trait Executor {
+    /// Serve one request, returning its checksum contribution.
+    fn execute(&mut self, req: &Request) -> Result<f64>;
+
+    /// Batch-boundary plan distribution: called once per scheduling
+    /// batch (before the worker's first request of that batch) with the
+    /// active [`MappingPlan`], whenever one exists. Executors that
+    /// reconfigure per plan (e.g. re-tuned kernels for the plan's
+    /// mappings) hook here; the default ignores it. Must not affect the
+    /// checksum — plans are mapping metadata, not inputs.
+    fn adopt_plan(&mut self, _plan: &MappingPlan) {}
+}
+
+/// The production executor: one PJRT runtime replica per worker (the
+/// standard per-worker-model-replica serving layout).
+pub struct PjrtExecutor {
+    rt: Runtime,
+}
+
+impl PjrtExecutor {
+    /// Load the artifact registry in `dir`.
+    pub fn load(dir: &Path) -> Result<PjrtExecutor> {
+        Ok(PjrtExecutor {
+            rt: Runtime::load(dir)?,
+        })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn execute(&mut self, req: &Request) -> Result<f64> {
+        let entry = self
+            .rt
+            .entry(&req.artifact)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {}", req.artifact))?
+            .clone();
+        let mut rng = XorShift::new(req.seed);
+        let inputs: Vec<Vec<f32>> = entry
+            .inputs
+            .iter()
+            .map(|spec| rng.f32_vec(spec.elems() as usize))
+            .collect();
+        let outs = self.rt.execute_f32(&req.artifact, &inputs)?;
+        Ok(outs
+            .iter()
+            .map(|o| o.iter().map(|&v| v as f64).sum::<f64>())
+            .sum())
+    }
+}
+
+/// Deterministic stand-in executor: the checksum is a pure function of
+/// `(artifact, seed)` (FNV-1a of the name mixed into an [`XorShift`]
+/// stream), so serve-loop tests and benches run without the `pjrt`
+/// feature or built artifacts. Latencies are still real wall times —
+/// only their *count* is part of the determinism contract.
+#[derive(Debug, Default)]
+pub struct SyntheticExecutor;
+
+impl Executor for SyntheticExecutor {
+    fn execute(&mut self, req: &Request) -> Result<f64> {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in req.artifact.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        let mut rng = XorShift::new(req.seed ^ h);
+        Ok(rng.f32_vec(64).iter().map(|&v| v as f64).sum())
+    }
+}
+
+/// Serving-loop configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads (each owns one executor replica).
+    pub threads: usize,
+    /// Requests per scheduling batch — the granularity at which the
+    /// remapper observes traffic and plans may swap. `0` serves the
+    /// whole trace as a single batch.
+    pub batch: usize,
+}
+
+impl ServeConfig {
+    /// Single-batch serving on `threads` workers (the pre-remap layout).
+    pub fn new(threads: usize) -> ServeConfig {
+        ServeConfig { threads, batch: 0 }
+    }
+
+    /// Same configuration with a scheduling-batch size.
+    pub fn with_batch(mut self, batch: usize) -> ServeConfig {
+        self.batch = batch;
+        self
+    }
 }
 
 /// Run `requests` against the artifact registry in `artifacts_dir` using
-/// `threads` workers. PJRT clients are not `Sync`, so each worker owns a
-/// full runtime replica (the standard per-worker-model-replica serving
-/// layout). The trace is dealt to workers round-robin — a mixed trace
-/// keeps per-worker load balanced without work stealing — and each
-/// worker returns its `(latency_ms, checksum)` vector through
-/// [`parallel_map`], which preserves worker order.
+/// `threads` workers — the production entry point: PJRT executors, one
+/// batch, no remapping.
 pub fn serve(artifacts_dir: &Path, requests: Vec<Request>, threads: usize) -> Result<ServeStats> {
+    serve_with(
+        requests,
+        &ServeConfig::new(threads),
+        || PjrtExecutor::load(artifacts_dir),
+        None,
+    )
+}
+
+/// The full serving loop. The trace is cut into scheduling batches;
+/// within each batch requests are dealt to workers round-robin (a mixed
+/// trace keeps per-worker load balanced without work stealing), each
+/// worker runs them on its own executor replica (created lazily on its
+/// first non-empty shard and reused across batches — workers are never
+/// restarted on a plan swap), and the per-worker `(latency_ms, checksum)`
+/// vectors are re-interleaved into trace order before reduction. Between
+/// batches the optional remapper observes the served artifacts, may
+/// re-optimize, and the plan-swap channel is drained.
+pub fn serve_with<E, F>(
+    requests: Vec<Request>,
+    cfg: &ServeConfig,
+    make: F,
+    mut remapper: Option<&mut Remapper>,
+) -> Result<ServeStats>
+where
+    E: Executor + Send,
+    F: Fn() -> Result<E> + Sync,
+{
     let n = requests.len();
-    let threads = threads.max(1).min(n.max(1));
-    let mut shards: Vec<Vec<Request>> = (0..threads)
-        .map(|_| Vec::with_capacity(n / threads + 1))
-        .collect();
-    for (i, req) in requests.into_iter().enumerate() {
-        shards[i % threads].push(req);
-    }
+    let threads = cfg.threads.max(1).min(n.max(1));
+    let batch = if cfg.batch == 0 { n.max(1) } else { cfg.batch };
+
+    // Per-worker executor slots: created on first use inside the worker
+    // (so replica setup runs in parallel), reused across every batch.
+    let slots: Vec<Mutex<Option<E>>> = (0..threads).map(|_| Mutex::new(None)).collect();
 
     let t0 = Instant::now();
-    let per_worker: Vec<Result<Vec<(f64, f64)>>> = parallel_map(shards, threads, |shard| {
-        if shard.is_empty() {
-            return Ok(Vec::new());
-        }
-        let rt = Runtime::load(artifacts_dir)?; // per-worker replica
-        let mut out = Vec::with_capacity(shard.len());
-        for req in shard {
-            let entry = rt
-                .entry(&req.artifact)
-                .ok_or_else(|| anyhow::anyhow!("unknown artifact {}", req.artifact))?
-                .clone();
-            let mut rng = XorShift::new(req.seed);
-            let inputs: Vec<Vec<f32>> = entry
-                .inputs
-                .iter()
-                .map(|spec| rng.f32_vec(spec.elems() as usize))
-                .collect();
-            let t = Instant::now();
-            let outs = rt.execute_f32(&req.artifact, &inputs)?;
-            let dt = t.elapsed().as_secs_f64() * 1e3;
-            let s: f64 = outs
-                .iter()
-                .map(|o| o.iter().map(|&v| v as f64).sum::<f64>())
-                .sum();
-            out.push((dt, s));
-        }
-        Ok(out)
-    });
-    let wall = t0.elapsed().as_secs_f64();
-
     let mut lat = Vec::with_capacity(n);
     let mut checksum = 0.0f64;
-    for worker in per_worker {
-        for (dt, s) in worker? {
+    let mut batches = 0usize;
+    let mut remaps = 0usize;
+    let mut active: Option<Arc<MappingPlan>> = None;
+
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + batch).min(n);
+        // Index shards — requests are served in place, never cloned.
+        let shards: Vec<(usize, Vec<usize>)> = (0..threads)
+            .map(|w| (w, (start + w..end).step_by(threads).collect()))
+            .collect();
+        // The plan every worker of THIS batch runs under: swapped only
+        // at this boundary, so an in-flight batch never sees a newer one.
+        let batch_plan = active.clone();
+        let per_worker: Vec<Result<Vec<(f64, f64)>>> =
+            parallel_map(shards, threads, |(w, shard)| {
+                if shard.is_empty() {
+                    return Ok(Vec::new());
+                }
+                let mut slot = slots[*w].lock().expect("worker executor slot");
+                if slot.is_none() {
+                    *slot = Some(make()?); // lazy per-worker replica
+                }
+                let ex = slot.as_mut().expect("slot just filled");
+                if let Some(p) = &batch_plan {
+                    ex.adopt_plan(p); // batch-boundary plan distribution
+                }
+                let mut out = Vec::with_capacity(shard.len());
+                for &i in shard {
+                    let t = Instant::now();
+                    let s = ex.execute(&requests[i])?;
+                    out.push((t.elapsed().as_secs_f64() * 1e3, s));
+                }
+                Ok(out)
+            });
+
+        // Re-interleave into trace order: worker w's k-th result is
+        // batch index w + k·threads. This makes the checksum reduction
+        // independent of the worker count.
+        let mut batch_vals: Vec<(f64, f64)> = vec![(0.0, 0.0); end - start];
+        for (w, worker) in per_worker.into_iter().enumerate() {
+            for (k, v) in worker?.into_iter().enumerate() {
+                batch_vals[w + k * threads] = v;
+            }
+        }
+        for (dt, s) in batch_vals {
             lat.push(dt);
             checksum += s;
         }
+        batches += 1;
+
+        if let Some(r) = &mut remapper {
+            for req in &requests[start..end] {
+                r.observe(&req.artifact);
+            }
+            r.maybe_remap();
+            while let Some(p) = r.take_plan() {
+                active = Some(p); // hot swap between batches
+                remaps += 1;
+            }
+        }
+        start = end;
     }
+    let wall = t0.elapsed().as_secs_f64();
+
     Ok(ServeStats {
         completed: lat.len(),
         wall_s: wall,
@@ -117,17 +302,49 @@ pub fn serve(artifacts_dir: &Path, requests: Vec<Request>, threads: usize) -> Re
         p99_latency_ms: stats::percentile(&lat, 99.0),
         rps: lat.len() as f64 / wall,
         checksum,
+        batches,
+        remaps,
+        plan_epoch: active.map(|p| p.epoch),
     })
 }
 
-/// Build a mixed request trace over the available artifacts.
+/// Build a mixed request trace over the available artifacts. Per-request
+/// input seeds are derived by [`XorShift::split`] stream splitting —
+/// xorshift64* outputs are a bijection of the (never-repeating) state
+/// sequence, so every request seed in a trace is distinct. The previous
+/// `seed ^ (i · 0x9E37)` mixing produced near-identical generator states
+/// for adjacent `i` at small seeds and aliased across related trace
+/// seeds; `coordinator::tests` keeps a collision regression.
 pub fn mixed_trace(n: usize, seed: u64) -> Vec<Request> {
     let kinds = ["conv3x3", "conv1x1", "fc", "lstm_cell", "conv_chain"];
     let mut rng = XorShift::new(seed);
     (0..n)
-        .map(|i| Request {
+        .map(|_| Request {
             artifact: kinds[rng.below(kinds.len() as u64) as usize].to_string(),
-            seed: seed ^ (i as u64).wrapping_mul(0x9E37),
+            seed: rng.split().next_u64(),
+        })
+        .collect()
+}
+
+/// Synthetic drift trace: requests before `switch_at` are drawn
+/// uniformly from `before`, the rest from `after` — the workload-shift
+/// fixture the remap tests and the `perf_remap` bench drive.
+pub fn drift_trace(
+    n: usize,
+    switch_at: usize,
+    before: &[&str],
+    after: &[&str],
+    seed: u64,
+) -> Vec<Request> {
+    assert!(!before.is_empty() && !after.is_empty());
+    let mut rng = XorShift::new(seed);
+    (0..n)
+        .map(|i| {
+            let pool = if i < switch_at { before } else { after };
+            Request {
+                artifact: pool[rng.below(pool.len() as u64) as usize].to_string(),
+                seed: rng.split().next_u64(),
+            }
         })
         .collect()
 }

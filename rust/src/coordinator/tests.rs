@@ -1,8 +1,69 @@
-//! Coordinator tests: experiment drivers produce well-formed tables and
-//! the serving trace generator is deterministic.
+//! Coordinator tests: experiment drivers produce well-formed tables, the
+//! serving loop is deterministic across worker counts (checksum bits and
+//! latency counts), the serving trace generator is deterministic and
+//! collision-free, and serving-time remapping reproduces the offline
+//! optimizer bit for bit.
 
 use super::experiments::{self, Effort};
-use super::serve::mixed_trace;
+use super::remap::{mix_network, MappingPlan, RemapPolicy, Remapper};
+use super::serve::{
+    drift_trace, mixed_trace, serve_with, Executor, Request, ServeConfig, ServeStats,
+    SyntheticExecutor,
+};
+use crate::arch::{eyeriss_like, small_rf};
+use crate::energy::Table3;
+use crate::netopt::{co_optimize_arches, NetOptConfig};
+use crate::search::HierarchyResult;
+
+/// Serve a trace through the full `serve_with` loop on the deterministic
+/// synthetic executor (no artifacts / `pjrt` needed).
+fn serve_synthetic(
+    trace: Vec<Request>,
+    threads: usize,
+    batch: usize,
+    remapper: Option<&mut Remapper>,
+) -> ServeStats {
+    serve_with(
+        trace,
+        &ServeConfig::new(threads).with_batch(batch),
+        || Ok(SyntheticExecutor),
+        remapper,
+    )
+    .expect("synthetic serve cannot fail")
+}
+
+/// The cheap candidate list + policy the remap tests share.
+fn test_remapper(window: usize, drift: f64) -> Remapper {
+    Remapper::new(
+        RemapPolicy::new(window, drift),
+        vec![eyeriss_like(), small_rf()],
+    )
+}
+
+/// Bit-level equality on the plan-winner contract surface: architecture,
+/// totals, and every per-layer (mapping, smap, model result).
+fn assert_winner_bits_eq(tag: &str, a: &HierarchyResult, b: &HierarchyResult) {
+    assert_eq!(a.arch, b.arch, "{tag}: arch differs");
+    assert_eq!(
+        a.opt.total_energy_pj.to_bits(),
+        b.opt.total_energy_pj.to_bits(),
+        "{tag}: energy bits differ"
+    );
+    assert_eq!(
+        a.opt.total_cycles.to_bits(),
+        b.opt.total_cycles.to_bits(),
+        "{tag}: cycle bits differ"
+    );
+    assert_eq!(a.opt.unmapped, 0, "{tag}: winner must be fully mapped");
+    assert_eq!(b.opt.unmapped, 0, "{tag}: winner must be fully mapped");
+    assert_eq!(a.opt.per_layer.len(), b.opt.per_layer.len());
+    for (x, y) in a.opt.per_layer.iter().zip(b.opt.per_layer.iter()) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.mapping, y.mapping, "{tag}: mapping differs");
+        assert_eq!(x.smap, y.smap, "{tag}: spatial map differs");
+        assert_eq!(x.result, y.result, "{tag}: model result differs");
+    }
+}
 
 #[test]
 fn table3_has_all_anchor_rows() {
@@ -66,6 +127,196 @@ fn search_pruning_table_confirms_identical_winners() {
 }
 
 #[test]
+fn serve_is_deterministic_across_thread_counts() {
+    // Locks in the order-preserving serve loop at the serve() level:
+    // ServeStats.checksum is byte-identical across threads ∈ {1, 2, 4}
+    // and across two runs of the same trace, and the latency *count*
+    // equals the trace length everywhere.
+    let trace = mixed_trace(60, 7);
+    let runs: Vec<ServeStats> = [1usize, 2, 4]
+        .iter()
+        .map(|&t| serve_synthetic(trace.clone(), t, 16, None))
+        .collect();
+    for (i, s) in runs.iter().enumerate() {
+        assert_eq!(s.completed, 60, "run {i}: lost requests");
+        assert_eq!(s.batches, 4, "run {i}: 60 requests / batch 16 = 4 batches");
+        assert_eq!(
+            s.checksum.to_bits(),
+            runs[0].checksum.to_bits(),
+            "checksum bits differ between threads=1 and threads={}",
+            [1, 2, 4][i]
+        );
+    }
+    // repeat runs are byte-identical too
+    for t in [1usize, 2, 4] {
+        let a = serve_synthetic(trace.clone(), t, 16, None);
+        let b = serve_synthetic(trace.clone(), t, 16, None);
+        assert_eq!(a.checksum.to_bits(), b.checksum.to_bits(), "t={t}");
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.batches, b.batches);
+    }
+    // batching must not move the checksum either (trace-order reduction)
+    let unbatched = serve_synthetic(trace, 3, 0, None);
+    assert_eq!(unbatched.checksum.to_bits(), runs[0].checksum.to_bits());
+    assert_eq!(unbatched.batches, 1);
+}
+
+#[test]
+fn serve_with_remap_is_deterministic_across_thread_counts() {
+    // Remap decisions are pure functions of the trace, so enabling the
+    // remapper preserves the determinism contract — including the remap
+    // count and the final plan — across worker counts.
+    let trace = mixed_trace(48, 3);
+    let mut reference: Option<(ServeStats, usize, Vec<(String, usize)>, String)> = None;
+    for t in [1usize, 2, 4] {
+        let mut r = test_remapper(16, 0.3);
+        let stats = serve_synthetic(trace.clone(), t, 12, Some(&mut r));
+        let plan = r.plan().expect("a plan after serving");
+        match &reference {
+            None => {
+                let arch = plan.winner.arch.name.clone();
+                reference = Some((stats, r.remaps, plan.mix.clone(), arch));
+            }
+            Some((s0, remaps0, mix0, arch0)) => {
+                assert_eq!(stats.checksum.to_bits(), s0.checksum.to_bits(), "t={t}");
+                assert_eq!(stats.completed, s0.completed, "t={t}");
+                assert_eq!(stats.remaps, s0.remaps, "t={t}: plan swaps differ");
+                assert_eq!(stats.plan_epoch, s0.plan_epoch, "t={t}: final epoch differs");
+                assert_eq!(&r.remaps, remaps0, "t={t}: remap count differs");
+                assert_eq!(&plan.mix, mix0, "t={t}: final plan mix differs");
+                assert_eq!(&plan.winner.arch.name, arch0, "t={t}");
+            }
+        }
+    }
+    let (s0, remaps0, ..) = reference.unwrap();
+    assert!(remaps0 >= 1, "the first batch must produce a plan");
+    assert_eq!(s0.remaps, remaps0, "every published plan must be drained");
+}
+
+#[test]
+fn remap_on_static_mix_matches_offline_co_optimize() {
+    // On a static mix the remapped plan must be bit-identical to the
+    // offline optimizer on the same candidate points and the same
+    // mix-weighted network — cold on the first remap, and still
+    // identical warm-started on the second.
+    let trace = mixed_trace(40, 9);
+    let mut r = test_remapper(40, 0.9);
+    let stats = serve_synthetic(trace, 1, 40, Some(&mut r));
+    assert_eq!(stats.remaps, 1, "single batch, single plan");
+    let plan = r.plan().expect("plan");
+    assert_eq!(plan.mix.iter().map(|(_, c)| c).sum::<usize>(), 40);
+
+    let (net, weights, spans) = mix_network(&plan.mix);
+    assert_eq!(spans, plan.spans);
+    let cfg = NetOptConfig::new(r.policy().opts.clone(), 1).with_layer_weights(weights);
+    let offline = co_optimize_arches(&net, r.candidates(), &Table3, &cfg);
+    let ow = offline.best().expect("offline winner");
+    assert_winner_bits_eq("static-mix remap vs offline", &plan.winner, ow);
+
+    // second remap on the same window: warm-started from the first
+    // run's seeds, still bit-identical to the cold offline optimum
+    assert!(!r.seeds().is_empty(), "first remap must learn seeds");
+    let plan2 = r.remap_now().expect("warm remap");
+    assert_winner_bits_eq("warm remap vs offline", &plan2.winner, ow);
+
+    // per-artifact span lookup exposes every layer of the winner
+    for (name, _, len) in &plan.spans {
+        let layers = plan.artifact_layers(name).expect("span");
+        assert_eq!(layers.len(), *len);
+        assert!(layers.iter().all(|l| l.is_some()));
+    }
+}
+
+#[test]
+fn remap_follows_drift_to_the_post_drift_optimum() {
+    // Synthetic drift trace: {conv3x3, fc} for the first half, pure
+    // lstm_cell after. Once the window fills with post-drift traffic the
+    // remapper must re-optimize, and the final plan must equal the
+    // offline optimum for the post-drift mix.
+    let trace = drift_trace(96, 48, &["conv3x3", "fc"], &["lstm_cell"], 11);
+    let mut r = test_remapper(24, 0.4);
+    let stats = serve_synthetic(trace, 2, 12, Some(&mut r));
+    assert_eq!(stats.completed, 96);
+    assert!(
+        r.remaps >= 2,
+        "expected at least the initial and the post-drift remap, got {}",
+        r.remaps
+    );
+    assert_eq!(stats.remaps, r.remaps, "every plan swap must reach serve");
+
+    let plan = r.plan().expect("final plan");
+    assert_eq!(
+        plan.mix,
+        vec![("lstm_cell".to_string(), 24)],
+        "final window must be pure post-drift traffic"
+    );
+    let (net, weights, _) = mix_network(&plan.mix);
+    let cfg = NetOptConfig::new(r.policy().opts.clone(), 1).with_layer_weights(weights);
+    let offline = co_optimize_arches(&net, r.candidates(), &Table3, &cfg);
+    let ow = offline.best().expect("offline post-drift winner");
+    assert_winner_bits_eq("post-drift remap vs offline", &plan.winner, ow);
+    // drift settles once the plan tracks the window
+    assert!(r.drift() < 1e-12, "drift should be zero on a settled mix");
+}
+
+#[test]
+fn workers_adopt_the_active_plan_at_batch_boundaries() {
+    // The plan-swap contract: a plan published after batch k is handed
+    // to every serving worker's executor (Executor::adopt_plan) at the
+    // start of batch k+1 and of every batch after that — never mid-batch.
+    use std::sync::{Arc, Mutex};
+
+    struct Tracking {
+        epochs: Arc<Mutex<Vec<usize>>>,
+    }
+    impl Executor for Tracking {
+        fn execute(&mut self, req: &Request) -> anyhow::Result<f64> {
+            let mut inner = SyntheticExecutor;
+            inner.execute(req)
+        }
+        fn adopt_plan(&mut self, plan: &MappingPlan) {
+            self.epochs.lock().expect("tracking log").push(plan.epoch);
+        }
+    }
+
+    let log: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    // drift 2.0 is unreachable (total variation <= 1), so exactly the
+    // initial (epoch-0) remap fires, whatever the sampled mix looks like
+    let mut r = test_remapper(16, 2.0);
+    let stats = serve_with(
+        mixed_trace(32, 4),
+        &ServeConfig::new(1).with_batch(8),
+        || {
+            Ok(Tracking {
+                epochs: log.clone(),
+            })
+        },
+        Some(&mut r),
+    )
+    .expect("synthetic serve");
+    assert_eq!(stats.batches, 4);
+    assert_eq!(stats.remaps, 1);
+    assert_eq!(stats.plan_epoch, Some(0));
+    // no plan exists during batch 1; the epoch-0 plan is adopted at the
+    // start of batches 2, 3 and 4
+    assert_eq!(*log.lock().expect("tracking log"), vec![0, 0, 0]);
+}
+
+#[test]
+fn serve_handles_tiny_and_empty_traces() {
+    let empty = serve_synthetic(Vec::new(), 4, 8, None);
+    assert_eq!(empty.completed, 0);
+    assert_eq!(empty.batches, 0);
+    assert_eq!(empty.checksum, 0.0);
+    // more workers than requests in the final (short) batch
+    let five = serve_synthetic(mixed_trace(5, 1), 8, 2, None);
+    assert_eq!(five.completed, 5);
+    assert_eq!(five.batches, 3);
+    let one_worker = serve_synthetic(mixed_trace(5, 1), 1, 2, None);
+    assert_eq!(one_worker.checksum.to_bits(), five.checksum.to_bits());
+}
+
+#[test]
 fn mixed_trace_deterministic_and_mixed() {
     let a = mixed_trace(50, 7);
     let b = mixed_trace(50, 7);
@@ -80,6 +331,45 @@ fn mixed_trace_deterministic_and_mixed() {
     // at least 3 artifact kinds appear
     let kinds: std::collections::HashSet<_> = a.iter().map(|r| r.artifact.clone()).collect();
     assert!(kinds.len() >= 3, "{kinds:?}");
+}
+
+#[test]
+fn trace_request_seeds_are_collision_free() {
+    // Regression for the old `seed ^ (i · 0x9E37)` per-request mixing:
+    // it aliased across related trace seeds (e.g. trace 0's request 1
+    // equals trace 0x9E37's request 0, and generally seed a's request i
+    // collides with seed a ^ 0x9E37's request i ± 1), and adjacent
+    // requests at small seeds differed only in low state bits. Stream
+    // splitting makes within-trace seeds distinct by construction
+    // (xorshift64* outputs are a bijection of the never-repeating state
+    // sequence) and decorrelates related trace seeds.
+    let mut seen = std::collections::HashSet::new();
+    for r in mixed_trace(4096, 1) {
+        assert!(seen.insert(r.seed), "within-trace request seed collision");
+        assert_ne!(r.seed, 0, "zero would collapse the input stream");
+    }
+    // the exact small/related seeds the old mixing aliased on
+    let mut seen = std::collections::HashSet::new();
+    for s in [0u64, 1, 2, 3, 0x9E37, 2 * 0x9E37, 3 * 0x9E37] {
+        for r in mixed_trace(512, s) {
+            assert!(seen.insert(r.seed), "cross-trace collision at trace seed {s:#x}");
+        }
+    }
+}
+
+#[test]
+fn drift_trace_switches_pools_deterministically() {
+    let t = drift_trace(30, 10, &["fc"], &["conv3x3", "conv1x1"], 5);
+    assert_eq!(t.len(), 30);
+    assert!(t[..10].iter().all(|r| r.artifact == "fc"));
+    assert!(t[10..]
+        .iter()
+        .all(|r| r.artifact == "conv3x3" || r.artifact == "conv1x1"));
+    let u = drift_trace(30, 10, &["fc"], &["conv3x3", "conv1x1"], 5);
+    for (a, b) in t.iter().zip(u.iter()) {
+        assert_eq!(a.artifact, b.artifact);
+        assert_eq!(a.seed, b.seed);
+    }
 }
 
 #[test]

@@ -38,6 +38,15 @@
 //!    [`ShardCheckpoint`] (winner, incumbent bound, seeds table, stats)
 //!    as JSON, and [`merge_checkpoints`] combines them associatively
 //!    into the bit-identical single-process winner.
+//! 6. **Warm starts and mix weights** (serving-time remapping) — the
+//!    best-known per-shape energies live in a [`SeedTable`] shared by
+//!    the shard checkpoints and the on-line remapper
+//!    (`coordinator::remap`): [`co_optimize_arches_seeded`] pre-loads a
+//!    run's seeds from a table learned by earlier runs (hints only —
+//!    the rerun fallback keeps the argmin exact), and
+//!    [`NetOptConfig::layer_weights`] weights each layer's energy,
+//!    cycles and floors by its serving-window frequency instead of the
+//!    uniform layer sum, so the optimum tracks the live request mix.
 //!
 //! ## Winner-identity contract
 //!
@@ -57,10 +66,12 @@
 //! `search::optimize_network` and `search::search_hierarchy` are thin
 //! compatibility shims over [`evaluate_network`] and [`co_optimize`].
 
+mod seeds;
 mod shard;
 mod space;
 mod stats;
 
+pub use seeds::{LayerKey, SeedTable};
 pub use shard::{
     co_optimize_shard, co_optimize_sharded, merge_all, merge_checkpoints, ShardCheckpoint,
     ShardRun, CHECKPOINT_FORMAT,
@@ -75,7 +86,7 @@ use crate::arch::Arch;
 use crate::dataflow::Dataflow;
 use crate::energy::CostModel;
 use crate::engine::{DivisorCache, EvalSnapshot, Incumbent, PruneMode, PRUNE_SLACK};
-use crate::loopnest::{Shape, Tensor, NDIMS};
+use crate::loopnest::{Shape, Tensor};
 use crate::nn::Network;
 use crate::search::{
     optimize_layer_seeded, parallel_map, HierarchyResult, LayerOpt, NetworkOpt, SearchOpts,
@@ -104,6 +115,13 @@ pub struct NetOptConfig {
     pub min_tops: Option<f64>,
     /// Clock used to convert cycles to TOPS for `min_tops`.
     pub clock_ghz: f64,
+    /// Mix weights, one per network layer (finite, `> 0`): layer `i`
+    /// contributes `w[i] ×` its energy and cycles to the network totals,
+    /// and its compulsory floor scales the same way, so the optimizer
+    /// minimizes the serving-mix expectation instead of the uniform
+    /// layer sum. `None` is the uniform case and is **bit-identical** to
+    /// the pre-weights behavior (all weights `1.0`).
+    pub layer_weights: Option<Vec<f64>>,
 }
 
 impl NetOptConfig {
@@ -117,6 +135,7 @@ impl NetOptConfig {
             prune: PruneMode::BranchAndBound,
             min_tops: None,
             clock_ghz: 1.0,
+            layer_weights: None,
         }
     }
 
@@ -132,6 +151,13 @@ impl NetOptConfig {
     /// Same configuration with an iso-throughput floor.
     pub fn with_min_tops(mut self, min_tops: f64) -> Self {
         self.min_tops = Some(min_tops);
+        self
+    }
+
+    /// Same configuration with per-layer mix weights (one per network
+    /// layer, finite and `> 0` — validated at run start).
+    pub fn with_layer_weights(mut self, weights: Vec<f64>) -> Self {
+        self.layer_weights = Some(weights);
         self
     }
 }
@@ -151,6 +177,10 @@ pub struct CoOptResult {
     pub ranked: Vec<HierarchyResult>,
     /// Arch-point and engine counter roll-up.
     pub stats: NetOptStats,
+    /// Final best-known per-layer-shape energies of the run (warm seeds
+    /// min-merged with what the run observed) — feed this back into
+    /// [`co_optimize_arches_seeded`] to warm-start the next run.
+    pub seeds: SeedTable,
 }
 
 impl CoOptResult {
@@ -161,53 +191,72 @@ impl CoOptResult {
     }
 }
 
-/// Layer-shape dedup key: identical `(bounds, stride)` layers share one
-/// search per architecture point. Also the key of the cross-architecture
-/// seeds table that shard checkpoints serialize.
-pub(crate) type LayerKey = ([u64; NDIMS], u32);
-
 /// One layer of the shared network profile.
 struct ProfLayer {
     shape: Shape,
     key: LayerKey,
-    /// Occurrences of this shape at this index or later (>= 1); tightens
-    /// the per-occurrence bound for repeated layers (LSTM gate banks,
-    /// VGG's repeated convs).
-    remaining_same: usize,
+    /// Mix weight of this layer (`1.0` when no weights were given).
+    weight: f64,
+    /// Summed weight of this shape at this index or later (`>= weight`);
+    /// tightens the per-occurrence bound for repeated layers (LSTM gate
+    /// banks, VGG's repeated convs) and generalizes the old
+    /// occurrence-count form to fractional mix weights.
+    remaining_weight: f64,
 }
 
 /// Shape-dedup profile of the network, computed once and shared across
 /// every architecture point of a run.
 struct NetProfile {
     layers: Vec<ProfLayer>,
+    /// Whether non-uniform weights are in play (selects the f64 MAC
+    /// accumulation; the unweighted path keeps exact u64 totals).
+    weighted: bool,
 }
 
 impl NetProfile {
-    fn new(net: &Network) -> Self {
+    fn new(net: &Network, weights: Option<&[f64]>) -> Self {
+        if let Some(w) = weights {
+            assert_eq!(
+                w.len(),
+                net.layers.len(),
+                "layer_weights length must match the network depth"
+            );
+            assert!(
+                w.iter().all(|x| x.is_finite() && *x > 0.0),
+                "layer weights must be finite and positive"
+            );
+        }
         let mut layers: Vec<ProfLayer> = net
             .layers
             .iter()
-            .map(|l| ProfLayer {
+            .enumerate()
+            .map(|(i, l)| ProfLayer {
                 shape: l.shape,
                 key: (l.shape.bounds, l.shape.stride),
-                remaining_same: 0,
+                weight: weights.map(|w| w[i]).unwrap_or(1.0),
+                remaining_weight: 0.0,
             })
             .collect();
-        let mut seen: HashMap<LayerKey, usize> = HashMap::new();
+        let mut seen: HashMap<LayerKey, f64> = HashMap::new();
         for pl in layers.iter_mut().rev() {
-            let c = seen.entry(pl.key).or_insert(0);
-            *c += 1;
-            pl.remaining_same = *c;
+            let c = seen.entry(pl.key).or_insert(0.0);
+            *c += pl.weight;
+            pl.remaining_weight = *c;
         }
-        NetProfile { layers }
+        NetProfile {
+            layers,
+            weighted: weights.is_some(),
+        }
     }
 
-    /// Per-layer compulsory energy floors and their suffix sums
-    /// (`suffix[i]` = floors of layers `i..`; `suffix[len]` = 0). The
-    /// floor is `EvalCtx::floor_pj`'s formula: MAC energy plus full
-    /// weight and output traffic across the top (DRAM) boundary — a
-    /// rigorous lower bound on any mapping's energy (the input floor is
-    /// deliberately omitted, exactly as in the engine).
+    /// Per-layer compulsory energy floors (unweighted, per single
+    /// occurrence) and the *weighted* suffix sums (`suffix[i]` = weighted
+    /// floors of layers `i..`; `suffix[len]` = 0). The floor is
+    /// `EvalCtx::floor_pj`'s formula: MAC energy plus full weight and
+    /// output traffic across the top (DRAM) boundary — a rigorous lower
+    /// bound on any mapping's energy (the input floor is deliberately
+    /// omitted, exactly as in the engine). With uniform weights the
+    /// suffix is bit-identical to the unweighted sum (`1.0 × x == x`).
     fn floors(&self, arch: &Arch, cost: &dyn CostModel) -> (Vec<f64>, Vec<f64>) {
         let top = cost.level_access(arch, arch.num_levels() - 1);
         let n = self.layers.len();
@@ -220,7 +269,7 @@ impl NetProfile {
         }
         let mut suffix = vec![0.0; n + 1];
         for i in (0..n).rev() {
-            suffix[i] = per[i] + suffix[i + 1];
+            suffix[i] = self.layers[i].weight * per[i] + suffix[i + 1];
         }
         (per, suffix)
     }
@@ -274,6 +323,7 @@ impl NetRun<'_> {
         let mut total_e = 0.0;
         let mut total_c = 0.0;
         let mut total_m = 0u64;
+        let mut total_m_f = 0.0f64; // weighted-mode MAC accumulator
         let mut unmapped_layers: Vec<usize> = Vec::new();
         let mut engine = EvalSnapshot::default();
         let mut searches = 0usize;
@@ -299,10 +349,12 @@ impl NetRun<'_> {
             // Admissible per-occurrence bound for this layer's search:
             // the incumbent minus what is already spent and the floors
             // of the *other* remaining layers, split across the
-            // remaining occurrences of this same shape.
-            let rem = pl.remaining_same as f64;
+            // remaining (mix-weighted) occurrences of this same shape.
+            // With uniform weights this is bit-identical to the old
+            // occurrence-count form.
+            let rem_w = pl.remaining_weight;
             let net_bound = if inc.is_finite() {
-                (inc - total_e - suffix[li + 1] + (rem - 1.0) * floor_l[li]) / rem
+                (inc - total_e - suffix[li + 1] + (rem_w - pl.weight) * floor_l[li]) / rem_w
             } else {
                 f64::INFINITY
             };
@@ -373,9 +425,15 @@ impl NetRun<'_> {
             };
             match entry {
                 Some(lo) => {
-                    total_e += lo.result.energy_pj;
-                    total_c += lo.result.cycles;
-                    total_m += lo.result.macs;
+                    // `1.0 × x == x` exactly, so the uniform case keeps
+                    // the pre-weights bits.
+                    total_e += pl.weight * lo.result.energy_pj;
+                    total_c += pl.weight * lo.result.cycles;
+                    if self.profile.weighted {
+                        total_m_f += pl.weight * lo.result.macs as f64;
+                    } else {
+                        total_m += lo.result.macs;
+                    }
                     per_layer.push(Some(lo));
                 }
                 None => {
@@ -389,7 +447,11 @@ impl NetRun<'_> {
             per_layer,
             total_energy_pj: total_e,
             total_cycles: total_c,
-            total_macs: total_m,
+            total_macs: if self.profile.weighted {
+                total_m_f.round() as u64
+            } else {
+                total_m
+            },
             unmapped: unmapped_layers.len(),
             unmapped_layers,
         };
@@ -433,7 +495,7 @@ pub fn evaluate_network(
     opts: &SearchOpts,
     threads: usize,
 ) -> NetworkOpt {
-    let profile = NetProfile::new(net);
+    let profile = NetProfile::new(net, None);
     let incumbent = Incumbent::new();
     let seeds: Mutex<HashMap<LayerKey, f64>> = Mutex::new(HashMap::new());
     let run = NetRun {
@@ -472,9 +534,9 @@ pub(crate) struct RunOutput {
     /// Final network-level incumbent bound (+inf when nothing completed
     /// or network-level pruning was off).
     pub incumbent_pj: f64,
-    /// Final best-known per-layer-shape energies, sorted by key for
-    /// deterministic serialization.
-    pub seeds: Vec<(LayerKey, f64)>,
+    /// Final best-known per-layer-shape energies (any warm seeds
+    /// min-merged with what the run observed).
+    pub seeds: SeedTable,
 }
 
 /// The contract-critical total order over completed points: fully mapped
@@ -497,12 +559,15 @@ pub(crate) fn rank_order(
 /// [`co_optimize_arches`], and the per-shard runner
 /// ([`co_optimize_shard`]). Work is split into contiguous chunks over
 /// [`parallel_map`]; each chunk shares one divisor cache across all of
-/// its architecture points.
+/// its architecture points. `warm` pre-loads the cross-architecture
+/// seeds table (hints only — the rerun fallback keeps the winner exact;
+/// see [`co_optimize_arches_seeded`]).
 pub(crate) fn run_points(
     net: &Network,
     cands: Vec<(usize, Arch)>,
     cost: &dyn CostModel,
     cfg: &NetOptConfig,
+    warm: Option<&SeedTable>,
 ) -> RunOutput {
     let n = cands.len();
     let mut stats = NetOptStats {
@@ -514,12 +579,15 @@ pub(crate) fn run_points(
             ranked: Vec::new(),
             stats,
             incumbent_pj: f64::INFINITY,
-            seeds: Vec::new(),
+            seeds: warm.cloned().unwrap_or_default(),
         };
     }
-    let profile = NetProfile::new(net);
+    let profile = NetProfile::new(net, cfg.layer_weights.as_deref());
     let incumbent = Incumbent::new();
-    let seeds: Mutex<HashMap<LayerKey, f64>> = Mutex::new(HashMap::new());
+    let seed_map: HashMap<LayerKey, f64> = warm
+        .map(|t| t.iter().copied().collect())
+        .unwrap_or_default();
+    let seeds: Mutex<HashMap<LayerKey, f64>> = Mutex::new(seed_map);
     let nchunks = cfg.threads.max(1).min(n);
     let run = NetRun {
         profile: &profile,
@@ -579,13 +647,11 @@ pub(crate) fn run_points(
     // subset of points.
     ranked.sort_by(rank_order);
     let seeds = seeds.into_inner().expect("netopt seeds lock");
-    let mut seeds: Vec<(LayerKey, f64)> = seeds.into_iter().collect();
-    seeds.sort_by(|a, b| a.0.cmp(&b.0));
     RunOutput {
         ranked,
         stats,
         incumbent_pj: incumbent.get(),
-        seeds,
+        seeds: SeedTable::from_entries(seeds.into_iter().collect()),
     }
 }
 
@@ -602,13 +668,14 @@ pub fn co_optimize(
 ) -> CoOptResult {
     let enumeration = space.enumerate();
     let cands: Vec<(usize, Arch)> = enumeration.candidates.into_iter().enumerate().collect();
-    let mut out = run_points(net, cands, cost, cfg);
+    let mut out = run_points(net, cands, cost, cfg, None);
     out.stats.generated = enumeration.generated;
     out.stats.budget_filtered = enumeration.budget_filtered;
     out.stats.ratio_filtered = enumeration.ratio_filtered;
     CoOptResult {
         ranked: out.ranked.into_iter().map(|(_, r)| r).collect(),
         stats: out.stats,
+        seeds: out.seeds,
     }
 }
 
@@ -624,11 +691,43 @@ pub fn co_optimize_arches(
     cfg: &NetOptConfig,
 ) -> CoOptResult {
     let cands: Vec<(usize, Arch)> = arches.iter().cloned().enumerate().collect();
-    let mut out = run_points(net, cands, cost, cfg);
+    let mut out = run_points(net, cands, cost, cfg, None);
     out.stats.generated = arches.len();
     CoOptResult {
         ranked: out.ranked.into_iter().map(|(_, r)| r).collect(),
         stats: out.stats,
+        seeds: out.seeds,
+    }
+}
+
+/// [`co_optimize_arches`] warm-started from a [`SeedTable`] — the
+/// serving-time remapping entry point (`coordinator::remap`). The table
+/// pre-loads the run's cross-architecture per-shape seeds, so layer
+/// searches start bounded by everything earlier runs learned.
+///
+/// **Exactness contract:** seeds are hints, never trusted results. A
+/// borrowed seed is not admissible at the network level, so any layer
+/// search whose outcome it clips is rerun against the admissible network
+/// bound alone (the same fallback the in-run seeding uses). Therefore an
+/// *arbitrary* table — stale, from another mix, even adversarial —
+/// returns the identical winner (architecture, energy bits, per-layer
+/// mappings) as the cold [`co_optimize_arches`] run, with at most as
+/// many fully evaluated architecture points. Asserted by the randomized
+/// property test in `netopt::tests`.
+pub fn co_optimize_arches_seeded(
+    net: &Network,
+    arches: &[Arch],
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    warm: &SeedTable,
+) -> CoOptResult {
+    let cands: Vec<(usize, Arch)> = arches.iter().cloned().enumerate().collect();
+    let mut out = run_points(net, cands, cost, cfg, Some(warm));
+    out.stats.generated = arches.len();
+    CoOptResult {
+        ranked: out.ranked.into_iter().map(|(_, r)| r).collect(),
+        stats: out.stats,
+        seeds: out.seeds,
     }
 }
 

@@ -1,0 +1,248 @@
+//! The cross-run `(shape, stride) → best-known energy` seeds table.
+//!
+//! One representation shared by everything that carries layer-energy
+//! hints between searches: shard checkpoints persist it (so a merge —
+//! or a future resume — sees the final per-shape bounds), and the
+//! serving-time remapper ([`crate::coordinator::remap`]) feeds it back
+//! into [`co_optimize_arches_seeded`](super::co_optimize_arches_seeded)
+//! to warm-start on-line re-optimizations from everything earlier plans
+//! learned.
+//!
+//! Seeds are *hints*, never trusted results: a seeded layer search whose
+//! outcome is clipped by the borrowed bound is rerun against the
+//! admissible network bound alone (see the parent module's seeding
+//! fallback), so an arbitrary — even adversarial — table can only prune
+//! work, never change the argmin. `netopt::tests` asserts this under the
+//! randomized property harness.
+//!
+//! Entries are kept sorted by key, so serialization is deterministic and
+//! the pairwise [`merge`](SeedTable::merge) (minimum on shared keys) is
+//! a linear sorted-merge — associative and commutative, which the shard
+//! checkpoint merge relies on.
+
+use anyhow::Result;
+
+use crate::loopnest::NDIMS;
+use crate::util::json::Json;
+
+/// Layer-shape dedup key: identical `(bounds, stride)` layers share one
+/// search per architecture point, one seeds-table entry across all of
+/// them.
+pub type LayerKey = ([u64; NDIMS], u32);
+
+/// Best-known per-layer-shape energies, sorted by key.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SeedTable {
+    entries: Vec<(LayerKey, f64)>,
+}
+
+impl SeedTable {
+    /// An empty table.
+    pub fn new() -> SeedTable {
+        SeedTable::default()
+    }
+
+    /// Build from arbitrary entries: sorts by key and keeps the minimum
+    /// energy of duplicate keys.
+    pub fn from_entries(mut entries: Vec<(LayerKey, f64)>) -> SeedTable {
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut out: Vec<(LayerKey, f64)> = Vec::with_capacity(entries.len());
+        for (k, e) in entries {
+            match out.last_mut() {
+                Some((lk, le)) if *lk == k => *le = le.min(e),
+                _ => out.push((k, e)),
+            }
+        }
+        SeedTable { entries: out }
+    }
+
+    /// Best-known energy for a shape, if any.
+    pub fn get(&self, key: &LayerKey) -> Option<f64> {
+        self.entries
+            .binary_search_by(|(k, _)| k.cmp(key))
+            .ok()
+            .map(|i| self.entries[i].1)
+    }
+
+    /// Record an observed energy, keeping the per-key minimum.
+    pub fn observe(&mut self, key: LayerKey, energy_pj: f64) {
+        match self.entries.binary_search_by(|(k, _)| k.cmp(&key)) {
+            Ok(i) => self.entries[i].1 = self.entries[i].1.min(energy_pj),
+            Err(i) => self.entries.insert(i, (key, energy_pj)),
+        }
+    }
+
+    /// Min-merge another table into this one (sorted linear merge,
+    /// minimum on shared keys). Associative and commutative.
+    pub fn merge(&mut self, other: &SeedTable) {
+        let a = std::mem::take(&mut self.entries);
+        let b = &other.entries;
+        let mut out: Vec<(LayerKey, f64)> = Vec::with_capacity(a.len() + b.len());
+        let (mut ia, mut ib) = (0usize, 0usize);
+        while ia < a.len() || ib < b.len() {
+            let pick_a = match (a.get(ia), b.get(ib)) {
+                (Some(x), Some(y)) => match x.0.cmp(&y.0) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => {
+                        out.push((x.0, x.1.min(y.1)));
+                        ia += 1;
+                        ib += 1;
+                        continue;
+                    }
+                },
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => unreachable!(),
+            };
+            if pick_a {
+                out.push(a[ia]);
+                ia += 1;
+            } else {
+                out.push(b[ib]);
+                ib += 1;
+            }
+        }
+        self.entries = out;
+    }
+
+    /// Number of distinct shapes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no shape has been observed.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The sorted `(key, energy)` entries.
+    pub fn entries(&self) -> &[(LayerKey, f64)] {
+        &self.entries
+    }
+
+    /// Iterate the sorted entries.
+    pub fn iter(&self) -> std::slice::Iter<'_, (LayerKey, f64)> {
+        self.entries.iter()
+    }
+
+    /// Serialize as the checkpoint-v1 seeds array
+    /// (`[{"bounds": [...], "stride": n, "energy_pj": x}, ...]`).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|((bounds, stride), e)| {
+                    Json::Obj(vec![
+                        (
+                            "bounds".into(),
+                            Json::Arr(bounds.iter().map(|&b| Json::int(b)).collect()),
+                        ),
+                        ("stride".into(), Json::int(*stride as u64)),
+                        ("energy_pj".into(), Json::num(*e)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Parse the checkpoint-v1 seeds array.
+    pub fn from_json(v: &Json) -> Result<SeedTable> {
+        let mut entries = Vec::new();
+        for s in v.as_arr()? {
+            let mut bounds = [0u64; NDIMS];
+            let arr = s.field("bounds")?.as_arr()?;
+            if arr.len() != NDIMS {
+                anyhow::bail!("seed bounds need {NDIMS} ints, got {}", arr.len());
+            }
+            for (i, b) in arr.iter().enumerate() {
+                bounds[i] = b.as_u64()?;
+            }
+            entries.push((
+                (bounds, s.field("stride")?.as_u64()? as u32),
+                s.field("energy_pj")?.as_f64()?,
+            ));
+        }
+        Ok(SeedTable::from_entries(entries))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(d0: u64, stride: u32) -> LayerKey {
+        let mut bounds = [1u64; NDIMS];
+        bounds[0] = d0;
+        (bounds, stride)
+    }
+
+    #[test]
+    fn from_entries_sorts_and_keeps_minimum() {
+        let t = SeedTable::from_entries(vec![
+            (key(3, 1), 30.0),
+            (key(1, 1), 10.0),
+            (key(3, 1), 25.0),
+        ]);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(&key(1, 1)), Some(10.0));
+        assert_eq!(t.get(&key(3, 1)), Some(25.0));
+        assert_eq!(t.get(&key(2, 1)), None);
+    }
+
+    #[test]
+    fn observe_keeps_minimum() {
+        let mut t = SeedTable::new();
+        t.observe(key(5, 1), 50.0);
+        t.observe(key(5, 1), 40.0);
+        t.observe(key(5, 1), 60.0);
+        t.observe(key(2, 2), 7.0);
+        assert_eq!(t.get(&key(5, 1)), Some(40.0));
+        assert_eq!(t.get(&key(2, 2)), Some(7.0));
+        // entries stay key-sorted
+        let keys: Vec<LayerKey> = t.iter().map(|(k, _)| *k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn merge_is_min_per_key_and_commutative() {
+        let a = SeedTable::from_entries(vec![(key(1, 1), 10.0), (key(2, 1), 5.0)]);
+        let b = SeedTable::from_entries(vec![(key(2, 1), 3.0), (key(4, 1), 8.0)]);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.len(), 3);
+        assert_eq!(ab.get(&key(2, 1)), Some(3.0));
+        assert_eq!(ab.get(&key(1, 1)), Some(10.0));
+        assert_eq!(ab.get(&key(4, 1)), Some(8.0));
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let t = SeedTable::from_entries(vec![
+            (key(7, 2), 0.1 + 0.2), // a value with awkward f64 bits
+            (key(1, 1), f64::from_bits(0x3FF5_5555_5555_5555)),
+        ]);
+        let mut text = String::new();
+        t.to_json().write(&mut text);
+        let back = SeedTable::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(t, back);
+        for ((_, a), (_, b)) in t.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_table_basics() {
+        let t = SeedTable::new();
+        assert!(t.is_empty());
+        assert_eq!(t.len(), 0);
+        let mut m = t.clone();
+        m.merge(&SeedTable::from_entries(vec![(key(1, 1), 1.0)]));
+        assert_eq!(m.len(), 1);
+    }
+}

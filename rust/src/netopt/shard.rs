@@ -81,7 +81,7 @@ use crate::search::{HierarchyResult, LayerOpt, NetworkOpt};
 use crate::util::json::Json;
 use crate::xmodel::{LevelCounts, ModelResult};
 
-use super::{run_points, CoOptResult, DesignSpace, LayerKey, NetOptConfig, NetOptStats};
+use super::{run_points, CoOptResult, DesignSpace, NetOptConfig, NetOptStats, SeedTable};
 
 /// Checkpoint schema identifier; readers reject anything else.
 pub const CHECKPOINT_FORMAT: &str = "interstellar-shard-checkpoint-v1";
@@ -109,8 +109,8 @@ pub struct ShardCheckpoint {
     pub stats: NetOptStats,
     /// Final network-level incumbent bound (+inf when nothing completed).
     pub incumbent_pj: f64,
-    /// Best-known `(shape, stride) → energy` seeds, sorted by key.
-    pub seeds: Vec<(LayerKey, f64)>,
+    /// Best-known `(shape, stride) → energy` seeds.
+    pub seeds: SeedTable,
     /// The covered shards' exact winner and its global raw-grid index
     /// (`None` when no fully-mapped, throughput-passing point exists).
     pub winner: Option<(usize, HierarchyResult)>,
@@ -142,7 +142,7 @@ pub fn co_optimize_shard(
     nshards: usize,
 ) -> ShardRun {
     let se = space.shard(index, nshards);
-    let mut out = run_points(net, se.candidates, cost, cfg);
+    let mut out = run_points(net, se.candidates, cost, cfg, None);
     out.stats.generated = se.generated;
     out.stats.budget_filtered = se.budget_filtered;
     out.stats.ratio_filtered = se.ratio_filtered;
@@ -192,33 +192,9 @@ pub fn merge_checkpoints(a: &ShardCheckpoint, b: &ShardCheckpoint) -> Result<Sha
     let mut stats = a.stats.clone();
     stats.merge(&b.stats);
 
-    let mut seeds: Vec<(LayerKey, f64)> = Vec::with_capacity(a.seeds.len() + b.seeds.len());
-    let (mut ia, mut ib) = (0usize, 0usize);
-    while ia < a.seeds.len() || ib < b.seeds.len() {
-        // merge two key-sorted tables, minimum on shared keys
-        let pick_a = match (a.seeds.get(ia), b.seeds.get(ib)) {
-            (Some(x), Some(y)) => match x.0.cmp(&y.0) {
-                std::cmp::Ordering::Less => true,
-                std::cmp::Ordering::Greater => false,
-                std::cmp::Ordering::Equal => {
-                    seeds.push((x.0, x.1.min(y.1)));
-                    ia += 1;
-                    ib += 1;
-                    continue;
-                }
-            },
-            (Some(_), None) => true,
-            (None, Some(_)) => false,
-            (None, None) => unreachable!(),
-        };
-        if pick_a {
-            seeds.push(a.seeds[ia]);
-            ia += 1;
-        } else {
-            seeds.push(b.seeds[ib]);
-            ib += 1;
-        }
-    }
+    // key-sorted min-merge, now owned by the shared SeedTable type
+    let mut seeds = a.seeds.clone();
+    seeds.merge(&b.seeds);
 
     let winner = match (&a.winner, &b.winner) {
         (None, w) | (w, None) => w.clone(),
@@ -284,6 +260,7 @@ pub fn co_optimize_sharded(
     CoOptResult {
         ranked: ranked.into_iter().map(|(_, r)| r).collect(),
         stats: merged.stats,
+        seeds: merged.seeds,
     }
 }
 
@@ -295,17 +272,6 @@ impl ShardCheckpoint {
 
     /// Serialize to the v1 checkpoint JSON (see the module docs).
     pub fn to_json(&self) -> String {
-        let seeds = self
-            .seeds
-            .iter()
-            .map(|((bounds, stride), e)| {
-                Json::Obj(vec![
-                    ("bounds".into(), u64_arr(bounds)),
-                    ("stride".into(), Json::int(*stride as u64)),
-                    ("energy_pj".into(), Json::num(*e)),
-                ])
-            })
-            .collect();
         let winner = match &self.winner {
             None => Json::Null,
             Some((idx, r)) => Json::Obj(vec![
@@ -325,7 +291,7 @@ impl ShardCheckpoint {
             ),
             ("incumbent_pj".into(), Json::num(self.incumbent_pj)),
             ("stats".into(), stats_to_json(&self.stats)),
-            ("seeds".into(), Json::Arr(seeds)),
+            ("seeds".into(), self.seeds.to_json()),
             ("winner".into(), winner),
         ])
         .to_string()
@@ -338,13 +304,7 @@ impl ShardCheckpoint {
         if format != CHECKPOINT_FORMAT {
             bail!("unknown checkpoint format `{format}` (want `{CHECKPOINT_FORMAT}`)");
         }
-        let mut seeds = Vec::new();
-        for s in v.field("seeds")?.as_arr()? {
-            seeds.push((
-                (u64_fixed::<NDIMS>(s.field("bounds")?)?, s.field("stride")?.as_u64()? as u32),
-                s.field("energy_pj")?.as_f64()?,
-            ));
-        }
+        let seeds = SeedTable::from_json(v.field("seeds")?)?;
         let winner = match v.field("winner")? {
             Json::Null => None,
             w => Some((

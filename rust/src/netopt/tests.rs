@@ -113,7 +113,7 @@ fn bnb_prunes_architecture_points() {
 fn network_floor_lower_bounds_every_point() {
     let space = small_space();
     for net in workloads() {
-        let profile = NetProfile::new(&net);
+        let profile = NetProfile::new(&net, None);
         let ex = co_optimize(
             &net,
             &space,
@@ -393,6 +393,126 @@ fn co_optimize_arches_matches_evaluate_network() {
             r.arch.name
         );
     }
+}
+
+#[test]
+fn seeded_warm_start_preserves_winner() {
+    // The seeded-vs-cold property: co_optimize_arches warm-started from
+    // an ARBITRARY (randomized) SeedTable returns the identical winner —
+    // seeds may only prune, never change the argmin (the rerun fallback
+    // restores exactness) — with at most as many fully evaluated points.
+    use crate::loopnest::NDIMS;
+    use crate::util::prop::for_cases;
+
+    let net = network("mlp-m", 16).unwrap();
+    let arches = [
+        crate::arch::eyeriss_like(),
+        crate::arch::no_local_reuse(),
+        crate::arch::small_rf(),
+    ];
+    let cfg = NetOptConfig::new(small_opts(), 1);
+    let cold = co_optimize_arches(&net, &arches, &Table3, &cfg);
+    let cw = cold.best().expect("cold winner").clone();
+    let layer_e: Vec<(LayerKey, f64)> = cw
+        .opt
+        .per_layer
+        .iter()
+        .zip(net.layers.iter())
+        .map(|(lo, l)| {
+            (
+                (l.shape.bounds, l.shape.stride),
+                lo.as_ref().unwrap().result.energy_pj,
+            )
+        })
+        .collect();
+
+    for_cases(0x5EED, 8, |rng| {
+        let mut entries: Vec<(LayerKey, f64)> = Vec::new();
+        for (k, e) in &layer_e {
+            match rng.below(4) {
+                0 => {} // shape absent from the table
+                1 => entries.push((*k, e * 1e-6)), // absurdly low: forces reruns
+                2 => entries.push((*k, e * (0.5 + rng.below(150) as f64 / 100.0))),
+                _ => entries.push((*k, e * 1e6)), // uselessly loose
+            }
+        }
+        // a key no layer has — must be ignored entirely
+        let mut bogus = [1u64; NDIMS];
+        bogus[0] = 100_000 + rng.below(1000);
+        entries.push(((bogus, 1), 1.0 + rng.below(1000) as f64));
+        let warm = SeedTable::from_entries(entries);
+
+        let seeded = co_optimize_arches_seeded(&net, &arches, &Table3, &cfg, &warm);
+        let sw = seeded.best().expect("seeded winner");
+        assert_winner_payload_eq("seeded-vs-cold", &cw, sw);
+        assert!(
+            seeded.stats.evaluated_full <= cold.stats.evaluated_full,
+            "seeds must never add full evaluations: {} > {}",
+            seeded.stats.evaluated_full,
+            cold.stats.evaluated_full
+        );
+        assert!(seeded.stats.invariants_hold(), "{}", seeded.stats);
+        // the run's output table absorbed the winner's energies, so the
+        // next warm start can only be tighter
+        assert!(!seeded.seeds.is_empty());
+    });
+}
+
+#[test]
+fn uniform_weights_are_bit_identical_to_unweighted() {
+    let net = network("mlp-m", 16).unwrap();
+    let arches = [crate::arch::eyeriss_like(), crate::arch::small_rf()];
+    let base = NetOptConfig::new(small_opts(), 1);
+    let uni = base.clone().with_layer_weights(vec![1.0; net.layers.len()]);
+    let a = co_optimize_arches(&net, &arches, &Table3, &base);
+    let b = co_optimize_arches(&net, &arches, &Table3, &uni);
+    assert_eq!(a.ranked.len(), b.ranked.len());
+    for (x, y) in a.ranked.iter().zip(b.ranked.iter()) {
+        assert_eq!(x.arch, y.arch);
+        assert_eq!(
+            x.opt.total_energy_pj.to_bits(),
+            y.opt.total_energy_pj.to_bits(),
+            "uniform weights changed energy bits on {}",
+            x.arch.name
+        );
+        assert_eq!(x.opt.total_cycles.to_bits(), y.opt.total_cycles.to_bits());
+        assert_eq!(x.opt.total_macs, y.opt.total_macs);
+    }
+    assert_eq!(a.stats, b.stats, "uniform weights changed the counters");
+}
+
+#[test]
+fn mix_weights_scale_objective_and_preserve_per_layer_sum() {
+    let net = network("mlp-m", 16).unwrap();
+    let arches = [crate::arch::eyeriss_like(), crate::arch::small_rf()];
+    let base = NetOptConfig::new(small_opts(), 1);
+    let plain = co_optimize_arches(&net, &arches, &Table3, &base);
+    let pw = plain.best().expect("plain winner");
+
+    // uniform scaling: same winner, ~scaled totals
+    let scaled_cfg = base.clone().with_layer_weights(vec![3.0; net.layers.len()]);
+    let scaled = co_optimize_arches(&net, &arches, &Table3, &scaled_cfg);
+    let sw = scaled.best().expect("scaled winner");
+    assert_eq!(pw.arch.name, sw.arch.name, "uniform scaling moved the winner");
+    let rel = (sw.opt.total_energy_pj - 3.0 * pw.opt.total_energy_pj).abs()
+        / (3.0 * pw.opt.total_energy_pj);
+    assert!(rel < 1e-9, "scaled energy off by {rel}");
+
+    // skewed weights: the reported total is exactly the weighted
+    // per-layer sum (accumulated in layer order)
+    let weights: Vec<f64> = (0..net.layers.len()).map(|i| 1.0 + i as f64 * 4.0).collect();
+    let skew_cfg = base.with_layer_weights(weights.clone());
+    let skew = co_optimize_arches(&net, &arches, &Table3, &skew_cfg);
+    let kw = skew.best().expect("skewed winner");
+    let mut want = 0.0f64;
+    for (w, lo) in weights.iter().zip(kw.opt.per_layer.iter()) {
+        want += w * lo.as_ref().unwrap().result.energy_pj;
+    }
+    assert_eq!(
+        kw.opt.total_energy_pj.to_bits(),
+        want.to_bits(),
+        "weighted total is not the weighted per-layer sum"
+    );
 }
 
 #[test]
