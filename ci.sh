@@ -53,7 +53,10 @@ cargo bench --bench perf_shard
 echo "==> perf_remap (serving-time remapping: deterministic serving, warm-started online plan == offline optimizer, drift tracked; emits BENCH_remap.json)"
 cargo bench --bench perf_remap
 
-echo "==> bench_schema (every BENCH_*.json conforms to the documented schema; netopt/shard/remap files required)"
+echo "==> perf_pareto (frontier exactness: dominance-pruned frontier == exhaustive + filter bit for bit, strictly fewer full evals, budget selection == scalar min-tops winner; emits BENCH_pareto.json)"
+cargo bench --bench perf_pareto
+
+echo "==> bench_schema (every BENCH_*.json conforms to the documented schema; netopt/pareto/shard/remap files required)"
 cargo bench --bench bench_schema
 
 echo "CI OK"

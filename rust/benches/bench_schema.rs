@@ -15,7 +15,12 @@ use interstellar::util::bench::validate_bench_json;
 /// Files the full `ci.sh` perf tier is guaranteed to have produced by
 /// the time this gate runs (it is ordered after the perf benches) —
 /// their absence means a perf gate silently stopped emitting.
-const REQUIRED: &[&str] = &["BENCH_netopt.json", "BENCH_remap.json", "BENCH_shard.json"];
+const REQUIRED: &[&str] = &[
+    "BENCH_netopt.json",
+    "BENCH_pareto.json",
+    "BENCH_remap.json",
+    "BENCH_shard.json",
+];
 
 fn main() {
     let mut checked = 0usize;

@@ -79,7 +79,7 @@ fn main() {
     let cfg = NetOptConfig::new(r.policy().opts.clone(), 1).with_layer_weights(weights);
     let mut cold = None;
     let m_cold = b.bench("perf_remap/co-opt cold", || {
-        cold = Some(co_optimize_arches(&net, r.candidates(), &Table3, &cfg));
+        cold = Some(co_optimize_arches(&net, r.candidates().expect("fixed list"), &Table3, &cfg));
     });
     let cold = cold.expect("cold run");
     let warm_seeds = cold.seeds.clone();
@@ -87,7 +87,7 @@ fn main() {
     let m_warm = b.bench("perf_remap/co-opt warm-started", || {
         warm = Some(co_optimize_arches_seeded(
             &net,
-            r.candidates(),
+            r.candidates().expect("fixed list"),
             &Table3,
             &cfg,
             &warm_seeds,
@@ -140,7 +140,7 @@ fn main() {
     );
     let (net, weights, _) = mix_network(&plan.mix);
     let cfg = NetOptConfig::new(r.policy().opts.clone(), 1).with_layer_weights(weights);
-    let offline = co_optimize_arches(&net, r.candidates(), &Table3, &cfg);
+    let offline = co_optimize_arches(&net, r.candidates().expect("fixed list"), &Table3, &cfg);
     let ow = offline.best().expect("offline post-drift winner");
     assert_eq!(plan.winner.arch, ow.arch, "post-drift plan arch diverges");
     assert_eq!(

@@ -17,6 +17,10 @@ use crate::netopt::{
     ShardCheckpoint,
 };
 use crate::nn::{network, Network};
+use crate::pareto::{
+    merge_all_frontiers, pareto_optimize, pareto_optimize_shard, FrontierCheckpoint,
+    FrontierEntry, ParetoConfig, ParetoResult, PlanSelector,
+};
 use crate::search::{default_threads, optimize_network, search_hierarchy, SearchOpts};
 use crate::util::{fmt_sig, Args};
 
@@ -39,6 +43,16 @@ COMMANDS:
   co-opt-merge    <ckpt.json>... [--out PATH] [--json]
                   merge shard checkpoints (any order): winner is
                   bit-identical to the single-process co-opt run
+  pareto          --net <name> [--batch N] [--head N] [--space paper|full]
+                  [--eps E] [--points N] [--latency-budget CYCLES]
+                  [co-opt's space/search/constraint knobs]
+                  [--shard I/N --checkpoint PATH] [--json]
+                  exact (energy, cycles) frontier of the design space
+                  instead of a single winner; --latency-budget also picks
+                  the min-energy point within the cycle budget
+  pareto-merge    <ckpt.json>... [--out PATH] [--json]
+                  merge frontier checkpoints (any order): frontier is
+                  bit-identical to the single-process pareto run
   sweep-dataflow  [--layer conv3|4c3r] [--batch N] [--full]   (Fig 8)
   utilization     [--layer conv3|4c3r] [--batch N]            (Fig 9)
   sweep-blocking  [--layer conv3|4c3r] [--batch N] [--full]   (Fig 10)
@@ -54,11 +68,13 @@ COMMANDS:
                   serve a mixed trace through the PJRT artifacts
   serve           [--requests N] [--threads N] [--artifacts DIR]
                   [--batch-requests B] [--synthetic] [--remap]
-                  [--window W] [--drift D]
+                  [--window W] [--drift D] [--latency-budget CYCLES]
                   batched serving loop; --remap re-optimizes mappings
                   online when the window mix drifts past D (plans swap
-                  between batches); --synthetic runs the deterministic
-                  stand-in executor (no artifacts needed)
+                  between batches); --latency-budget re-selects the
+                  min-energy plan within the budget from a live
+                  design-space frontier; --synthetic runs the
+                  deterministic stand-in executor (no artifacts needed)
   report          run every experiment at fast effort
 
 Common options: --threads N (default: cores-1), --csv (CSV output), --full";
@@ -143,27 +159,7 @@ pub fn run(args: Args) -> Result<()> {
             if args.get("head").is_some() {
                 net = net.head(args.get_usize("head", net.layers.len()));
             }
-            let rows = args.get_u64("rows", 16) as u32;
-            let cols = args.get_u64("cols", 16) as u32;
-            let mut space = DesignSpace::paper_default(ArrayShape { rows, cols });
-            if args.get("budget").is_some() {
-                space.max_onchip_bytes = Some(args.get_u64("budget", u64::MAX));
-            }
-            if let Some(list) = args.get("rf1") {
-                space.rf1_sizes = parse_u64_list(list)?;
-            }
-            if let Some(list) = args.get("rf2-ratio") {
-                space.rf2_ratios = parse_u64_list(list)?;
-            }
-            if let Some(list) = args.get("gbuf") {
-                space.gbuf_sizes = parse_u64_list(list)?;
-            }
-            space.ratio_min = args.get_f64("ratio-min", space.ratio_min);
-            space.ratio_max = args.get_f64("ratio-max", space.ratio_max);
-            let mut opts = effort_opts(effort);
-            opts.max_blockings = args.get_usize("cap", opts.max_blockings);
-            opts.max_divisors = args.get_usize("divisors", opts.max_divisors);
-            opts.max_order_combos = args.get_usize("orders", opts.max_order_combos);
+            let (space, opts) = space_and_search_from_args(&args, effort)?;
             let mut cfg = NetOptConfig::new(opts, threads);
             cfg.clock_ghz = args.get_f64("clock-ghz", 1.0);
             if args.get("min-tops").is_some() {
@@ -201,27 +197,9 @@ pub fn run(args: Args) -> Result<()> {
             }
         }
         "co-opt-merge" => {
-            let mut paths: Vec<String> = args.positional[1..].to_vec();
-            let mut want_json = args.has_flag("json");
-            // `--json` takes no value, but the greedy option parser binds
-            // `--json a.json b.json` as json="a.json" (see util::args) —
-            // recover the swallowed path instead of silently dropping it.
-            if let Some(stolen) = args.get("json") {
-                want_json = true;
-                paths.insert(0, stolen.to_string());
-            }
-            if paths.is_empty() {
-                bail!("usage: co-opt-merge <ckpt.json>... [--out PATH] [--json]");
-            }
-            let mut ckpts = Vec::with_capacity(paths.len());
-            for p in &paths {
-                let text = std::fs::read_to_string(p)
-                    .with_context(|| format!("reading checkpoint {p}"))?;
-                ckpts.push(
-                    ShardCheckpoint::from_json(&text)
-                        .map_err(|e| e.context(format!("parsing checkpoint {p}")))?,
-                );
-            }
+            let (paths, want_json) =
+                merge_paths_from_args(&args, "co-opt-merge <ckpt.json>... [--out PATH] [--json]")?;
+            let ckpts = read_checkpoints(&paths, ShardCheckpoint::from_json)?;
             let merged = merge_all(&ckpts)?;
             if let Some(out) = args.get("out") {
                 std::fs::write(out, merged.to_json())
@@ -230,21 +208,14 @@ pub fn run(args: Args) -> Result<()> {
             if want_json {
                 println!("{}", merged.to_json());
             } else {
-                println!(
-                    "merged {} checkpoints covering shards {:?} of {} ({} @ batch {})",
+                print_merge_banner(
                     paths.len(),
-                    merged.shards,
+                    &merged.shards,
                     merged.nshards,
-                    merged.network,
-                    merged.batch
+                    &merged.network,
+                    merged.batch,
+                    "winner",
                 );
-                if merged.shards.len() < merged.nshards {
-                    println!(
-                        "note: {} of {} shards still missing — winner is provisional",
-                        merged.nshards - merged.shards.len(),
-                        merged.nshards
-                    );
-                }
                 match merged.winner_result() {
                     Some(w) => println!(
                         "winner: {} — {} uJ, {:.2} TOPS/W",
@@ -253,6 +224,114 @@ pub fn run(args: Args) -> Result<()> {
                         w.opt.tops_per_watt()
                     ),
                     None => println!("no feasible point in the covered shards"),
+                }
+                println!("{}", merged.stats);
+            }
+        }
+        "pareto" => {
+            let name = args.get_str("net", "alexnet");
+            let batch = args.get_u64("batch", 4);
+            let Some(mut net) = network(name, batch) else {
+                bail!("unknown network {name} (try: {:?})", crate::nn::network_names());
+            };
+            if args.get("head").is_some() {
+                net = net.head(args.get_usize("head", net.layers.len()));
+            }
+            let (space, opts) = space_and_search_from_args(&args, effort)?;
+            let mut cfg = NetOptConfig::new(opts, threads);
+            cfg.clock_ghz = args.get_f64("clock-ghz", 1.0);
+            if args.get("min-tops").is_some() {
+                cfg.min_tops = Some(args.get_f64("min-tops", 0.0));
+            }
+            let pcfg = ParetoConfig {
+                eps: args.get_f64("eps", 0.0),
+                max_points: args.get("points").map(|_| args.get_usize("points", usize::MAX)),
+            };
+            if let Some(spec) = args.get("shard") {
+                let (index, nshards) = parse_shard_spec(spec)?;
+                let Some(path) = args.get("checkpoint") else {
+                    bail!("--shard needs --checkpoint PATH to write to");
+                };
+                if args.get("eps").is_some()
+                    || args.get("points").is_some()
+                    || args.get("latency-budget").is_some()
+                {
+                    println!(
+                        "note: --eps/--points/--latency-budget are reporting/selection \
+                         knobs — shard checkpoints stay exact; apply them on the merged \
+                         frontier (pareto without --shard, or pareto-merge + selection)"
+                    );
+                }
+                let ckpt = pareto_optimize_shard(&net, &space, &Table3, &cfg, index, nshards);
+                std::fs::write(path, ckpt.to_json())
+                    .with_context(|| format!("writing checkpoint {path}"))?;
+                if args.has_flag("json") {
+                    println!("{}", ckpt.to_json());
+                } else {
+                    println!(
+                        "shard {index}/{nshards}: {} frontier points",
+                        ckpt.frontier.len()
+                    );
+                    println!("{}", ckpt.stats);
+                    println!("wrote {path}");
+                }
+            } else {
+                let res = pareto_optimize(&net, &space, &Table3, &cfg, &pcfg);
+                // Budget selection rides inside the JSON document (so
+                // `--json` stays machine-parseable) and prints as a
+                // trailing line only in human mode.
+                let selected: Option<(f64, Option<FrontierEntry>)> =
+                    args.get("latency-budget").map(|_| {
+                        let budget = args.get_f64("latency-budget", f64::INFINITY);
+                        let sel = PlanSelector::new(res.frontier.clone());
+                        (budget, sel.select(Some(budget)).cloned())
+                    });
+                if args.has_flag("json") {
+                    println!("{}", pareto_json(&net, &res, &cfg, selected.as_ref()));
+                } else {
+                    print_pareto(&net, &res, &cfg);
+                    if let Some((budget, pick)) = &selected {
+                        match pick {
+                            Some(e) => println!(
+                                "selected under budget {budget} cycles: {} — {} uJ, {:.0} cycles",
+                                e.result.arch.describe(),
+                                fmt_sig(e.result.opt.total_energy_pj / 1e6),
+                                e.result.opt.total_cycles
+                            ),
+                            None => println!("no frontier point within {budget} cycles"),
+                        }
+                    }
+                }
+            }
+        }
+        "pareto-merge" => {
+            let (paths, want_json) =
+                merge_paths_from_args(&args, "pareto-merge <ckpt.json>... [--out PATH] [--json]")?;
+            let ckpts = read_checkpoints(&paths, FrontierCheckpoint::from_json)?;
+            let merged = merge_all_frontiers(&ckpts)?;
+            if let Some(out) = args.get("out") {
+                std::fs::write(out, merged.to_json())
+                    .with_context(|| format!("writing merged checkpoint {out}"))?;
+            }
+            if want_json {
+                println!("{}", merged.to_json());
+            } else {
+                print_merge_banner(
+                    paths.len(),
+                    &merged.shards,
+                    merged.nshards,
+                    &merged.network,
+                    merged.batch,
+                    "frontier",
+                );
+                println!("{} frontier points:", merged.frontier.len());
+                for (_, r) in merged.frontier.iter().take(10) {
+                    println!(
+                        "  {:<24} {} uJ  {:.0} cycles",
+                        r.arch.name,
+                        fmt_sig(r.opt.total_energy_pj / 1e6),
+                        r.opt.total_cycles
+                    );
                 }
                 println!("{}", merged.stats);
             }
@@ -287,13 +366,21 @@ pub fn run(args: Args) -> Result<()> {
             let batch = args.get_usize("batch-requests", 64);
             let trace = serve::mixed_trace(n, 42);
             let cfg = serve::ServeConfig::new(threads).with_batch(batch);
-            let mut remapper = if args.has_flag("remap") {
+            let budget = args.get("latency-budget").map(|_| {
+                args.get_f64("latency-budget", f64::INFINITY)
+            });
+            let mut remapper = if args.has_flag("remap") || budget.is_some() {
                 let window = args.get_usize("window", 64);
                 let drift = args.get_f64("drift", 0.25);
-                Some(Remapper::new(
-                    RemapPolicy::new(window, drift),
-                    Remapper::default_candidates(),
-                ))
+                let mut policy = RemapPolicy::new(window, drift);
+                if let Some(b) = budget {
+                    policy = policy.with_latency_budget(b);
+                    // a budget implies frontier re-selection from a live
+                    // design space instead of the fixed candidate list
+                    Some(Remapper::with_space(policy, Remapper::default_space()))
+                } else {
+                    Some(Remapper::new(policy, Remapper::default_candidates()))
+                }
             } else {
                 None
             };
@@ -319,13 +406,25 @@ pub fn run(args: Args) -> Result<()> {
             print_serve_stats(&stats);
             if let Some(r) = &remapper {
                 match r.plan() {
-                    Some(p) => println!(
-                        "active plan (epoch {}): {} for mix {:?} ({} shapes seeded)",
-                        p.epoch,
-                        p.winner.arch.describe(),
-                        p.mix,
-                        r.seeds().len()
-                    ),
+                    Some(p) => {
+                        println!(
+                            "active plan (epoch {}): {} for mix {:?} ({} shapes seeded)",
+                            p.epoch,
+                            p.winner.arch.describe(),
+                            p.mix,
+                            r.seeds().len()
+                        );
+                        if let Some(sel) = r.selector() {
+                            println!(
+                                "selected from a {}-point frontier{}",
+                                sel.len(),
+                                match r.policy().latency_budget {
+                                    Some(b) => format!(" under a {b} cycle budget"),
+                                    None => String::new(),
+                                }
+                            );
+                        }
+                    }
                     None => println!("no feasible plan for the observed mix"),
                 }
             }
@@ -357,6 +456,8 @@ pub fn run(args: Args) -> Result<()> {
             show(&experiments::fig13_scaling(effort, threads));
             println!("\n== Fig 14 (optimizer gains) ==");
             show(&experiments::fig14_optimizer(effort, threads));
+            println!("\n== Pareto frontier (mlp-m, energy/throughput) ==");
+            show(&experiments::pareto_curve(effort, threads));
             println!("\n== Serving-time remapping (drift trace) ==");
             show(&experiments::remap_drift(threads));
         }
@@ -382,6 +483,100 @@ fn print_serve_stats(stats: &serve::ServeStats) {
         stats.batches,
         stats.remaps
     );
+}
+
+/// Parse the design-space and per-layer search knobs shared by
+/// `co-opt`, `co-opt --shard`, and `pareto` — one parser so the three
+/// paths can never drift: `--rows/--cols` pick the PE array,
+/// `--space paper|full` the generator axes, `--budget` the on-chip
+/// capacity cap, `--rf1/--rf2-ratio/--gbuf` the size lists (comma-
+/// separated bytes), `--ratio-min/--ratio-max` the Observation-2
+/// widening, and `--cap/--divisors/--orders` the per-layer search caps.
+fn space_and_search_from_args(
+    args: &Args,
+    effort: Effort,
+) -> Result<(DesignSpace, SearchOpts)> {
+    let rows = args.get_u64("rows", 16) as u32;
+    let cols = args.get_u64("cols", 16) as u32;
+    let array = ArrayShape { rows, cols };
+    let mut space = match args.get_str("space", "paper") {
+        "paper" => DesignSpace::paper_default(array),
+        "full" => DesignSpace::full(array),
+        other => bail!("unknown --space `{other}` (expected paper|full)"),
+    };
+    if args.get("budget").is_some() {
+        space.max_onchip_bytes = Some(args.get_u64("budget", u64::MAX));
+    }
+    if let Some(list) = args.get("rf1") {
+        space.rf1_sizes = parse_u64_list(list)?;
+    }
+    if let Some(list) = args.get("rf2-ratio") {
+        space.rf2_ratios = parse_u64_list(list)?;
+    }
+    if let Some(list) = args.get("gbuf") {
+        space.gbuf_sizes = parse_u64_list(list)?;
+    }
+    space.ratio_min = args.get_f64("ratio-min", space.ratio_min);
+    space.ratio_max = args.get_f64("ratio-max", space.ratio_max);
+    let mut opts = effort_opts(effort);
+    opts.max_blockings = args.get_usize("cap", opts.max_blockings);
+    opts.max_divisors = args.get_usize("divisors", opts.max_divisors);
+    opts.max_order_combos = args.get_usize("orders", opts.max_order_combos);
+    Ok((space, opts))
+}
+
+/// Shared front half of the merge subcommands (`co-opt-merge`,
+/// `pareto-merge`): the positional checkpoint paths and whether JSON
+/// output was requested. `--json` takes no value, but the greedy option
+/// parser binds `--json a.json b.json` as json="a.json" (see
+/// `util::args`) — the swallowed path is recovered instead of silently
+/// dropped. Errors when no paths remain.
+fn merge_paths_from_args(args: &Args, usage: &str) -> Result<(Vec<String>, bool)> {
+    let mut paths: Vec<String> = args.positional[1..].to_vec();
+    let mut want_json = args.has_flag("json");
+    if let Some(stolen) = args.get("json") {
+        want_json = true;
+        paths.insert(0, stolen.to_string());
+    }
+    if paths.is_empty() {
+        bail!("usage: {usage}");
+    }
+    Ok((paths, want_json))
+}
+
+/// Read and parse every checkpoint path with per-path error context —
+/// shared by both merge subcommands over their respective `from_json`.
+fn read_checkpoints<T>(paths: &[String], parse: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    let mut ckpts = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading checkpoint {p}"))?;
+        ckpts.push(parse(&text).map_err(|e| e.context(format!("parsing checkpoint {p}")))?);
+    }
+    Ok(ckpts)
+}
+
+/// The merge coverage banner (+ provisional-result note when shards are
+/// missing) shared by both merge subcommands; `what` names the result
+/// kind ("winner" / "frontier").
+fn print_merge_banner(
+    n: usize,
+    shards: &[usize],
+    nshards: usize,
+    network: &str,
+    batch: u64,
+    what: &str,
+) {
+    println!(
+        "merged {n} checkpoints covering shards {shards:?} of {nshards} ({network} @ batch {batch})"
+    );
+    if shards.len() < nshards {
+        println!(
+            "note: {} of {} shards still missing — {what} is provisional",
+            nshards - shards.len(),
+            nshards
+        );
+    }
 }
 
 /// Comma-separated byte-size list for the design-space knobs
@@ -546,6 +741,103 @@ fn co_opt_json(net: &Network, res: &CoOptResult, cfg: &NetOptConfig) -> String {
     )
 }
 
+/// Human-readable `pareto` report: the frontier table plus stats.
+fn print_pareto(net: &Network, res: &ParetoResult, cfg: &NetOptConfig) {
+    println!(
+        "pareto frontier of {} (batch {}, {} layers), {} points:",
+        net.name,
+        net.batch,
+        net.layers.len(),
+        res.frontier.len()
+    );
+    println!(
+        "  {:<24} {:>12} {:>14} {:>10} {:>8}",
+        "arch", "energy (uJ)", "cycles", "TOPS", "TOPS/W"
+    );
+    for e in &res.frontier {
+        let o = &e.result.opt;
+        println!(
+            "  {:<24} {:>12} {:>14.0} {:>10.3} {:>8.2}",
+            e.result.arch.name,
+            fmt_sig(o.total_energy_pj / 1e6),
+            o.total_cycles,
+            o.tops(cfg.clock_ghz),
+            o.tops_per_watt()
+        );
+    }
+    if res.frontier.is_empty() {
+        println!("  (no feasible point — see stats below)");
+    }
+    println!("\n{}", res.stats);
+}
+
+/// Machine-readable `pareto` report (the `--json` flag): every frontier
+/// point, the optional `--latency-budget` selection, and the netopt
+/// counters — one pure JSON document on stdout.
+fn pareto_json(
+    net: &Network,
+    res: &ParetoResult,
+    cfg: &NetOptConfig,
+    selected: Option<&(f64, Option<FrontierEntry>)>,
+) -> String {
+    let mut points = Vec::with_capacity(res.frontier.len());
+    for e in &res.frontier {
+        let o = &e.result.opt;
+        points.push(format!(
+            "{{\"index\":{},\"arch\":{},\"energy_pj\":{},\"cycles\":{},\
+             \"tops\":{},\"tops_per_watt\":{}}}",
+            e.index,
+            json_str(&e.result.arch.name),
+            json_num(o.total_energy_pj),
+            json_num(o.total_cycles),
+            json_num(o.tops(cfg.clock_ghz)),
+            json_num(o.tops_per_watt())
+        ));
+    }
+    let (budget_json, selected_json) = match selected {
+        None => ("null".to_string(), "null".to_string()),
+        Some((budget, pick)) => (
+            json_num(*budget),
+            match pick {
+                None => "null".to_string(),
+                Some(e) => format!(
+                    "{{\"index\":{},\"arch\":{},\"energy_pj\":{},\"cycles\":{}}}",
+                    e.index,
+                    json_str(&e.result.arch.name),
+                    json_num(e.result.opt.total_energy_pj),
+                    json_num(e.result.opt.total_cycles)
+                ),
+            },
+        ),
+    };
+    let s = &res.stats;
+    format!(
+        "{{\"network\":{},\"batch\":{},\"layers\":{},\"clock_ghz\":{},\
+         \"frontier\":[{}],\
+         \"latency_budget\":{},\"selected\":{},\
+         \"stats\":{{\"generated\":{},\"budget_filtered\":{},\"ratio_filtered\":{},\
+         \"candidates\":{},\"pruned\":{},\"evaluated_full\":{},\"infeasible\":{},\
+         \"throughput_filtered\":{},\"layer_searches\":{},\"layer_reruns\":{}}}}}",
+        json_str(&net.name),
+        net.batch,
+        net.layers.len(),
+        cfg.clock_ghz,
+        points.join(","),
+        budget_json,
+        selected_json,
+        s.generated,
+        s.budget_filtered,
+        s.ratio_filtered,
+        s.candidates,
+        s.pruned,
+        s.evaluated_full,
+        s.infeasible,
+        s.throughput_filtered,
+        s.layer_searches,
+        s.layer_reruns
+    )
+}
+
 fn print_schedules() {
     use crate::halide::{diannao_tree, eyeriss_rs, nvdla_like, print_ir, shidiannao_os, tpu_ck};
     let conv3 = experiments::alexnet_conv3(4);
@@ -558,5 +850,80 @@ fn print_schedules() {
     ] {
         println!("== {} ==", s.name);
         println!("{}", print_ir(&s));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArrayBus;
+
+    fn parse(raw: &[&str]) -> Args {
+        Args::parse(raw.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn space_and_search_defaults_are_the_paper_grid() {
+        let (space, opts) = space_and_search_from_args(&parse(&[]), Effort::Fast).unwrap();
+        let paper = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+        assert_eq!(space.rf1_sizes, paper.rf1_sizes);
+        assert_eq!(space.rf2_ratios, paper.rf2_ratios);
+        assert_eq!(space.gbuf_sizes, paper.gbuf_sizes);
+        assert_eq!(space.arrays, paper.arrays);
+        assert_eq!(space.buses, paper.buses);
+        assert_eq!(space.ratio_min, paper.ratio_min);
+        assert_eq!(space.ratio_max, paper.ratio_max);
+        assert_eq!(space.max_onchip_bytes, None);
+        assert_eq!(opts.max_blockings, effort_opts(Effort::Fast).max_blockings);
+    }
+
+    #[test]
+    fn space_and_search_parses_every_shared_knob() {
+        let args = parse(&[
+            "--rows=8",
+            "--cols=8",
+            "--space=full",
+            "--budget=200000",
+            "--rf1=16,64,512",
+            "--rf2-ratio=8",
+            "--gbuf=65536",
+            "--ratio-min=0.25",
+            "--ratio-max=64",
+            "--cap=123",
+            "--divisors=4",
+            "--orders=9",
+        ]);
+        let (space, opts) = space_and_search_from_args(&args, Effort::Fast).unwrap();
+        assert_eq!(space.rf1_sizes, vec![16, 64, 512]);
+        assert_eq!(space.rf2_ratios, vec![8]);
+        assert_eq!(space.gbuf_sizes, vec![65536]);
+        assert_eq!(space.max_onchip_bytes, Some(200000));
+        assert_eq!(space.ratio_min, 0.25);
+        assert_eq!(space.ratio_max, 64.0);
+        // --space full widens the array and bus axes, honoring --rows/cols
+        assert!(space.arrays.contains(&ArrayShape { rows: 8, cols: 8 }));
+        assert!(space.arrays.len() > 1);
+        assert_eq!(space.buses, vec![ArrayBus::Systolic, ArrayBus::Broadcast]);
+        assert_eq!(opts.max_blockings, 123);
+        assert_eq!(opts.max_divisors, 4);
+        assert_eq!(opts.max_order_combos, 9);
+    }
+
+    #[test]
+    fn space_and_search_rejects_bad_input() {
+        let bad_space = parse(&["--space=bogus"]);
+        assert!(space_and_search_from_args(&bad_space, Effort::Fast).is_err());
+        let bad_list = parse(&["--rf1=16,notanumber"]);
+        assert!(space_and_search_from_args(&bad_list, Effort::Fast).is_err());
+    }
+
+    #[test]
+    fn shard_spec_parses_and_rejects() {
+        assert_eq!(parse_shard_spec("0/4").unwrap(), (0, 4));
+        assert_eq!(parse_shard_spec("3/4").unwrap(), (3, 4));
+        assert!(parse_shard_spec("4/4").is_err());
+        assert!(parse_shard_spec("x/4").is_err());
+        assert!(parse_shard_spec("1").is_err());
+        assert!(parse_shard_spec("1/0").is_err());
     }
 }

@@ -17,6 +17,7 @@ use crate::netopt::{
     co_optimize, co_optimize_arches, co_optimize_sharded, CoOptResult, DesignSpace, NetOptConfig,
 };
 use crate::nn::{network, Network};
+use crate::pareto::{pareto_optimize, ParetoConfig};
 use crate::search::{
     optimize_layer, optimize_network, sweep_blockings, HierarchyResult, SearchOpts,
 };
@@ -569,6 +570,42 @@ pub fn netopt_pruning(effort: Effort, threads: usize) -> Table {
     t.row(vec!["winner".to_string(), winner(&bb), winner(&ex)]);
     let same_cell = format!("{same}");
     t.row(vec!["same winner".to_string(), same_cell, String::new()]);
+    t
+}
+
+/// §6.3 frontier companion (CLI `report` and `pareto`, `perf_pareto`
+/// bench): instead of collapsing the default design space to one
+/// `min_tops`-constrained winner, report the whole energy/throughput
+/// trade curve — every dominance-surviving `(energy, cycles)` point of
+/// the sweep, ascending in energy. The paper's iso-throughput
+/// comparison then reads off the min-energy point at each latency
+/// budget (`pareto::PlanSelector`), which matches the scalar
+/// co-optimizer's constrained winner bit for bit (gated by
+/// `benches/perf_pareto.rs`).
+pub fn pareto_curve(effort: Effort, threads: usize) -> Table {
+    let mut opts = effort.opts();
+    opts.max_order_combos = 9;
+    let net = reduce_for_effort(network("mlp-m", 32).unwrap(), effort);
+    let space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+    let cfg = NetOptConfig::new(opts, threads);
+    let res = pareto_optimize(&net, &space, &Table3, &cfg, &ParetoConfig::default());
+    let mut t = Table::new(vec![
+        "arch",
+        "energy (uJ)",
+        "Mcycles",
+        "TOPS @1GHz",
+        "TOPS/W",
+    ]);
+    for e in &res.frontier {
+        let o = &e.result.opt;
+        t.row(vec![
+            e.result.arch.name.clone(),
+            fmt_sig(o.total_energy_pj / 1e6),
+            format!("{:.3}", o.total_cycles / 1e6),
+            format!("{:.3}", o.tops(1.0)),
+            format!("{:.2}", o.tops_per_watt()),
+        ]);
+    }
     t
 }
 

@@ -44,10 +44,13 @@ use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use crate::arch::{eyeriss_like, no_local_reuse, small_rf, Arch};
+use crate::arch::{eyeriss_like, no_local_reuse, small_rf, Arch, ArrayShape};
 use crate::energy::Table3;
-use crate::netopt::{co_optimize_arches_seeded, NetOptConfig, SeedTable};
+use crate::netopt::{co_optimize_arches_seeded, DesignSpace, NetOptConfig, SeedTable};
 use crate::nn::{Layer, Network};
+use crate::pareto::{
+    pareto_optimize_arches_seeded, pareto_optimize_seeded, ParetoConfig, PlanSelector,
+};
 use crate::search::{HierarchyResult, LayerOpt, SearchOpts};
 
 /// When to re-optimize: window size and drift threshold, plus the
@@ -66,6 +69,13 @@ pub struct RemapPolicy {
     /// the serving worker count — determinism across serving thread
     /// counts never depends on this).
     pub threads: usize,
+    /// Latency budget for plan selection, in weighted cycles over one
+    /// full mix window ("cycles to serve a window of requests"). When
+    /// set, each remap computes the candidates' energy/latency frontier
+    /// and a [`PlanSelector`] picks the min-energy point within the
+    /// budget, instead of the unconstrained scalar argmin. A remap whose
+    /// frontier has no point inside the budget keeps the current plan.
+    pub latency_budget: Option<f64>,
 }
 
 impl RemapPolicy {
@@ -78,7 +88,14 @@ impl RemapPolicy {
             drift,
             opts,
             threads: 1,
+            latency_budget: None,
         }
+    }
+
+    /// Same policy with a latency budget (weighted cycles per window).
+    pub fn with_latency_budget(mut self, cycles: f64) -> RemapPolicy {
+        self.latency_budget = Some(cycles);
+        self
     }
 }
 
@@ -274,15 +291,35 @@ impl MappingPlan {
     }
 }
 
+/// Where remap candidates come from.
+enum PlanSource {
+    /// A fixed explicit architecture list (the original behavior).
+    Fixed(Vec<Arch>),
+    /// A live [`DesignSpace`]: every remap re-enumerates the space and
+    /// re-selects from its Pareto frontier, so serving is never pinned
+    /// to a hand-picked candidate list.
+    Space(DesignSpace),
+}
+
 /// The serving-time remapper: tracks the request mix, detects drift,
 /// re-optimizes warm-started from the accumulated [`SeedTable`], and
-/// publishes new [`MappingPlan`]s through the plan-swap channel.
+/// publishes new [`MappingPlan`]s through the plan-swap channel. With a
+/// latency budget (or a live-space source) the re-optimization computes
+/// the full energy/latency frontier and a [`PlanSelector`] picks the
+/// min-energy point inside the budget.
 pub struct Remapper {
     policy: RemapPolicy,
-    arches: Vec<Arch>,
+    source: PlanSource,
+    /// The frontier the active plan was selected from (`None` until a
+    /// frontier-mode remap ran; the fixed-list scalar path leaves it
+    /// empty).
+    selector: Option<PlanSelector>,
     window: MixWindow,
-    /// The window mix at the last re-optimization (`None` until the
-    /// first plan exists — any traffic then triggers the initial plan).
+    /// The window mix at the last re-optimization *attempt* (`None`
+    /// until the first attempt — any traffic then triggers one).
+    /// Failed attempts record it too: re-optimization is a pure
+    /// function of the mix, so retrying before the mix drifts again
+    /// could only repeat the failure.
     last_mix: Option<Vec<(String, f64)>>,
     seeds: SeedTable,
     plan: Option<Arc<MappingPlan>>,
@@ -299,11 +336,24 @@ impl Remapper {
     /// A remapper over an explicit candidate architecture list.
     pub fn new(policy: RemapPolicy, arches: Vec<Arch>) -> Remapper {
         assert!(!arches.is_empty(), "need at least one candidate arch");
+        Self::with_source(policy, PlanSource::Fixed(arches))
+    }
+
+    /// A remapper whose candidates are a live [`DesignSpace`]: every
+    /// remap re-enumerates the space and selects from its frontier
+    /// (under [`RemapPolicy::latency_budget`] when set). Keep serving
+    /// spaces small — the enumeration runs on the remap path.
+    pub fn with_space(policy: RemapPolicy, space: DesignSpace) -> Remapper {
+        Self::with_source(policy, PlanSource::Space(space))
+    }
+
+    fn with_source(policy: RemapPolicy, source: PlanSource) -> Remapper {
         let window = MixWindow::new(policy.window);
         let (tx, rx) = channel();
         Remapper {
             policy,
-            arches,
+            source,
+            selector: None,
             window,
             last_mix: None,
             seeds: SeedTable::new(),
@@ -323,13 +373,27 @@ impl Remapper {
         vec![eyeriss_like(), no_local_reuse(), small_rf()]
     }
 
+    /// A compact live design space for serving-time re-selection: a
+    /// trimmed paper grid (two RF sizes, one two-level step, two buffer
+    /// sizes on 16×16 PEs, ratio rule widened so the single-level
+    /// points survive) — 8 raw points, small enough for the remap path.
+    pub fn default_space() -> DesignSpace {
+        let mut s = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+        s.rf1_sizes = vec![16, 64];
+        s.rf2_ratios = vec![8];
+        s.gbuf_sizes = vec![64 << 10, 128 << 10];
+        s.ratio_min = 0.25;
+        s.ratio_max = 64.0;
+        s
+    }
+
     /// Record one served request into the sliding window.
     pub fn observe(&mut self, artifact: &str) {
         self.window.push(artifact);
     }
 
-    /// Current drift of the window mix from the active plan's mix
-    /// (`1.0` when no plan exists yet).
+    /// Current drift of the window mix from the last re-optimization
+    /// attempt's mix (`1.0` before the first attempt).
     pub fn drift(&self) -> f64 {
         match &self.last_mix {
             None => 1.0,
@@ -360,7 +424,8 @@ impl Remapper {
     /// warm-started from the accumulated seeds, and publish the new plan
     /// through the plan-swap channel. Returns `None` (keeping the old
     /// plan active) when no candidate architecture maps every layer of
-    /// the mix.
+    /// the mix — or, under a latency budget, when no frontier point
+    /// fits the budget.
     pub fn remap_now(&mut self) -> Option<Arc<MappingPlan>> {
         let counts = self.window.counts();
         if counts.is_empty() {
@@ -369,10 +434,54 @@ impl Remapper {
         let (net, weights, spans) = mix_network(&counts);
         let cfg = NetOptConfig::new(self.policy.opts.clone(), self.policy.threads)
             .with_layer_weights(weights);
-        let res = co_optimize_arches_seeded(&net, &self.arches, &Table3, &cfg, &self.seeds);
-        // carry everything this run learned into the next warm start
-        self.seeds.merge(&res.seeds);
-        let winner = res.best()?.clone();
+        // The frontier path serves live spaces and latency budgets; the
+        // fixed-list unconstrained path keeps the original scalar
+        // argmin, bit for bit.
+        let frontier_mode =
+            self.policy.latency_budget.is_some() || matches!(self.source, PlanSource::Space(_));
+        let winner = if frontier_mode {
+            let pcfg = ParetoConfig::default();
+            let res = match &self.source {
+                PlanSource::Fixed(arches) => pareto_optimize_arches_seeded(
+                    &net,
+                    arches,
+                    &Table3,
+                    &cfg,
+                    &pcfg,
+                    &self.seeds,
+                ),
+                PlanSource::Space(space) => {
+                    pareto_optimize_seeded(&net, space, &Table3, &cfg, &pcfg, &self.seeds)
+                }
+            };
+            // carry everything this run learned into the next warm start
+            self.seeds.merge(&res.seeds);
+            let sel = PlanSelector::new(res.frontier);
+            let chosen = sel
+                .select(self.policy.latency_budget)
+                .map(|e| e.result.clone());
+            match chosen {
+                Some(w) => {
+                    // `selector` documents the frontier the *active*
+                    // plan was selected from — only replace it when a
+                    // plan is actually installed.
+                    self.selector = Some(sel);
+                    w
+                }
+                None => return self.record_failed_attempt(),
+            }
+        } else {
+            let PlanSource::Fixed(arches) = &self.source else {
+                unreachable!("non-frontier mode implies a fixed list")
+            };
+            let res = co_optimize_arches_seeded(&net, arches, &Table3, &cfg, &self.seeds);
+            // carry everything this run learned into the next warm start
+            self.seeds.merge(&res.seeds);
+            match res.best() {
+                Some(w) => w.clone(),
+                None => return self.record_failed_attempt(),
+            }
+        };
         let plan = Arc::new(MappingPlan {
             epoch: self.epoch,
             mix: counts,
@@ -386,6 +495,18 @@ impl Remapper {
         // receiver lives in self, so the channel can never be closed
         self.tx.send(plan.clone()).expect("plan-swap channel");
         Some(plan)
+    }
+
+    /// A re-optimization failed to produce an installable plan (no
+    /// feasible candidate, or no frontier point within the budget).
+    /// Re-optimization is a pure function of the window mix, so an
+    /// identical mix can never succeed later — record the attempted mix
+    /// so [`maybe_remap`](Self::maybe_remap) only retries after the mix
+    /// actually drifts again, instead of re-running the whole search at
+    /// every batch boundary on the serving path.
+    fn record_failed_attempt(&mut self) -> Option<Arc<MappingPlan>> {
+        self.last_mix = Some(self.window.mix());
+        None
     }
 
     /// Drain one pending plan from the plan-swap channel (the serving
@@ -404,9 +525,20 @@ impl Remapper {
         &self.seeds
     }
 
-    /// The candidate architecture list.
-    pub fn candidates(&self) -> &[Arch] {
-        &self.arches
+    /// The candidate architecture list (`None` for a live-space source,
+    /// whose candidates are re-enumerated at every remap).
+    pub fn candidates(&self) -> Option<&[Arch]> {
+        match &self.source {
+            PlanSource::Fixed(arches) => Some(arches),
+            PlanSource::Space(_) => None,
+        }
+    }
+
+    /// The frontier the active plan was selected from (`None` before the
+    /// first frontier-mode remap, and always for the fixed-list scalar
+    /// path).
+    pub fn selector(&self) -> Option<&PlanSelector> {
+        self.selector.as_ref()
     }
 
     /// The policy in force.

@@ -63,6 +63,34 @@ use crate::xmodel::{EvalError, ModelResult, MAX_LEVELS};
 /// pruned (see the module docs' pruning contract).
 pub const PRUNE_SLACK: f64 = 1e-9;
 
+/// Admissible lower bound on any mapping's **cycles** for `shape` on
+/// `arch` — the second coordinate of the vector bound the Pareto
+/// co-optimizer (`crate::pareto`) prunes against, complementing the
+/// energy floor (`EvalCtx::floor_pj`):
+///
+/// - *compute bound*: the roll-up computes
+///   `macs / (array PEs × utilization)` with `utilization <= 1`, so
+///   `macs / array PEs` never exceeds it (a zero-utilization candidate
+///   reports infinite cycles, trivially above any floor);
+/// - *compulsory-DRAM bound*: weights and outputs must each cross the
+///   top (DRAM) boundary at least once in full regardless of blocking,
+///   order or multicast (the same argument as the energy floor; the
+///   input floor is again deliberately omitted because strided halos can
+///   skip input elements), and the roll-up charges that traffic at
+///   `word_bytes / dram_bw_bytes_per_cycle` per element.
+///
+/// [`model_result`] takes the max of the same two terms over the
+/// *achieved* utilization and traffic, both no better than the floor's,
+/// so in real arithmetic this never exceeds the final cycles; callers
+/// compare with the relative [`PRUNE_SLACK`] to absorb f64 rounding.
+pub fn cycle_floor(shape: &Shape, arch: &Arch) -> f64 {
+    let compute = shape.macs() as f64 / arch.array.pes() as f64;
+    let compulsory =
+        (shape.tensor_elems(Tensor::Weight) + shape.tensor_elems(Tensor::Output)) as f64;
+    let dram = compulsory * arch.word_bytes as f64 / arch.dram_bw_bytes_per_cycle;
+    compute.max(dram)
+}
+
 /// How a search treats the incumbent bound.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum PruneMode {
@@ -98,6 +126,9 @@ pub struct EvalCtx {
     /// Compulsory top-level energy of the tensors *after* index `k` in
     /// canonical accumulation order (I=0, W=1, O=2).
     pub floor_after: [f64; 3],
+    /// Cycles half of the layer's vector lower bound ([`cycle_floor`]):
+    /// no mapping of this `(shape, arch)` pair can finish faster.
+    pub cycle_floor: f64,
 }
 
 /// Outcome of a bounded stage-3 evaluation.
@@ -156,6 +187,7 @@ impl<'a> Engine<'a> {
             mac_energy,
             floor_pj: mac_energy + w_floor + o_floor,
             floor_after: [w_floor + o_floor, o_floor, 0.0],
+            cycle_floor: cycle_floor(shape, self.arch),
         }
     }
 

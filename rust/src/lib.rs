@@ -28,6 +28,11 @@
 //!   `C|K`, 4–16 size-ratio rule): architecture design-space generation
 //!   and a cross-architecture branch-and-bound sharing one incumbent
 //!   across the whole memory-hierarchy sweep;
+//! - [`pareto`] — multi-objective frontier co-optimization: a dominance
+//!   archive in `(energy, cycles)` with vector lower bounds, exact
+//!   dominance-pruned frontiers over the same design spaces,
+//!   shard-mergeable frontier checkpoints, and budget-aware plan
+//!   selection for serving;
 //! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
 //!   artifacts (the request-path compute; Python is build-time only);
 //! - [`coordinator`] — CLI, sweep orchestration, reports.
@@ -44,6 +49,7 @@ pub mod halide;
 pub mod loopnest;
 pub mod netopt;
 pub mod nn;
+pub mod pareto;
 pub mod runtime;
 pub mod search;
 pub mod sim;

@@ -65,9 +65,24 @@
 //!
 //! `search::optimize_network` and `search::search_hierarchy` are thin
 //! compatibility shims over [`evaluate_network`] and [`co_optimize`].
+//!
+//! ## Vector bounds (Pareto mode)
+//!
+//! The multi-objective frontier subsystem (`crate::pareto`) runs on the
+//! same point evaluator through the [`FrontierGate`] hook: instead of the
+//! scalar incumbent, a partially evaluated point is abandoned when its
+//! admissible `(energy, cycles)` lower-bound vector — the spent prefix
+//! plus the compulsory energy floors and
+//! [`cycle_floor`](crate::engine::cycle_floor)s of the remaining layers —
+//! is strictly dominated by an already-completed point in the shared
+//! dominance archive. Layer searches keep the cross-architecture seeds
+//! as rerun-corrected hints but get **no scalar energy bound** (a
+//! high-energy point may still be frontier-optimal in cycles), so every
+//! surviving point's totals are bit-identical to the exhaustive
+//! evaluation and the exact 2-D frontier is recovered.
 
 mod seeds;
-mod shard;
+pub(crate) mod shard;
 mod space;
 mod stats;
 
@@ -191,6 +206,39 @@ impl CoOptResult {
     }
 }
 
+/// Network-level bound consulted between layers of a point evaluation —
+/// the generalization of the scalar [`Incumbent`] that lets the Pareto
+/// subsystem (`crate::pareto`) plug its dominance archive into
+/// [`run_points_gated`]'s machinery. One value is shared by every worker
+/// chunk of a run, hence the `Sync` bound.
+pub(crate) trait FrontierGate: Sync {
+    /// Is the admissible `(energy, cycles)` lower-bound vector of a
+    /// partially evaluated point already strictly dominated (beyond the
+    /// pruning slack, in both coordinates) by an archived completed
+    /// point? `true` abandons the point: its final totals can only be
+    /// componentwise worse than the bound, so it can neither join the
+    /// frontier nor displace a tie.
+    fn dominated(&self, energy_lb_pj: f64, cycles_lb: f64) -> bool;
+
+    /// A fully mapped, throughput-passing point completed with these
+    /// totals. `index` is the global candidate index — the archive's
+    /// deterministic tie-break key.
+    fn observe(&self, index: usize, energy_pj: f64, cycles: f64);
+}
+
+/// How one run treats the network-level bound.
+enum NetMode<'a> {
+    /// No network-level pruning (exhaustive ranking, single-architecture
+    /// evaluation).
+    Off,
+    /// Scalar energy branch-and-bound against the shared incumbent.
+    Scalar(&'a Incumbent),
+    /// Vector `(energy, cycles)` dominance pruning against a shared
+    /// frontier archive. Layer searches still use the cross-architecture
+    /// seeds as rerun-corrected hints, but no scalar energy bound.
+    Frontier(&'a dyn FrontierGate),
+}
+
 /// One layer of the shared network profile.
 struct ProfLayer {
     shape: Shape,
@@ -273,6 +321,22 @@ impl NetProfile {
         }
         (per, suffix)
     }
+
+    /// The cycles half of the Pareto mode's vector bound, mirroring
+    /// [`floors`](Self::floors)' suffix: `suffix[i]` is the weighted sum
+    /// of the admissible per-layer cycle floors
+    /// ([`crate::engine::cycle_floor`] — MACs at full-array utilization
+    /// vs compulsory DRAM traffic at full bandwidth, whichever binds)
+    /// over layers `i..`; `suffix[len]` = 0.
+    fn cycle_floors(&self, arch: &Arch) -> Vec<f64> {
+        let n = self.layers.len();
+        let mut suffix = vec![0.0; n + 1];
+        for i in (0..n).rev() {
+            let floor = crate::engine::cycle_floor(&self.layers[i].shape, arch);
+            suffix[i] = self.layers[i].weight * floor + suffix[i + 1];
+        }
+        suffix
+    }
 }
 
 /// How one architecture point ended.
@@ -303,20 +367,25 @@ struct NetRun<'a> {
     opts: &'a SearchOpts,
     /// Threads handed to each per-layer search.
     threads: usize,
-    /// Network-level branch-and-bound enabled?
-    net_bnb: bool,
+    /// Network-level bound mode (off / scalar incumbent / frontier).
+    mode: NetMode<'a>,
     min_tops: Option<f64>,
     clock_ghz: f64,
-    incumbent: &'a Incumbent,
-    /// Best-known per-layer-shape energies (from incumbent-setting
+    /// Best-known per-layer-shape energies (from completed feasible
     /// points), used to seed layer searches on other architectures.
     seeds: &'a Mutex<HashMap<LayerKey, f64>>,
 }
 
 impl NetRun<'_> {
-    fn evaluate_point(&self, arch: &Arch, cache: &mut DivisorCache) -> PointReport {
+    fn evaluate_point(&self, idx: usize, arch: &Arch, cache: &mut DivisorCache) -> PointReport {
         let (floor_l, suffix) = self.profile.floors(arch, self.cost);
+        // The cycles suffix is only consulted by the vector bound.
+        let cycle_suffix = match self.mode {
+            NetMode::Frontier(_) => Some(self.profile.cycle_floors(arch)),
+            _ => None,
+        };
         let layer_bnb = self.opts.prune == PruneMode::BranchAndBound;
+        let use_seeds = layer_bnb && !matches!(self.mode, NetMode::Off);
         let nlayers = self.profile.layers.len();
         let mut shape_results: HashMap<LayerKey, Option<LayerOpt>> = HashMap::new();
         let mut per_layer: Vec<Option<LayerOpt>> = Vec::with_capacity(nlayers);
@@ -330,10 +399,9 @@ impl NetRun<'_> {
         let mut reruns = 0usize;
 
         for (li, pl) in self.profile.layers.iter().enumerate() {
-            let inc = if self.net_bnb {
-                self.incumbent.get()
-            } else {
-                f64::INFINITY
+            let inc = match self.mode {
+                NetMode::Scalar(inc) => inc.get(),
+                _ => f64::INFINITY,
             };
             // Admissible abandon check: even if every remaining layer
             // only paid its compulsory floor, the point cannot beat the
@@ -345,6 +413,19 @@ impl NetRun<'_> {
                     searches,
                     reruns,
                 };
+            }
+            // Vector abandon check: the point's admissible lower-bound
+            // vector — spent prefix plus the remaining layers' energy and
+            // cycle floors — is strictly dominated by a completed point.
+            if let (NetMode::Frontier(gate), Some(cyc)) = (&self.mode, &cycle_suffix) {
+                if gate.dominated(total_e + suffix[li], total_c + cyc[li]) {
+                    return PointReport {
+                        eval: PointEval::Pruned,
+                        engine,
+                        searches,
+                        reruns,
+                    };
+                }
             }
             // Admissible per-occurrence bound for this layer's search:
             // the incumbent minus what is already spent and the floors
@@ -362,7 +443,7 @@ impl NetRun<'_> {
             let entry = match cached {
                 Some(e) => e,
                 None => {
-                    let seed = if self.net_bnb && layer_bnb {
+                    let seed = if use_seeds {
                         let m = self.seeds.lock().expect("netopt seeds lock");
                         m.get(&pl.key).copied().unwrap_or(f64::INFINITY)
                     } else {
@@ -460,8 +541,14 @@ impl NetRun<'_> {
             None => true,
         };
         let feasible = opt.unmapped == 0 && meets_tops;
-        if self.net_bnb && feasible {
-            self.incumbent.observe(opt.total_energy_pj);
+        if feasible && !matches!(self.mode, NetMode::Off) {
+            match &self.mode {
+                NetMode::Scalar(inc) => inc.observe(opt.total_energy_pj),
+                NetMode::Frontier(gate) => {
+                    gate.observe(idx, opt.total_energy_pj, opt.total_cycles)
+                }
+                NetMode::Off => unreachable!(),
+            }
             let mut m = self.seeds.lock().expect("netopt seeds lock");
             for (k, v) in &shape_results {
                 if let Some(lo) = v {
@@ -496,7 +583,6 @@ pub fn evaluate_network(
     threads: usize,
 ) -> NetworkOpt {
     let profile = NetProfile::new(net, None);
-    let incumbent = Incumbent::new();
     let seeds: Mutex<HashMap<LayerKey, f64>> = Mutex::new(HashMap::new());
     let run = NetRun {
         profile: &profile,
@@ -504,16 +590,15 @@ pub fn evaluate_network(
         cost,
         opts,
         threads,
-        net_bnb: false,
+        mode: NetMode::Off,
         min_tops: None,
         clock_ghz: 1.0,
-        incumbent: &incumbent,
         seeds: &seeds,
     };
     let mut cache = DivisorCache::new();
-    match run.evaluate_point(arch, &mut cache).eval {
+    match run.evaluate_point(0, arch, &mut cache).eval {
         PointEval::Complete { opt, .. } => opt,
-        PointEval::Pruned => unreachable!("no network bound when net_bnb is off"),
+        PointEval::Pruned => unreachable!("no network bound when the mode is Off"),
     }
 }
 
@@ -569,6 +654,23 @@ pub(crate) fn run_points(
     cfg: &NetOptConfig,
     warm: Option<&SeedTable>,
 ) -> RunOutput {
+    run_points_gated(net, cands, cost, cfg, warm, None)
+}
+
+/// [`run_points`] with an optional [`FrontierGate`]: when `gate` is
+/// given, the network-level bound is the gate's dominance archive
+/// (`cfg.prune` is ignored — the gate *is* the pruning mode) and every
+/// completed feasible point is reported to it; otherwise `cfg.prune`
+/// selects the scalar incumbent or exhaustive evaluation as before. The
+/// `crate::pareto` entry points are the only gated callers.
+pub(crate) fn run_points_gated(
+    net: &Network,
+    cands: Vec<(usize, Arch)>,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    warm: Option<&SeedTable>,
+    gate: Option<&dyn FrontierGate>,
+) -> RunOutput {
     let n = cands.len();
     let mut stats = NetOptStats {
         candidates: n,
@@ -589,16 +691,20 @@ pub(crate) fn run_points(
         .unwrap_or_default();
     let seeds: Mutex<HashMap<LayerKey, f64>> = Mutex::new(seed_map);
     let nchunks = cfg.threads.max(1).min(n);
+    let mode = match gate {
+        Some(g) => NetMode::Frontier(g),
+        None if cfg.prune == PruneMode::BranchAndBound => NetMode::Scalar(&incumbent),
+        None => NetMode::Off,
+    };
     let run = NetRun {
         profile: &profile,
         df: &cfg.df,
         cost,
         opts: &cfg.opts,
         threads: (cfg.threads / nchunks).max(1),
-        net_bnb: cfg.prune == PruneMode::BranchAndBound,
+        mode,
         min_tops: cfg.min_tops,
         clock_ghz: cfg.clock_ghz,
-        incumbent: &incumbent,
         seeds: &seeds,
     };
 
@@ -608,7 +714,7 @@ pub(crate) fn run_points(
         let mut cache = DivisorCache::new();
         chunk
             .iter()
-            .map(|(i, arch)| (*i, run.evaluate_point(arch, &mut cache)))
+            .map(|(i, arch)| (*i, run.evaluate_point(*i, arch, &mut cache)))
             .collect::<Vec<_>>()
     })
     .into_iter()

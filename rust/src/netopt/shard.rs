@@ -362,7 +362,7 @@ fn f64_fixed<const N: usize>(v: &Json) -> Result<[f64; N]> {
         .map_err(|xs: Vec<f64>| anyhow!("expected {N} numbers, got {}", xs.len()))
 }
 
-fn arch_to_json(a: &Arch) -> Json {
+pub(crate) fn arch_to_json(a: &Arch) -> Json {
     let levels = a
         .levels
         .iter()
@@ -408,7 +408,7 @@ fn arch_to_json(a: &Arch) -> Json {
     ])
 }
 
-fn arch_from_json(v: &Json) -> Result<Arch> {
+pub(crate) fn arch_from_json(v: &Json) -> Result<Arch> {
     let mut levels = Vec::new();
     for l in v.field("levels")?.as_arr()? {
         let name = l.field("name")?.as_str()?;
@@ -635,7 +635,7 @@ fn layer_opt_from_json(v: &Json) -> Result<LayerOpt> {
     })
 }
 
-fn opt_to_json(o: &NetworkOpt) -> Json {
+pub(crate) fn opt_to_json(o: &NetworkOpt) -> Json {
     let per_layer = o
         .per_layer
         .iter()
@@ -657,7 +657,7 @@ fn opt_to_json(o: &NetworkOpt) -> Json {
     ])
 }
 
-fn opt_from_json(v: &Json) -> Result<NetworkOpt> {
+pub(crate) fn opt_from_json(v: &Json) -> Result<NetworkOpt> {
     let mut per_layer = Vec::new();
     for l in v.field("per_layer")?.as_arr()? {
         per_layer.push(match l {
@@ -679,7 +679,7 @@ fn opt_from_json(v: &Json) -> Result<NetworkOpt> {
     })
 }
 
-fn stats_to_json(s: &NetOptStats) -> Json {
+pub(crate) fn stats_to_json(s: &NetOptStats) -> Json {
     Json::Obj(vec![
         ("generated".into(), Json::int(s.generated as u64)),
         ("budget_filtered".into(), Json::int(s.budget_filtered as u64)),
@@ -698,7 +698,7 @@ fn stats_to_json(s: &NetOptStats) -> Json {
     ])
 }
 
-fn stats_from_json(v: &Json) -> Result<NetOptStats> {
+pub(crate) fn stats_from_json(v: &Json) -> Result<NetOptStats> {
     Ok(NetOptStats {
         generated: v.field("generated")?.as_usize()?,
         budget_filtered: v.field("budget_filtered")?.as_usize()?,

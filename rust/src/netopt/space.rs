@@ -110,6 +110,26 @@ impl DesignSpace {
         }
     }
 
+    /// The richer default grid behind `co-opt`/`pareto` `--space full`:
+    /// [`paper_default`](Self::paper_default) widened with the
+    /// generator's array-shape and bus-style axes (8×8 / 16×16 / 32×32
+    /// PE arrays — plus the requested array when it is none of those —
+    /// and both interconnect styles). `paper_default` itself is
+    /// untouched, so the paper-parity sweeps stay bit-identical.
+    pub fn full(array: ArrayShape) -> Self {
+        let mut s = Self::paper_default(array);
+        s.arrays = vec![
+            ArrayShape { rows: 8, cols: 8 },
+            ArrayShape { rows: 16, cols: 16 },
+            ArrayShape { rows: 32, cols: 32 },
+        ];
+        if !s.arrays.contains(&array) {
+            s.arrays.push(array);
+        }
+        s.buses = vec![ArrayBus::Systolic, ArrayBus::Broadcast];
+        s
+    }
+
     /// Does `arch` satisfy this space's aggregate inter-level size-ratio
     /// rule (Observation 2, possibly widened)?
     pub fn obs2_ok(&self, arch: &Arch) -> bool {
@@ -346,6 +366,43 @@ mod tests {
     #[should_panic(expected = "out of 0..")]
     fn shard_index_out_of_range_panics() {
         DesignSpace::paper_default(ArrayShape { rows: 8, cols: 8 }).shard(3, 3);
+    }
+
+    #[test]
+    fn full_space_widens_paper_default_without_touching_it() {
+        let array = ArrayShape { rows: 16, cols: 16 };
+        let paper = DesignSpace::paper_default(array);
+        let full = DesignSpace::full(array);
+        // the paper grid is a strict slice of the full grid's axes
+        assert_eq!(full.rf1_sizes, paper.rf1_sizes);
+        assert_eq!(full.gbuf_sizes, paper.gbuf_sizes);
+        assert_eq!(full.arrays.len(), 3);
+        assert!(full.arrays.contains(&array));
+        assert_eq!(full.buses, vec![ArrayBus::Systolic, ArrayBus::Broadcast]);
+        let ep = paper.enumerate();
+        let ef = full.enumerate();
+        assert_eq!(
+            ef.generated,
+            ep.generated * full.arrays.len() * full.buses.len(),
+            "full grid must be the paper grid times the new axes"
+        );
+        assert!(ef.candidates.len() > ep.candidates.len());
+        assert_eq!(
+            ef.generated,
+            ef.budget_filtered + ef.ratio_filtered + ef.candidates.len()
+        );
+        // every generated point validates and names stay unique
+        let names: std::collections::HashSet<&str> =
+            ef.candidates.iter().map(|a| a.name.as_str()).collect();
+        assert_eq!(names.len(), ef.candidates.len(), "names must be unique");
+        for a in &ef.candidates {
+            a.validate().unwrap_or_else(|m| panic!("{}: {m}", a.name));
+        }
+        // an off-grid array is appended, not dropped
+        let odd = ArrayShape { rows: 12, cols: 24 };
+        let widened = DesignSpace::full(odd);
+        assert!(widened.arrays.contains(&odd));
+        assert_eq!(widened.arrays.len(), 4);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Shard-mergeable frontier checkpoints.
+//!
+//! A `pareto --shard I/N` worker persists its slice's **exact** local
+//! frontier — full [`HierarchyResult`] payloads, not just the vectors —
+//! as JSON, and [`merge_frontiers`] unions checkpoints back into the
+//! global frontier. The union-then-refilter is associative and
+//! commutative (the retained set is a pure function of the point set,
+//! see `frontier`), and every per-point payload is evaluated identically
+//! whether a shard or the single process visited it, so the merged
+//! frontier is **bit-for-bit** the single-process
+//! [`pareto_optimize`](super::pareto_optimize) frontier, point for
+//! point. (Shard checkpoints tag points by *raw-grid* index, the single
+//! process by filtered position — filtering preserves order, so the two
+//! keys induce the same ranking and tie-breaks; the payloads are the
+//! contract surface.) The argument that no global-frontier point can be
+//! lost shard-locally:
+//!
+//! - a point is *pruned* inside a shard only when its admissible bound
+//!   vector is strictly dominated by a completed point of that same
+//!   shard — which then strictly dominates the point's final totals, so
+//!   the point was never on the global frontier;
+//! - a completed feasible point missing from its shard's local frontier
+//!   is dominated (or index-tied) by another point of that shard, which
+//!   dominates it globally too.
+//!
+//! Hence every global-frontier point survives in its own shard's
+//! checkpoint, and the union filter removes exactly the shard-local
+//! survivors that a point from another shard dominates.
+//!
+//! ## Checkpoint JSON format (v1)
+//!
+//! ```json
+//! {
+//!   "format": "interstellar-frontier-checkpoint-v1",
+//!   "network": "mlp-m", "batch": 16,
+//!   "nshards": 3, "shards": [0],
+//!   "stats": { ...NetOptStats fields..., "engine": {...} },
+//!   "seeds": [ {"bounds": [7 ints], "stride": 1, "energy_pj": 12.5}, ... ],
+//!   "frontier": [ { "index": 17, "arch": {...}, "opt": {...} }, ... ]
+//! }
+//! ```
+//!
+//! `arch` / `opt` / `stats` / `seeds` reuse the shard-checkpoint v1
+//! codecs (`netopt::shard`), so floats round-trip losslessly and the two
+//! checkpoint families can never drift. Bump [`FRONTIER_FORMAT`] on any
+//! incompatible change.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::netopt::shard::{
+    arch_from_json, arch_to_json, opt_from_json, opt_to_json, stats_from_json, stats_to_json,
+};
+use crate::netopt::{NetOptStats, SeedTable};
+use crate::search::HierarchyResult;
+use crate::util::json::Json;
+
+use super::frontier::{Frontier, FrontierPoint};
+
+/// Frontier-checkpoint schema identifier; readers reject anything else.
+pub const FRONTIER_FORMAT: &str = "interstellar-frontier-checkpoint-v1";
+
+/// Everything one `pareto --shard` worker (or a merge of workers) knows
+/// about its slice of a frontier run: the exact local frontier with full
+/// result payloads, the seeds table, and the stats roll-up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierCheckpoint {
+    /// Network name the run was over (merge identity guard).
+    pub network: String,
+    /// Batch size of the run (merge identity guard).
+    pub batch: u64,
+    /// Total shard count of the partition this checkpoint belongs to.
+    pub nshards: usize,
+    /// Shard indices covered (sorted; the union after merging). Merging
+    /// overlapping shard sets is an error — points would double-count.
+    pub shards: Vec<usize>,
+    /// Stats over the covered shards (space counters included).
+    pub stats: NetOptStats,
+    /// Best-known `(shape, stride) → energy` seeds.
+    pub seeds: SeedTable,
+    /// The covered shards' exact frontier: ascending energy, each entry
+    /// `(global candidate index, full result)`.
+    pub frontier: Vec<(usize, HierarchyResult)>,
+}
+
+impl FrontierCheckpoint {
+    /// Serialize to the v1 frontier-checkpoint JSON (module docs).
+    pub fn to_json(&self) -> String {
+        let frontier = self
+            .frontier
+            .iter()
+            .map(|(idx, r)| {
+                Json::Obj(vec![
+                    ("index".into(), Json::int(*idx as u64)),
+                    ("arch".into(), arch_to_json(&r.arch)),
+                    ("opt".into(), opt_to_json(&r.opt)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("format".into(), Json::str(FRONTIER_FORMAT)),
+            ("network".into(), Json::str(&self.network)),
+            ("batch".into(), Json::int(self.batch)),
+            ("nshards".into(), Json::int(self.nshards as u64)),
+            (
+                "shards".into(),
+                Json::Arr(self.shards.iter().map(|s| Json::int(*s as u64)).collect()),
+            ),
+            ("stats".into(), stats_to_json(&self.stats)),
+            ("seeds".into(), self.seeds.to_json()),
+            ("frontier".into(), Json::Arr(frontier)),
+        ])
+        .to_string()
+    }
+
+    /// Parse a v1 frontier-checkpoint JSON document.
+    pub fn from_json(text: &str) -> Result<FrontierCheckpoint> {
+        let v = Json::parse(text).map_err(|e| e.context("checkpoint is not valid JSON"))?;
+        let format = v.field("format")?.as_str()?;
+        if format != FRONTIER_FORMAT {
+            bail!("unknown checkpoint format `{format}` (want `{FRONTIER_FORMAT}`)");
+        }
+        let mut frontier = Vec::new();
+        for e in v.field("frontier")?.as_arr()? {
+            frontier.push((
+                e.field("index")?.as_usize()?,
+                HierarchyResult {
+                    arch: arch_from_json(e.field("arch")?)?,
+                    opt: opt_from_json(e.field("opt")?)?,
+                },
+            ));
+        }
+        let mut shards = Vec::new();
+        for s in v.field("shards")?.as_arr()? {
+            shards.push(s.as_usize()?);
+        }
+        Ok(FrontierCheckpoint {
+            network: v.field("network")?.as_str()?.to_string(),
+            batch: v.field("batch")?.as_u64()?,
+            nshards: v.field("nshards")?.as_usize()?,
+            shards,
+            stats: stats_from_json(v.field("stats")?)?,
+            seeds: SeedTable::from_json(v.field("seeds")?)?,
+            frontier,
+        })
+    }
+}
+
+/// Associatively combine two frontier checkpoints of the same run: stats
+/// add, seeds min-merge, and the frontier is the dominance-filtered
+/// union (lowest index on equal vectors). Errors on mismatched run
+/// identity or overlapping shard sets.
+pub fn merge_frontiers(
+    a: &FrontierCheckpoint,
+    b: &FrontierCheckpoint,
+) -> Result<FrontierCheckpoint> {
+    if a.network != b.network || a.batch != b.batch {
+        bail!(
+            "checkpoint mismatch: {}@{} vs {}@{}",
+            a.network,
+            a.batch,
+            b.network,
+            b.batch
+        );
+    }
+    if a.nshards != b.nshards {
+        bail!("shard-count mismatch: {} vs {}", a.nshards, b.nshards);
+    }
+    let mut shards: Vec<usize> = a.shards.iter().chain(b.shards.iter()).copied().collect();
+    shards.sort_unstable();
+    if shards.windows(2).any(|w| w[0] == w[1]) {
+        bail!("overlapping shard sets: {:?} and {:?}", a.shards, b.shards);
+    }
+
+    let mut stats = a.stats.clone();
+    stats.merge(&b.stats);
+    let mut seeds = a.seeds.clone();
+    seeds.merge(&b.seeds);
+
+    // Union + re-filter. Disjoint shards mean disjoint candidate
+    // indices, so the by-index map can never collide.
+    let mut by_idx: HashMap<usize, &HierarchyResult> = HashMap::new();
+    let mut archive = Frontier::new();
+    for (idx, r) in a.frontier.iter().chain(b.frontier.iter()) {
+        by_idx.insert(*idx, r);
+        archive.insert(FrontierPoint {
+            index: *idx,
+            energy_pj: r.opt.total_energy_pj,
+            cycles: r.opt.total_cycles,
+        });
+    }
+    let frontier = archive
+        .points()
+        .iter()
+        .map(|p| (p.index, by_idx[&p.index].clone()))
+        .collect();
+
+    Ok(FrontierCheckpoint {
+        network: a.network.clone(),
+        batch: a.batch,
+        nshards: a.nshards,
+        shards,
+        stats,
+        seeds,
+        frontier,
+    })
+}
+
+/// Merge a whole set of frontier checkpoints (any order — the operation
+/// is associative and commutative). Errors on an empty set.
+pub fn merge_all_frontiers(ckpts: &[FrontierCheckpoint]) -> Result<FrontierCheckpoint> {
+    let (first, rest) = ckpts
+        .split_first()
+        .ok_or_else(|| anyhow!("no checkpoints to merge"))?;
+    let mut acc = first.clone();
+    for c in rest {
+        acc = merge_frontiers(&acc, c)?;
+    }
+    Ok(acc)
+}

@@ -1,0 +1,178 @@
+//! The dominance archive: a 2-D `(energy, cycles)` Pareto frontier over
+//! indexed points, with deterministic tie-breaking and the pruning
+//! predicate the branch-and-bound consults.
+//!
+//! ## Semantics
+//!
+//! Point `a` **dominates** `b` when `a.energy <= b.energy`,
+//! `a.cycles <= b.cycles`, and at least one inequality is strict. Two
+//! points with bit-identical vectors are deduplicated by the lower
+//! candidate index (the same deterministic key every other tie in the
+//! codebase breaks on). The retained set is therefore a pure function of
+//! the inserted *set* — insertion order never matters — which is what
+//! makes the shard-merge contract (`checkpoint::merge_frontiers`) hold
+//! bit for bit.
+//!
+//! ## Invariants
+//!
+//! The archive keeps its points sorted by strictly ascending energy;
+//! dominance then forces strictly descending cycles. Both lookups exploit
+//! this: [`insert`](Frontier::insert) is two binary searches plus a
+//! splice, and [`dominates_bound`](Frontier::dominates_bound) is one
+//! binary search (the candidate dominator of a bound is always the
+//! cheapest-in-cycles point among those strictly below it in energy).
+
+use crate::engine::PRUNE_SLACK;
+
+/// One archived point: the global candidate index (deterministic
+/// tie-break key) and its completed `(energy, cycles)` totals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrontierPoint {
+    /// Global candidate (raw-grid) index.
+    pub index: usize,
+    /// Completed network energy, pJ.
+    pub energy_pj: f64,
+    /// Completed network cycles.
+    pub cycles: f64,
+}
+
+/// A 2-D dominance archive (see the module docs). `Default` is the empty
+/// frontier.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Frontier {
+    /// Strictly ascending energy, strictly descending cycles.
+    points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    /// The empty frontier.
+    pub fn new() -> Frontier {
+        Frontier::default()
+    }
+
+    /// Build from arbitrary points (order-independent result).
+    pub fn from_points<I: IntoIterator<Item = FrontierPoint>>(points: I) -> Frontier {
+        let mut f = Frontier::new();
+        for p in points {
+            f.insert(p);
+        }
+        f
+    }
+
+    /// Insert a completed point. Returns whether it was retained (it may
+    /// be dominated on arrival; retaining it may evict points it
+    /// dominates). Equal-vector duplicates keep the lower index.
+    pub fn insert(&mut self, p: FrontierPoint) -> bool {
+        // The only candidate dominator is the cheapest-in-cycles point
+        // with energy <= p's — the last of that (sorted) prefix.
+        let j = self.points.partition_point(|q| q.energy_pj <= p.energy_pj);
+        if j > 0 {
+            let q = self.points[j - 1];
+            let equal_vec = q.energy_pj == p.energy_pj && q.cycles == p.cycles;
+            if q.cycles < p.cycles
+                || (q.cycles == p.cycles && q.energy_pj < p.energy_pj)
+                || (equal_vec && q.index <= p.index)
+            {
+                return false;
+            }
+        }
+        // Evict everything p dominates: within the energy >= p region
+        // (cycles descending) that is exactly the prefix with
+        // cycles >= p's — including an equal-vector twin with a higher
+        // index, which the check above deliberately let through.
+        let k = self.points.partition_point(|q| q.energy_pj < p.energy_pj);
+        let mut end = k;
+        while end < self.points.len() && self.points[end].cycles >= p.cycles {
+            end += 1;
+        }
+        self.points.splice(k..end, std::iter::once(p));
+        true
+    }
+
+    /// The pruning predicate: is the admissible lower-bound vector
+    /// `(energy_lb, cycles_lb)` of a partially evaluated point strictly
+    /// dominated — beyond the relative [`PRUNE_SLACK`], in **both**
+    /// coordinates — by an archived point? If so, the point's final
+    /// totals (componentwise `>=` the bound in real arithmetic) are
+    /// strictly dominated too: it can neither join the frontier nor win
+    /// an equal-vector tie, so abandoning it preserves exactness. The
+    /// slack absorbs the f64 rounding of the floor terms, mirroring the
+    /// engine's scalar pruning contract.
+    pub fn dominates_bound(&self, energy_lb_pj: f64, cycles_lb: f64) -> bool {
+        // Points strictly below the bound in energy (with slack) form a
+        // prefix; its last element has the fewest cycles of them all.
+        let j = self
+            .points
+            .partition_point(|q| q.energy_pj * (1.0 + PRUNE_SLACK) < energy_lb_pj);
+        j > 0 && self.points[j - 1].cycles * (1.0 + PRUNE_SLACK) < cycles_lb
+    }
+
+    /// The archived points, ascending in energy (descending in cycles).
+    pub fn points(&self) -> &[FrontierPoint] {
+        &self.points
+    }
+
+    /// Number of archived points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when nothing has been archived.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Deterministic reporting-time thinning — the `--eps` / `--points`
+    /// knobs. The archive itself (and every checkpoint) is always exact;
+    /// thinning is presentation and plan-selection economy for huge
+    /// frontiers:
+    ///
+    /// - `eps > 0`: walk ascending energy and keep a point only when it
+    ///   improves cycles over the last kept one by more than the factor
+    ///   `1 + eps` (the min-energy endpoint is always kept, and the
+    ///   min-cycles endpoint is re-appended if the walk dropped it);
+    /// - `max_points`: evenly spaced ranks over what survives, both
+    ///   endpoints included.
+    ///
+    /// Both passes are pure functions of the (sorted) point list, so a
+    /// thinned view is as deterministic as the exact archive.
+    pub fn thin(&self, eps: f64, max_points: Option<usize>) -> Frontier {
+        let mut pts: Vec<FrontierPoint> = Vec::new();
+        if eps > 0.0 {
+            for p in &self.points {
+                match pts.last() {
+                    Some(last) if p.cycles * (1.0 + eps) > last.cycles => {}
+                    _ => pts.push(*p),
+                }
+            }
+            let (last_kept, tail) = (pts.last().copied(), self.points.last().copied());
+            if let (Some(last_kept), Some(tail)) = (last_kept, tail) {
+                if last_kept.index != tail.index {
+                    pts.push(tail); // keep the min-cycles endpoint
+                }
+            }
+        } else {
+            pts = self.points.clone();
+        }
+        if let Some(cap) = max_points {
+            if cap >= 1 && pts.len() > cap {
+                if cap == 1 {
+                    pts = vec![pts[0]];
+                } else {
+                    let n = pts.len();
+                    pts = (0..cap).map(|i| pts[i * (n - 1) / (cap - 1)]).collect();
+                }
+            }
+        }
+        Frontier { points: pts }
+    }
+
+    /// The structural invariants (test hook): strictly ascending energy,
+    /// strictly descending cycles — which together imply no archived
+    /// point dominates another.
+    pub fn invariants_hold(&self) -> bool {
+        self.points
+            .windows(2)
+            .all(|w| w[0].energy_pj < w[1].energy_pj && w[0].cycles > w[1].cycles)
+    }
+}

@@ -1,0 +1,325 @@
+//! Multi-objective (energy × latency) co-optimization — the Pareto
+//! frontier subsystem.
+//!
+//! Every earlier search path collapsed the design space to a single
+//! `min_tops`-constrained scalar winner, hiding exactly the
+//! energy-vs-throughput trade curve the paper's §6.3 iso-throughput
+//! analysis sweeps across. This module makes the frontier the
+//! first-class output, layered on the same machinery as everything else
+//! (`engine::Engine` per-layer searches, `netopt`'s shared point
+//! evaluator and sharded parallel evaluation — never the `xmodel` /
+//! `search_hierarchy` shims):
+//!
+//! 1. **[`Frontier`]** — a dominance archive in `(energy, cycles)` with
+//!    deterministic tie-breaking by candidate index, generalizing the
+//!    scalar `Incumbent`. During a run it is shared across worker chunks
+//!    through the `netopt::FrontierGate` hook: a point is abandoned only
+//!    when its admissible lower-bound vector (spent prefix + energy and
+//!    [`cycle_floor`](crate::engine::cycle_floor) suffixes) is strictly
+//!    dominated, in both coordinates beyond the pruning slack, by a
+//!    completed point.
+//! 2. **[`pareto_optimize`]** — the frontier run over a
+//!    [`DesignSpace`], reusing `run_points`' chunked parallel
+//!    evaluation; [`pareto_optimize_arches`] takes explicit lists
+//!    (serving candidates, grid-inexpressible points), and the `_seeded`
+//!    variants warm-start from a [`SeedTable`] exactly like the scalar
+//!    co-optimizer (hints only — the rerun fallback keeps every
+//!    completed point's totals bit-exact).
+//! 3. **[`FrontierCheckpoint`]** — per-shard JSON with an associative,
+//!    commutative [`merge_frontiers`], so `pareto --shard I/N` workers
+//!    merge bit-identically to the single-process frontier (see
+//!    `checkpoint`'s module docs for the no-lost-point argument).
+//! 4. **[`PlanSelector`]** — budget-aware selection for serving: the
+//!    min-energy frontier point within a latency budget, which under an
+//!    iso-throughput phrasing is exactly the scalar `co_optimize`
+//!    winner.
+//!
+//! ## Exactness contract
+//!
+//! [`pareto_optimize`]'s frontier equals — as a set, bit for bit per
+//! point — exhaustively evaluating the space and filtering dominated
+//! points, while fully evaluating no more (and usually strictly fewer)
+//! architecture points:
+//!
+//! - per-layer searches run with **no scalar network bound** (a
+//!   high-energy point may be frontier-optimal in cycles), so every
+//!   completed point's totals are bit-identical to the exhaustive
+//!   evaluation; cross-architecture seeds remain as rerun-corrected
+//!   hints that can only skip layer-search work;
+//! - the vector prune only fires on strict both-coordinate dominance of
+//!   an admissible bound, so a pruned point's final vector is strictly
+//!   dominated — it was never on the frontier and can never win an
+//!   equal-vector index tie;
+//! - the reported frontier is rebuilt deterministically from the
+//!   completed points, never read from the racy in-run archive, so
+//!   thread timing can affect counters but never the result.
+//!
+//! `pareto::tests` asserts the equivalence on small spaces ×
+//! {alexnet head, lstm-m, mlp-m}; `benches/perf_pareto.rs` gates it in
+//! CI together with the strict full-evaluation reduction and the
+//! `min_tops` selection identity, emitting `BENCH_pareto.json`.
+
+mod checkpoint;
+mod frontier;
+mod select;
+
+pub use checkpoint::{merge_all_frontiers, merge_frontiers, FrontierCheckpoint, FRONTIER_FORMAT};
+pub use frontier::{Frontier, FrontierPoint};
+pub use select::PlanSelector;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::arch::Arch;
+use crate::energy::CostModel;
+use crate::netopt::{run_points_gated, DesignSpace, NetOptConfig, NetOptStats, SeedTable};
+use crate::nn::Network;
+use crate::search::HierarchyResult;
+
+/// Reporting-time frontier controls (the `--eps` / `--points` CLI
+/// knobs). The pruning archive and every checkpoint stay **exact**
+/// regardless — thinning only trims what is returned, so the merge and
+/// equivalence contracts are untouched. `Default` reports the exact
+/// frontier.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoConfig {
+    /// Epsilon-grid thinning: keep a point only when it improves cycles
+    /// over the previously kept one by more than the factor `1 + eps`
+    /// (see [`Frontier::thin`]). `0.0` keeps every frontier point.
+    pub eps: f64,
+    /// Cap on reported points (evenly spaced ranks, endpoints kept).
+    pub max_points: Option<usize>,
+}
+
+/// One reported frontier point: the global candidate index (the
+/// deterministic tie-break and checkpoint key) and the full result.
+#[derive(Debug, Clone)]
+pub struct FrontierEntry {
+    /// Global candidate (raw-grid) index.
+    pub index: usize,
+    /// The architecture point and its per-layer optimization.
+    pub result: HierarchyResult,
+}
+
+/// The outcome of a frontier run.
+#[derive(Debug, Clone)]
+pub struct ParetoResult {
+    /// The (possibly thinned) frontier, ascending in energy.
+    pub frontier: Vec<FrontierEntry>,
+    /// Arch-point and engine counter roll-up (`pruned` counts points
+    /// abandoned by the vector bound).
+    pub stats: NetOptStats,
+    /// Final best-known per-layer-shape energies — feed back into the
+    /// `_seeded` variants to warm-start the next run.
+    pub seeds: SeedTable,
+}
+
+/// The in-run dominance archive behind the `netopt::FrontierGate` hook:
+/// pruning only — the reported frontier is rebuilt from the completed
+/// points, so archive race timing can never change the result, only how
+/// much work later points skip.
+#[derive(Default)]
+struct SharedFrontier(Mutex<Frontier>);
+
+impl crate::netopt::FrontierGate for SharedFrontier {
+    fn dominated(&self, energy_lb_pj: f64, cycles_lb: f64) -> bool {
+        self.0
+            .lock()
+            .expect("pareto archive lock")
+            .dominates_bound(energy_lb_pj, cycles_lb)
+    }
+
+    fn observe(&self, index: usize, energy_pj: f64, cycles: f64) {
+        self.0.lock().expect("pareto archive lock").insert(FrontierPoint {
+            index,
+            energy_pj,
+            cycles,
+        });
+    }
+}
+
+/// Shared core: run indexed candidates under a dominance gate and
+/// rebuild the exact frontier (full payloads) from the completed feasible
+/// points.
+fn pareto_points(
+    net: &Network,
+    cands: Vec<(usize, Arch)>,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    warm: Option<&SeedTable>,
+) -> (Vec<FrontierEntry>, NetOptStats, SeedTable) {
+    let gate = SharedFrontier::default();
+    let out = run_points_gated(net, cands, cost, cfg, warm, Some(&gate));
+    let mut archive = Frontier::new();
+    for (idx, r) in &out.ranked {
+        if r.opt.unmapped == 0 {
+            archive.insert(FrontierPoint {
+                index: *idx,
+                energy_pj: r.opt.total_energy_pj,
+                cycles: r.opt.total_cycles,
+            });
+        }
+    }
+    let mut by_idx: HashMap<usize, HierarchyResult> = out.ranked.into_iter().collect();
+    let entries = archive
+        .points()
+        .iter()
+        .map(|p| FrontierEntry {
+            index: p.index,
+            result: by_idx.remove(&p.index).expect("frontier point was ranked"),
+        })
+        .collect();
+    (entries, out.stats, out.seeds)
+}
+
+/// Apply the reporting-time thinning knobs to an exact frontier.
+fn thin_entries(entries: Vec<FrontierEntry>, pcfg: &ParetoConfig) -> Vec<FrontierEntry> {
+    if pcfg.eps <= 0.0 && pcfg.max_points.is_none() {
+        return entries;
+    }
+    let archive = Frontier::from_points(entries.iter().map(|e| FrontierPoint {
+        index: e.index,
+        energy_pj: e.result.opt.total_energy_pj,
+        cycles: e.result.opt.total_cycles,
+    }));
+    let keep: std::collections::HashSet<usize> = archive
+        .thin(pcfg.eps, pcfg.max_points)
+        .points()
+        .iter()
+        .map(|p| p.index)
+        .collect();
+    entries.into_iter().filter(|e| keep.contains(&e.index)).collect()
+}
+
+/// Compute the exact `(energy, cycles)` frontier of a design space:
+/// every architecture point is evaluated through the shared netopt point
+/// evaluator under the dominance bound, and the surviving fully-mapped,
+/// throughput-passing points are dominance-filtered. See the module docs
+/// for the exactness contract.
+pub fn pareto_optimize(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    pcfg: &ParetoConfig,
+) -> ParetoResult {
+    pareto_optimize_seeded(net, space, cost, cfg, pcfg, &SeedTable::new())
+}
+
+/// [`pareto_optimize`] warm-started from a [`SeedTable`] — seeds are
+/// rerun-corrected hints, so the frontier is bit-identical to the cold
+/// run with at most as much layer-search work.
+pub fn pareto_optimize_seeded(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    pcfg: &ParetoConfig,
+    warm: &SeedTable,
+) -> ParetoResult {
+    let enumeration = space.enumerate();
+    let cands: Vec<(usize, Arch)> = enumeration.candidates.into_iter().enumerate().collect();
+    let (entries, mut stats, seeds) = pareto_points(net, cands, cost, cfg, Some(warm));
+    stats.generated = enumeration.generated;
+    stats.budget_filtered = enumeration.budget_filtered;
+    stats.ratio_filtered = enumeration.ratio_filtered;
+    ParetoResult {
+        frontier: thin_entries(entries, pcfg),
+        stats,
+        seeds,
+    }
+}
+
+/// [`pareto_optimize`] over an explicit architecture list — the serving
+/// entry point (remap candidates, grid-inexpressible points). The list
+/// is the whole "space": `generated == candidates == arches.len()`.
+pub fn pareto_optimize_arches(
+    net: &Network,
+    arches: &[Arch],
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    pcfg: &ParetoConfig,
+) -> ParetoResult {
+    pareto_optimize_arches_seeded(net, arches, cost, cfg, pcfg, &SeedTable::new())
+}
+
+/// [`pareto_optimize_arches`] warm-started from a [`SeedTable`].
+pub fn pareto_optimize_arches_seeded(
+    net: &Network,
+    arches: &[Arch],
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    pcfg: &ParetoConfig,
+    warm: &SeedTable,
+) -> ParetoResult {
+    let cands: Vec<(usize, Arch)> = arches.iter().cloned().enumerate().collect();
+    let (entries, mut stats, seeds) = pareto_points(net, cands, cost, cfg, Some(warm));
+    stats.generated = arches.len();
+    ParetoResult {
+        frontier: thin_entries(entries, pcfg),
+        stats,
+        seeds,
+    }
+}
+
+/// Run shard `index` of `nshards` of a frontier computation — the worker
+/// body behind `pareto --shard I/N`. The checkpoint's frontier is always
+/// exact (thinning is a reporting concern); identical configuration
+/// across workers is the caller's contract, and the merge re-checks the
+/// cheap identity fields.
+pub fn pareto_optimize_shard(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    index: usize,
+    nshards: usize,
+) -> FrontierCheckpoint {
+    let se = space.shard(index, nshards);
+    let (entries, mut stats, seeds) = pareto_points(net, se.candidates, cost, cfg, None);
+    stats.generated = se.generated;
+    stats.budget_filtered = se.budget_filtered;
+    stats.ratio_filtered = se.ratio_filtered;
+    FrontierCheckpoint {
+        network: net.name.clone(),
+        batch: net.batch,
+        nshards,
+        shards: vec![index],
+        stats,
+        seeds,
+        frontier: entries.into_iter().map(|e| (e.index, e.result)).collect(),
+    }
+}
+
+/// In-process sharded frontier computation: run every shard (archives
+/// are deliberately **not** shared across shards, mirroring the
+/// process-isolated deployment), merge the checkpoints, and return the
+/// global [`ParetoResult`]. With `nshards == 1` this is
+/// [`pareto_optimize`] with shard bookkeeping.
+pub fn pareto_optimize_sharded(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    pcfg: &ParetoConfig,
+    nshards: usize,
+) -> ParetoResult {
+    assert!(nshards >= 1, "need at least one shard");
+    let ckpts: Vec<FrontierCheckpoint> = (0..nshards)
+        .map(|i| pareto_optimize_shard(net, space, cost, cfg, i, nshards))
+        .collect();
+    let merged = merge_all_frontiers(&ckpts).expect("same-run shard checkpoints must merge");
+    let entries = merged
+        .frontier
+        .into_iter()
+        .map(|(index, result)| FrontierEntry { index, result })
+        .collect();
+    ParetoResult {
+        frontier: thin_entries(entries, pcfg),
+        stats: merged.stats,
+        seeds: merged.seeds,
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,82 @@
+//! Budget-aware plan selection over a computed frontier — the piece
+//! serving consults (`serve --latency-budget`, `coordinator::remap`).
+//!
+//! A frontier answers "what does each unit of latency buy in energy?";
+//! the selector turns that into a decision: the **min-energy point whose
+//! cycles fit a latency budget**. Because a frontier is ascending in
+//! energy and descending in cycles, that is simply the first entry (in
+//! frontier order) meeting the constraint — and, by the dominance
+//! argument in `pareto`'s module docs, it is exactly the point the
+//! scalar `min_tops`-constrained [`co_optimize`](crate::netopt) winner
+//! collapses to when the budget is phrased as a throughput floor.
+
+use crate::search::HierarchyResult;
+
+use super::FrontierEntry;
+
+/// Selects serving plans from a frontier. Entries are held in frontier
+/// order (ascending energy, descending cycles); construction re-sorts
+/// defensively so a caller-assembled list behaves identically.
+#[derive(Debug, Clone, Default)]
+pub struct PlanSelector {
+    entries: Vec<FrontierEntry>,
+}
+
+impl PlanSelector {
+    /// A selector over frontier entries.
+    pub fn new(mut entries: Vec<FrontierEntry>) -> PlanSelector {
+        entries.sort_by(|a, b| {
+            a.result
+                .opt
+                .total_energy_pj
+                .partial_cmp(&b.result.opt.total_energy_pj)
+                .expect("frontier energies are finite")
+                .then(a.index.cmp(&b.index))
+        });
+        PlanSelector { entries }
+    }
+
+    /// The min-energy entry whose total cycles fit `budget_cycles`
+    /// (`None` budget = unconstrained, i.e. the min-energy point).
+    /// Returns `None` when no frontier point meets the budget — callers
+    /// keep their current plan. For mix-weighted frontiers (serving),
+    /// `total_cycles` is the weighted sum over the mix window, so the
+    /// budget reads as "cycles to serve one full window".
+    pub fn select(&self, budget_cycles: Option<f64>) -> Option<&FrontierEntry> {
+        match budget_cycles {
+            None => self.entries.first(),
+            Some(b) => self.entries.iter().find(|e| e.result.opt.total_cycles <= b),
+        }
+    }
+
+    /// The min-energy entry achieving at least `min_tops` at `clock_ghz`
+    /// — the iso-throughput phrasing of [`select`](Self::select) (total
+    /// MACs are architecture-independent, so a TOPS floor *is* a cycle
+    /// budget). Matches the scalar `co_optimize` winner under the same
+    /// `min_tops`, bit for bit (asserted by `benches/perf_pareto.rs`).
+    pub fn select_min_tops(&self, min_tops: f64, clock_ghz: f64) -> Option<&FrontierEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.result.opt.tops(clock_ghz) >= min_tops)
+    }
+
+    /// Convenience: the selected winning result under a cycle budget.
+    pub fn select_result(&self, budget_cycles: Option<f64>) -> Option<&HierarchyResult> {
+        self.select(budget_cycles).map(|e| &e.result)
+    }
+
+    /// The entries in frontier order.
+    pub fn entries(&self) -> &[FrontierEntry] {
+        &self.entries
+    }
+
+    /// Number of frontier points available to select from.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the frontier was empty (no feasible point).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}

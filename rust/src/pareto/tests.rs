@@ -1,0 +1,472 @@
+//! Pareto tests: the dominance-pruned frontier equals the exhaustive
+//! sweep + dominance filter bit for bit on small spaces × {alexnet head,
+//! lstm-m, mlp-m}; sharded frontiers merge to the single-process run;
+//! merge and archive properties hold under the randomized harness; and
+//! budget selection collapses to the scalar `min_tops` winner.
+
+use super::*;
+use crate::arch::ArrayShape;
+use crate::energy::Table3;
+use crate::engine::{cycle_floor, PRUNE_SLACK};
+use crate::netopt::co_optimize;
+use crate::nn::network;
+use crate::search::SearchOpts;
+use crate::util::prop::for_cases;
+
+/// The compact widened grid the netopt equivalence tests use: the
+/// deliberately-bad rf512 points stay in play and must be dominated or
+/// vector-pruned, never mis-ranked.
+fn small_space() -> DesignSpace {
+    let mut s = DesignSpace::paper_default(ArrayShape { rows: 8, cols: 8 });
+    s.rf1_sizes = vec![16, 64, 512];
+    s.rf2_ratios = vec![8];
+    s.gbuf_sizes = vec![64 << 10, 256 << 10];
+    s.ratio_min = 0.25;
+    s.ratio_max = 64.0;
+    s
+}
+
+fn small_opts() -> SearchOpts {
+    let mut o = SearchOpts::capped(150, 4);
+    o.max_order_combos = 9;
+    o
+}
+
+fn workloads() -> Vec<Network> {
+    vec![
+        network("alexnet", 1).unwrap().head(3),
+        network("lstm-m", 1).unwrap(),
+        network("mlp-m", 16).unwrap(),
+    ]
+}
+
+/// Bit-level equality on the frontier-point contract surface:
+/// architecture, totals, and every per-layer (mapping, smap, model
+/// result). Search *counters* are excluded — seed and pruning histories
+/// legitimately differ across shard layouts; the frontier must not.
+fn assert_point_eq(tag: &str, a: &HierarchyResult, b: &HierarchyResult) {
+    assert_eq!(a.arch, b.arch, "{tag}: arch differs");
+    assert_eq!(
+        a.opt.total_energy_pj.to_bits(),
+        b.opt.total_energy_pj.to_bits(),
+        "{tag}: energy bits differ"
+    );
+    assert_eq!(
+        a.opt.total_cycles.to_bits(),
+        b.opt.total_cycles.to_bits(),
+        "{tag}: cycle bits differ"
+    );
+    assert_eq!(a.opt.total_macs, b.opt.total_macs, "{tag}: macs differ");
+    assert_eq!(a.opt.unmapped, 0, "{tag}: frontier points are fully mapped");
+    assert_eq!(b.opt.unmapped, 0, "{tag}: frontier points are fully mapped");
+    assert_eq!(a.opt.per_layer.len(), b.opt.per_layer.len());
+    for (x, y) in a.opt.per_layer.iter().zip(b.opt.per_layer.iter()) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.mapping, y.mapping, "{tag}: mapping differs");
+        assert_eq!(x.smap, y.smap, "{tag}: spatial map differs");
+        assert_eq!(x.result, y.result, "{tag}: model result differs");
+    }
+}
+
+/// Reference implementation: O(n²) dominance filter over the feasible
+/// exhaustive ranking (already ascending `(energy, index)`, so for equal
+/// energies the earlier entry has the lower grid index).
+fn exhaustive_frontier(ranked: &[HierarchyResult]) -> Vec<&HierarchyResult> {
+    let feas: Vec<&HierarchyResult> = ranked.iter().filter(|r| r.opt.unmapped == 0).collect();
+    let mut out = Vec::new();
+    for (i, p) in feas.iter().enumerate() {
+        let (pe, pc) = (p.opt.total_energy_pj, p.opt.total_cycles);
+        let dominated = feas.iter().enumerate().any(|(j, q)| {
+            let (qe, qc) = (q.opt.total_energy_pj, q.opt.total_cycles);
+            (qe < pe && qc <= pc) || (qe == pe && (qc < pc || (qc == pc && j < i)))
+        });
+        if !dominated {
+            out.push(*p);
+        }
+    }
+    out
+}
+
+#[test]
+fn frontier_matches_exhaustive_filter_on_small_spaces() {
+    let space = small_space();
+    for net in workloads() {
+        let ex = co_optimize(
+            &net,
+            &space,
+            &Table3,
+            &NetOptConfig::exhaustive(small_opts(), 2),
+        );
+        let reference = exhaustive_frontier(&ex.ranked);
+        assert!(!reference.is_empty(), "{}: no feasible point", net.name);
+        for threads in [1usize, 3] {
+            let par = pareto_optimize(
+                &net,
+                &space,
+                &Table3,
+                &NetOptConfig::new(small_opts(), threads),
+                &ParetoConfig::default(),
+            );
+            assert_eq!(
+                par.frontier.len(),
+                reference.len(),
+                "{}: frontier size differs (t={threads})",
+                net.name
+            );
+            for (e, r) in par.frontier.iter().zip(reference.iter()) {
+                assert_point_eq(&format!("{} t={threads}", net.name), &e.result, r);
+            }
+            // frontier order is ascending energy, strictly
+            for w in par.frontier.windows(2) {
+                assert!(
+                    w[0].result.opt.total_energy_pj < w[1].result.opt.total_energy_pj
+                        && w[0].result.opt.total_cycles > w[1].result.opt.total_cycles,
+                    "{}: frontier not strictly ordered",
+                    net.name
+                );
+            }
+            // the vector bound never adds work, and every candidate is
+            // accounted for
+            assert!(par.stats.invariants_hold(), "{}", par.stats);
+            assert_eq!(par.stats.candidates, ex.stats.candidates);
+            assert!(par.stats.evaluated_full <= ex.stats.evaluated_full);
+        }
+    }
+}
+
+#[test]
+fn frontier_min_energy_point_is_the_scalar_winner() {
+    let space = small_space();
+    for net in workloads() {
+        let scalar = co_optimize(&net, &space, &Table3, &NetOptConfig::new(small_opts(), 2));
+        let par = pareto_optimize(
+            &net,
+            &space,
+            &Table3,
+            &NetOptConfig::new(small_opts(), 2),
+            &ParetoConfig::default(),
+        );
+        let w = scalar.best().expect("scalar winner");
+        let f = par.frontier.first().expect("non-empty frontier");
+        assert_point_eq(&format!("{} min-energy", net.name), &f.result, w);
+    }
+}
+
+#[test]
+fn cycle_floor_is_admissible_on_every_evaluated_point() {
+    let space = small_space();
+    let net = network("mlp-m", 16).unwrap();
+    let ex = co_optimize(
+        &net,
+        &space,
+        &Table3,
+        &NetOptConfig::exhaustive(small_opts(), 2),
+    );
+    let mut checked = 0usize;
+    for r in &ex.ranked {
+        for (lo, layer) in r.opt.per_layer.iter().zip(net.layers.iter()) {
+            let Some(lo) = lo else { continue };
+            let floor = cycle_floor(&layer.shape, &r.arch);
+            assert!(
+                floor <= lo.result.cycles * (1.0 + PRUNE_SLACK),
+                "{} / {}: cycle floor {} above achieved {}",
+                r.arch.name,
+                layer.name,
+                floor,
+                lo.result.cycles
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 0);
+}
+
+#[test]
+fn sharded_frontier_merges_to_single_process() {
+    let space = small_space();
+    for net in [network("mlp-m", 16).unwrap(), network("lstm-m", 1).unwrap()] {
+        let single = pareto_optimize(
+            &net,
+            &space,
+            &Table3,
+            &NetOptConfig::new(small_opts(), 2),
+            &ParetoConfig::default(),
+        );
+        for nshards in [1usize, 2, 3, 5] {
+            let sharded = pareto_optimize_sharded(
+                &net,
+                &space,
+                &Table3,
+                &NetOptConfig::new(small_opts(), 2),
+                &ParetoConfig::default(),
+                nshards,
+            );
+            assert_eq!(
+                sharded.frontier.len(),
+                single.frontier.len(),
+                "{} n={nshards}: frontier size differs",
+                net.name
+            );
+            // Indices are compared only relatively: shards tag points by
+            // raw-grid index while the single process tags by filtered
+            // position (same relative order — filtering preserves it —
+            // exactly like the scalar shard contract). The payload is
+            // the contract surface.
+            for (a, b) in sharded.frontier.iter().zip(single.frontier.iter()) {
+                assert_point_eq(&format!("{} n={nshards}", net.name), &a.result, &b.result);
+            }
+            assert!(sharded.stats.invariants_hold(), "{}", sharded.stats);
+            assert_eq!(sharded.stats.generated, single.stats.generated);
+            assert_eq!(sharded.stats.candidates, single.stats.candidates);
+        }
+    }
+}
+
+#[test]
+fn frontier_merge_is_associative_commutative_and_order_free() {
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    let cfg = NetOptConfig::new(small_opts(), 1);
+    let ckpts: Vec<FrontierCheckpoint> = (0..4)
+        .map(|i| pareto_optimize_shard(&net, &space, &Table3, &cfg, i, 4))
+        .collect();
+    let canonical = merge_all_frontiers(&ckpts).unwrap();
+    assert_eq!(canonical.shards, vec![0, 1, 2, 3]);
+    assert!(canonical.stats.invariants_hold(), "{}", canonical.stats);
+    // commutative and associative on concrete pairs/triples
+    let ab = merge_frontiers(&ckpts[0], &ckpts[1]).unwrap();
+    let ba = merge_frontiers(&ckpts[1], &ckpts[0]).unwrap();
+    assert_eq!(ab, ba, "merge must be commutative");
+    let left = merge_frontiers(&ab, &ckpts[2]).unwrap();
+    let right = merge_frontiers(&ckpts[0], &merge_frontiers(&ckpts[1], &ckpts[2]).unwrap())
+        .unwrap();
+    assert_eq!(left, right, "merge must be associative");
+    // randomized merge orders all reproduce the canonical result
+    for_cases(0xF405, 12, |rng| {
+        let mut order: Vec<usize> = (0..4).collect();
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            order.swap(i, j);
+        }
+        let shuffled: Vec<FrontierCheckpoint> =
+            order.iter().map(|&i| ckpts[i].clone()).collect();
+        let m = merge_all_frontiers(&shuffled).unwrap();
+        assert_eq!(m, canonical, "merge order {order:?} diverged");
+    });
+}
+
+#[test]
+fn frontier_merge_rejects_mismatches() {
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    let cfg = NetOptConfig::new(small_opts(), 1);
+    let c0 = pareto_optimize_shard(&net, &space, &Table3, &cfg, 0, 2);
+    let c1 = pareto_optimize_shard(&net, &space, &Table3, &cfg, 1, 2);
+    assert!(merge_frontiers(&c0, &c0).is_err(), "overlapping shards");
+    let c_other_n = pareto_optimize_shard(&net, &space, &Table3, &cfg, 1, 3);
+    assert!(merge_frontiers(&c0, &c_other_n).is_err(), "shard count");
+    let other = network("lstm-m", 1).unwrap();
+    let c_other_net = pareto_optimize_shard(&other, &space, &Table3, &cfg, 1, 2);
+    assert!(merge_frontiers(&c0, &c_other_net).is_err(), "network");
+    assert!(merge_frontiers(&c0, &c1).is_ok());
+}
+
+#[test]
+fn frontier_checkpoint_json_roundtrip_is_lossless() {
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    let cfg = NetOptConfig::new(small_opts(), 1);
+    for (index, nshards) in [(0usize, 1usize), (0, 2), (2, 7)] {
+        let ckpt = pareto_optimize_shard(&net, &space, &Table3, &cfg, index, nshards);
+        let text = ckpt.to_json();
+        let back = FrontierCheckpoint::from_json(&text)
+            .unwrap_or_else(|e| panic!("shard {index}/{nshards}: {e}\n{text}"));
+        assert_eq!(ckpt, back, "shard {index}/{nshards} round-trip");
+        assert_eq!(text, back.to_json(), "serialized form must be stable");
+    }
+    assert!(FrontierCheckpoint::from_json("{\"format\":\"bogus\"}").is_err());
+}
+
+#[test]
+fn archive_invariants_under_random_insertion_orders() {
+    for_cases(0xFA127, 300, |rng| {
+        let n = 1 + rng.below(20) as usize;
+        // small integer grids force plenty of exact vector ties
+        let original: Vec<FrontierPoint> = (0..n)
+            .map(|i| FrontierPoint {
+                index: i,
+                energy_pj: 1.0 + rng.below(8) as f64,
+                cycles: 1.0 + rng.below(8) as f64,
+            })
+            .collect();
+        let a = Frontier::from_points(original.iter().copied());
+        assert!(a.invariants_hold(), "archive violates invariants: {a:?}");
+        let mut shuffled = original.clone();
+        for i in (1..shuffled.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            shuffled.swap(i, j);
+        }
+        let b = Frontier::from_points(shuffled.iter().copied());
+        assert_eq!(a, b, "insertion order changed the archive");
+        // brute-force reference: strict dominance + lowest-index dedup
+        let mut reference: Vec<FrontierPoint> = original
+            .iter()
+            .copied()
+            .filter(|p| {
+                !original.iter().any(|q| {
+                    q.index != p.index
+                        && ((q.energy_pj <= p.energy_pj
+                            && q.cycles <= p.cycles
+                            && (q.energy_pj < p.energy_pj || q.cycles < p.cycles))
+                            || (q.energy_pj == p.energy_pj
+                                && q.cycles == p.cycles
+                                && q.index < p.index))
+                })
+            })
+            .collect();
+        reference.sort_by(|x, y| x.energy_pj.partial_cmp(&y.energy_pj).unwrap());
+        assert_eq!(a.points(), reference.as_slice(), "archive != brute force");
+        // the pruning predicate agrees with brute force on random bounds
+        for _ in 0..5 {
+            let (e, c) = (1.0 + rng.below(10) as f64, 1.0 + rng.below(10) as f64);
+            let expect = a.points().iter().any(|q| {
+                q.energy_pj * (1.0 + PRUNE_SLACK) < e && q.cycles * (1.0 + PRUNE_SLACK) < c
+            });
+            assert_eq!(a.dominates_bound(e, c), expect, "bound ({e},{c}) on {a:?}");
+        }
+    });
+}
+
+#[test]
+fn thinning_is_a_deterministic_subset_with_endpoints() {
+    let pts: Vec<FrontierPoint> = (0..10)
+        .map(|i| FrontierPoint {
+            index: i,
+            energy_pj: 100.0 + 10.0 * i as f64,
+            cycles: 1000.0 / (1.0 + i as f64),
+        })
+        .collect();
+    let f = Frontier::from_points(pts.iter().copied());
+    assert_eq!(f.len(), 10);
+    // eps keeps the extremes and only sufficiently-improving interior
+    let eps = f.thin(0.5, None);
+    assert!(eps.len() < f.len());
+    assert!(eps.invariants_hold());
+    assert_eq!(eps.points().first().unwrap().index, 0, "min-energy endpoint");
+    assert_eq!(eps.points().last().unwrap().index, 9, "min-cycles endpoint");
+    // cap keeps exactly cap points, endpoints included
+    let capped = f.thin(0.0, Some(4));
+    assert_eq!(capped.len(), 4);
+    assert!(capped.invariants_hold());
+    assert_eq!(capped.points().first().unwrap().index, 0);
+    assert_eq!(capped.points().last().unwrap().index, 9);
+    // every thinned point is an original frontier point
+    for p in capped.points().iter().chain(eps.points()) {
+        assert!(f.points().contains(p));
+    }
+    // exact mode is the identity
+    assert_eq!(f.thin(0.0, None), f);
+}
+
+#[test]
+fn selector_budget_matches_scalar_min_tops_winner() {
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    let par = pareto_optimize(
+        &net,
+        &space,
+        &Table3,
+        &NetOptConfig::new(small_opts(), 2),
+        &ParetoConfig::default(),
+    );
+    let sel = PlanSelector::new(par.frontier.clone());
+    assert!(!sel.is_empty());
+    // unconstrained selection is the min-energy point
+    assert_point_eq(
+        "select(None)",
+        &sel.select(None).unwrap().result,
+        &par.frontier[0].result,
+    );
+    // an unmeetable budget selects nothing
+    assert!(sel.select(Some(0.0)).is_none());
+    // for each frontier point's throughput, the iso-throughput scalar
+    // winner is exactly what the selector picks (cap the cost on long
+    // frontiers)
+    for entry in sel.entries().iter().take(3) {
+        let tops = entry.result.opt.tops(1.0);
+        let scalar = co_optimize(
+            &net,
+            &space,
+            &Table3,
+            &NetOptConfig::new(small_opts(), 2).with_min_tops(tops),
+        );
+        let w = scalar.best().expect("constrained scalar winner");
+        let picked = sel.select_min_tops(tops, 1.0).expect("selector hit");
+        assert_point_eq("min-tops selection", &picked.result, w);
+        // and the cycle-budget phrasing agrees with the tops phrasing
+        let budget = entry.result.opt.total_cycles;
+        let by_budget = sel.select(Some(budget)).expect("budget hit");
+        assert_eq!(by_budget.index, picked.index);
+    }
+}
+
+#[test]
+fn seeded_frontier_is_bit_identical_to_cold() {
+    use crate::netopt::LayerKey;
+    let net = network("mlp-m", 16).unwrap();
+    let space = small_space();
+    let cfg = NetOptConfig::new(small_opts(), 1);
+    let cold = pareto_optimize(&net, &space, &Table3, &cfg, &ParetoConfig::default());
+    let layer_e: Vec<(LayerKey, f64)> = cold.frontier[0]
+        .result
+        .opt
+        .per_layer
+        .iter()
+        .zip(net.layers.iter())
+        .map(|(lo, l)| {
+            (
+                (l.shape.bounds, l.shape.stride),
+                lo.as_ref().unwrap().result.energy_pj,
+            )
+        })
+        .collect();
+    for_cases(0x5EEDF, 4, |rng| {
+        let mut entries: Vec<(LayerKey, f64)> = Vec::new();
+        for (k, e) in &layer_e {
+            match rng.below(4) {
+                0 => {}
+                1 => entries.push((*k, e * 1e-6)), // absurdly low: forces reruns
+                2 => entries.push((*k, e * (0.5 + rng.below(150) as f64 / 100.0))),
+                _ => entries.push((*k, e * 1e6)),
+            }
+        }
+        let warm = SeedTable::from_entries(entries);
+        let seeded =
+            pareto_optimize_seeded(&net, &space, &Table3, &cfg, &ParetoConfig::default(), &warm);
+        assert_eq!(seeded.frontier.len(), cold.frontier.len());
+        for (a, b) in seeded.frontier.iter().zip(cold.frontier.iter()) {
+            assert_eq!(a.index, b.index, "seeded-vs-cold: index differs");
+            assert_point_eq("seeded-vs-cold", &a.result, &b.result);
+        }
+        assert!(
+            seeded.stats.evaluated_full <= cold.stats.evaluated_full,
+            "seeds must never add full evaluations"
+        );
+    });
+}
+
+#[test]
+fn empty_space_yields_empty_frontier() {
+    let mut space = small_space();
+    space.rf1_sizes.clear();
+    let res = pareto_optimize(
+        &network("mlp-m", 16).unwrap(),
+        &space,
+        &Table3,
+        &NetOptConfig::new(small_opts(), 2),
+        &ParetoConfig::default(),
+    );
+    assert!(res.frontier.is_empty());
+    assert_eq!(res.stats.generated, 0);
+    assert!(PlanSelector::new(res.frontier).select(None).is_none());
+}
