@@ -50,13 +50,16 @@ cargo bench --bench perf_netopt
 echo "==> perf_shard (multi-process shard equivalence: N workers + merge == single process, bit for bit; emits BENCH_shard.json)"
 cargo bench --bench perf_shard
 
-echo "==> perf_remap (serving-time remapping: deterministic serving, warm-started online plan == offline optimizer, drift tracked; emits BENCH_remap.json)"
+echo "==> perf_remap (serving-time remapping: deterministic serving, warm-started online plan == offline optimizer, drift tracked, deadline fast path beats eager to first plan; emits BENCH_remap.json)"
 cargo bench --bench perf_remap
+
+echo "==> perf_fastmap (heuristic mapper: >=100x over full-effort b&b, <=5% energy gap, scout priming bit-identical with fewer full evals; emits BENCH_fastmap.json)"
+cargo bench --bench perf_fastmap
 
 echo "==> perf_pareto (frontier exactness: dominance-pruned frontier == exhaustive + filter bit for bit, strictly fewer full evals, budget selection == scalar min-tops winner; emits BENCH_pareto.json)"
 cargo bench --bench perf_pareto
 
-echo "==> bench_schema (every BENCH_*.json conforms to the documented schema; netopt/pareto/shard/remap files required)"
+echo "==> bench_schema (every BENCH_*.json conforms to the documented schema; fastmap/netopt/pareto/shard/remap files required)"
 cargo bench --bench bench_schema
 
 echo "CI OK"

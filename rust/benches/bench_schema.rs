@@ -16,6 +16,7 @@ use interstellar::util::bench::validate_bench_json;
 /// the time this gate runs (it is ordered after the perf benches) —
 /// their absence means a perf gate silently stopped emitting.
 const REQUIRED: &[&str] = &[
+    "BENCH_fastmap.json",
     "BENCH_netopt.json",
     "BENCH_pareto.json",
     "BENCH_remap.json",

@@ -1,0 +1,202 @@
+//! §Perf/CI gate: the microsecond heuristic mapper (`fastmap`).
+//! Asserts the fast-path contracts on the paper workloads (AlexNet head,
+//! lstm-m, mlp-m) and measures the heuristic against the exact search:
+//!
+//! 1. **Latency** — the aggregate per-layer heuristic latency over the
+//!    suite's unique shapes is at least 100x below the per-layer
+//!    branch-and-bound search at full CLI effort (`capped(20_000, 8)`).
+//! 2. **Quality** — per workload, the best heuristic plan over the
+//!    paper design-space candidates lands within 5% of the exact
+//!    `co_optimize` winner's energy on the same candidates.
+//! 3. **Priming** — scout priming (`NetOptConfig::prime`) leaves the
+//!    `co_optimize` winner and the pareto frontier bit-identical while
+//!    strictly reducing fully-evaluated mappings on `co_optimize`
+//!    (never increasing them on `pareto`).
+//!
+//! Emits `BENCH_fastmap.json` for the perf trajectory (validated — and
+//! required — by the `bench_schema` gate).
+
+use interstellar::arch::{eyeriss_like, ArrayShape};
+use interstellar::dataflow::Dataflow;
+use interstellar::energy::Table3;
+use interstellar::engine::DivisorCache;
+use interstellar::fastmap::{heuristic_layer, heuristic_network};
+use interstellar::loopnest::Shape;
+use interstellar::netopt::{co_optimize, DesignSpace, NetOptConfig};
+use interstellar::nn::{network, Network};
+use interstellar::pareto::{pareto_optimize, ParetoConfig};
+use interstellar::search::{optimize_layer, SearchOpts};
+use interstellar::util::bench::{black_box, Bencher};
+use interstellar::util::json::Json;
+
+/// The paper workloads the fast path is graded on.
+fn suite() -> Vec<Network> {
+    vec![
+        network("alexnet", 4).expect("alexnet").head(3),
+        network("lstm-m", 1).expect("lstm-m"),
+        network("mlp-m", 32).expect("mlp-m"),
+    ]
+}
+
+/// Unique layer shapes across the whole suite (the heuristic and the
+/// exact search both dedup by shape, so this is the honest unit of
+/// per-layer work).
+fn unique_shapes(nets: &[Network]) -> Vec<Shape> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for net in nets {
+        for l in &net.layers {
+            if seen.insert((l.shape.bounds, l.shape.stride)) {
+                out.push(l.shape);
+            }
+        }
+    }
+    out
+}
+
+/// The shared per-layer search effort of the gap/priming comparisons —
+/// CLI fast effort with the heuristic's own order cap so the exact side
+/// stays affordable in CI.
+fn gap_opts() -> SearchOpts {
+    let mut opts = SearchOpts::capped(400, 5);
+    opts.max_order_combos = 9;
+    opts
+}
+
+fn main() {
+    let mut b = Bencher::new(200);
+    let mut fields: Vec<(String, Json)> = vec![("bench".into(), Json::str("perf_fastmap"))];
+    let nets = suite();
+    let arch = eyeriss_like();
+    let df = Dataflow::parse("C|K").expect("C|K");
+    let shapes = unique_shapes(&nets);
+    assert!(shapes.len() >= 6, "suite lost its layer diversity");
+
+    // 1. per-layer latency: heuristic vs full-effort b&b, aggregated
+    // over every unique shape in the suite
+    let m_heur = b.bench("perf_fastmap/heuristic all layers", || {
+        let mut cache = DivisorCache::new();
+        for s in &shapes {
+            black_box(heuristic_layer(s, &arch, &df, &Table3, &mut cache));
+        }
+    });
+    let full = SearchOpts::capped(20_000, 8);
+    let t0 = std::time::Instant::now();
+    for s in &shapes {
+        black_box(optimize_layer(s, &arch, &df, &Table3, &full, 1));
+    }
+    let bnb_ns = t0.elapsed().as_nanos() as f64;
+    let speedup = bnb_ns / m_heur.mean_ns.max(1.0);
+    assert!(
+        speedup >= 100.0,
+        "heuristic is only {speedup:.0}x faster than full-effort b&b \
+         (heur {} ns, b&b {} ns over {} shapes)",
+        m_heur.mean_ns,
+        bnb_ns,
+        shapes.len()
+    );
+    fields.push(("unique_shapes".into(), Json::int(shapes.len() as u64)));
+    fields.push(("mean_ns_heuristic_suite".into(), Json::num(m_heur.mean_ns)));
+    fields.push(("ns_bnb_suite".into(), Json::num(bnb_ns)));
+    fields.push(("layer_speedup".into(), Json::num(speedup)));
+
+    // 2. energy gap per workload: best heuristic plan over the paper
+    // candidates vs the exact co-optimizer on the same candidates
+    let space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+    let cands = space.enumerate().candidates;
+    assert!(!cands.is_empty(), "paper space enumerated empty");
+    for net in &nets {
+        let cfg = NetOptConfig::new(gap_opts(), 1);
+        let exact = co_optimize(net, &space, &Table3, &cfg);
+        let ew = exact.best().expect("exact winner").opt.total_energy_pj;
+        let mut cache = DivisorCache::new();
+        let eh = cands
+            .iter()
+            .map(|a| heuristic_network(net, a, &df, &Table3, None, &mut cache))
+            .filter(|o| o.unmapped == 0)
+            .map(|o| o.total_energy_pj)
+            .fold(f64::INFINITY, f64::min);
+        assert!(eh.is_finite(), "{}: no feasible heuristic plan", net.name);
+        let gap = eh / ew - 1.0;
+        assert!(
+            gap <= 0.05,
+            "{}: heuristic energy gap {:.2}% exceeds 5% (heur {eh}, exact {ew})",
+            net.name,
+            gap * 100.0
+        );
+        let slug: String = net
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        fields.push((format!("gap_pct_{slug}"), Json::num(gap * 100.0)));
+    }
+
+    // 3a. scout priming on co_optimize (mlp-m): bit-identical winner,
+    // strictly fewer fully-evaluated mappings
+    let mlp = &nets[2];
+    let cfg_off = NetOptConfig::new(gap_opts(), 1);
+    let cfg_on = NetOptConfig::new(gap_opts(), 1).with_prime(true);
+    let off = co_optimize(mlp, &space, &Table3, &cfg_off);
+    let on = co_optimize(mlp, &space, &Table3, &cfg_on);
+    let (wo, wn) = (off.best().expect("off"), on.best().expect("on"));
+    assert_eq!(wo.arch, wn.arch, "priming moved the winner arch");
+    assert_eq!(
+        wo.opt.total_energy_pj.to_bits(),
+        wn.opt.total_energy_pj.to_bits(),
+        "priming moved the winner energy bits"
+    );
+    for (x, y) in wo.opt.per_layer.iter().zip(wn.opt.per_layer.iter()) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.mapping, y.mapping, "priming moved a winner mapping");
+        assert_eq!(x.result, y.result, "priming moved a winner result");
+    }
+    assert!(
+        on.stats.engine.full < off.stats.engine.full,
+        "priming did not reduce full evaluations ({} >= {})",
+        on.stats.engine.full,
+        off.stats.engine.full
+    );
+    fields.push(("co_opt_full_unprimed".into(), Json::int(off.stats.engine.full)));
+    fields.push(("co_opt_full_primed".into(), Json::int(on.stats.engine.full)));
+
+    // 3b. scout priming on pareto (lstm-m): bit-identical frontier,
+    // never more full evaluations
+    let lstm = &nets[1];
+    let pcfg = ParetoConfig::default();
+    let poff = pareto_optimize(lstm, &space, &Table3, &cfg_off, &pcfg);
+    let pon = pareto_optimize(lstm, &space, &Table3, &cfg_on, &pcfg);
+    assert_eq!(poff.frontier.len(), pon.frontier.len(), "frontier size moved");
+    for (a, c) in poff.frontier.iter().zip(pon.frontier.iter()) {
+        assert_eq!(a.index, c.index, "priming moved a frontier index");
+        assert_eq!(a.result.arch, c.result.arch, "priming moved a frontier arch");
+        assert_eq!(
+            a.result.opt.total_energy_pj.to_bits(),
+            c.result.opt.total_energy_pj.to_bits(),
+            "priming moved frontier energy bits"
+        );
+        assert_eq!(
+            a.result.opt.total_cycles.to_bits(),
+            c.result.opt.total_cycles.to_bits(),
+            "priming moved frontier cycle bits"
+        );
+    }
+    assert!(
+        pon.stats.engine.full <= poff.stats.engine.full,
+        "priming increased pareto full evaluations ({} > {})",
+        pon.stats.engine.full,
+        poff.stats.engine.full
+    );
+    fields.push(("pareto_full_unprimed".into(), Json::int(poff.stats.engine.full)));
+    fields.push(("pareto_full_primed".into(), Json::int(pon.stats.engine.full)));
+    fields.push(("frontier_points".into(), Json::int(poff.frontier.len() as u64)));
+
+    let path = "BENCH_fastmap.json";
+    std::fs::write(path, Json::Obj(fields).to_string()).expect("write bench json");
+    println!("wrote {path}");
+    println!(
+        "perf_fastmap OK ({}x over full-effort b&b, gaps within 5%, priming \
+         bit-identical with fewer full evaluations)",
+        speedup as u64
+    );
+}

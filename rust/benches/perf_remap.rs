@@ -13,6 +13,10 @@
 //! 3. **Drift convergence** — on the synthetic drift trace the remapper
 //!    re-optimizes and its final plan equals the offline optimum for the
 //!    post-drift mix, bit for bit.
+//! 4. **Deadline fast path** — end-to-end remap latency from a
+//!    triggering window to the *first published plan*: the heuristic
+//!    fast path ([`RemapPolicy::with_deadline`]) must publish strictly
+//!    faster than the eager exact search it defers.
 //!
 //! Emits `BENCH_remap.json` for the perf trajectory (validated — and
 //! required — by the `bench_schema` gate).
@@ -154,6 +158,36 @@ fn main() {
         serve_synthetic(mixed_trace(200, 5), 2, 25, None);
     });
 
+    // 4. drift-to-first-plan latency: a fresh remapper observes one full
+    // triggering window, and we time until the first plan is published —
+    // the eager path pays the exact b&b search, the deadline path only
+    // the heuristic mapper
+    let first_plan = |deadline: bool| {
+        let policy = RemapPolicy::new(24, 0.4);
+        let mut r = Remapper::new(
+            if deadline { policy.with_deadline() } else { policy },
+            Remapper::default_candidates(),
+        );
+        for _ in 0..8 {
+            r.observe("conv3x3");
+            r.observe("fc");
+            r.observe("lstm_cell");
+        }
+        assert!(r.maybe_remap(), "a full window must publish a first plan");
+        let plan = r.plan().expect("first plan");
+        assert_eq!(plan.fast, deadline, "wrong path published the first plan");
+    };
+    let m_exact_first = b.bench("perf_remap/first plan (eager exact)", || first_plan(false));
+    let m_fast_first = b.bench("perf_remap/first plan (deadline fast path)", || {
+        first_plan(true)
+    });
+    assert!(
+        m_fast_first.mean_ns < m_exact_first.mean_ns,
+        "fast path is not faster to the first plan: {} ns >= {} ns",
+        m_fast_first.mean_ns,
+        m_exact_first.mean_ns
+    );
+
     fields.push(("drift_remaps".into(), Json::int(r.remaps as u64)));
     fields.push(("drift_checks".into(), Json::int(r.checks as u64)));
     fields.push(("seeded_shapes".into(), Json::int(r.seeds().len() as u64)));
@@ -175,12 +209,24 @@ fn main() {
     fields.push(("mean_ns_co_opt_cold".into(), Json::num(m_cold.mean_ns)));
     fields.push(("mean_ns_co_opt_warm".into(), Json::num(m_warm.mean_ns)));
     fields.push(("mean_ns_serve_200".into(), Json::num(m_serve.mean_ns)));
+    fields.push((
+        "mean_ns_first_plan_exact".into(),
+        Json::num(m_exact_first.mean_ns),
+    ));
+    fields.push((
+        "mean_ns_first_plan_fast".into(),
+        Json::num(m_fast_first.mean_ns),
+    ));
+    fields.push((
+        "first_plan_speedup".into(),
+        Json::num(m_exact_first.mean_ns / m_fast_first.mean_ns.max(1.0)),
+    ));
 
     let path = "BENCH_remap.json";
     std::fs::write(path, Json::Obj(fields).to_string()).expect("write bench json");
     println!("wrote {path}");
     println!(
         "perf_remap OK (deterministic serving, warm-started remap bit-identical to offline, \
-         drift tracked to the post-drift optimum)"
+         drift tracked to the post-drift optimum, deadline fast path beats eager to first plan)"
     );
 }

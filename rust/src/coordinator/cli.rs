@@ -21,7 +21,9 @@ use crate::pareto::{
     merge_all_frontiers, pareto_optimize, pareto_optimize_shard, FrontierCheckpoint,
     FrontierEntry, ParetoConfig, ParetoResult, PlanSelector,
 };
-use crate::search::{default_threads, optimize_network, search_hierarchy, SearchOpts};
+use crate::search::{
+    default_threads, optimize_layer, optimize_network, search_hierarchy, SearchOpts,
+};
 use crate::util::{fmt_sig, Args};
 
 const USAGE: &str = "interstellar — Halide-schedule analysis of DNN accelerators (ASPLOS'20 reproduction)
@@ -35,21 +37,27 @@ COMMANDS:
                   [--full] [--budget BYTES] [--min-tops T] [--clock-ghz G]
                   [--rf1 L] [--rf2-ratio L] [--gbuf L] [--ratio-min R]
                   [--ratio-max R] [--cap N] [--divisors N] [--orders N]
-                  [--shard I/N --checkpoint PATH] [--json]
+                  [--no-prime] [--shard I/N --checkpoint PATH] [--json]
                   network-level co-optimizer: cross-architecture b&b over
                   the design space, with capacity/throughput constraints;
                   L are comma-separated byte sizes. --shard runs one
-                  worker slice and writes a mergeable JSON checkpoint
+                  worker slice and writes a mergeable JSON checkpoint;
+                  the heuristic scout primes the b&b incumbent unless
+                  --no-prime (the winner is bit-identical either way)
   co-opt-merge    <ckpt.json>... [--out PATH] [--json]
                   merge shard checkpoints (any order): winner is
                   bit-identical to the single-process co-opt run
   pareto          --net <name> [--batch N] [--head N] [--space paper|full]
                   [--eps E] [--points N] [--latency-budget CYCLES]
-                  [co-opt's space/search/constraint knobs]
+                  [--no-prime] [co-opt's space/search/constraint knobs]
                   [--shard I/N --checkpoint PATH] [--json]
                   exact (energy, cycles) frontier of the design space
                   instead of a single winner; --latency-budget also picks
                   the min-energy point within the cycle budget
+  fastmap         --net <name> [--batch N] [--full]
+                  microsecond greedy heuristic mapper vs the exact
+                  per-layer search on the Eyeriss-like baseline: energy
+                  gap and mapping-evaluation counts per unique layer
   pareto-merge    <ckpt.json>... [--out PATH] [--json]
                   merge frontier checkpoints (any order): frontier is
                   bit-identical to the single-process pareto run
@@ -69,12 +77,16 @@ COMMANDS:
   serve           [--requests N] [--threads N] [--artifacts DIR]
                   [--batch-requests B] [--synthetic] [--remap]
                   [--window W] [--drift D] [--latency-budget CYCLES]
+                  [--deadline]
                   batched serving loop; --remap re-optimizes mappings
                   online when the window mix drifts past D (plans swap
                   between batches); --latency-budget re-selects the
                   min-energy plan within the budget from a live
-                  design-space frontier; --synthetic runs the
-                  deterministic stand-in executor (no artifacts needed)
+                  design-space frontier; --deadline publishes the
+                  heuristic fast-path plan immediately on drift and
+                  swaps in the exact plan when its search lands;
+                  --synthetic runs the deterministic stand-in executor
+                  (no artifacts needed)
   report          run every experiment at fast effort
 
 Common options: --threads N (default: cores-1), --csv (CSV output), --full";
@@ -165,6 +177,9 @@ pub fn run(args: Args) -> Result<()> {
             if args.get("min-tops").is_some() {
                 cfg.min_tops = Some(args.get_f64("min-tops", 0.0));
             }
+            // scout priming is on by default: the winner is bit-identical,
+            // only the b&b incumbent warms up faster
+            cfg = cfg.with_prime(!args.has_flag("no-prime"));
             if let Some(spec) = args.get("shard") {
                 let (index, nshards) = parse_shard_spec(spec)?;
                 let Some(path) = args.get("checkpoint") else {
@@ -243,6 +258,7 @@ pub fn run(args: Args) -> Result<()> {
             if args.get("min-tops").is_some() {
                 cfg.min_tops = Some(args.get_f64("min-tops", 0.0));
             }
+            cfg = cfg.with_prime(!args.has_flag("no-prime"));
             let pcfg = ParetoConfig {
                 eps: args.get_f64("eps", 0.0),
                 max_points: args.get("points").map(|_| args.get_usize("points", usize::MAX)),
@@ -336,6 +352,78 @@ pub fn run(args: Args) -> Result<()> {
                 println!("{}", merged.stats);
             }
         }
+        "fastmap" => {
+            let name = args.get_str("net", "alexnet");
+            let batch = args.get_u64("batch", 4);
+            let Some(net) = network(name, batch) else {
+                bail!("unknown network {name} (try: {:?})", crate::nn::network_names());
+            };
+            let arch = eyeriss_like();
+            let df = Dataflow::parse("C|K").unwrap();
+            let opts = effort_opts(effort);
+            println!(
+                "heuristic mapper vs exact per-layer search on {} — {} (batch {batch}):",
+                arch.describe(),
+                net.name
+            );
+            let mut t = crate::util::table::Table::new(vec![
+                "layer", "heur uJ", "exact uJ", "gap %", "heur us", "exact us", "speedup",
+            ]);
+            let mut cache = crate::engine::DivisorCache::new();
+            let mut seen: std::collections::HashSet<crate::netopt::LayerKey> =
+                Default::default();
+            let (mut heur_ns, mut exact_ns) = (0u128, 0u128);
+            for l in &net.layers {
+                if !seen.insert((l.shape.bounds, l.shape.stride)) {
+                    continue; // repeated shape: same mapping, nothing new to time
+                }
+                let t0 = std::time::Instant::now();
+                let heur =
+                    crate::fastmap::heuristic_layer(&l.shape, &arch, &df, &Table3, &mut cache);
+                let dh = t0.elapsed().as_nanos();
+                let t1 = std::time::Instant::now();
+                let exact = optimize_layer(&l.shape, &arch, &df, &Table3, &opts, threads);
+                let dx = t1.elapsed().as_nanos();
+                heur_ns += dh;
+                exact_ns += dx;
+                match (heur, exact) {
+                    (Some(h), Some(x)) => {
+                        let gap = (h.result.energy_pj / x.result.energy_pj - 1.0) * 100.0;
+                        t.row(vec![
+                            l.name.clone(),
+                            fmt_sig(h.result.energy_pj / 1e6),
+                            fmt_sig(x.result.energy_pj / 1e6),
+                            format!("{gap:+.2}"),
+                            format!("{:.1}", dh as f64 / 1e3),
+                            format!("{:.1}", dx as f64 / 1e3),
+                            format!("{:.0}x", dx as f64 / dh.max(1) as f64),
+                        ]);
+                    }
+                    (h, x) => {
+                        // both None on truly unmappable layers (the
+                        // heuristic is infeasible exactly when the exact
+                        // search is); print whatever side exists
+                        t.row(vec![
+                            l.name.clone(),
+                            h.map_or("-".into(), |h| fmt_sig(h.result.energy_pj / 1e6)),
+                            x.map_or("-".into(), |x| fmt_sig(x.result.energy_pj / 1e6)),
+                            "-".into(),
+                            "-".into(),
+                            "-".into(),
+                            "-".into(),
+                        ]);
+                    }
+                }
+            }
+            show(&t);
+            println!(
+                "aggregate over {} unique layers: heuristic {:.1} us, exact {:.1} us ({:.0}x)",
+                seen.len(),
+                heur_ns as f64 / 1e3,
+                exact_ns as f64 / 1e3,
+                exact_ns as f64 / (heur_ns.max(1)) as f64
+            );
+        }
         "sweep-dataflow" => show(&experiments::fig8_dataflow(layer_shape(&args), effort, threads)),
         "utilization" => show(&experiments::fig9_utilization(layer_shape(&args))),
         "sweep-blocking" => show(&experiments::fig10_blocking(layer_shape(&args), effort, threads)),
@@ -373,6 +461,9 @@ pub fn run(args: Args) -> Result<()> {
                 let window = args.get_usize("window", 64);
                 let drift = args.get_f64("drift", 0.25);
                 let mut policy = RemapPolicy::new(window, drift);
+                if args.has_flag("deadline") {
+                    policy = policy.with_deadline();
+                }
                 if let Some(b) = budget {
                     policy = policy.with_latency_budget(b);
                     // a budget implies frontier re-selection from a live
@@ -471,7 +562,7 @@ pub fn run(args: Args) -> Result<()> {
 /// One-line serving report shared by `run-e2e` and `serve`.
 fn print_serve_stats(stats: &serve::ServeStats) {
     println!(
-        "completed {}  wall {:.2}s  mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  {:.1} req/s  checksum {:.3}  batches {}  remaps {}",
+        "completed {}  wall {:.2}s  mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  {:.1} req/s  checksum {:.3}  batches {}  remaps {} (fast {})",
         stats.completed,
         stats.wall_s,
         stats.mean_latency_ms,
@@ -481,7 +572,8 @@ fn print_serve_stats(stats: &serve::ServeStats) {
         stats.rps,
         stats.checksum,
         stats.batches,
-        stats.remaps
+        stats.remaps,
+        stats.fast_remaps
     );
 }
 

@@ -39,13 +39,38 @@
 //! functions of the request trace (never of timing or thread count),
 //! serving statistics — including the remap count — stay byte-identical
 //! across worker counts, extending the serve-loop determinism contract.
+//!
+//! ## Deadline fast path
+//!
+//! [`RemapPolicy::with_deadline`] bounds the drift-to-first-plan latency
+//! by the microsecond heuristic mapper ([`crate::fastmap`]): on drift,
+//! the heuristic plan over the same candidates is published immediately
+//! (tagged [`MappingPlan::fast`]) and the exact search is *deferred* —
+//! the triggering window counts are snapshotted and the branch-and-bound
+//! runs at the next batch boundary (or the end-of-trace
+//! `flush_pending`), hot-swapping the exact plan through the same
+//! channel. The deferral is trace-deterministic, never wall-clock: a
+//! fast attempt stamps `last_mix` at the same boundaries as an exact
+//! one, so the trigger sequence — and therefore the final adopted plan,
+//! bit for bit — matches the no-deadline run (`coordinator::tests`
+//! asserts it). A fresh trigger drops a stale pending snapshot (its
+//! exact plan would be immediately superseded anyway), so a fast-moving
+//! mix can legitimately run *fewer* exact searches than the no-deadline
+//! path. One corner is intentionally out of scope: with a
+//! `latency_budget`, a heuristic plan can publish for a mix whose exact
+//! frontier later has no point inside the budget — the fast plan then
+//! stays active where the no-deadline path would have kept the previous
+//! plan; combine the deadline with budgets only when that transient is
+//! acceptable.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
 use crate::arch::{eyeriss_like, no_local_reuse, small_rf, Arch, ArrayShape};
+use crate::dataflow::Dataflow;
 use crate::energy::Table3;
+use crate::fastmap;
 use crate::netopt::{co_optimize_arches_seeded, DesignSpace, NetOptConfig, SeedTable};
 use crate::nn::{Layer, Network};
 use crate::pareto::{
@@ -76,6 +101,12 @@ pub struct RemapPolicy {
     /// budget, instead of the unconstrained scalar argmin. A remap whose
     /// frontier has no point inside the budget keeps the current plan.
     pub latency_budget: Option<f64>,
+    /// Deadline mode: on drift, publish the microsecond heuristic plan
+    /// ([`crate::fastmap::heuristic_plan`]) immediately and defer the
+    /// exact search to the next batch boundary (see the module docs'
+    /// "Deadline fast path"). The final adopted plan stays bit-identical
+    /// to the no-deadline run; only the transient differs.
+    pub deadline: bool,
 }
 
 impl RemapPolicy {
@@ -89,12 +120,20 @@ impl RemapPolicy {
             opts,
             threads: 1,
             latency_budget: None,
+            deadline: false,
         }
     }
 
     /// Same policy with a latency budget (weighted cycles per window).
     pub fn with_latency_budget(mut self, cycles: f64) -> RemapPolicy {
         self.latency_budget = Some(cycles);
+        self
+    }
+
+    /// Same policy with the deadline fast path enabled (see
+    /// [`deadline`](Self::deadline)).
+    pub fn with_deadline(mut self) -> RemapPolicy {
+        self.deadline = true;
         self
     }
 }
@@ -279,6 +318,10 @@ pub struct MappingPlan {
     /// Per-artifact `(name, start, len)` spans into
     /// `winner.opt.per_layer`.
     pub spans: Vec<(String, usize, usize)>,
+    /// `true` for a transient heuristic plan published by the deadline
+    /// fast path; the exact plan for the same mix (or a fresher one)
+    /// always follows through the same channel.
+    pub fast: bool,
 }
 
 impl MappingPlan {
@@ -321,6 +364,11 @@ pub struct Remapper {
     /// function of the mix, so retrying before the mix drifts again
     /// could only repeat the failure.
     last_mix: Option<Vec<(String, f64)>>,
+    /// Deadline mode: the window-counts snapshot of a drift whose fast
+    /// plan was published but whose exact search is still owed. Serviced
+    /// at the next batch boundary (or `flush_pending`); dropped when a
+    /// fresh drift supersedes it.
+    pending_exact: Option<Vec<(String, usize)>>,
     seeds: SeedTable,
     plan: Option<Arc<MappingPlan>>,
     epoch: usize,
@@ -330,6 +378,8 @@ pub struct Remapper {
     pub checks: usize,
     /// Re-optimizations that produced (and published) a plan.
     pub remaps: usize,
+    /// Heuristic fast-path plans published (deadline mode only).
+    pub fast_plans: usize,
 }
 
 impl Remapper {
@@ -356,6 +406,7 @@ impl Remapper {
             selector: None,
             window,
             last_mix: None,
+            pending_exact: None,
             seeds: SeedTable::new(),
             plan: None,
             epoch: 0,
@@ -363,6 +414,7 @@ impl Remapper {
             rx,
             checks: 0,
             remaps: 0,
+            fast_plans: 0,
         }
     }
 
@@ -407,7 +459,7 @@ impl Remapper {
     /// timing or thread count.
     pub fn maybe_remap(&mut self) -> bool {
         if self.window.is_empty() {
-            return false;
+            return self.flush_pending();
         }
         self.checks += 1;
         let trigger = match &self.last_mix {
@@ -415,8 +467,12 @@ impl Remapper {
             Some(m) => mix_drift(m, &self.window.mix()) > self.policy.drift,
         };
         if !trigger {
-            return false;
+            // quiet boundary: pay off a deferred exact search, if owed
+            return self.flush_pending();
         }
+        // a fresh drift supersedes any owed exact search — its plan
+        // would be replaced by this remap's anyway
+        self.pending_exact = None;
         self.remap_now().is_some()
     }
 
@@ -425,12 +481,94 @@ impl Remapper {
     /// through the plan-swap channel. Returns `None` (keeping the old
     /// plan active) when no candidate architecture maps every layer of
     /// the mix — or, under a latency budget, when no frontier point
-    /// fits the budget.
+    /// fits the budget. In deadline mode the returned plan is the
+    /// immediately-published heuristic one and the exact search is owed
+    /// (see [`flush_pending`](Self::flush_pending)); without a deadline
+    /// it is the exact winner.
     pub fn remap_now(&mut self) -> Option<Arc<MappingPlan>> {
         let counts = self.window.counts();
         if counts.is_empty() {
             return None;
         }
+        // Stamp the attempted mix up front — the window cannot change
+        // mid-call, so this is equivalent to the historical success- and
+        // failed-attempt-path writes. Re-optimization is a pure function
+        // of the mix, so an identical mix is never retried before it
+        // drifts again. Deadline mode relies on the stamp landing here,
+        // at the *trigger* boundary: the deferred exact search runs
+        // against a moved window and must never re-stamp, or the
+        // trigger sequence would diverge from the no-deadline run.
+        self.last_mix = Some(self.window.mix());
+        if self.policy.deadline {
+            if let Some(plan) = self.publish_fast(&counts) {
+                self.pending_exact = Some(counts);
+                return Some(plan);
+            }
+            // no feasible heuristic plan — run the exact search
+            // synchronously; nothing was published yet
+        }
+        self.exact_remap(counts)
+    }
+
+    /// Build and publish the heuristic fast-path plan for a triggering
+    /// mix ([`crate::fastmap::heuristic_plan`] — microseconds per
+    /// candidate). Candidates mirror the exact path's: the fixed list,
+    /// or the live space's current enumeration. Returns `None` when no
+    /// candidate heuristically maps the whole mix (within the latency
+    /// budget, when set).
+    fn publish_fast(&mut self, counts: &[(String, usize)]) -> Option<Arc<MappingPlan>> {
+        let (net, weights, spans) = mix_network(counts);
+        let df = Dataflow::parse("C|K").unwrap();
+        let winner = match &self.source {
+            PlanSource::Fixed(arches) => fastmap::heuristic_plan(
+                &net,
+                arches,
+                &df,
+                &Table3,
+                Some(weights.as_slice()),
+                self.policy.latency_budget,
+            ),
+            PlanSource::Space(space) => fastmap::heuristic_plan(
+                &net,
+                &space.enumerate().candidates,
+                &df,
+                &Table3,
+                Some(weights.as_slice()),
+                self.policy.latency_budget,
+            ),
+        }?;
+        let plan = Arc::new(MappingPlan {
+            epoch: self.epoch,
+            mix: counts.to_vec(),
+            winner,
+            spans,
+            fast: true,
+        });
+        self.epoch += 1;
+        self.fast_plans += 1;
+        self.plan = Some(plan.clone());
+        // receiver lives in self, so the channel can never be closed
+        self.tx.send(plan.clone()).expect("plan-swap channel");
+        Some(plan)
+    }
+
+    /// Service a deferred exact search, if one is owed. Returns whether
+    /// a plan was published. The serving loop calls this through
+    /// [`maybe_remap`](Self::maybe_remap) at quiet batch boundaries and
+    /// directly once after the trace ends, so a deadline run always
+    /// converges to the exact plan of its last triggering mix.
+    pub fn flush_pending(&mut self) -> bool {
+        match self.pending_exact.take() {
+            Some(counts) => self.exact_remap(counts).is_some(),
+            None => false,
+        }
+    }
+
+    /// The branch-and-bound re-optimization for a counts snapshot —
+    /// shared by the synchronous path and the deferred deadline path.
+    /// Never touches `last_mix` (the caller stamped it at the trigger
+    /// boundary); failure keeps the old plan active.
+    fn exact_remap(&mut self, counts: Vec<(String, usize)>) -> Option<Arc<MappingPlan>> {
         let (net, weights, spans) = mix_network(&counts);
         let cfg = NetOptConfig::new(self.policy.opts.clone(), self.policy.threads)
             .with_layer_weights(weights);
@@ -468,7 +606,7 @@ impl Remapper {
                     self.selector = Some(sel);
                     w
                 }
-                None => return self.record_failed_attempt(),
+                None => return None,
             }
         } else {
             let PlanSource::Fixed(arches) = &self.source else {
@@ -479,7 +617,7 @@ impl Remapper {
             self.seeds.merge(&res.seeds);
             match res.best() {
                 Some(w) => w.clone(),
-                None => return self.record_failed_attempt(),
+                None => return None,
             }
         };
         let plan = Arc::new(MappingPlan {
@@ -487,26 +625,14 @@ impl Remapper {
             mix: counts,
             winner,
             spans,
+            fast: false,
         });
         self.epoch += 1;
         self.remaps += 1;
-        self.last_mix = Some(self.window.mix());
         self.plan = Some(plan.clone());
         // receiver lives in self, so the channel can never be closed
         self.tx.send(plan.clone()).expect("plan-swap channel");
         Some(plan)
-    }
-
-    /// A re-optimization failed to produce an installable plan (no
-    /// feasible candidate, or no frontier point within the budget).
-    /// Re-optimization is a pure function of the window mix, so an
-    /// identical mix can never succeed later — record the attempted mix
-    /// so [`maybe_remap`](Self::maybe_remap) only retries after the mix
-    /// actually drifts again, instead of re-running the whole search at
-    /// every batch boundary on the serving path.
-    fn record_failed_attempt(&mut self) -> Option<Arc<MappingPlan>> {
-        self.last_mix = Some(self.window.mix());
-        None
     }
 
     /// Drain one pending plan from the plan-swap channel (the serving

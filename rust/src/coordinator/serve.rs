@@ -39,6 +39,17 @@
 //! in-flight batch always completes under the plan it started with.
 //! Remap decisions are pure functions of the trace, so enabling
 //! remapping preserves the determinism contract.
+//!
+//! With a deadline policy ([`RemapPolicy::with_deadline`]
+//! (super::remap::RemapPolicy::with_deadline)) a drift trigger first
+//! publishes the heuristic fast-path plan (counted in
+//! [`ServeStats::fast_remaps`]) and defers the exact search; the serve
+//! loop services the deferred search on the next quiet batch via
+//! [`Remapper::flush_pending`](super::remap::Remapper::flush_pending),
+//! and flushes once more after the trace ends so every run converges to
+//! the exact plan of its last triggering mix. Because the mix window is
+//! stamped identically in both modes, the *final* adopted plan is
+//! bit-identical with and without the deadline.
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -85,6 +96,9 @@ pub struct ServeStats {
     pub batches: usize,
     /// Plan swaps received from the remapper (0 without `--remap`).
     pub remaps: usize,
+    /// Of those swaps, how many were transient heuristic fast-path plans
+    /// ([`MappingPlan::fast`]; 0 without a deadline policy).
+    pub fast_remaps: usize,
     /// Epoch of the plan active when serving finished (`None` when no
     /// remapper was attached or no plan was ever produced).
     pub plan_epoch: Option<usize>,
@@ -230,6 +244,7 @@ where
     let mut checksum = 0.0f64;
     let mut batches = 0usize;
     let mut remaps = 0usize;
+    let mut fast_remaps = 0usize;
     let mut active: Option<Arc<MappingPlan>> = None;
 
     let mut start = 0usize;
@@ -285,11 +300,28 @@ where
             }
             r.maybe_remap();
             while let Some(p) = r.take_plan() {
+                if p.fast {
+                    fast_remaps += 1;
+                }
                 active = Some(p); // hot swap between batches
                 remaps += 1;
             }
         }
         start = end;
+    }
+    // End-of-trace convergence: a deadline remapper may still owe the
+    // exact search for its last fast plan — run it now and adopt the
+    // result, so a deadline run always ends on the exact plan of its
+    // last triggering mix (the deadline determinism contract).
+    if let Some(r) = &mut remapper {
+        r.flush_pending();
+        while let Some(p) = r.take_plan() {
+            if p.fast {
+                fast_remaps += 1;
+            }
+            active = Some(p);
+            remaps += 1;
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
 
@@ -304,6 +336,7 @@ where
         checksum,
         batches,
         remaps,
+        fast_remaps,
         plan_epoch: active.map(|p| p.epoch),
     })
 }

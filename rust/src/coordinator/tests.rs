@@ -260,6 +260,61 @@ fn remap_follows_drift_to_the_post_drift_optimum() {
 }
 
 #[test]
+fn deadline_remap_converges_to_the_exact_plan_bit_for_bit() {
+    // The deadline fast path defers the exact search behind an instant
+    // heuristic plan, but because the mix window is stamped at remap
+    // *trigger* time in both modes, the trigger sequence — and therefore
+    // the final adopted plan — is bit-identical with and without the
+    // deadline. (Remap *counts* may legitimately differ: a fresh trigger
+    // supersedes a still-pending exact search, so deadline runs can run
+    // fewer exact searches than eager runs.)
+    let trace = drift_trace(96, 48, &["conv3x3", "fc"], &["lstm_cell"], 11);
+
+    let mut plain = test_remapper(24, 0.4);
+    let pstats = serve_synthetic(trace.clone(), 2, 12, Some(&mut plain));
+    let pplan = plain.plan().expect("plain final plan");
+    assert_eq!(pstats.fast_remaps, 0, "no deadline, no fast plans");
+
+    let mut reference: Option<ServeStats> = None;
+    for t in [1usize, 2, 4] {
+        let mut r = Remapper::new(
+            RemapPolicy::new(24, 0.4).with_deadline(),
+            vec![eyeriss_like(), small_rf()],
+        );
+        let stats = serve_synthetic(trace.clone(), t, 12, Some(&mut r));
+        let plan = r.plan().expect("deadline final plan");
+
+        // the fast path actually fired, and serve drained every plan it
+        // (and the deferred exact searches) published
+        assert!(r.fast_plans >= 1, "t={t}: deadline never published fast");
+        assert!(stats.fast_remaps >= 1, "t={t}: fast plans never reached serve");
+        assert_eq!(stats.fast_remaps, r.fast_plans, "t={t}: fast swap count");
+        assert_eq!(stats.remaps, r.remaps + r.fast_plans, "t={t}: swap count");
+
+        // convergence: the end-of-trace flush leaves the *exact* plan of
+        // the last triggering mix active — bit-identical to the eager run
+        assert!(!plan.fast, "t={t}: final plan must be the exact one");
+        assert_eq!(plan.mix, pplan.mix, "t={t}: final mix differs");
+        assert_winner_bits_eq("deadline vs eager final plan", &plan.winner, &pplan.winner);
+        assert_eq!(
+            stats.checksum.to_bits(),
+            pstats.checksum.to_bits(),
+            "t={t}: serving results must not depend on the remap mode"
+        );
+
+        // and the deadline mode is itself deterministic across threads
+        match &reference {
+            None => reference = Some(stats),
+            Some(s0) => {
+                assert_eq!(stats.remaps, s0.remaps, "t={t}");
+                assert_eq!(stats.fast_remaps, s0.fast_remaps, "t={t}");
+                assert_eq!(stats.plan_epoch, s0.plan_epoch, "t={t}");
+            }
+        }
+    }
+}
+
+#[test]
 fn workers_adopt_the_active_plan_at_batch_boundaries() {
     // The plan-swap contract: a plan published after batch k is handed
     // to every serving worker's executor (Executor::adopt_plan) at the

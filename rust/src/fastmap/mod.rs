@@ -1,0 +1,489 @@
+//! Microsecond heuristic mapper — the serving fast path and the scout
+//! that primes every exact search.
+//!
+//! Interstellar's central result is that good loop *blocking* — not
+//! exotic dataflow — determines energy, which means a cheap analytical
+//! blocking heuristic should land within a few percent of the exact
+//! branch-and-bound winner (LOCAL and the Turbo-Charged Mapper make the
+//! same observation). This module is that heuristic, built entirely from
+//! existing engine pieces — no new evaluation model:
+//!
+//! - **Greedy divisor-guided blocking** ([`heuristic_layer`]): start
+//!   from the all-residues-at-DRAM table (spatial factors from the same
+//!   [`divisor_replication`] the exact search uses) and, innermost level
+//!   outward, repeatedly move the largest (or, in the balanced variant,
+//!   smallest) divisor of each dimension's DRAM residue down into the
+//!   level while the stage-2 capacity check still passes. Every
+//!   successful move at least halves a residue, so the construction is
+//!   bounded by the bit-length of the layer bounds — microseconds, not
+//!   the thousands of candidate tables the enumerator walks. The fit
+//!   test is an allocation-free mirror of
+//!   [`Footprints`](crate::engine::Footprints) `compute` + `fit`, so a
+//!   heuristic table is *valid by construction* (stage-1 validate holds
+//!   because moves preserve the per-dimension factor products).
+//! - **Order heuristic**: dimension priority is the dominant-tensor
+//!   reuse weight (dimensions irrelevant to the largest tensors first —
+//!   blocking them buys the most per-level reuse), and the loop orders
+//!   come from the same structured stationary set
+//!   (`search::order_combos`) the optimizer uses, picked by evaluating
+//!   the candidate tables through the normal staged engine.
+//! - **Network/plan level** ([`heuristic_network`], [`heuristic_plan`]):
+//!   the same shape-deduplicated, mix-weighted accumulation as the exact
+//!   co-optimizer, so heuristic totals are directly comparable to (and
+//!   feed) the exact machinery.
+//!
+//! ## Priming (exactness preserved)
+//!
+//! Two integration points tighten the exact searches without touching
+//! their argmin bits:
+//!
+//! 1. **Scout-point priming** (`netopt::run_points_gated`, enabled by
+//!    [`NetOptConfig::prime`](crate::netopt::NetOptConfig)): the
+//!    heuristically best feasible candidate architecture
+//!    ([`scout_candidates`]) is evaluated *first*, through the identical
+//!    official point evaluator. Its completed total is a real enumerated
+//!    result, so the shared incumbent (scalar mode) or the dominance
+//!    archive (frontier mode) starts from an admissible bound instead of
+//!    `+inf` — every later point prunes harder. Because the scout is
+//!    just an evaluation-order change of the same candidate set, the
+//!    winner (and the exact frontier) is bit-identical by the existing
+//!    pruning contracts; no certification or rerun is ever needed.
+//! 2. **Seed-and-rerun priming** ([`optimize_layer_primed`]): the
+//!    heuristic energy seeds the layer incumbent; a clipped outcome
+//!    (nothing found, or a result above the seed — possible when the
+//!    heuristic table lies outside the capped enumeration) falls back to
+//!    the unseeded search, the same fallback idiom `netopt` uses for its
+//!    cross-architecture seeds. The returned winner is bit-identical to
+//!    [`optimize_layer`](crate::search::optimize_layer).
+//!
+//! The serving fast path (`RemapPolicy::deadline`,
+//! `coordinator::remap`) publishes [`heuristic_plan`]'s pick immediately
+//! on drift and hot-swaps the exact plan in when the deferred
+//! branch-and-bound finishes. `fastmap::tests` property-checks validity
+//! and priming bit-identity on random (shape, arch) draws;
+//! `benches/perf_fastmap.rs` gates the energy gap and the speedup in CI.
+
+use std::collections::HashMap;
+
+use crate::arch::{Arch, LevelKind};
+use crate::dataflow::Dataflow;
+use crate::energy::CostModel;
+use crate::engine::{DivisorCache, Engine, EvalStats, Staged};
+use crate::loopnest::{Blocking, Mapping, Shape, ALL_DIMS, ALL_TENSORS, NDIMS};
+use crate::netopt::LayerKey;
+use crate::nn::Network;
+use crate::search::{
+    divisor_replication, optimize_layer_seeded, order_combos, HierarchyResult, LayerOpt,
+    NetworkOpt, SearchOpts,
+};
+
+/// Order combos the heuristic scores per table — the structured
+/// stationary subset (uniform inner stationarity × varied outermost
+/// level). Kept small: the whole heuristic must stay in microseconds.
+const HEUR_ORDER_CAP: usize = 9;
+
+/// Dimension indices in descending reuse weight: the summed sizes of the
+/// tensors a dimension is *irrelevant* to ([`Tensor::relevant`]). Moving
+/// an irrelevant dimension's factor into an inner level multiplies the
+/// reuse of those tensors at that level without growing their tiles, so
+/// high-weight dimensions are blocked first. Stable sort keeps
+/// [`ALL_DIMS`] order on ties.
+fn reuse_priority(shape: &Shape) -> [usize; NDIMS] {
+    let w: Vec<u64> = ALL_DIMS
+        .iter()
+        .map(|&d| {
+            ALL_TENSORS
+                .iter()
+                .filter(|t| !t.relevant(d))
+                .map(|&t| shape.tensor_elems(t))
+                .sum()
+        })
+        .collect();
+    let mut idx: Vec<usize> = (0..NDIMS).collect();
+    idx.sort_by(|&a, &b| w[b].cmp(&w[a]));
+    idx.try_into().expect("NDIMS indices")
+}
+
+/// The plain canonical priority — a second greedy variant; the two often
+/// produce different tables and the engine picks the better one.
+fn canonical_priority() -> [usize; NDIMS] {
+    let mut idx = [0usize; NDIMS];
+    for (i, v) in idx.iter_mut().enumerate() {
+        *v = i;
+    }
+    idx
+}
+
+/// Allocation-free mirror of [`crate::engine::Footprints`] `compute` +
+/// `fit`: cumulative per-level factor products, spatial factors folded
+/// in at and above `spatial_at`, halo'd input tiles clamped to the layer
+/// extent, double-buffered capacity per on-chip level. Must stay
+/// bit-identical to the engine's stage-2 check — the greedy construction
+/// relies on it so its output always passes the real pipeline.
+fn fits(
+    table: &[[u64; NDIMS]],
+    shape: &Shape,
+    spatial: &[u64; NDIMS],
+    spatial_at: usize,
+    arch: &Arch,
+) -> bool {
+    let stride = shape.stride as u64;
+    let (in_x, in_y) = (shape.input_x(), shape.input_y());
+    let mut cum = [1u64; NDIMS];
+    for (i, level) in table.iter().enumerate() {
+        for (d, c) in cum.iter_mut().enumerate() {
+            *c *= level[d];
+        }
+        if arch.levels[i].kind == LevelKind::Dram {
+            continue;
+        }
+        let ws = |d: usize| -> u64 {
+            if i >= spatial_at {
+                cum[d] * spatial[d]
+            } else {
+                cum[d]
+            }
+        };
+        let (b, k, c, x, y, fx, fy) = (ws(0), ws(1), ws(2), ws(3), ws(4), ws(5), ws(6));
+        let ix = ((x - 1) * stride + fx).min(in_x);
+        let iy = ((y - 1) * stride + fy).min(in_y);
+        let need = (b * c * ix * iy + k * c * fx * fy + b * k * x * y) * 2;
+        if need > arch.level_words(i) {
+            return false;
+        }
+    }
+    true
+}
+
+/// One greedy blocking table: all residues start at DRAM (outermost
+/// level); for each on-chip level, innermost first, keep moving divisors
+/// of the DRAM residues down while the capacity check passes —
+/// `largest_first` grabs the biggest fitting divisor per move (maximal
+/// filling), otherwise the smallest `> 1` (balanced growth). Returns
+/// `None` exactly when the base table itself does not fit: footprints
+/// are monotone in the cumulative factors, so nothing else can fit
+/// either.
+fn greedy_table(
+    shape: &Shape,
+    arch: &Arch,
+    spatial: &[u64; NDIMS],
+    spatial_at: usize,
+    priority: &[usize; NDIMS],
+    largest_first: bool,
+    cache: &mut DivisorCache,
+) -> Option<Vec<[u64; NDIMS]>> {
+    let nlv = arch.num_levels();
+    let mut table = vec![[1u64; NDIMS]; nlv];
+    for d in 0..NDIMS {
+        table[nlv - 1][d] = shape.bounds[d] / spatial[d];
+    }
+    if !fits(&table, shape, spatial, spatial_at, arch) {
+        return None;
+    }
+    for lvl in 0..nlv - 1 {
+        loop {
+            let mut moved = false;
+            for &d in priority {
+                let residue = table[nlv - 1][d];
+                if residue <= 1 {
+                    continue;
+                }
+                let divs = cache.divisors(residue);
+                // candidate factors, best-first for the chosen style; in
+                // balanced mode only the smallest prime step is tried
+                // (its multiples can only need more capacity)
+                let attempts: Vec<u64> = if largest_first {
+                    divs.iter().rev().copied().filter(|&f| f > 1).collect()
+                } else {
+                    divs.iter().copied().find(|&f| f > 1).into_iter().collect()
+                };
+                for f in attempts {
+                    table[lvl][d] *= f;
+                    table[nlv - 1][d] /= f;
+                    if fits(&table, shape, spatial, spatial_at, arch) {
+                        moved = true;
+                        break;
+                    }
+                    table[lvl][d] /= f;
+                    table[nlv - 1][d] *= f;
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+    }
+    Some(table)
+}
+
+/// The heuristic mapping of one layer on one architecture: greedy tables
+/// (two priorities × two growth styles, deduplicated) scored over the
+/// structured order set through the normal staged engine; the best point
+/// is materialized with the engine's full stage-4 evaluation. Runs in
+/// microseconds — at most four tables × [`HEUR_ORDER_CAP`] bounded
+/// evaluations, with a running local bound pruning most of them.
+///
+/// Returns `None` exactly when nothing fits this architecture (the
+/// all-ones base tile already busts a level), which is precisely when
+/// the exact search returns `None` too.
+pub fn heuristic_layer(
+    shape: &Shape,
+    arch: &Arch,
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    cache: &mut DivisorCache,
+) -> Option<LayerOpt> {
+    let smap = divisor_replication(shape, df, &arch.array);
+    let spatial = smap.factors();
+    let spatial_at = arch.rf_levels();
+    let mut tables: Vec<Vec<[u64; NDIMS]>> = Vec::new();
+    for priority in [reuse_priority(shape), canonical_priority()] {
+        for largest_first in [true, false] {
+            if let Some(t) = greedy_table(
+                shape,
+                arch,
+                &spatial,
+                spatial_at,
+                &priority,
+                largest_first,
+                cache,
+            ) {
+                if !tables.contains(&t) {
+                    tables.push(t);
+                }
+            }
+        }
+    }
+    if tables.is_empty() {
+        return None;
+    }
+    let combos = order_combos(arch.num_levels(), HEUR_ORDER_CAP);
+    let engine = Engine::new(arch, cost);
+    let ctx = engine.context(shape, &smap);
+    let stats = EvalStats::default();
+    let evaluated = tables.len() * combos.len();
+    let mut best: Option<(f64, usize, usize)> = None; // (energy, table, combo)
+    for (ti, table) in tables.iter().enumerate() {
+        let mut m = Mapping {
+            shape: *shape,
+            blocking: Blocking {
+                factors: table.clone(),
+            },
+            orders: combos[0].clone(),
+            spatial,
+            spatial_at,
+        };
+        let Ok(fp) = engine.footprints(&m, &stats) else {
+            continue;
+        };
+        for (ci, orders) in combos.iter().enumerate() {
+            m.orders.clone_from(orders);
+            let bound = best.map(|(e, _, _)| e).unwrap_or(f64::INFINITY);
+            if let Staged::Energy(e) = engine.energy_bounded(&m, &smap, &ctx, &fp, bound, &stats) {
+                if best.map(|(b, _, _)| e < b).unwrap_or(true) {
+                    best = Some((e, ti, ci));
+                }
+            }
+        }
+    }
+    let (energy, ti, ci) = best?;
+    let mapping = Mapping {
+        shape: *shape,
+        blocking: Blocking {
+            factors: tables[ti].clone(),
+        },
+        orders: combos[ci].clone(),
+        spatial,
+        spatial_at,
+    };
+    // stage 4: materialize the pick through the official evaluator
+    let result = engine.evaluate(&mapping, &smap).ok()?;
+    debug_assert_eq!(result.energy_pj, energy);
+    Some(LayerOpt {
+        mapping,
+        smap,
+        result,
+        evaluated,
+        stats: stats.snapshot(),
+    })
+}
+
+/// Heuristic mapping of a whole network on one architecture — the same
+/// shape-deduplicated, mix-weighted accumulation as the exact
+/// co-optimizer's point evaluator (`1.0 × x == x`, so unweighted totals
+/// keep exact bits and u64 MAC sums), which makes the heuristic total
+/// directly comparable to [`co_optimize`](crate::netopt::co_optimize)
+/// results on the same candidates.
+pub fn heuristic_network(
+    net: &Network,
+    arch: &Arch,
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    weights: Option<&[f64]>,
+    cache: &mut DivisorCache,
+) -> NetworkOpt {
+    if let Some(w) = weights {
+        assert_eq!(
+            w.len(),
+            net.layers.len(),
+            "layer_weights length must match the network depth"
+        );
+    }
+    let weighted = weights.is_some();
+    let mut shape_results: HashMap<LayerKey, Option<LayerOpt>> = HashMap::new();
+    let mut per_layer: Vec<Option<LayerOpt>> = Vec::with_capacity(net.layers.len());
+    let mut total_e = 0.0;
+    let mut total_c = 0.0;
+    let mut total_m = 0u64;
+    let mut total_m_f = 0.0f64;
+    let mut unmapped_layers: Vec<usize> = Vec::new();
+    for (li, l) in net.layers.iter().enumerate() {
+        let key: LayerKey = (l.shape.bounds, l.shape.stride);
+        let w = weights.map(|w| w[li]).unwrap_or(1.0);
+        let entry = shape_results
+            .entry(key)
+            .or_insert_with(|| heuristic_layer(&l.shape, arch, df, cost, cache))
+            .clone();
+        match entry {
+            Some(lo) => {
+                total_e += w * lo.result.energy_pj;
+                total_c += w * lo.result.cycles;
+                if weighted {
+                    total_m_f += w * lo.result.macs as f64;
+                } else {
+                    total_m += lo.result.macs;
+                }
+                per_layer.push(Some(lo));
+            }
+            None => {
+                unmapped_layers.push(li);
+                per_layer.push(None);
+            }
+        }
+    }
+    NetworkOpt {
+        per_layer,
+        total_energy_pj: total_e,
+        total_cycles: total_c,
+        total_macs: if weighted {
+            total_m_f.round() as u64
+        } else {
+            total_m
+        },
+        unmapped: unmapped_layers.len(),
+        unmapped_layers,
+    }
+}
+
+/// The remap fast path: heuristically map the (mix-weighted) network on
+/// every candidate and return the lowest-energy fully-mapped point —
+/// restricted to points whose weighted heuristic cycles fit
+/// `latency_budget` when one is set. Ties break toward the earlier
+/// candidate (strict improvement), mirroring the exact ranking's
+/// enumeration-order tie-break. Microseconds per candidate; the exact
+/// search later replaces whatever this picks.
+pub fn heuristic_plan(
+    net: &Network,
+    arches: &[Arch],
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    weights: Option<&[f64]>,
+    latency_budget: Option<f64>,
+) -> Option<HierarchyResult> {
+    let mut cache = DivisorCache::new();
+    let mut best: Option<HierarchyResult> = None;
+    for arch in arches {
+        let opt = heuristic_network(net, arch, df, cost, weights, &mut cache);
+        if opt.unmapped > 0 {
+            continue;
+        }
+        if let Some(budget) = latency_budget {
+            if opt.total_cycles > budget {
+                continue;
+            }
+        }
+        if best
+            .as_ref()
+            .map(|b| opt.total_energy_pj < b.opt.total_energy_pj)
+            .unwrap_or(true)
+        {
+            best = Some(HierarchyResult {
+                arch: arch.clone(),
+                opt,
+            });
+        }
+    }
+    best
+}
+
+/// Pick the scout: the position (into `cands`) of the heuristically best
+/// feasible candidate, preferring points that pass the `min_tops`
+/// estimate and falling back to any fully-mapped point. The caller
+/// evaluates the scout first through the official point evaluator, so
+/// the network incumbent / dominance archive starts from an admissible
+/// completed total — any pick is sound (it is only an evaluation-order
+/// choice), a good pick prunes the rest of the sweep hardest.
+pub(crate) fn scout_candidates(
+    net: &Network,
+    cands: &[(usize, Arch)],
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    weights: Option<&[f64]>,
+    min_tops: Option<f64>,
+    clock_ghz: f64,
+) -> Option<usize> {
+    let mut cache = DivisorCache::new();
+    let mut best_ok: Option<(usize, f64)> = None; // passes the tops estimate
+    let mut best_any: Option<(usize, f64)> = None; // merely fully mapped
+    for (pos, (_, arch)) in cands.iter().enumerate() {
+        let opt = heuristic_network(net, arch, df, cost, weights, &mut cache);
+        if opt.unmapped > 0 {
+            continue;
+        }
+        let e = opt.total_energy_pj;
+        if best_any.map(|(_, b)| e < b).unwrap_or(true) {
+            best_any = Some((pos, e));
+        }
+        let tops_ok = min_tops.map(|mt| opt.tops(clock_ghz) >= mt).unwrap_or(true);
+        if tops_ok && best_ok.map(|(_, b)| e < b).unwrap_or(true) {
+            best_ok = Some((pos, e));
+        }
+    }
+    best_ok.or(best_any).map(|(pos, _)| pos)
+}
+
+/// [`optimize_layer`](crate::search::optimize_layer) primed by the
+/// heuristic: the heuristic energy seeds the layer incumbent so pruning
+/// is tight from the very first candidate. Exactness by the standard
+/// seed-and-rerun idiom: a clipped outcome (nothing found, or a result
+/// above the seed — possible when the heuristic's table lies outside the
+/// capped enumeration) reruns unseeded, so the returned winner is
+/// bit-identical to the unprimed search (property-tested in
+/// `fastmap::tests`).
+pub fn optimize_layer_primed(
+    shape: &Shape,
+    arch: &Arch,
+    df: &Dataflow,
+    cost: &dyn CostModel,
+    opts: &SearchOpts,
+    threads: usize,
+) -> Option<LayerOpt> {
+    let mut cache = DivisorCache::new();
+    let seed = heuristic_layer(shape, arch, df, cost, &mut cache)
+        .map(|lo| lo.result.energy_pj)
+        .unwrap_or(f64::INFINITY);
+    let (win, _) = optimize_layer_seeded(shape, arch, df, cost, opts, threads, seed, &mut cache);
+    let clipped = match &win {
+        Some(l) => l.result.energy_pj > seed,
+        None => true,
+    };
+    if seed.is_finite() && clipped {
+        let (win2, _) =
+            optimize_layer_seeded(shape, arch, df, cost, opts, threads, f64::INFINITY, &mut cache);
+        return win2;
+    }
+    win
+}
+
+#[cfg(test)]
+mod tests;

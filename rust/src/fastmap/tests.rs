@@ -1,0 +1,317 @@
+//! Unit + randomized property tests for the heuristic mapper: validity
+//! through the real engine on arbitrary (shape, arch) draws, and
+//! bit-identity of every primed exact search to its unprimed twin.
+
+use super::*;
+use crate::arch::{eyeriss_like, no_local_reuse, small_rf};
+use crate::energy::Table3;
+use crate::engine::{EvalSnapshot, Footprints};
+use crate::netopt::{co_optimize_arches, NetOptConfig};
+use crate::nn::{Layer, Network};
+use crate::pareto::{pareto_optimize_arches, ParetoConfig};
+use crate::search::optimize_layer;
+use crate::util::prop::for_cases;
+use crate::util::rng::XorShift;
+
+fn ck() -> Dataflow {
+    Dataflow::parse("C|K").unwrap()
+}
+
+fn arches() -> Vec<Arch> {
+    vec![eyeriss_like(), small_rf(), no_local_reuse()]
+}
+
+fn random_shape(rng: &mut XorShift) -> Shape {
+    let b = rng.range(1, 4);
+    let k = rng.range(1, 32);
+    let c = rng.range(1, 32);
+    let (x, y, f, stride) = if rng.below(3) == 0 {
+        (1, 1, 1, 1) // FC-like
+    } else {
+        let f = *rng.choose(&[1u64, 3, 5]);
+        (rng.range(1, 14), rng.range(1, 14), f, *rng.choose(&[1u32, 2]) as u64)
+    };
+    Shape::new(b, k, c, x, y, f, f, stride as u32)
+}
+
+fn random_arch(rng: &mut XorShift) -> Arch {
+    arches()[rng.below(3) as usize].clone()
+}
+
+/// A small random network with a deliberate repeated layer (exercises
+/// the shape dedup in both the exact and the heuristic accumulation).
+fn random_net(rng: &mut XorShift) -> Network {
+    let n = rng.range(2, 3) as usize;
+    let mut layers: Vec<Layer> = (0..n)
+        .map(|i| Layer {
+            name: format!("L{i}"),
+            ..Layer::conv("x", 1, 1, 1, 1, 1, 1, 1)
+        })
+        .collect();
+    for l in layers.iter_mut() {
+        l.shape = random_shape(rng);
+    }
+    layers.push(layers[0].clone());
+    Network {
+        name: "prop-net".into(),
+        layers,
+        batch: 1,
+    }
+}
+
+#[test]
+fn reuse_priority_is_a_permutation_and_deterministic() {
+    for_cases(0xFA57_0001, 40, |rng| {
+        let s = random_shape(rng);
+        let p = reuse_priority(&s);
+        let mut seen = [false; NDIMS];
+        for d in p {
+            assert!(!seen[d], "dim {d} repeated in priority {p:?}");
+            seen[d] = true;
+        }
+        assert_eq!(p, reuse_priority(&s), "priority must be deterministic");
+    });
+}
+
+#[test]
+fn heuristic_mappings_pass_validate_and_fit_on_random_draws() {
+    for_cases(0xFA57_0002, 60, |rng| {
+        let shape = random_shape(rng);
+        let arch = random_arch(rng);
+        let mut cache = DivisorCache::new();
+        let Some(lo) = heuristic_layer(&shape, &arch, &ck(), &Table3, &mut cache) else {
+            return;
+        };
+        // stage-2 fit on the real footprint code
+        Footprints::compute(&lo.mapping)
+            .fit(&arch)
+            .expect("heuristic mapping must fit");
+        // stage-1 validate + full rollup through the official engine;
+        // the stored result must be the engine's own bits
+        let r = Engine::new(&arch, &Table3)
+            .evaluate(&lo.mapping, &lo.smap)
+            .expect("heuristic mapping must validate");
+        assert_eq!(r.energy_pj.to_bits(), lo.result.energy_pj.to_bits());
+        assert_eq!(r.cycles.to_bits(), lo.result.cycles.to_bits());
+        assert_eq!(r.macs, lo.result.macs);
+        assert_eq!(lo.mapping.levels(), arch.num_levels());
+    });
+}
+
+#[test]
+fn heuristic_is_infeasible_exactly_when_the_exact_search_is() {
+    // Shrink the register file to one word: the all-ones base tile (6
+    // words double-buffered) cannot fit, so both mappers must return
+    // None; on the stock arches both return Some for modest shapes.
+    let mut tiny = small_rf();
+    tiny.levels[0].size_bytes = 2;
+    let opts = SearchOpts::capped(80, 3);
+    for_cases(0xFA57_0003, 12, |rng| {
+        let shape = random_shape(rng);
+        for arch in [tiny.clone(), eyeriss_like()] {
+            let mut cache = DivisorCache::new();
+            let h = heuristic_layer(&shape, &arch, &ck(), &Table3, &mut cache);
+            let e = optimize_layer(&shape, &arch, &ck(), &Table3, &opts, 1);
+            assert_eq!(
+                h.is_some(),
+                e.is_some(),
+                "feasibility must agree on {} for {:?}",
+                arch.name,
+                shape
+            );
+        }
+    });
+}
+
+#[test]
+fn primed_layer_search_is_bit_identical_to_the_unprimed_search() {
+    let opts = SearchOpts::capped(80, 3);
+    for_cases(0xFA57_0004, 20, |rng| {
+        let shape = random_shape(rng);
+        let arch = random_arch(rng);
+        let plain = optimize_layer(&shape, &arch, &ck(), &Table3, &opts, 1);
+        let primed = optimize_layer_primed(&shape, &arch, &ck(), &Table3, &opts, 1);
+        match (plain, primed) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.mapping, b.mapping);
+                assert_eq!(a.smap, b.smap);
+                assert_eq!(a.result.energy_pj.to_bits(), b.result.energy_pj.to_bits());
+                assert_eq!(a.result.cycles.to_bits(), b.result.cycles.to_bits());
+                assert_eq!(a.result.macs, b.result.macs);
+            }
+            (a, b) => panic!(
+                "primed/unprimed feasibility diverged: plain={} primed={}",
+                a.is_some(),
+                b.is_some()
+            ),
+        }
+    });
+}
+
+#[test]
+fn scout_priming_keeps_the_co_optimize_winner_bits() {
+    for_cases(0xFA57_0005, 8, |rng| {
+        let net = random_net(rng);
+        let arches = arches();
+        let mut cfg = NetOptConfig::new(SearchOpts::capped(60, 3), 1);
+        if rng.below(2) == 0 {
+            // exercise the tops-aware scout path with a floor low enough
+            // that it never actually filters
+            cfg = cfg.with_min_tops(1e-12);
+        }
+        let off = co_optimize_arches(&net, &arches, &Table3, &cfg);
+        let on = co_optimize_arches(&net, &arches, &Table3, &cfg.clone().with_prime(true));
+        match (off.best(), on.best()) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.arch, b.arch);
+                assert_eq!(
+                    a.opt.total_energy_pj.to_bits(),
+                    b.opt.total_energy_pj.to_bits()
+                );
+                assert_eq!(a.opt.total_cycles.to_bits(), b.opt.total_cycles.to_bits());
+                assert_eq!(a.opt.total_macs, b.opt.total_macs);
+                for (la, lb) in a.opt.per_layer.iter().zip(&b.opt.per_layer) {
+                    match (la, lb) {
+                        (None, None) => {}
+                        (Some(la), Some(lb)) => {
+                            assert_eq!(la.mapping, lb.mapping);
+                            assert_eq!(
+                                la.result.energy_pj.to_bits(),
+                                lb.result.energy_pj.to_bits()
+                            );
+                        }
+                        _ => panic!("per-layer feasibility diverged"),
+                    }
+                }
+            }
+            (a, b) => panic!(
+                "winner feasibility diverged: off={} on={}",
+                a.is_some(),
+                b.is_some()
+            ),
+        }
+        assert!(
+            on.stats.engine.full <= off.stats.engine.full,
+            "priming must not add full evaluations ({} > {})",
+            on.stats.engine.full,
+            off.stats.engine.full
+        );
+    });
+}
+
+#[test]
+fn scout_priming_keeps_the_pareto_frontier_bits() {
+    for_cases(0xFA57_0006, 6, |rng| {
+        let net = random_net(rng);
+        let arches = arches();
+        let cfg = NetOptConfig::new(SearchOpts::capped(60, 3), 1);
+        let pcfg = ParetoConfig::default();
+        let off = pareto_optimize_arches(&net, &arches, &Table3, &cfg, &pcfg);
+        let on = pareto_optimize_arches(
+            &net,
+            &arches,
+            &Table3,
+            &cfg.clone().with_prime(true),
+            &pcfg,
+        );
+        assert_eq!(off.frontier.len(), on.frontier.len(), "frontier size");
+        for (a, b) in off.frontier.iter().zip(&on.frontier) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.result.arch, b.result.arch);
+            assert_eq!(
+                a.result.opt.total_energy_pj.to_bits(),
+                b.result.opt.total_energy_pj.to_bits()
+            );
+            assert_eq!(
+                a.result.opt.total_cycles.to_bits(),
+                b.result.opt.total_cycles.to_bits()
+            );
+        }
+        assert!(
+            on.stats.engine.full <= off.stats.engine.full,
+            "priming must not add full evaluations"
+        );
+    });
+}
+
+#[test]
+fn heuristic_network_uniform_weights_keep_unweighted_bits() {
+    for_cases(0xFA57_0007, 10, |rng| {
+        let net = random_net(rng);
+        let arch = eyeriss_like();
+        let mut cache = DivisorCache::new();
+        let plain = heuristic_network(&net, &arch, &ck(), &Table3, None, &mut cache);
+        let ones = vec![1.0; net.layers.len()];
+        let weighted =
+            heuristic_network(&net, &arch, &ck(), &Table3, Some(&ones), &mut cache);
+        assert_eq!(
+            plain.total_energy_pj.to_bits(),
+            weighted.total_energy_pj.to_bits()
+        );
+        assert_eq!(plain.total_cycles.to_bits(), weighted.total_cycles.to_bits());
+        assert_eq!(plain.total_macs, weighted.total_macs);
+        assert_eq!(plain.unmapped, weighted.unmapped);
+    });
+}
+
+#[test]
+fn heuristic_network_dedups_repeated_shapes() {
+    let net = random_net(&mut XorShift::new(0xFA57_0008));
+    let arch = eyeriss_like();
+    let mut cache = DivisorCache::new();
+    let opt = heuristic_network(&net, &arch, &ck(), &Table3, None, &mut cache);
+    // last layer is a clone of the first: identical per-layer bits
+    let first = opt.per_layer.first().unwrap().as_ref().unwrap();
+    let last = opt.per_layer.last().unwrap().as_ref().unwrap();
+    assert_eq!(first.mapping, last.mapping);
+    assert_eq!(
+        first.result.energy_pj.to_bits(),
+        last.result.energy_pj.to_bits()
+    );
+}
+
+#[test]
+fn heuristic_plan_picks_min_energy_and_respects_the_budget() {
+    let net = random_net(&mut XorShift::new(0xFA57_0009));
+    let arches = arches();
+    let plan = heuristic_plan(&net, &arches, &ck(), &Table3, None, None)
+        .expect("stock arches must map a modest net");
+    assert_eq!(plan.opt.unmapped, 0);
+    // the pick is min-energy among the feasible candidates
+    let mut cache = DivisorCache::new();
+    for arch in &arches {
+        let opt = heuristic_network(&net, arch, &ck(), &Table3, None, &mut cache);
+        if opt.unmapped == 0 {
+            assert!(plan.opt.total_energy_pj <= opt.total_energy_pj);
+        }
+    }
+    // an impossible latency budget filters everything
+    assert!(heuristic_plan(&net, &arches, &ck(), &Table3, None, Some(0.0)).is_none());
+}
+
+#[test]
+fn scout_returns_a_position_not_a_global_index() {
+    let net = random_net(&mut XorShift::new(0xFA57_000A));
+    // global indices deliberately offset from positions
+    let cands: Vec<(usize, Arch)> = arches()
+        .into_iter()
+        .enumerate()
+        .map(|(i, a)| (i + 100, a))
+        .collect();
+    let pos = scout_candidates(&net, &cands, &ck(), &Table3, None, None, 1.0)
+        .expect("stock arches must be feasible");
+    assert!(pos < cands.len(), "scout must return a position, got {pos}");
+}
+
+#[test]
+fn heuristic_layer_reports_its_own_engine_counters() {
+    let shape = Shape::new(2, 16, 16, 7, 7, 3, 3, 1);
+    let mut cache = DivisorCache::new();
+    let lo = heuristic_layer(&shape, &eyeriss_like(), &ck(), &Table3, &mut cache)
+        .expect("feasible on eyeriss");
+    let z = EvalSnapshot::default();
+    assert!(lo.stats.stage2 > z.stage2, "footprints must be counted");
+    assert!(lo.evaluated > 0 && lo.evaluated <= 4 * HEUR_ORDER_CAP);
+}

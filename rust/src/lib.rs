@@ -20,6 +20,10 @@
 //!   admissible partial bounds, branch-and-bound incumbents);
 //! - [`sim`] — a trace-driven simulator that counts accesses exactly
 //!   (the stand-in for the paper's post-synthesis validation, Fig 7);
+//! - [`fastmap`] — the microsecond greedy heuristic mapper: the serving
+//!   fast path (deadline remaps publish its plan immediately) and the
+//!   scout that primes every exact search's incumbent without moving a
+//!   single argmin bit;
 //! - [`halide`] — the schedule DSL (`split`, `reorder`, `in_`/`compute_at`,
 //!   `unroll`, `systolic`, `accelerate`) and its lowering;
 //! - [`search`] — design-space enumeration and the efficient per-layer
@@ -45,6 +49,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod energy;
 pub mod engine;
+pub mod fastmap;
 pub mod halide;
 pub mod loopnest;
 pub mod netopt;

@@ -47,6 +47,18 @@
 //!    [`NetOptConfig::layer_weights`] weights each layer's energy,
 //!    cycles and floors by its serving-window frequency instead of the
 //!    uniform layer sum, so the optimum tracks the live request mix.
+//! 7. **Scout priming** ([`NetOptConfig::prime`]) — before the parallel
+//!    sweep, the microsecond heuristic mapper ([`crate::fastmap`]) ranks
+//!    the candidates and the heuristically best feasible point is
+//!    evaluated *first*, synchronously, through the identical official
+//!    point evaluator. Its completed total seeds the shared incumbent
+//!    (or the frontier archive) from an admissible bound, so every
+//!    later point prunes as hard as possible. This is purely an
+//!    evaluation-order change over the same candidate set under the
+//!    same admissible bounds, so winners and frontiers keep their exact
+//!    bits; unlike the per-shape warm seeds it never needs a rerun.
+//!    Off by default (bit-compatibility for checkpointed shard runs);
+//!    the CLI turns it on.
 //!
 //! ## Winner-identity contract
 //!
@@ -137,6 +149,15 @@ pub struct NetOptConfig {
     /// layer sum. `None` is the uniform case and is **bit-identical** to
     /// the pre-weights behavior (all weights `1.0`).
     pub layer_weights: Option<Vec<f64>>,
+    /// Scout priming: evaluate the heuristically best candidate
+    /// ([`crate::fastmap::scout_candidates`]) first so the network-level
+    /// incumbent / frontier archive starts from an admissible completed
+    /// total. Winners and frontiers are bit-identical either way (it is
+    /// only an evaluation-order change); priming strictly reduces the
+    /// bound-side work on any space where the scout lands near the
+    /// optimum. Ignored when network-level pruning is off (exhaustive
+    /// mode ranks every point anyway). Default `false`.
+    pub prime: bool,
 }
 
 impl NetOptConfig {
@@ -151,6 +172,7 @@ impl NetOptConfig {
             min_tops: None,
             clock_ghz: 1.0,
             layer_weights: None,
+            prime: false,
         }
     }
 
@@ -173,6 +195,13 @@ impl NetOptConfig {
     /// layer, finite and `> 0` — validated at run start).
     pub fn with_layer_weights(mut self, weights: Vec<f64>) -> Self {
         self.layer_weights = Some(weights);
+        self
+    }
+
+    /// Same configuration with scout priming switched on or off (see
+    /// [`prime`](Self::prime)).
+    pub fn with_prime(mut self, prime: bool) -> Self {
+        self.prime = prime;
         self
     }
 }
@@ -708,18 +737,56 @@ pub(crate) fn run_points_gated(
         seeds: &seeds,
     };
 
-    let chunk = n.div_ceil(nchunks);
-    let chunks: Vec<Vec<(usize, Arch)>> = cands.chunks(chunk).map(|c| c.to_vec()).collect();
-    let reports: Vec<(usize, PointReport)> = parallel_map(chunks, nchunks, |chunk| {
+    // Scout priming: evaluate the heuristically best feasible candidate
+    // first, synchronously, through the identical official evaluator, so
+    // the shared incumbent / dominance archive starts from an admissible
+    // completed total instead of +inf. A pure evaluation-order change
+    // over the same candidate set under the same admissible bounds —
+    // winners and frontiers keep their exact bits (property-tested in
+    // `fastmap::tests`). With `prime` off (the default) the chunking
+    // below is bit-identical to the unprimed code path.
+    let primed = cfg.prime && (gate.is_some() || cfg.prune == PruneMode::BranchAndBound);
+    let scout: Option<usize> = if primed {
+        crate::fastmap::scout_candidates(
+            net,
+            &cands,
+            &cfg.df,
+            cost,
+            cfg.layer_weights.as_deref(),
+            cfg.min_tops,
+            cfg.clock_ghz,
+        )
+    } else {
+        None
+    };
+    let mut reports: Vec<(usize, PointReport)> = Vec::new();
+    if let Some(pos) = scout {
+        let (i, arch) = &cands[pos];
         let mut cache = DivisorCache::new();
-        chunk
-            .iter()
-            .map(|(i, arch)| (*i, run.evaluate_point(*i, arch, &mut cache)))
-            .collect::<Vec<_>>()
-    })
-    .into_iter()
-    .flatten()
-    .collect();
+        reports.push((*i, run.evaluate_point(*i, arch, &mut cache)));
+    }
+    let sweep: Vec<(usize, Arch)> = cands
+        .iter()
+        .enumerate()
+        .filter(|(pos, _)| Some(*pos) != scout)
+        .map(|(_, c)| c.clone())
+        .collect();
+    if !sweep.is_empty() {
+        let nch = nchunks.min(sweep.len());
+        let chunk = sweep.len().div_ceil(nch);
+        let chunks: Vec<Vec<(usize, Arch)>> = sweep.chunks(chunk).map(|c| c.to_vec()).collect();
+        reports.extend(
+            parallel_map(chunks, nch, |chunk| {
+                let mut cache = DivisorCache::new();
+                chunk
+                    .iter()
+                    .map(|(i, arch)| (*i, run.evaluate_point(*i, arch, &mut cache)))
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten(),
+        );
+    }
 
     let arch_by_idx: HashMap<usize, &Arch> = cands.iter().map(|(i, a)| (*i, a)).collect();
     let mut ranked: Vec<(usize, HierarchyResult)> = Vec::new();

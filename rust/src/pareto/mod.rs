@@ -54,6 +54,15 @@
 //!   completed points, never read from the racy in-run archive, so
 //!   thread timing can affect counters but never the result.
 //!
+//! Scout priming (`NetOptConfig::prime`, see [`crate::fastmap`])
+//! composes with all of this: the heuristically best candidate is
+//! evaluated first so the archive opens with a real completed point —
+//! the heuristic is **never** inserted into the archive as a
+//! pseudo-point (its cycles could strictly dominate, and thereby
+//! wrongly prune, a true frontier point), it only chooses which
+//! official evaluation runs first. The frontier is therefore
+//! bit-identical with priming on or off.
+//!
 //! `pareto::tests` asserts the equivalence on small spaces ×
 //! {alexnet head, lstm-m, mlp-m}; `benches/perf_pareto.rs` gates it in
 //! CI together with the strict full-evaluation reduction and the

@@ -23,6 +23,7 @@ pub use optimize::{
     divisor_replication, optimize_layer, optimize_layer_seeded, optimize_network,
     search_hierarchy, sweep_blockings, HierarchyResult, LayerOpt, NetworkOpt,
 };
+pub(crate) use optimize::order_combos;
 pub use par::{default_threads, parallel_map};
 pub use random::{random_mapping, random_mapping_for_arch};
 

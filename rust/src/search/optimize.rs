@@ -122,8 +122,9 @@ fn order_candidates() -> [LevelOrder; 3] {
 /// (3^levels) fits the cap, use it; otherwise fall back to a structured
 /// subset — uniform stationarity plus a varied outermost level — which
 /// covers the distinctions that move energy most (inner levels multiply
-/// into every boundary below them).
-fn order_combos(levels: usize, cap: usize) -> Vec<Vec<LevelOrder>> {
+/// into every boundary below them). Shared with the heuristic mapper
+/// ([`crate::fastmap`]) so its order candidates match the exact search's.
+pub(crate) fn order_combos(levels: usize, cap: usize) -> Vec<Vec<LevelOrder>> {
     let cands = order_candidates();
     let full = 3usize.saturating_pow(levels as u32);
     if full <= cap {
