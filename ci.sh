@@ -59,7 +59,13 @@ cargo bench --bench perf_fastmap
 echo "==> perf_pareto (frontier exactness: dominance-pruned frontier == exhaustive + filter bit for bit, strictly fewer full evals, budget selection == scalar min-tops winner; emits BENCH_pareto.json)"
 cargo bench --bench perf_pareto
 
-echo "==> bench_schema (every BENCH_*.json conforms to the documented schema; fastmap/netopt/pareto/shard/remap files required)"
+echo "==> perf_hotpath (L3 hot-path microbenchmarks; emits BENCH_hotpath.json)"
+cargo bench --bench perf_hotpath
+
+echo "==> perf_orchestrator (distributed fan-out: >=2.5x at 4 workers, streamed bounds strictly cut full evals, SIGKILL survived via stealing, merged winner/frontier bit-identical; emits BENCH_orchestrator.json)"
+cargo bench --bench perf_orchestrator
+
+echo "==> bench_schema (every BENCH_*.json conforms to the documented schema; fastmap/hotpath/netopt/orchestrator/pareto/shard/remap files required)"
 cargo bench --bench bench_schema
 
 echo "CI OK"

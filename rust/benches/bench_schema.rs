@@ -17,7 +17,9 @@ use interstellar::util::bench::validate_bench_json;
 /// their absence means a perf gate silently stopped emitting.
 const REQUIRED: &[&str] = &[
     "BENCH_fastmap.json",
+    "BENCH_hotpath.json",
     "BENCH_netopt.json",
+    "BENCH_orchestrator.json",
     "BENCH_pareto.json",
     "BENCH_remap.json",
     "BENCH_shard.json",

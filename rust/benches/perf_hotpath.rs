@@ -1,7 +1,9 @@
 //! §Perf: microbenchmarks of the L3 hot path — the analytical-model
 //! evaluation and blocking enumeration that every sweep spends its time
-//! in — plus the end-to-end per-layer optimization. Tracked in
-//! EXPERIMENTS.md §Perf across optimization iterations.
+//! in — plus the end-to-end per-layer optimization. Emits
+//! `BENCH_hotpath.json` for the perf trajectory (validated by the
+//! `bench_schema` gate), so hot-path regressions show up in the same
+//! trend tooling as the contract gates.
 
 use interstellar::arch::eyeriss_like;
 use interstellar::coordinator::experiments;
@@ -12,6 +14,7 @@ use interstellar::search::{
     divisor_replication, enumerate_blockings, optimize_layer, SearchOpts,
 };
 use interstellar::util::bench::{black_box, Bencher};
+use interstellar::util::json::Json;
 use interstellar::xmodel::evaluate;
 use interstellar::loopnest::{Blocking, LevelOrder, Mapping, Tensor};
 
@@ -90,5 +93,22 @@ fn main() {
         black_box(optimize_layer(&shape, &arch, &df, &Table3, &small_opts, n));
     });
 
-    println!("\nperf_hotpath done (record these in EXPERIMENTS.md §Perf)");
+    // Flat scalar fields per the bench schema: one `<case>_mean_ns` per
+    // measurement, case names slugged to JSON-key-friendly form.
+    let mut fields: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str("perf_hotpath")),
+        ("cases".into(), Json::int(b.results().len() as u64)),
+    ];
+    for m in b.results() {
+        let slug: String = m
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        fields.push((format!("{slug}_mean_ns"), Json::num(m.mean_ns)));
+    }
+    let path = "BENCH_hotpath.json";
+    std::fs::write(path, Json::Obj(fields).to_string()).expect("write bench json");
+    println!("wrote {path}");
+    println!("\nperf_hotpath done (trajectory in BENCH_hotpath.json)");
 }

@@ -1,0 +1,273 @@
+//! §Perf/CI gate: the distributed sweep orchestrator. Over one fixture
+//! (alexnet head-2 on the small `--space full` grid) this bench drives
+//! [`orchestrate`] against the release binary and asserts the
+//! orchestrator contract:
+//!
+//! 1. **Scaling** — the same 8-shard sweep run with 1, 2, and 4 worker
+//!    processes (1 thread each, bound streaming off so this measures
+//!    pure fan-out) completes near-linearly: >= 2.5x wall-clock speedup
+//!    at 4 workers.
+//! 2. **Bit identity** — the 4-worker merged winner is bit-identical to
+//!    the in-process `co_optimize` reference, and the 4-worker merged
+//!    frontier is payload-bit-identical to in-process
+//!    `pareto_optimize`, streaming on in both cases.
+//! 3. **Bound streaming saves work** — with 2 workers over 8 shards
+//!    (4 sequential waves), aggregate full evaluations with live bound
+//!    streaming on are **strictly** fewer than with it off: later waves
+//!    start from earlier shards' published incumbents instead of cold.
+//! 4. **Crash tolerance** — with 1 of 4 workers SIGKILLed mid-run and
+//!    work stealing on, the sweep still completes with full coverage
+//!    and the same winner bits (the victim's shard is re-split and
+//!    redistributed; duplicate coverage deduplicates in the merge).
+//!
+//! Emits `BENCH_orchestrator.json` for the perf trajectory (validated
+//! by the `bench_schema` gate).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use interstellar::arch::ArrayShape;
+use interstellar::energy::Table3;
+use interstellar::netopt::{co_optimize, DesignSpace, NetOptConfig};
+use interstellar::nn::{network, Network};
+use interstellar::orchestrator::{orchestrate, MergedSweep, OrchestrateConfig, SweepMode};
+use interstellar::pareto::{pareto_optimize, ParetoConfig};
+use interstellar::search::SearchOpts;
+use interstellar::util::json::Json;
+
+const NSHARDS: usize = 8;
+
+/// Must mirror `worker_args()` exactly — the in-process references and
+/// the worker processes sweep the same space with the same caps.
+fn bench_space() -> DesignSpace {
+    let mut s = DesignSpace::full(ArrayShape { rows: 8, cols: 8 });
+    s.rf1_sizes = vec![16, 64, 512];
+    s.rf2_ratios = vec![8];
+    s.gbuf_sizes = vec![64 << 10, 256 << 10];
+    s.ratio_min = 0.25;
+    s.ratio_max = 64.0;
+    s
+}
+
+/// Must mirror the `--cap/--divisors/--orders` worker args below.
+fn bench_opts() -> SearchOpts {
+    let mut o = SearchOpts::capped(150, 4);
+    o.max_order_combos = 9;
+    o
+}
+
+fn bench_net() -> Network {
+    network("alexnet", 1).unwrap().head(2)
+}
+
+/// Worker CLI flags reproducing `bench_net()` + `bench_space()` +
+/// `bench_opts()`. Single-threaded workers (`--threads 1`) so the
+/// scaling curve measures process fan-out, not intra-process
+/// parallelism; `--no-prime` so the streaming comparison starts every
+/// worker cold (the scout would otherwise hand each one a near-optimal
+/// private bound and mask the cross-worker savings).
+fn worker_args() -> Vec<String> {
+    let flags = "--net alexnet --batch 1 --head 2 --space full --rows 8 --cols 8 \
+                 --rf1 16,64,512 --rf2-ratio 8 --gbuf 65536,262144 \
+                 --ratio-min 0.25 --ratio-max 64 --cap 150 --divisors 4 --orders 9 \
+                 --threads 1 --no-prime";
+    flags.split_whitespace().map(str::to_string).collect()
+}
+
+fn base_config(bin: &str, dir: &Path, workers: usize) -> OrchestrateConfig {
+    let mut cfg = OrchestrateConfig::new(SweepMode::CoOpt, bin, dir, workers);
+    cfg.nshards = NSHARDS;
+    cfg.worker_args = worker_args();
+    cfg.bounds_interval = None;
+    cfg
+}
+
+fn assert_winner_bits(
+    merged: &MergedSweep,
+    reference: &interstellar::search::HierarchyResult,
+    label: &str,
+) {
+    let MergedSweep::CoOpt(ckpt) = merged else {
+        panic!("{label}: expected a co-opt merge");
+    };
+    assert_eq!(
+        ckpt.shards,
+        (0..ckpt.nshards).collect::<Vec<_>>(),
+        "{label}: merged coverage incomplete"
+    );
+    let w = ckpt.winner_result().expect("merged winner");
+    assert_eq!(w.arch, reference.arch, "{label}: winner arch differs");
+    assert_eq!(
+        w.opt.total_energy_pj.to_bits(),
+        reference.opt.total_energy_pj.to_bits(),
+        "{label}: winner energy bits differ ({} vs {})",
+        w.opt.total_energy_pj,
+        reference.opt.total_energy_pj
+    );
+    assert_eq!(
+        w.opt.total_cycles.to_bits(),
+        reference.opt.total_cycles.to_bits(),
+        "{label}: winner cycle bits differ"
+    );
+}
+
+fn main() {
+    let bin = env!("CARGO_BIN_EXE_interstellar");
+    let dir =
+        std::env::temp_dir().join(format!("interstellar-perf-orch-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+
+    let net = bench_net();
+    let space = bench_space();
+    let cfg = NetOptConfig::new(bench_opts(), 2).with_prime(false);
+
+    // In-process references (bit-identity targets).
+    let t0 = Instant::now();
+    let reference = co_optimize(&net, &space, &Table3, &cfg);
+    let single_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let ref_winner = reference.best().expect("reference winner").clone();
+    let pareto_ref = pareto_optimize(
+        &net,
+        &space,
+        &Table3,
+        &cfg,
+        &ParetoConfig {
+            eps: 0.0,
+            max_points: None,
+        },
+    );
+
+    // 1. scaling curve: 1 / 2 / 4 workers, streaming off.
+    let mut walls_ms = Vec::new();
+    let mut evals_off_2w = 0usize;
+    for workers in [1usize, 2, 4] {
+        let ocfg = base_config(bin, &dir.join(format!("w{workers}")), workers);
+        let t = Instant::now();
+        let report = orchestrate(&ocfg)
+            .unwrap_or_else(|e| panic!("orchestrate with {workers} workers: {e}"));
+        let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+        assert_winner_bits(&report.merged, &ref_winner, &format!("{workers}-worker"));
+        assert_eq!(report.failures, 0, "{workers}-worker run had failures");
+        println!(
+            "perf_orchestrator: {workers} workers over {NSHARDS} shards: {wall_ms:.0} ms \
+             ({} full evals)",
+            report.aggregate_evaluated_full
+        );
+        if workers == 2 {
+            evals_off_2w = report.aggregate_evaluated_full;
+        }
+        walls_ms.push(wall_ms);
+    }
+    let speedup_4w = walls_ms[0] / walls_ms[2];
+    assert!(
+        speedup_4w >= 2.5,
+        "4-worker speedup {speedup_4w:.2}x below the 2.5x gate \
+         (walls: {walls_ms:.0?} ms)"
+    );
+
+    // 2. bound streaming strictly reduces aggregate full evaluations.
+    // 2 workers over 8 shards = 4 sequential waves, so later waves are
+    // ordering-guaranteed (not timing-dependent) to see earlier shards'
+    // final published bounds.
+    let mut ocfg = base_config(bin, &dir.join("stream"), 2);
+    ocfg.bounds_interval = Some(Duration::from_millis(10));
+    let report = orchestrate(&ocfg).expect("streaming run");
+    let evals_on_2w = report.aggregate_evaluated_full;
+    assert_winner_bits(&report.merged, &ref_winner, "streaming");
+    assert!(
+        evals_on_2w < evals_off_2w,
+        "bound streaming did not reduce full evaluations ({evals_on_2w} vs {evals_off_2w})"
+    );
+    println!(
+        "perf_orchestrator: streaming on {evals_on_2w} vs off {evals_off_2w} full evals \
+         (same winner bits)"
+    );
+
+    // 3. crash tolerance: SIGKILL worker seq 1 shortly after launch;
+    // stealing re-splits its shard and the sweep completes with full
+    // coverage and the same winner.
+    let mut ocfg = base_config(bin, &dir.join("kill"), 4);
+    ocfg.bounds_interval = Some(Duration::from_millis(10));
+    ocfg.fault_kill = Some((1, Duration::from_millis(5)));
+    let killed = orchestrate(&ocfg).expect("fault-injected run");
+    assert_winner_bits(&killed.merged, &ref_winner, "fault-injected");
+    assert!(
+        killed.failures >= 1,
+        "fault injection killed no worker (victim finished too fast?)"
+    );
+    assert!(
+        killed.steals >= 1,
+        "killed worker's shard was not re-split and stolen"
+    );
+    println!(
+        "perf_orchestrator: survived SIGKILL of 1/4 workers ({} failures, {} steals, \
+         {} launched)",
+        killed.failures, killed.steals, killed.launched
+    );
+
+    // 4. pareto mode: merged 4-worker frontier payload-bit-identical to
+    // the in-process frontier (checkpoints key by raw-grid index, the
+    // in-process result by filtered position — payloads are the
+    // contract, as in perf_pareto).
+    let mut ocfg = base_config(bin, &dir.join("pareto"), 4);
+    ocfg.mode = SweepMode::Pareto;
+    ocfg.bounds_interval = Some(Duration::from_millis(10));
+    let report = orchestrate(&ocfg).expect("pareto orchestrate");
+    let MergedSweep::Pareto(merged) = &report.merged else {
+        panic!("expected a pareto merge");
+    };
+    assert_eq!(
+        merged.frontier.len(),
+        pareto_ref.frontier.len(),
+        "frontier size differs from in-process pareto"
+    );
+    for ((_, m), e) in merged.frontier.iter().zip(pareto_ref.frontier.iter()) {
+        assert_eq!(m.arch, e.result.arch, "frontier arch differs");
+        assert_eq!(
+            m.opt.total_energy_pj.to_bits(),
+            e.result.opt.total_energy_pj.to_bits(),
+            "frontier energy bits differ"
+        );
+        assert_eq!(
+            m.opt.total_cycles.to_bits(),
+            e.result.opt.total_cycles.to_bits(),
+            "frontier cycle bits differ"
+        );
+    }
+    println!(
+        "perf_orchestrator: 4-worker pareto frontier bit-identical ({} points)",
+        merged.frontier.len()
+    );
+
+    let fields: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str("perf_orchestrator")),
+        ("nshards".into(), Json::int(NSHARDS as u64)),
+        ("single_process_ms".into(), Json::num(single_ms)),
+        ("wall_1w_ms".into(), Json::num(walls_ms[0])),
+        ("wall_2w_ms".into(), Json::num(walls_ms[1])),
+        ("wall_4w_ms".into(), Json::num(walls_ms[2])),
+        ("speedup_4w".into(), Json::num(speedup_4w)),
+        ("evals_bounds_off_2w".into(), Json::int(evals_off_2w as u64)),
+        ("evals_bounds_on_2w".into(), Json::int(evals_on_2w as u64)),
+        ("kill_failures".into(), Json::int(killed.failures as u64)),
+        ("kill_steals".into(), Json::int(killed.steals as u64)),
+        ("kill_launched".into(), Json::int(killed.launched as u64)),
+        (
+            "pareto_frontier_points".into(),
+            Json::int(merged.frontier.len() as u64),
+        ),
+        ("winner".into(), Json::str(&ref_winner.arch.name)),
+        (
+            "winner_energy_pj".into(),
+            Json::num(ref_winner.opt.total_energy_pj),
+        ),
+    ];
+    let path = "BENCH_orchestrator.json";
+    std::fs::write(path, Json::Obj(fields).to_string()).expect("write bench json");
+    println!("wrote {path}");
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "perf_orchestrator OK ({speedup_4w:.2}x at 4 workers, streaming {evals_on_2w}<{evals_off_2w} \
+         full evals, SIGKILL survived, winners/frontiers bit-identical)"
+    );
+}

@@ -2,6 +2,7 @@
 //! validation, schedule display, and the end-to-end serving driver.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -17,6 +18,10 @@ use crate::netopt::{
     ShardCheckpoint,
 };
 use crate::nn::{network, Network};
+use crate::orchestrator::{
+    orchestrate, run_coopt_shard_streamed, run_pareto_shard_streamed, BoundsLink, MergedSweep,
+    OrchestrateConfig, SweepMode,
+};
 use crate::pareto::{
     merge_all_frontiers, pareto_optimize, pareto_optimize_shard, FrontierCheckpoint,
     FrontierEntry, ParetoConfig, ParetoResult, PlanSelector,
@@ -38,10 +43,13 @@ COMMANDS:
                   [--rf1 L] [--rf2-ratio L] [--gbuf L] [--ratio-min R]
                   [--ratio-max R] [--cap N] [--divisors N] [--orders N]
                   [--no-prime] [--shard I/N --checkpoint PATH] [--json]
+                  [--bounds PATH --bounds-interval MS --worker-id K]
                   network-level co-optimizer: cross-architecture b&b over
                   the design space, with capacity/throughput constraints;
                   L are comma-separated byte sizes. --shard runs one
                   worker slice and writes a mergeable JSON checkpoint;
+                  --bounds streams the live incumbent through a shared
+                  bounds file (admissible hints: same winner bits);
                   the heuristic scout primes the b&b incumbent unless
                   --no-prime (the winner is bit-identical either way)
   co-opt-merge    <ckpt.json>... [--out PATH] [--json]
@@ -51,9 +59,25 @@ COMMANDS:
                   [--eps E] [--points N] [--latency-budget CYCLES]
                   [--no-prime] [co-opt's space/search/constraint knobs]
                   [--shard I/N --checkpoint PATH] [--json]
+                  [--bounds PATH --bounds-interval MS --worker-id K]
                   exact (energy, cycles) frontier of the design space
                   instead of a single winner; --latency-budget also picks
-                  the min-energy point within the cycle budget
+                  the min-energy point within the cycle budget; --bounds
+                  streams live frontier snapshots between shard workers
+  orchestrate     --mode co-opt|pareto --net <name> [--workers N]
+                  [--nshards M] [--steal | --no-steal] [--steal-split K]
+                  [--straggler-factor F] [--no-bounds]
+                  [--bounds-interval MS] [--dir PATH] [--out PATH]
+                  [--worker-threads N] [--hosts 'CMD;CMD'] [--json]
+                  [co-opt/pareto's space/search/constraint knobs]
+                  fan the sweep across worker processes: work stealing
+                  re-splits failed or straggling shards into sub-shards
+                  for idle workers (on by default; --no-steal disables),
+                  live bounds stream between workers through a shared
+                  append-only file, and the merged winner/frontier is
+                  bit-identical to the single-process run. --hosts gives
+                  semicolon-separated launcher prefixes (e.g. ssh hosts)
+                  round-robined over workers
   fastmap         --net <name> [--batch N] [--full]
                   microsecond greedy heuristic mapper vs the exact
                   per-layer search on the Eyeriss-like baseline: energy
@@ -185,7 +209,15 @@ pub fn run(args: Args) -> Result<()> {
                 let Some(path) = args.get("checkpoint") else {
                     bail!("--shard needs --checkpoint PATH to write to");
                 };
-                let run = co_optimize_shard(&net, &space, &Table3, &cfg, index, nshards);
+                let run = match args.get("bounds") {
+                    Some(bounds) => {
+                        let link = shard_bounds_link(&args, bounds);
+                        run_coopt_shard_streamed(
+                            &net, &space, &Table3, &cfg, index, nshards, &link,
+                        )
+                    }
+                    None => co_optimize_shard(&net, &space, &Table3, &cfg, index, nshards),
+                };
                 std::fs::write(path, run.checkpoint.to_json())
                     .with_context(|| format!("writing checkpoint {path}"))?;
                 if args.has_flag("json") {
@@ -278,7 +310,15 @@ pub fn run(args: Args) -> Result<()> {
                          frontier (pareto without --shard, or pareto-merge + selection)"
                     );
                 }
-                let ckpt = pareto_optimize_shard(&net, &space, &Table3, &cfg, index, nshards);
+                let ckpt = match args.get("bounds") {
+                    Some(bounds) => {
+                        let link = shard_bounds_link(&args, bounds);
+                        run_pareto_shard_streamed(
+                            &net, &space, &Table3, &cfg, index, nshards, &link,
+                        )
+                    }
+                    None => pareto_optimize_shard(&net, &space, &Table3, &cfg, index, nshards),
+                };
                 std::fs::write(path, ckpt.to_json())
                     .with_context(|| format!("writing checkpoint {path}"))?;
                 if args.has_flag("json") {
@@ -318,6 +358,94 @@ pub fn run(args: Args) -> Result<()> {
                         }
                     }
                 }
+            }
+        }
+        "orchestrate" => {
+            let mode = match args.get_str("mode", "co-opt") {
+                "co-opt" => SweepMode::CoOpt,
+                "pareto" => SweepMode::Pareto,
+                other => bail!("unknown --mode `{other}` (expected co-opt|pareto)"),
+            };
+            let workers = args.get_usize("workers", 4);
+            let bin = match args.get("bin") {
+                Some(b) => PathBuf::from(b),
+                None => std::env::current_exe()
+                    .context("resolve the interstellar binary for workers (or pass --bin)")?,
+            };
+            let dir = PathBuf::from(args.get_str("dir", "orchestrate-scratch"));
+            let mut ocfg = OrchestrateConfig::new(mode, bin, dir, workers);
+            ocfg.nshards = args.get_usize("nshards", workers.max(1));
+            ocfg.worker_args = forward_worker_args(&args);
+            ocfg.steal = !args.has_flag("no-steal");
+            ocfg.steal_split = args.get_usize("steal-split", ocfg.steal_split);
+            ocfg.straggler_factor = args.get_f64("straggler-factor", ocfg.straggler_factor);
+            ocfg.bounds_interval = if args.has_flag("no-bounds") {
+                None
+            } else {
+                Some(Duration::from_millis(args.get_u64("bounds-interval", 50)))
+            };
+            if let Some(hosts) = args.get("hosts") {
+                ocfg.launchers = hosts
+                    .split(';')
+                    .map(|h| h.split_whitespace().map(str::to_string).collect::<Vec<_>>())
+                    .filter(|v| !v.is_empty())
+                    .collect();
+            }
+            println!(
+                "orchestrating {} across {} workers ({} shards, steal {}, bounds {})...",
+                mode_name(mode),
+                ocfg.workers,
+                ocfg.nshards,
+                if ocfg.steal { "on" } else { "off" },
+                match ocfg.bounds_interval {
+                    Some(i) => format!("every {} ms", i.as_millis()),
+                    None => "off".into(),
+                }
+            );
+            let report = orchestrate(&ocfg)?;
+            let merged_json = match &report.merged {
+                MergedSweep::CoOpt(c) => c.to_json(),
+                MergedSweep::Pareto(c) => c.to_json(),
+            };
+            if let Some(out) = args.get("out") {
+                std::fs::write(out, &merged_json)
+                    .with_context(|| format!("writing merged checkpoint {out}"))?;
+            }
+            if args.has_flag("json") {
+                println!("{merged_json}");
+            } else {
+                match &report.merged {
+                    MergedSweep::CoOpt(c) => match c.winner_result() {
+                        Some(w) => println!(
+                            "winner: {} — {} uJ, {:.2} TOPS/W",
+                            w.arch.describe(),
+                            fmt_sig(w.opt.total_energy_pj / 1e6),
+                            w.opt.tops_per_watt()
+                        ),
+                        None => println!("no feasible point in the design space"),
+                    },
+                    MergedSweep::Pareto(c) => {
+                        println!("{} frontier points:", c.frontier.len());
+                        for (_, r) in c.frontier.iter().take(10) {
+                            println!(
+                                "  {:<24} {} uJ  {:.0} cycles",
+                                r.arch.name,
+                                fmt_sig(r.opt.total_energy_pj / 1e6),
+                                r.opt.total_cycles
+                            );
+                        }
+                    }
+                }
+                println!(
+                    "workers: {} launched, {} failed, {} steals, {} cancelled; \
+                     {} full evaluations; wall {:.2}s",
+                    report.launched,
+                    report.failures,
+                    report.steals,
+                    report.cancelled,
+                    report.aggregate_evaluated_full,
+                    report.wall.as_secs_f64()
+                );
             }
         }
         "pareto-merge" => {
@@ -683,6 +811,69 @@ fn parse_u64_list(list: &str) -> Result<Vec<u64>> {
         .collect()
 }
 
+fn mode_name(mode: SweepMode) -> &'static str {
+    match mode {
+        SweepMode::CoOpt => "co-opt",
+        SweepMode::Pareto => "pareto",
+    }
+}
+
+/// Build a shard worker's [`BoundsLink`] from the `--bounds`,
+/// `--bounds-interval`, and `--worker-id` flags.
+fn shard_bounds_link(args: &Args, bounds: &str) -> BoundsLink {
+    BoundsLink::new(
+        bounds,
+        args.get_usize("worker-id", 0),
+        Duration::from_millis(args.get_u64("bounds-interval", 50)),
+    )
+}
+
+/// Reconstruct the worker-facing sweep arguments from an `orchestrate`
+/// invocation: every knob the shared `co-opt`/`pareto` parser reads is
+/// forwarded verbatim — in `--key=value` form, so the workers' greedy
+/// option parser can never mis-bind them — because identical worker
+/// configuration is the checkpoint-merge contract. Orchestrator-only
+/// knobs (`--workers`, `--nshards`, steal/bounds scheduling, `--dir`,
+/// `--hosts`) are deliberately not forwarded; `--worker-threads N`
+/// forwards as the workers' `--threads N`.
+fn forward_worker_args(args: &Args) -> Vec<String> {
+    const FORWARD_OPTIONS: &[&str] = &[
+        "net",
+        "batch",
+        "head",
+        "rows",
+        "cols",
+        "space",
+        "budget",
+        "rf1",
+        "rf2-ratio",
+        "gbuf",
+        "ratio-min",
+        "ratio-max",
+        "cap",
+        "divisors",
+        "orders",
+        "min-tops",
+        "clock-ghz",
+    ];
+    const FORWARD_FLAGS: &[&str] = &["full", "no-prime"];
+    let mut out = Vec::new();
+    for k in FORWARD_OPTIONS {
+        if let Some(v) = args.get(k) {
+            out.push(format!("--{k}={v}"));
+        }
+    }
+    for f in FORWARD_FLAGS {
+        if args.has_flag(f) {
+            out.push(format!("--{f}"));
+        }
+    }
+    if let Some(t) = args.get("worker-threads") {
+        out.push(format!("--threads={t}"));
+    }
+    out
+}
+
 /// `I/N` shard spec for `co-opt --shard`.
 fn parse_shard_spec(spec: &str) -> Result<(usize, usize)> {
     let Some((index, nshards)) = spec.split_once('/') else {
@@ -1007,6 +1198,59 @@ mod tests {
         assert!(space_and_search_from_args(&bad_space, Effort::Fast).is_err());
         let bad_list = parse(&["--rf1=16,notanumber"]);
         assert!(space_and_search_from_args(&bad_list, Effort::Fast).is_err());
+    }
+
+    #[test]
+    fn forward_worker_args_round_trips_the_shared_knobs() {
+        let args = parse(&[
+            "orchestrate",
+            "--net=mlp-m",
+            "--batch=16",
+            "--space=full",
+            "--rf1=16,64",
+            "--budget=200000",
+            "--clock-ghz=0.8",
+            "--worker-threads=1",
+            "--workers=4",
+            "--nshards=8",
+            "--bounds-interval=25",
+            "--full",
+            "--no-prime",
+        ]);
+        let fwd = forward_worker_args(&args);
+        for want in [
+            "--net=mlp-m",
+            "--batch=16",
+            "--space=full",
+            "--rf1=16,64",
+            "--budget=200000",
+            "--clock-ghz=0.8",
+            "--threads=1",
+            "--full",
+            "--no-prime",
+        ] {
+            assert!(fwd.contains(&want.to_string()), "missing {want} in {fwd:?}");
+        }
+        // orchestrator-only scheduling knobs must not leak into workers
+        assert!(
+            !fwd.iter().any(|a| a.contains("workers")
+                || a.contains("nshards")
+                || a.contains("bounds-interval")),
+            "scheduling knob leaked: {fwd:?}"
+        );
+        // re-parsing the forwarded form reproduces the same space/opts
+        let re = Args::parse(fwd.iter().cloned());
+        let (s1, o1) = space_and_search_from_args(&args, Effort::Full).unwrap();
+        let (s2, o2) = space_and_search_from_args(&re, Effort::Full).unwrap();
+        assert_eq!(s1.rf1_sizes, s2.rf1_sizes);
+        assert_eq!(s1.rf2_ratios, s2.rf2_ratios);
+        assert_eq!(s1.gbuf_sizes, s2.gbuf_sizes);
+        assert_eq!(s1.max_onchip_bytes, s2.max_onchip_bytes);
+        assert_eq!(s1.arrays, s2.arrays);
+        assert_eq!(s1.buses, s2.buses);
+        assert_eq!(o1.max_blockings, o2.max_blockings);
+        assert_eq!(o1.max_divisors, o2.max_divisors);
+        assert_eq!(o1.max_order_combos, o2.max_order_combos);
     }
 
     #[test]

@@ -37,12 +37,16 @@
 //!   dominance-pruned frontiers over the same design spaces,
 //!   shard-mergeable frontier checkpoints, and budget-aware plan
 //!   selection for serving;
+//! - [`orchestrator`] — distributed sweep fan-out: shard workers across
+//!   OS processes with work stealing over sub-sharded grids and live
+//!   incumbent/frontier bound streaming through an append-only bounds
+//!   file, merging back to bit-identical winners and frontiers;
 //! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
 //!   artifacts (the request-path compute; Python is build-time only);
 //! - [`coordinator`] — CLI, sweep orchestration, reports.
 //!
-//! See `DESIGN.md` for the experiment index (every paper table/figure →
-//! bench target) and `EXPERIMENTS.md` for measured results.
+//! See `ARCHITECTURE.md` for the layer map and subsystem tours, and
+//! `ROADMAP.md` for the experiment plan and measured milestones.
 
 pub mod arch;
 pub mod coordinator;
@@ -54,6 +58,7 @@ pub mod halide;
 pub mod loopnest;
 pub mod netopt;
 pub mod nn;
+pub mod orchestrator;
 pub mod pareto;
 pub mod runtime;
 pub mod search;

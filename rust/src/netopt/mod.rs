@@ -100,8 +100,8 @@ mod stats;
 
 pub use seeds::{LayerKey, SeedTable};
 pub use shard::{
-    co_optimize_shard, co_optimize_sharded, merge_all, merge_checkpoints, ShardCheckpoint,
-    ShardRun, CHECKPOINT_FORMAT,
+    co_optimize_shard, co_optimize_shard_with, co_optimize_sharded, merge_all, merge_checkpoints,
+    ShardCheckpoint, ShardRun, CHECKPOINT_FORMAT,
 };
 pub use space::{DesignSpace, ShardEnumeration, SpaceEnumeration, OBS2_RATIO_MAX, OBS2_RATIO_MIN};
 pub use stats::NetOptStats;
@@ -683,15 +683,21 @@ pub(crate) fn run_points(
     cfg: &NetOptConfig,
     warm: Option<&SeedTable>,
 ) -> RunOutput {
-    run_points_gated(net, cands, cost, cfg, warm, None)
+    run_points_gated(net, cands, cost, cfg, warm, None, None)
 }
 
-/// [`run_points`] with an optional [`FrontierGate`]: when `gate` is
-/// given, the network-level bound is the gate's dominance archive
-/// (`cfg.prune` is ignored — the gate *is* the pruning mode) and every
-/// completed feasible point is reported to it; otherwise `cfg.prune`
-/// selects the scalar incumbent or exhaustive evaluation as before. The
-/// `crate::pareto` entry points are the only gated callers.
+/// [`run_points`] with an optional [`FrontierGate`] and an optional
+/// externally shared [`Incumbent`]. When `gate` is given, the
+/// network-level bound is the gate's dominance archive (`cfg.prune` is
+/// ignored — the gate *is* the pruning mode) and every completed
+/// feasible point is reported to it; the `crate::pareto` entry points
+/// are the only gated callers. When `shared` is given (scalar mode
+/// only — callers pass at most one of `gate`/`shared`), the run prunes
+/// against and reports completions to the caller's incumbent instead of
+/// a run-local one, which is how the orchestrator's streamed workers
+/// fold foreign bounds into a live sweep (`netopt::co_optimize_shard_with`
+/// documents the admissibility argument). Otherwise `cfg.prune` selects
+/// the scalar incumbent or exhaustive evaluation as before.
 pub(crate) fn run_points_gated(
     net: &Network,
     cands: Vec<(usize, Arch)>,
@@ -699,6 +705,7 @@ pub(crate) fn run_points_gated(
     cfg: &NetOptConfig,
     warm: Option<&SeedTable>,
     gate: Option<&dyn FrontierGate>,
+    shared: Option<&Incumbent>,
 ) -> RunOutput {
     let n = cands.len();
     let mut stats = NetOptStats {
@@ -714,7 +721,8 @@ pub(crate) fn run_points_gated(
         };
     }
     let profile = NetProfile::new(net, cfg.layer_weights.as_deref());
-    let incumbent = Incumbent::new();
+    let local_incumbent = Incumbent::new();
+    let incumbent = shared.unwrap_or(&local_incumbent);
     let seed_map: HashMap<LayerKey, f64> = warm
         .map(|t| t.iter().copied().collect())
         .unwrap_or_default();
@@ -722,7 +730,7 @@ pub(crate) fn run_points_gated(
     let nchunks = cfg.threads.max(1).min(n);
     let mode = match gate {
         Some(g) => NetMode::Frontier(g),
-        None if cfg.prune == PruneMode::BranchAndBound => NetMode::Scalar(&incumbent),
+        None if cfg.prune == PruneMode::BranchAndBound => NetMode::Scalar(incumbent),
         None => NetMode::Off,
     };
     let run = NetRun {

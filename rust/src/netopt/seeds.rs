@@ -73,7 +73,11 @@ impl SeedTable {
     }
 
     /// Min-merge another table into this one (sorted linear merge,
-    /// minimum on shared keys). Associative and commutative.
+    /// minimum on shared keys). Associative, commutative, and
+    /// **idempotent** (`t.merge(&t) == t`) — the third property is what
+    /// lets the checkpoint merge fold duplicate shard coverage (a
+    /// re-split straggler finishing after its replacement sub-shards)
+    /// without inventing energies no run observed.
     pub fn merge(&mut self, other: &SeedTable) {
         let a = std::mem::take(&mut self.entries);
         let b = &other.entries;
@@ -219,6 +223,24 @@ mod tests {
         assert_eq!(ab.get(&key(2, 1)), Some(3.0));
         assert_eq!(ab.get(&key(1, 1)), Some(10.0));
         assert_eq!(ab.get(&key(4, 1)), Some(8.0));
+    }
+
+    #[test]
+    fn merge_is_idempotent() {
+        // Duplicate-coverage checkpoint dedup folds a checkpoint's seeds
+        // into a merge that already contains them; self-merge must be a
+        // no-op for that to be sound.
+        let t = SeedTable::from_entries(vec![
+            (key(1, 1), 10.0),
+            (key(2, 1), 5.0),
+            (key(4, 2), 0.1 + 0.2),
+        ]);
+        let mut m = t.clone();
+        m.merge(&t);
+        assert_eq!(m, t);
+        for ((_, a), (_, b)) in m.iter().zip(t.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -18,6 +18,23 @@
 //!    commutative, so any merge tree over any shard grouping produces
 //!    the identical result.
 //!
+//! ## Shard composition and duplicate coverage
+//!
+//! `shard(i, n)` covers the raw-grid residue class `{g : g % n == i}`,
+//! and classes **compose**: re-splitting shard `i/n` into `m` sub-shards
+//! yields exactly the classes `(i + j*n)/(n*m)` for `j < m`, whose union
+//! is the parent class. The merge layer exploits this for the
+//! orchestrator's work stealing (`crate::orchestrator`): two checkpoints
+//! are normalized to the lcm of their shard counts and compared as
+//! raw-grid coverage there ([`merge_coverage`]). Disjoint coverage
+//! merges exactly as before; *nested* coverage — a re-split straggler
+//! finishing after its replacement sub-shards, or a speculative
+//! duplicate — deduplicates under an identity check (completed totals
+//! are deterministic per grid index, so duplicate runs must agree on any
+//! shared winner index bit-for-bit; the duplicate's stats are dropped so
+//! no grid point is double-counted); *partially* overlapping coverage,
+//! which no shard()/re-split tree can produce, stays an error.
+//!
 //! ## Winner-identity contract (cross-process)
 //!
 //! Within one shard, the branch-and-bound winner equals the shard's
@@ -81,10 +98,116 @@ use crate::search::{HierarchyResult, LayerOpt, NetworkOpt};
 use crate::util::json::Json;
 use crate::xmodel::{LevelCounts, ModelResult};
 
-use super::{run_points, CoOptResult, DesignSpace, NetOptConfig, NetOptStats, SeedTable};
+use crate::engine::Incumbent;
+
+use super::{run_points_gated, CoOptResult, DesignSpace, NetOptConfig, NetOptStats, SeedTable};
 
 /// Checkpoint schema identifier; readers reject anything else.
 pub const CHECKPOINT_FORMAT: &str = "interstellar-shard-checkpoint-v1";
+
+// ---- Residue-class shard coverage ------------------------------------
+
+/// Cap on the normalized shard granularity a merge may expand coverage
+/// to — guards the lcm expansion against pathological co-prime shard
+/// counts. Orchestrator re-splits multiply granularity by small factors,
+/// so real merge chains sit far below this.
+pub(crate) const MAX_MERGE_GRANULARITY: usize = 1 << 20;
+
+pub(crate) fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Expand residue classes `{s (mod from)}` to the finer granularity `to`
+/// (a multiple of `from`): each class becomes `to / from` classes.
+/// Sorted output.
+pub(crate) fn expand_classes(shards: &[usize], from: usize, to: usize) -> Vec<usize> {
+    debug_assert!(from >= 1 && to % from == 0);
+    let mut out: Vec<usize> = shards
+        .iter()
+        .flat_map(|&s| (0..to / from).map(move |t| s + t * from))
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// How two checkpoints' raw-grid coverages relate at their common
+/// granularity (see [`merge_coverage`]).
+pub(crate) enum CoverageRelation {
+    /// No raw-grid index in common — the ordinary additive merge.
+    Disjoint,
+    /// `b`'s coverage is contained in `a`'s (or equal): `b` is a
+    /// duplicate — dedup, keep `a`'s stats.
+    AContainsB,
+    /// `a`'s coverage is strictly contained in `b`'s: `a` is the
+    /// duplicate — dedup, keep `b`'s stats.
+    BContainsA,
+}
+
+/// Normalized union of two shard coverages: the lcm granularity, the
+/// sorted union of both coverages expanded to it, and how they relate.
+pub(crate) struct CoverageMerge {
+    /// lcm of the two shard counts.
+    pub nshards: usize,
+    /// Sorted, deduplicated union at `nshards` granularity.
+    pub shards: Vec<usize>,
+    /// Disjoint, or which side contains the other.
+    pub relation: CoverageRelation,
+}
+
+/// Relate two shard coverages, possibly at different granularities, by
+/// expanding both to the lcm of their shard counts. Errors on partial
+/// overlap (ambiguous double-counting — neither a disjoint merge nor a
+/// contained duplicate; no shard()/re-split tree produces it) and on an
+/// lcm above [`MAX_MERGE_GRANULARITY`].
+pub(crate) fn merge_coverage(
+    a_shards: &[usize],
+    a_n: usize,
+    b_shards: &[usize],
+    b_n: usize,
+) -> Result<CoverageMerge> {
+    if a_n == 0 || b_n == 0 {
+        bail!("shard count must be at least 1");
+    }
+    let l = (a_n / gcd(a_n, b_n))
+        .checked_mul(b_n)
+        .filter(|&l| l <= MAX_MERGE_GRANULARITY)
+        .ok_or_else(|| {
+            anyhow!("merged shard granularity lcm({a_n}, {b_n}) exceeds {MAX_MERGE_GRANULARITY}")
+        })?;
+    let ea = expand_classes(a_shards, a_n, l);
+    let eb = expand_classes(b_shards, b_n, l);
+    let in_a: std::collections::HashSet<usize> = ea.iter().copied().collect();
+    let common = eb.iter().filter(|s| in_a.contains(s)).count();
+    let relation = if common == 0 {
+        CoverageRelation::Disjoint
+    } else if common == eb.len() {
+        CoverageRelation::AContainsB
+    } else if common == ea.len() {
+        CoverageRelation::BContainsA
+    } else {
+        bail!(
+            "partially overlapping shard coverage: {:?}/{} vs {:?}/{}",
+            a_shards,
+            a_n,
+            b_shards,
+            b_n
+        );
+    };
+    let mut shards = ea;
+    shards.extend(eb);
+    shards.sort_unstable();
+    shards.dedup();
+    Ok(CoverageMerge {
+        nshards: l,
+        shards,
+        relation,
+    })
+}
 
 /// Everything one worker (or a merge of workers) knows about its slice of
 /// a [`co_optimize`](super::co_optimize) run: the exact winner of the
@@ -101,8 +224,10 @@ pub struct ShardCheckpoint {
     /// Total shard count of the partition this checkpoint belongs to.
     pub nshards: usize,
     /// Shard indices covered (sorted; one entry per worker checkpoint,
-    /// the union after merging). Merging overlapping shard sets is an
-    /// error — points would be double-counted.
+    /// the union after merging — possibly re-expressed at a finer
+    /// granularity when checkpoints with different shard counts merge).
+    /// Duplicate coverage deduplicates under an identity check; partial
+    /// overlap is an error (see the module docs).
     pub shards: Vec<usize>,
     /// Stats over the covered shards (space counters included, so the
     /// full merge reproduces the single-process counters' identities).
@@ -141,8 +266,40 @@ pub fn co_optimize_shard(
     index: usize,
     nshards: usize,
 ) -> ShardRun {
+    co_optimize_shard_impl(net, space, cost, cfg, index, nshards, None)
+}
+
+/// [`co_optimize_shard`] sharing an externally owned [`Incumbent`] — the
+/// orchestrator's live bound-streaming hook (`crate::orchestrator`).
+/// Values folded into `shared` before or during the run are energies of
+/// *completed* points elsewhere in the same global sweep, i.e. admissible
+/// network-level bounds: pruning against them discards only points that
+/// cannot beat (or index-tie) the global winner, by exactly the
+/// [`NetOptConfig::prime`] argument. The merged global winner keeps its
+/// bits; the only effect is more pruning in this shard.
+pub fn co_optimize_shard_with(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    index: usize,
+    nshards: usize,
+    shared: &Incumbent,
+) -> ShardRun {
+    co_optimize_shard_impl(net, space, cost, cfg, index, nshards, Some(shared))
+}
+
+fn co_optimize_shard_impl(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    index: usize,
+    nshards: usize,
+    shared: Option<&Incumbent>,
+) -> ShardRun {
     let se = space.shard(index, nshards);
-    let mut out = run_points(net, se.candidates, cost, cfg, None);
+    let mut out = run_points_gated(net, se.candidates, cost, cfg, None, None, shared);
     out.stats.generated = se.generated;
     out.stats.budget_filtered = se.budget_filtered;
     out.stats.ratio_filtered = se.ratio_filtered;
@@ -166,10 +323,16 @@ pub fn co_optimize_shard(
     }
 }
 
-/// Associatively combine two checkpoints of the same run: stats add,
-/// incumbent and per-key seeds take minima, the winner is the minimum by
-/// `(energy, global index)`. Errors on mismatched run identity or
-/// overlapping shard sets.
+/// Combine two checkpoints of the same run: incumbent and per-key seeds
+/// take minima, the winner is the minimum by `(energy, global index)`,
+/// and stats add when the coverages are disjoint. Checkpoints at
+/// different shard granularities merge through [`merge_coverage`]:
+/// nested (duplicate) coverage deduplicates — the duplicate side's stats
+/// are dropped so no grid point double-counts, after an identity check
+/// that any shared winner index carries bit-equal totals (completed
+/// totals are deterministic per grid index, whatever bounds were
+/// streamed in). Errors on mismatched run identity, partially
+/// overlapping coverage, or a failed identity check.
 pub fn merge_checkpoints(a: &ShardCheckpoint, b: &ShardCheckpoint) -> Result<ShardCheckpoint> {
     if a.network != b.network || a.batch != b.batch {
         bail!(
@@ -180,19 +343,44 @@ pub fn merge_checkpoints(a: &ShardCheckpoint, b: &ShardCheckpoint) -> Result<Sha
             b.batch
         );
     }
-    if a.nshards != b.nshards {
-        bail!("shard-count mismatch: {} vs {}", a.nshards, b.nshards);
-    }
-    let mut shards: Vec<usize> = a.shards.iter().chain(b.shards.iter()).copied().collect();
-    shards.sort_unstable();
-    if shards.windows(2).any(|w| w[0] == w[1]) {
-        bail!("overlapping shard sets: {:?} and {:?}", a.shards, b.shards);
+    let cov = merge_coverage(&a.shards, a.nshards, &b.shards, b.nshards)?;
+
+    // Identity check for duplicate coverage: two runs that both visited
+    // a grid index must agree on its totals bit-for-bit. (Under disjoint
+    // coverage equal winner indices are impossible, so the check only
+    // ever fires on duplicates.)
+    if let (Some(wa), Some(wb)) = (&a.winner, &b.winner) {
+        if wa.0 == wb.0
+            && (wa.1.opt.total_energy_pj.to_bits() != wb.1.opt.total_energy_pj.to_bits()
+                || wa.1.opt.total_cycles.to_bits() != wb.1.opt.total_cycles.to_bits())
+        {
+            bail!(
+                "duplicate-coverage identity check failed: winners disagree at grid index {} \
+                 ({} pJ vs {} pJ)",
+                wa.0,
+                wa.1.opt.total_energy_pj,
+                wb.1.opt.total_energy_pj
+            );
+        }
     }
 
-    let mut stats = a.stats.clone();
-    stats.merge(&b.stats);
+    // Stats: disjoint coverage adds; duplicate coverage keeps the
+    // covering side's counters. (Which duplicate "pays" when coverages
+    // are equal is a merge-order detail of the telemetry — winner,
+    // incumbent, seeds and coverage are all order-independent minima or
+    // unions.)
+    let stats = match cov.relation {
+        CoverageRelation::Disjoint => {
+            let mut s = a.stats.clone();
+            s.merge(&b.stats);
+            s
+        }
+        CoverageRelation::AContainsB => a.stats.clone(),
+        CoverageRelation::BContainsA => b.stats.clone(),
+    };
 
     // key-sorted min-merge, now owned by the shared SeedTable type
+    // (idempotent per key, so duplicate coverage folds safely)
     let mut seeds = a.seeds.clone();
     seeds.merge(&b.seeds);
 
@@ -207,8 +395,8 @@ pub fn merge_checkpoints(a: &ShardCheckpoint, b: &ShardCheckpoint) -> Result<Sha
     Ok(ShardCheckpoint {
         network: a.network.clone(),
         batch: a.batch,
-        nshards: a.nshards,
-        shards,
+        nshards: cov.nshards,
+        shards: cov.shards,
         stats,
         incumbent_pj: a.incumbent_pj.min(b.incumbent_pj),
         seeds,
@@ -216,14 +404,22 @@ pub fn merge_checkpoints(a: &ShardCheckpoint, b: &ShardCheckpoint) -> Result<Sha
     })
 }
 
-/// Merge a whole set of checkpoints (any order — the operation is
-/// associative and commutative). Errors on an empty set.
+/// Merge a whole set of checkpoints. Same-granularity disjoint sets
+/// merge identically in any order (every per-field operation is
+/// associative and commutative). Mixed-granularity sets — re-split
+/// stolen shards, speculative duplicates — are folded coarsest-first
+/// (ascending shard count, then lowest shard index), so a duplicate
+/// checkpoint always meets an accumulated coverage that contains it and
+/// deduplicates, instead of tripping the partial-overlap error an
+/// unlucky fold order could produce. Errors on an empty set.
 pub fn merge_all(ckpts: &[ShardCheckpoint]) -> Result<ShardCheckpoint> {
-    let (first, rest) = ckpts
-        .split_first()
-        .ok_or_else(|| anyhow!("no checkpoints to merge"))?;
-    let mut acc = first.clone();
-    for c in rest {
+    if ckpts.is_empty() {
+        bail!("no checkpoints to merge");
+    }
+    let mut order: Vec<&ShardCheckpoint> = ckpts.iter().collect();
+    order.sort_by_key(|c| (c.nshards, c.shards.first().copied().unwrap_or(0)));
+    let mut acc = order[0].clone();
+    for c in &order[1..] {
         acc = merge_checkpoints(&acc, c)?;
     }
     Ok(acc)

@@ -1,0 +1,292 @@
+//! The append-only bounds file: how live workers share pruning bounds
+//! without shared memory.
+//!
+//! One small file, line-delimited JSON, one record per line. Every
+//! worker appends (`O_APPEND`, one `write_all` per record — atomic
+//! enough on every platform we target for the small records involved)
+//! and periodically re-reads the whole file, which stays tiny: scalar
+//! records are one line, frontier records publish only points not yet
+//! in the file. The reader is deliberately forgiving — a torn or
+//! half-written trailing line, or any line that fails to parse, is
+//! skipped, never an error — so a reader racing a writer (or a worker
+//! SIGKILLed mid-append) can never poison the sweep. Bounds are
+//! *hints*: losing one costs pruning, never correctness.
+//!
+//! ## Record formats (v1)
+//!
+//! ```json
+//! {"v": 1, "worker": 3, "kind": "incumbent", "energy_pj": 1234.5}
+//! {"v": 1, "worker": 3, "kind": "frontier",
+//!  "points": [{"index": 17, "energy_pj": 1.5, "cycles": 2.0}, ...]}
+//! ```
+//!
+//! Floats use the shortest-round-trip formatting of
+//! [`crate::util::json`], so a bound read back has exactly the bits the
+//! publisher observed — the admissibility argument (see the parent
+//! module) needs published bounds to be real completed energies, not
+//! approximations of them.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::pareto::FrontierPoint;
+use crate::util::json::Json;
+
+/// Protocol version stamped on every record; readers skip other
+/// versions (forward compatibility across a mixed-version fleet).
+const BOUNDS_VERSION: u64 = 1;
+
+/// Aggregated view of every well-formed record published so far.
+#[derive(Debug, Clone)]
+pub struct BoundsSnapshot {
+    /// Minimum published incumbent energy (+inf when none yet).
+    pub incumbent_pj: f64,
+    /// Every published frontier point (duplicates included — callers
+    /// fold them through [`crate::pareto::LiveFrontier::absorb`] or
+    /// [`keyed`](Self::keyed), both of which deduplicate).
+    pub frontier: Vec<FrontierPoint>,
+    /// Well-formed records seen (telemetry).
+    pub records: usize,
+}
+
+impl BoundsSnapshot {
+    /// The empty snapshot (no bounds published yet).
+    pub fn empty() -> BoundsSnapshot {
+        BoundsSnapshot {
+            incumbent_pj: f64::INFINITY,
+            frontier: Vec::new(),
+            records: 0,
+        }
+    }
+
+    /// The published frontier points as a deduplicating key set —
+    /// `(index, energy bits, cycles bits)` — for publish-only-fresh
+    /// filtering.
+    pub fn keyed(&self) -> std::collections::HashSet<(usize, u64, u64)> {
+        self.frontier.iter().map(point_key).collect()
+    }
+}
+
+/// The deduplication key of a published frontier point: candidate index
+/// plus exact vector bits.
+pub fn point_key(p: &FrontierPoint) -> (usize, u64, u64) {
+    (p.index, p.energy_pj.to_bits(), p.cycles.to_bits())
+}
+
+/// One worker's handle on a shared bounds file: where it is, who is
+/// writing, and how often the streaming loop wakes.
+#[derive(Debug, Clone)]
+pub struct BoundsLink {
+    path: PathBuf,
+    worker: usize,
+    interval: Duration,
+}
+
+impl BoundsLink {
+    /// A handle for `worker` on the bounds file at `path`, with the
+    /// given publish/refresh interval.
+    pub fn new(path: impl Into<PathBuf>, worker: usize, interval: Duration) -> BoundsLink {
+        BoundsLink {
+            path: path.into(),
+            worker,
+            interval,
+        }
+    }
+
+    /// The bounds-file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The streaming loop's wake interval.
+    pub fn interval(&self) -> Duration {
+        self.interval
+    }
+
+    /// Append a scalar incumbent record (the energy of a *completed*
+    /// feasible point — the admissibility contract).
+    pub fn publish_incumbent(&self, energy_pj: f64) -> Result<()> {
+        self.append(Json::Obj(vec![
+            ("v".into(), Json::int(BOUNDS_VERSION)),
+            ("worker".into(), Json::int(self.worker as u64)),
+            ("kind".into(), Json::str("incumbent")),
+            ("energy_pj".into(), Json::num(energy_pj)),
+        ]))
+    }
+
+    /// Append a frontier record (each point a *completed* feasible
+    /// point's exact totals).
+    pub fn publish_frontier(&self, points: &[FrontierPoint]) -> Result<()> {
+        let pts = points
+            .iter()
+            .map(|p| {
+                Json::Obj(vec![
+                    ("index".into(), Json::int(p.index as u64)),
+                    ("energy_pj".into(), Json::num(p.energy_pj)),
+                    ("cycles".into(), Json::num(p.cycles)),
+                ])
+            })
+            .collect();
+        self.append(Json::Obj(vec![
+            ("v".into(), Json::int(BOUNDS_VERSION)),
+            ("worker".into(), Json::int(self.worker as u64)),
+            ("kind".into(), Json::str("frontier")),
+            ("points".into(), Json::Arr(pts)),
+        ]))
+    }
+
+    /// Read and aggregate every well-formed record (see
+    /// [`read_bounds`]).
+    pub fn read(&self) -> BoundsSnapshot {
+        read_bounds(&self.path)
+    }
+
+    fn append(&self, record: Json) -> Result<()> {
+        // Leading newline: if the previous writer was killed mid-append
+        // and left a torn tail, this record still starts on a fresh line
+        // — only the torn record is lost, never the one after it. The
+        // reader skips the blank lines this produces in the common case.
+        let line = format!("\n{record}\n");
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("open bounds file {}", self.path.display()))?;
+        f.write_all(line.as_bytes())
+            .with_context(|| format!("append bounds record to {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// Read a bounds file into an aggregated snapshot. A missing file is an
+/// empty snapshot; unparseable or truncated lines (a writer mid-append,
+/// a worker killed mid-write) are skipped.
+pub fn read_bounds(path: &Path) -> BoundsSnapshot {
+    let mut snap = BoundsSnapshot::empty();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return snap,
+    };
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        if parse_record(line, &mut snap).is_some() {
+            snap.records += 1;
+        }
+    }
+    snap
+}
+
+/// Fold one record line into the snapshot; `None` (skip) on any
+/// malformed or foreign-version line.
+fn parse_record(line: &str, snap: &mut BoundsSnapshot) -> Option<()> {
+    let v = Json::parse(line).ok()?;
+    if v.field("v").ok()?.as_u64().ok()? != BOUNDS_VERSION {
+        return None;
+    }
+    match v.field("kind").ok()?.as_str().ok()? {
+        "incumbent" => {
+            let e = v.field("energy_pj").ok()?.as_f64().ok()?;
+            if e.is_finite() {
+                snap.incumbent_pj = snap.incumbent_pj.min(e);
+            }
+            Some(())
+        }
+        "frontier" => {
+            // Parse the whole record before folding any of it in, so a
+            // torn line never contributes half a snapshot.
+            let mut pts = Vec::new();
+            for p in v.field("points").ok()?.as_arr().ok()? {
+                let fp = FrontierPoint {
+                    index: p.field("index").ok()?.as_usize().ok()?,
+                    energy_pj: p.field("energy_pj").ok()?.as_f64().ok()?,
+                    cycles: p.field("cycles").ok()?.as_f64().ok()?,
+                };
+                if !fp.energy_pj.is_finite() || !fp.cycles.is_finite() {
+                    return None;
+                }
+                pts.push(fp);
+            }
+            snap.frontier.extend(pts);
+            Some(())
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("interstellar-bounds-{}-{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn round_trips_scalar_and_frontier_records() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let link = BoundsLink::new(&path, 7, Duration::from_millis(10));
+        link.publish_incumbent(0.1 + 0.2).unwrap();
+        link.publish_incumbent(5.0).unwrap();
+        let pts = [
+            FrontierPoint {
+                index: 3,
+                energy_pj: 10.0,
+                cycles: 2.5,
+            },
+            FrontierPoint {
+                index: 9,
+                energy_pj: f64::from_bits(0x3FF5_5555_5555_5555),
+                cycles: 1.0,
+            },
+        ];
+        link.publish_frontier(&pts).unwrap();
+
+        let snap = link.read();
+        assert_eq!(snap.records, 3);
+        // min over published incumbents, exact bits preserved
+        assert_eq!(snap.incumbent_pj.to_bits(), (0.1f64 + 0.2).to_bits());
+        assert_eq!(snap.frontier.len(), 2);
+        assert_eq!(point_key(&snap.frontier[1]), point_key(&pts[1]));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reader_skips_torn_and_garbage_lines() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        let link = BoundsLink::new(&path, 0, Duration::from_millis(10));
+        link.publish_incumbent(42.0).unwrap();
+        // a torn append (no newline, cut mid-number) and plain garbage
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .unwrap()
+            .write_all(b"not json at all\n{\"v\":1,\"worker\":0,\"kind\":\"incumbent\",\"energy_pj\":12.")
+            .unwrap();
+        let snap = link.read();
+        assert_eq!(snap.records, 1);
+        assert_eq!(snap.incumbent_pj, 42.0);
+        // the newline-prefixed append isolates the torn tail: the next
+        // record lands on its own line and is read back fine
+        link.publish_incumbent(7.0).unwrap();
+        let snap = link.read();
+        assert_eq!(snap.records, 2);
+        assert_eq!(snap.incumbent_pj, 7.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_empty_snapshot() {
+        let snap = read_bounds(Path::new("/nonexistent/interstellar-bounds.jsonl"));
+        assert_eq!(snap.records, 0);
+        assert!(snap.incumbent_pj.is_infinite());
+        assert!(snap.frontier.is_empty());
+    }
+}

@@ -1,0 +1,714 @@
+//! Distributed sweep orchestrator: work-stealing shard fan-out with live
+//! bound streaming.
+//!
+//! [`orchestrate`] fans a co-optimization or frontier sweep out across
+//! OS processes: each worker is an ordinary `co-opt --shard I/N` /
+//! `pareto --shard I/N` invocation of the `interstellar` binary (or any
+//! launcher-prefixed command — `ssh host interstellar ...` works the
+//! same, the protocol never assumes shared memory), writing its
+//! [`ShardCheckpoint`] / [`FrontierCheckpoint`] to a file the
+//! orchestrator parses when the process exits. Two mechanisms ride on
+//! top of that plain fan-out:
+//!
+//! - **Live bound streaming** (`bounds` module): workers append their
+//!   incumbent / fresh frontier points to a shared append-only bounds
+//!   file and periodically fold the freshest global bound back into
+//!   their own pruning gates, so late shards start tight instead of
+//!   cold. Bounds are admissible hints (completed feasible points of
+//!   the same sweep — the `NetOptConfig::prime` argument), so the
+//!   merged winner and frontier keep their single-process bits; only
+//!   the amount of work changes.
+//!
+//! - **Work stealing over sub-sharded grids**: `shard(i, n)` composes —
+//!   sub-shard `j` of `m` of shard `(i, n)` is exactly shard
+//!   `(i + j·n, n·m)`, and the union over `j` recovers the parent (see
+//!   `netopt::shard`). When a worker dies (or, with speculation
+//!   enabled, straggles), its class is re-split into `steal_split`
+//!   sub-classes and redistributed to idle workers. A straggler that
+//!   finishes *after* its replacements produces duplicate coverage; the
+//!   checkpoint merges deduplicate it under a bit-identity check, so an
+//!   interrupted-and-stolen sweep still merges to the exact
+//!   single-process result.
+//!
+//! ## Crash-tolerance model
+//!
+//! Workers are stateless and idempotent: a shard class is either fully
+//! covered by a parsed checkpoint or not covered at all. A SIGKILLed
+//! worker leaves at most a torn bounds-file line (isolated by the
+//! append protocol, see `bounds`) and a missing/unparseable checkpoint
+//! — both handled by re-splitting the class and re-running it. The
+//! orchestrator itself keeps no on-disk state beyond the checkpoint and
+//! bounds files; completed coverage is re-derived from the checkpoint
+//! files it has parsed.
+
+pub mod bounds;
+pub mod worker;
+
+pub use bounds::{point_key, read_bounds, BoundsLink, BoundsSnapshot};
+pub use worker::{run_coopt_shard_streamed, run_pareto_shard_streamed};
+
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::netopt::shard::{gcd, MAX_MERGE_GRANULARITY};
+use crate::netopt::{merge_all, ShardCheckpoint};
+use crate::pareto::{merge_all_frontiers, FrontierCheckpoint};
+
+/// Which sweep the workers run — selects the subcommand, the checkpoint
+/// format parsed back, and the merge used at the end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepMode {
+    /// `co-opt --shard`: scalar energy minimization, merged through
+    /// [`merge_all`].
+    CoOpt,
+    /// `pareto --shard`: energy/latency frontier, merged through
+    /// [`merge_all_frontiers`].
+    Pareto,
+}
+
+impl SweepMode {
+    fn subcommand(self) -> &'static str {
+        match self {
+            SweepMode::CoOpt => "co-opt",
+            SweepMode::Pareto => "pareto",
+        }
+    }
+}
+
+/// Everything [`orchestrate`] needs to run a sweep. Build with
+/// [`new`](Self::new), then adjust the public knobs.
+#[derive(Debug, Clone)]
+pub struct OrchestrateConfig {
+    /// Sweep family (co-opt or pareto).
+    pub mode: SweepMode,
+    /// Path to the `interstellar` binary workers execute.
+    pub bin: PathBuf,
+    /// Scratch directory for checkpoint files and the bounds file
+    /// (created if missing).
+    pub dir: PathBuf,
+    /// Maximum concurrently running workers.
+    pub workers: usize,
+    /// Initial shard partition width (defaults to `workers`; more shards
+    /// than workers gives the scheduler waves to balance across).
+    pub nshards: usize,
+    /// Arguments forwarded verbatim to every worker between the
+    /// subcommand and the `--shard` spec (network, space, search knobs —
+    /// identical configuration across workers is the merge contract).
+    pub worker_args: Vec<String>,
+    /// Optional launcher prefixes, round-robined over workers: each is
+    /// prepended to the worker argv (e.g. `["ssh", "host1"]`). Empty
+    /// means plain local processes.
+    pub launchers: Vec<Vec<String>>,
+    /// Re-split failed/straggling classes into sub-shards instead of
+    /// retrying them whole.
+    pub steal: bool,
+    /// How many sub-classes a stolen class splits into (≥ 2).
+    pub steal_split: usize,
+    /// Cap on re-split events (runaway guard; beyond it, failures fall
+    /// back to whole-class retries).
+    pub max_steals: usize,
+    /// Whole-class retries allowed per class when stealing is off or
+    /// exhausted.
+    pub max_retries: usize,
+    /// Speculative re-split: when idle capacity exists and a running
+    /// task has taken more than this factor times the median completed
+    /// wall time, its class is re-split for idle workers to race.
+    /// `0.0` disables speculation.
+    pub straggler_factor: f64,
+    /// Bounds-file streaming interval; `None` disables streaming (no
+    /// `--bounds` flags are passed).
+    pub bounds_interval: Option<Duration>,
+    /// Scheduler poll period.
+    pub poll: Duration,
+    /// Test hook: SIGKILL the worker with this launch sequence number
+    /// after it has run for the given duration (crash-tolerance gate).
+    pub fault_kill: Option<(usize, Duration)>,
+}
+
+impl OrchestrateConfig {
+    /// A config with the default scheduling knobs: `nshards = workers`,
+    /// stealing on (split 2, 64 steals, 2 retries), speculation off,
+    /// 50 ms bound streaming, 5 ms poll.
+    pub fn new(
+        mode: SweepMode,
+        bin: impl Into<PathBuf>,
+        dir: impl Into<PathBuf>,
+        workers: usize,
+    ) -> OrchestrateConfig {
+        OrchestrateConfig {
+            mode,
+            bin: bin.into(),
+            dir: dir.into(),
+            workers,
+            nshards: workers.max(1),
+            worker_args: Vec::new(),
+            launchers: Vec::new(),
+            steal: true,
+            steal_split: 2,
+            max_steals: 64,
+            max_retries: 2,
+            straggler_factor: 0.0,
+            bounds_interval: Some(Duration::from_millis(50)),
+            poll: Duration::from_millis(5),
+            fault_kill: None,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("orchestrate needs at least one worker");
+        }
+        if self.nshards == 0 {
+            bail!("orchestrate needs at least one shard");
+        }
+        if self.steal_split < 2 {
+            bail!("--steal-split must be at least 2");
+        }
+        Ok(())
+    }
+}
+
+/// How one launched worker ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskOutcome {
+    /// Exited cleanly with a parseable checkpoint.
+    Done,
+    /// Exited nonzero, was killed, or left an unparseable checkpoint;
+    /// its class was re-split or retried.
+    Failed,
+    /// Killed by the orchestrator after its coverage was already
+    /// complete elsewhere (a raced straggler or post-coverage cancel).
+    Cancelled,
+}
+
+/// Telemetry for one launched worker process.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    /// Launch sequence number (also the bounds-file worker id).
+    pub seq: usize,
+    /// The shard class `(index, nshards)` this worker ran.
+    pub class: (usize, usize),
+    /// How it ended.
+    pub outcome: TaskOutcome,
+    /// Wall time from spawn to reap.
+    pub wall: Duration,
+}
+
+/// The merged sweep result — one variant per [`SweepMode`].
+#[derive(Debug, Clone)]
+pub enum MergedSweep {
+    /// Merged co-optimization checkpoint (global winner, stats, seeds).
+    CoOpt(ShardCheckpoint),
+    /// Merged frontier checkpoint (global frontier, stats, seeds).
+    Pareto(FrontierCheckpoint),
+}
+
+/// Everything [`orchestrate`] hands back: the merged result plus
+/// scheduling telemetry.
+#[derive(Debug, Clone)]
+pub struct OrchestrateReport {
+    /// The merged checkpoint (bit-identical winner/frontier to the
+    /// single-process sweep).
+    pub merged: MergedSweep,
+    /// One record per launched worker process, in launch order.
+    pub tasks: Vec<TaskRecord>,
+    /// Worker processes launched.
+    pub launched: usize,
+    /// Workers that failed (crashed, nonzero exit, bad checkpoint).
+    pub failures: usize,
+    /// Re-split events (failure-driven and speculative).
+    pub steals: usize,
+    /// Workers cancelled after their coverage completed elsewhere.
+    pub cancelled: usize,
+    /// Sum of `stats.evaluated_full` over the checkpoints that made it
+    /// into the merge (the streaming-efficiency metric; duplicates from
+    /// raced stragglers are deduplicated by the merge but still counted
+    /// here as work actually done).
+    pub aggregate_evaluated_full: usize,
+    /// End-to-end orchestration wall time.
+    pub wall: Duration,
+}
+
+struct RunningTask {
+    seq: usize,
+    class: (usize, usize),
+    child: Child,
+    checkpoint: PathBuf,
+    started: Instant,
+    split: bool,
+}
+
+enum Parsed {
+    CoOpt(Box<ShardCheckpoint>),
+    Pareto(Box<FrontierCheckpoint>),
+}
+
+struct State {
+    pending: VecDeque<(usize, usize)>,
+    running: Vec<RunningTask>,
+    done: Vec<Parsed>,
+    done_classes: Vec<(usize, usize)>,
+    done_walls: Vec<Duration>,
+    tasks: Vec<TaskRecord>,
+    attempts: HashMap<(usize, usize), usize>,
+    next_seq: usize,
+    failures: usize,
+    steals: usize,
+    cancelled: usize,
+    fault_fired: bool,
+}
+
+/// Run the configured sweep to completion and merge the checkpoints.
+///
+/// Errors when a class exhausts its retries without stealing headroom,
+/// when a worker cannot be spawned repeatedly, or when the merged
+/// coverage is incomplete (which the scheduler prevents unless every
+/// recovery path is exhausted). Running children are killed on every
+/// error path.
+pub fn orchestrate(cfg: &OrchestrateConfig) -> Result<OrchestrateReport> {
+    cfg.validate()?;
+    std::fs::create_dir_all(&cfg.dir)
+        .with_context(|| format!("create orchestrator dir {}", cfg.dir.display()))?;
+    let bounds_path = cfg.bounds_interval.map(|_| cfg.dir.join("bounds.jsonl"));
+    let t0 = Instant::now();
+
+    let mut st = State {
+        pending: (0..cfg.nshards).map(|i| (i, cfg.nshards)).collect(),
+        running: Vec::new(),
+        done: Vec::new(),
+        done_classes: Vec::new(),
+        done_walls: Vec::new(),
+        tasks: Vec::new(),
+        attempts: HashMap::new(),
+        next_seq: 0,
+        failures: 0,
+        steals: 0,
+        cancelled: 0,
+        fault_fired: false,
+    };
+
+    let looped = run_loop(cfg, bounds_path.as_deref(), &mut st);
+    // Safety net: no error path may leak worker processes.
+    for t in &mut st.running {
+        let _ = t.child.kill();
+        let _ = t.child.wait();
+    }
+    looped?;
+
+    let mut aggregate_evaluated_full = 0usize;
+    let merged = match cfg.mode {
+        SweepMode::CoOpt => {
+            let mut ckpts = Vec::with_capacity(st.done.len());
+            for p in &st.done {
+                match p {
+                    Parsed::CoOpt(c) => {
+                        aggregate_evaluated_full += c.stats.evaluated_full;
+                        ckpts.push((**c).clone());
+                    }
+                    Parsed::Pareto(_) => bail!("pareto checkpoint in a co-opt sweep"),
+                }
+            }
+            MergedSweep::CoOpt(merge_all(&ckpts)?)
+        }
+        SweepMode::Pareto => {
+            let mut ckpts = Vec::with_capacity(st.done.len());
+            for p in &st.done {
+                match p {
+                    Parsed::Pareto(c) => {
+                        aggregate_evaluated_full += c.stats.evaluated_full;
+                        ckpts.push((**c).clone());
+                    }
+                    Parsed::CoOpt(_) => bail!("co-opt checkpoint in a pareto sweep"),
+                }
+            }
+            MergedSweep::Pareto(merge_all_frontiers(&ckpts)?)
+        }
+    };
+    let (nshards, covered) = match &merged {
+        MergedSweep::CoOpt(c) => (c.nshards, c.shards.len()),
+        MergedSweep::Pareto(c) => (c.nshards, c.shards.len()),
+    };
+    if covered != nshards {
+        bail!("merged coverage incomplete: {covered}/{nshards} shards");
+    }
+
+    Ok(OrchestrateReport {
+        merged,
+        tasks: st.tasks,
+        launched: st.next_seq,
+        failures: st.failures,
+        steals: st.steals,
+        cancelled: st.cancelled,
+        aggregate_evaluated_full,
+        wall: t0.elapsed(),
+    })
+}
+
+fn run_loop(cfg: &OrchestrateConfig, bounds: Option<&Path>, st: &mut State) -> Result<()> {
+    while !(st.pending.is_empty() && st.running.is_empty()) {
+        // Launch up to the worker cap.
+        while st.running.len() < cfg.workers {
+            let Some(class) = st.pending.pop_front() else {
+                break;
+            };
+            launch(cfg, bounds, st, class)?;
+        }
+
+        inject_fault(cfg, st);
+        reap(cfg, st)?;
+        speculate(cfg, st);
+
+        // Early exit: once the parsed checkpoints already cover the full
+        // grid (a stolen class's original finished, say), anything still
+        // running is redundant — kill it rather than wait it out.
+        if coverage_full(&st.done_classes) {
+            for mut t in st.running.drain(..) {
+                let _ = t.child.kill();
+                let _ = t.child.wait();
+                st.cancelled += 1;
+                st.tasks.push(TaskRecord {
+                    seq: t.seq,
+                    class: t.class,
+                    outcome: TaskOutcome::Cancelled,
+                    wall: t.started.elapsed(),
+                });
+            }
+            st.pending.clear();
+            break;
+        }
+
+        if !st.running.is_empty() {
+            std::thread::sleep(cfg.poll);
+        }
+    }
+    if !coverage_full(&st.done_classes) {
+        bail!("sweep drained without covering the full grid");
+    }
+    Ok(())
+}
+
+fn launch(
+    cfg: &OrchestrateConfig,
+    bounds: Option<&Path>,
+    st: &mut State,
+    class: (usize, usize),
+) -> Result<()> {
+    let seq = st.next_seq;
+    st.next_seq += 1;
+    let checkpoint = cfg
+        .dir
+        .join(format!("task-{seq}-shard-{}of{}.json", class.0, class.1));
+    // A retry must not parse a stale file from a previous attempt.
+    let _ = std::fs::remove_file(&checkpoint);
+
+    let mut argv: Vec<String> = Vec::new();
+    if !cfg.launchers.is_empty() {
+        argv.extend(cfg.launchers[seq % cfg.launchers.len()].iter().cloned());
+    }
+    argv.push(cfg.bin.display().to_string());
+    argv.push(cfg.mode.subcommand().to_string());
+    argv.extend(cfg.worker_args.iter().cloned());
+    argv.push("--shard".into());
+    argv.push(format!("{}/{}", class.0, class.1));
+    argv.push("--checkpoint".into());
+    argv.push(checkpoint.display().to_string());
+    if let (Some(path), Some(interval)) = (bounds, cfg.bounds_interval) {
+        argv.push("--bounds".into());
+        argv.push(path.display().to_string());
+        argv.push("--bounds-interval".into());
+        argv.push(interval.as_millis().to_string());
+        argv.push("--worker-id".into());
+        argv.push(seq.to_string());
+    }
+
+    let mut cmd = Command::new(&argv[0]);
+    cmd.args(&argv[1..]).stdout(Stdio::null()).stderr(Stdio::null());
+    match cmd.spawn() {
+        Ok(child) => {
+            st.running.push(RunningTask {
+                seq,
+                class,
+                child,
+                checkpoint,
+                started: Instant::now(),
+                split: false,
+            });
+            Ok(())
+        }
+        Err(e) => {
+            // Spawn failure (bad launcher, missing binary on a host):
+            // treated like a worker failure so the class is retried or
+            // re-split elsewhere instead of aborting the sweep.
+            st.failures += 1;
+            st.tasks.push(TaskRecord {
+                seq,
+                class,
+                outcome: TaskOutcome::Failed,
+                wall: Duration::ZERO,
+            });
+            requeue(cfg, st, class).with_context(|| format!("spawn worker: {e}"))
+        }
+    }
+}
+
+fn inject_fault(cfg: &OrchestrateConfig, st: &mut State) {
+    let Some((victim, after)) = cfg.fault_kill else {
+        return;
+    };
+    if st.fault_fired {
+        return;
+    }
+    if let Some(t) = st.running.iter_mut().find(|t| t.seq == victim) {
+        if t.started.elapsed() >= after {
+            let _ = t.child.kill();
+            st.fault_fired = true;
+        }
+    } else if st.next_seq > victim {
+        // The victim already exited on its own; nothing left to kill.
+        st.fault_fired = true;
+    }
+}
+
+fn reap(cfg: &OrchestrateConfig, st: &mut State) -> Result<()> {
+    let mut i = 0;
+    while i < st.running.len() {
+        match st.running[i].child.try_wait() {
+            Ok(None) => i += 1,
+            Ok(Some(status)) => {
+                let mut t = st.running.swap_remove(i);
+                let _ = t.child.wait();
+                let wall = t.started.elapsed();
+                let parsed = if status.success() {
+                    parse_checkpoint(cfg.mode, &t.checkpoint).ok()
+                } else {
+                    None
+                };
+                match parsed {
+                    Some(p) => {
+                        st.done.push(p);
+                        st.done_classes.push(t.class);
+                        st.done_walls.push(wall);
+                        st.tasks.push(TaskRecord {
+                            seq: t.seq,
+                            class: t.class,
+                            outcome: TaskOutcome::Done,
+                            wall,
+                        });
+                    }
+                    None => {
+                        st.failures += 1;
+                        st.tasks.push(TaskRecord {
+                            seq: t.seq,
+                            class: t.class,
+                            outcome: TaskOutcome::Failed,
+                            wall,
+                        });
+                        // A replacement may already have covered it.
+                        if !class_covered(t.class, &st.done_classes) {
+                            requeue(cfg, st, t.class)?;
+                        }
+                    }
+                }
+            }
+            Err(e) => return Err(e).context("wait on worker process"),
+        }
+    }
+    Ok(())
+}
+
+/// Speculative stealing: with idle capacity and nothing pending, re-split
+/// the longest-running unsplit task once it exceeds `straggler_factor`
+/// times the median completed wall time, letting idle workers race the
+/// straggler. Whichever finishes first wins; the loser is cancelled (or
+/// deduplicated by the merge if both complete).
+fn speculate(cfg: &OrchestrateConfig, st: &mut State) {
+    if !cfg.steal
+        || cfg.straggler_factor <= 0.0
+        || st.steals >= cfg.max_steals
+        || !st.pending.is_empty()
+        || st.running.len() >= cfg.workers
+        || st.done_walls.is_empty()
+    {
+        return;
+    }
+    let mut walls = st.done_walls.clone();
+    walls.sort();
+    let median = walls[walls.len() / 2].as_secs_f64().max(0.001);
+    let Some(t) = st
+        .running
+        .iter_mut()
+        .filter(|t| !t.split && splittable(t.class, cfg.steal_split))
+        .max_by_key(|t| t.started.elapsed())
+    else {
+        return;
+    };
+    if t.started.elapsed().as_secs_f64() > cfg.straggler_factor * median {
+        t.split = true;
+        let class = t.class;
+        split_into(&mut st.pending, class, cfg.steal_split);
+        st.steals += 1;
+    }
+}
+
+fn requeue(cfg: &OrchestrateConfig, st: &mut State, class: (usize, usize)) -> Result<()> {
+    if cfg.steal && st.steals < cfg.max_steals && splittable(class, cfg.steal_split) {
+        st.steals += 1;
+        split_into(&mut st.pending, class, cfg.steal_split);
+        return Ok(());
+    }
+    let tries = st.attempts.entry(class).or_insert(0);
+    *tries += 1;
+    if *tries > cfg.max_retries {
+        bail!(
+            "shard {}/{} failed {} retries and cannot be re-split further",
+            class.0,
+            class.1,
+            cfg.max_retries
+        );
+    }
+    st.pending.push_back(class);
+    Ok(())
+}
+
+/// Sub-shard composition: class `(i, n)` splits into
+/// `(i + j·n, n·split)` for `j in 0..split`, whose union is exactly the
+/// parent's grid indices (see `netopt::shard`'s composition docs).
+fn split_into(pending: &mut VecDeque<(usize, usize)>, class: (usize, usize), split: usize) {
+    for j in 0..split {
+        pending.push_back((class.0 + j * class.1, class.1 * split));
+    }
+}
+
+fn splittable(class: (usize, usize), split: usize) -> bool {
+    class
+        .1
+        .checked_mul(split)
+        .is_some_and(|n| n <= MAX_MERGE_GRANULARITY)
+}
+
+/// True when `class`'s residues are a subset of the already-completed
+/// coverage (so a failed straggler whose replacements finished needs no
+/// requeue).
+fn class_covered(class: (usize, usize), done: &[(usize, usize)]) -> bool {
+    let mut with = done.to_vec();
+    with.push(class);
+    let Some(l) = lcm_all(&with) else {
+        return false;
+    };
+    let mut mask = vec![false; l];
+    for &(i, n) in done {
+        let mut g = i;
+        while g < l {
+            mask[g] = true;
+            g += n;
+        }
+    }
+    let mut g = class.0;
+    while g < l {
+        if !mask[g] {
+            return false;
+        }
+        g += class.1;
+    }
+    true
+}
+
+/// True when the completed classes cover every residue of their common
+/// refinement — i.e. every raw grid index has a finished checkpoint.
+fn coverage_full(done: &[(usize, usize)]) -> bool {
+    if done.is_empty() {
+        return false;
+    }
+    let Some(l) = lcm_all(done) else {
+        return false;
+    };
+    let mut mask = vec![false; l];
+    for &(i, n) in done {
+        let mut g = i;
+        while g < l {
+            mask[g] = true;
+            g += n;
+        }
+    }
+    mask.iter().all(|&b| b)
+}
+
+fn lcm_all(classes: &[(usize, usize)]) -> Option<usize> {
+    let mut l = 1usize;
+    for &(_, n) in classes {
+        l = l.checked_mul(n / gcd(l, n))?;
+        if l > MAX_MERGE_GRANULARITY {
+            return None;
+        }
+    }
+    Some(l)
+}
+
+fn parse_checkpoint(mode: SweepMode, path: &Path) -> Result<Parsed> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read worker checkpoint {}", path.display()))?;
+    Ok(match mode {
+        SweepMode::CoOpt => Parsed::CoOpt(Box::new(ShardCheckpoint::from_json(&text)?)),
+        SweepMode::Pareto => Parsed::Pareto(Box::new(FrontierCheckpoint::from_json(&text)?)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_composition_recovers_parent_residues() {
+        // (1, 3) split by 2 → (1, 6) and (4, 6); union over g < 12 must
+        // equal the parent's residues.
+        let mut pending = VecDeque::new();
+        split_into(&mut pending, (1, 3), 2);
+        assert_eq!(pending, VecDeque::from(vec![(1, 6), (4, 6)]));
+        let parent: Vec<usize> = (0..12).filter(|g| g % 3 == 1).collect();
+        let mut union: Vec<usize> = (0..12)
+            .filter(|g| pending.iter().any(|&(i, n)| g % n == i))
+            .collect();
+        union.sort_unstable();
+        assert_eq!(union, parent);
+    }
+
+    #[test]
+    fn coverage_full_accepts_mixed_granularity() {
+        // shard (0, 2) plus the re-split halves of (1, 2).
+        assert!(coverage_full(&[(0, 2), (1, 4), (3, 4)]));
+        assert!(!coverage_full(&[(0, 2), (1, 4)]));
+        assert!(!coverage_full(&[]));
+        // duplicates are fine
+        assert!(coverage_full(&[(0, 1), (1, 2)]));
+    }
+
+    #[test]
+    fn class_covered_spots_redundant_stragglers() {
+        // (1, 2)'s replacements finished → the straggler is covered.
+        assert!(class_covered((1, 2), &[(1, 4), (3, 4)]));
+        assert!(!class_covered((1, 2), &[(1, 4)]));
+        // disjoint class is not covered
+        assert!(!class_covered((0, 2), &[(1, 2)]));
+    }
+
+    #[test]
+    fn splittable_respects_granularity_cap() {
+        assert!(splittable((0, 4), 2));
+        assert!(!splittable((0, MAX_MERGE_GRANULARITY), 2));
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = OrchestrateConfig::new(SweepMode::CoOpt, "/bin/true", "/tmp/x", 0);
+        assert!(cfg.validate().is_err());
+        cfg.workers = 2;
+        cfg.steal_split = 1;
+        assert!(cfg.validate().is_err());
+        cfg.steal_split = 2;
+        assert!(cfg.validate().is_ok());
+    }
+}

@@ -1,0 +1,167 @@
+//! Streamed shard workers: the bodies behind `co-opt --shard --bounds`
+//! and `pareto --shard --bounds`.
+//!
+//! Each wraps the ordinary shard runner with a streaming side-thread
+//! that, every [`BoundsLink::interval`]:
+//!
+//! - **folds** the freshest global bound from the bounds file into the
+//!   run's shared [`Incumbent`] / [`LiveFrontier`] (so this shard prunes
+//!   against everything any worker has completed), and
+//! - **publishes** whatever this shard has newly completed (so later
+//!   workers start tight instead of cold).
+//!
+//! Both runners also fold once *before* the sweep starts — a worker
+//! launched after others finished is guaranteed their final bounds, not
+//! subject to refresher timing — and publish once *after* it ends, so a
+//! finished shard's bound survives for workers that have not started
+//! yet.
+//!
+//! ## Why streaming cannot change the merged result
+//!
+//! Scalar mode: every published energy is the exact total of a
+//! *completed, feasible* point of the same global sweep, so it is an
+//! admissible network-level bound — pruning against it (with the
+//! engine's strict-beyond-slack comparison) discards only points that
+//! can neither beat nor index-tie the global winner. This is precisely
+//! the `NetOptConfig::prime` argument with the priming point completed
+//! in another process. Frontier mode: a published vector is a real
+//! completed point's exact totals, so anything it strictly dominates
+//! beyond slack is strictly dominated globally and was never on the
+//! frontier; the home shard of the dominating point retains it (or
+//! something dominating it), so the merged union re-filter reproduces
+//! the single-process frontier bit-for-bit. Shard-*local* winners and
+//! local frontiers may legitimately shrink under foreign bounds — the
+//! merge only promises the **global** winner/frontier keeps its bits.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::energy::CostModel;
+use crate::engine::Incumbent;
+use crate::netopt::{co_optimize_shard_with, DesignSpace, NetOptConfig, ShardRun};
+use crate::nn::Network;
+use crate::pareto::{pareto_optimize_shard_with, FrontierCheckpoint, FrontierPoint, LiveFrontier};
+
+use super::bounds::{point_key, BoundsLink};
+
+/// Run one co-optimization shard with live scalar-bound streaming (see
+/// the module docs). Returns exactly what
+/// [`co_optimize_shard`](crate::netopt::co_optimize_shard) returns; the
+/// checkpoint's `incumbent_pj` reflects the global streamed bound.
+pub fn run_coopt_shard_streamed(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    index: usize,
+    nshards: usize,
+    link: &BoundsLink,
+) -> ShardRun {
+    let incumbent = Incumbent::new();
+    // Deterministic pre-seed: everything already published folds in
+    // before the first evaluation.
+    let pre = link.read();
+    if pre.incumbent_pj.is_finite() {
+        incumbent.observe(pre.incumbent_pj);
+    }
+    let stop = AtomicBool::new(false);
+    let run = std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut published = incumbent.get();
+            while !stop.load(Ordering::Relaxed) {
+                let snap = link.read();
+                if snap.incumbent_pj.is_finite() {
+                    incumbent.observe(snap.incumbent_pj);
+                }
+                let cur = incumbent.get();
+                if cur < published {
+                    // Publish improvements only — re-broadcasting a
+                    // foreign bound is harmless (readers take minima)
+                    // but pointless.
+                    if link.publish_incumbent(cur).is_ok() {
+                        published = cur;
+                    }
+                }
+                std::thread::sleep(link.interval());
+            }
+        });
+        let run = co_optimize_shard_with(net, space, cost, cfg, index, nshards, &incumbent);
+        stop.store(true, Ordering::Relaxed);
+        run
+    });
+    // Durable final publish: workers launched after this process exits
+    // must see this shard's bound even if the refresher never got a
+    // wake-up between the last completion and `stop`.
+    let done = incumbent.get();
+    if done.is_finite() {
+        let _ = link.publish_incumbent(done);
+    }
+    run
+}
+
+/// Run one frontier shard with live frontier-snapshot streaming (see
+/// the module docs). Returns exactly what
+/// [`pareto_optimize_shard`](crate::pareto::pareto_optimize_shard)
+/// returns, modulo legitimately fewer *locally surviving* points when a
+/// foreign point dominates them (the merged union is unchanged).
+pub fn run_pareto_shard_streamed(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    index: usize,
+    nshards: usize,
+    link: &BoundsLink,
+) -> FrontierCheckpoint {
+    let live = LiveFrontier::new();
+    let pre = link.read();
+    let mut known = pre.keyed();
+    for p in pre.frontier {
+        live.absorb(p);
+    }
+    let stop = AtomicBool::new(false);
+    let ckpt = std::thread::scope(|s| {
+        s.spawn(|| {
+            // `known` tracks every point either read from the file or
+            // already published by this worker, so each point is
+            // appended at most once per worker.
+            while !stop.load(Ordering::Relaxed) {
+                let snap = link.read();
+                for p in snap.frontier {
+                    if known.insert(point_key(&p)) {
+                        live.absorb(p);
+                    }
+                }
+                let fresh: Vec<FrontierPoint> = live
+                    .snapshot()
+                    .into_iter()
+                    .filter(|p| !known.contains(&point_key(p)))
+                    .collect();
+                if !fresh.is_empty() && link.publish_frontier(&fresh).is_ok() {
+                    for p in &fresh {
+                        known.insert(point_key(p));
+                    }
+                }
+                std::thread::sleep(link.interval());
+            }
+        });
+        let ckpt = pareto_optimize_shard_with(net, space, cost, cfg, index, nshards, &live);
+        stop.store(true, Ordering::Relaxed);
+        ckpt
+    });
+    // Durable final publish of this shard's exact local frontier.
+    let seen = link.read().keyed();
+    let fresh: Vec<FrontierPoint> = ckpt
+        .frontier
+        .iter()
+        .map(|(idx, r)| FrontierPoint {
+            index: *idx,
+            energy_pj: r.opt.total_energy_pj,
+            cycles: r.opt.total_cycles,
+        })
+        .filter(|p| !seen.contains(&point_key(p)))
+        .collect();
+    if !fresh.is_empty() {
+        let _ = link.publish_frontier(&fresh);
+    }
+    ckpt
+}

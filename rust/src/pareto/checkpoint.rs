@@ -47,10 +47,11 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::netopt::shard::{
-    arch_from_json, arch_to_json, opt_from_json, opt_to_json, stats_from_json, stats_to_json,
+    arch_from_json, arch_to_json, merge_coverage, opt_from_json, opt_to_json, stats_from_json,
+    stats_to_json, CoverageRelation,
 };
 use crate::netopt::{NetOptStats, SeedTable};
 use crate::search::HierarchyResult;
@@ -72,8 +73,11 @@ pub struct FrontierCheckpoint {
     pub batch: u64,
     /// Total shard count of the partition this checkpoint belongs to.
     pub nshards: usize,
-    /// Shard indices covered (sorted; the union after merging). Merging
-    /// overlapping shard sets is an error — points would double-count.
+    /// Shard indices covered (sorted; the union after merging — possibly
+    /// re-expressed at a finer granularity when checkpoints with
+    /// different shard counts merge). Duplicate coverage deduplicates
+    /// under an identity check; partial overlap is an error (see
+    /// `netopt::shard`'s module docs on shard composition).
     pub shards: Vec<usize>,
     /// Stats over the covered shards (space counters included).
     pub stats: NetOptStats,
@@ -147,10 +151,16 @@ impl FrontierCheckpoint {
     }
 }
 
-/// Associatively combine two frontier checkpoints of the same run: stats
-/// add, seeds min-merge, and the frontier is the dominance-filtered
-/// union (lowest index on equal vectors). Errors on mismatched run
-/// identity or overlapping shard sets.
+/// Combine two frontier checkpoints of the same run: seeds min-merge,
+/// the frontier is the dominance-filtered union (lowest index on equal
+/// vectors), and stats add when the coverages are disjoint. Checkpoints
+/// at different shard granularities merge through
+/// `netopt::shard::merge_coverage`: nested (duplicate) coverage
+/// deduplicates — the duplicate side's stats are dropped so no grid
+/// point double-counts, and any index both frontiers carry must have
+/// bit-equal totals (completed totals are deterministic per grid index,
+/// whatever bounds were streamed in). Errors on mismatched run identity,
+/// partially overlapping coverage, or a failed identity check.
 pub fn merge_frontiers(
     a: &FrontierCheckpoint,
     b: &FrontierCheckpoint,
@@ -164,26 +174,38 @@ pub fn merge_frontiers(
             b.batch
         );
     }
-    if a.nshards != b.nshards {
-        bail!("shard-count mismatch: {} vs {}", a.nshards, b.nshards);
-    }
-    let mut shards: Vec<usize> = a.shards.iter().chain(b.shards.iter()).copied().collect();
-    shards.sort_unstable();
-    if shards.windows(2).any(|w| w[0] == w[1]) {
-        bail!("overlapping shard sets: {:?} and {:?}", a.shards, b.shards);
-    }
+    let cov = merge_coverage(&a.shards, a.nshards, &b.shards, b.nshards)?;
 
-    let mut stats = a.stats.clone();
-    stats.merge(&b.stats);
+    let stats = match cov.relation {
+        CoverageRelation::Disjoint => {
+            let mut s = a.stats.clone();
+            s.merge(&b.stats);
+            s
+        }
+        CoverageRelation::AContainsB => a.stats.clone(),
+        CoverageRelation::BContainsA => b.stats.clone(),
+    };
     let mut seeds = a.seeds.clone();
     seeds.merge(&b.seeds);
 
-    // Union + re-filter. Disjoint shards mean disjoint candidate
-    // indices, so the by-index map can never collide.
+    // Union + re-filter. Disjoint coverage means disjoint candidate
+    // indices; duplicate coverage (a re-split straggler finishing after
+    // its replacements, a speculative duplicate) may present the same
+    // index twice — then both payloads must agree bit-for-bit, and the
+    // archive's equal-vector dedup keeps exactly one.
     let mut by_idx: HashMap<usize, &HierarchyResult> = HashMap::new();
     let mut archive = Frontier::new();
     for (idx, r) in a.frontier.iter().chain(b.frontier.iter()) {
-        by_idx.insert(*idx, r);
+        if let Some(prev) = by_idx.insert(*idx, r) {
+            if prev.opt.total_energy_pj.to_bits() != r.opt.total_energy_pj.to_bits()
+                || prev.opt.total_cycles.to_bits() != r.opt.total_cycles.to_bits()
+            {
+                bail!(
+                    "duplicate-coverage identity check failed: frontier payloads disagree at \
+                     grid index {idx}"
+                );
+            }
+        }
         archive.insert(FrontierPoint {
             index: *idx,
             energy_pj: r.opt.total_energy_pj,
@@ -199,22 +221,31 @@ pub fn merge_frontiers(
     Ok(FrontierCheckpoint {
         network: a.network.clone(),
         batch: a.batch,
-        nshards: a.nshards,
-        shards,
+        nshards: cov.nshards,
+        shards: cov.shards,
         stats,
         seeds,
         frontier,
     })
 }
 
-/// Merge a whole set of frontier checkpoints (any order — the operation
-/// is associative and commutative). Errors on an empty set.
+/// Merge a whole set of frontier checkpoints. Same-granularity disjoint
+/// sets merge identically in any order (union + re-filter is a pure
+/// function of the point set; every other field is an associative,
+/// commutative fold). Mixed-granularity sets — re-split stolen shards,
+/// speculative duplicates — are folded coarsest-first (ascending shard
+/// count, then lowest shard index), so a duplicate checkpoint always
+/// meets an accumulated coverage that contains it and deduplicates,
+/// instead of tripping the partial-overlap error an unlucky fold order
+/// could produce. Errors on an empty set.
 pub fn merge_all_frontiers(ckpts: &[FrontierCheckpoint]) -> Result<FrontierCheckpoint> {
-    let (first, rest) = ckpts
-        .split_first()
-        .ok_or_else(|| anyhow!("no checkpoints to merge"))?;
-    let mut acc = first.clone();
-    for c in rest {
+    if ckpts.is_empty() {
+        bail!("no checkpoints to merge");
+    }
+    let mut order: Vec<&FrontierCheckpoint> = ckpts.iter().collect();
+    order.sort_by_key(|c| (c.nshards, c.shards.first().copied().unwrap_or(0)));
+    let mut acc = order[0].clone();
+    for c in &order[1..] {
         acc = merge_frontiers(&acc, c)?;
     }
     Ok(acc)

@@ -127,10 +127,38 @@ pub struct ParetoResult {
 /// pruning only — the reported frontier is rebuilt from the completed
 /// points, so archive race timing can never change the result, only how
 /// much work later points skip.
+///
+/// Public so the orchestrator's streaming workers (`crate::orchestrator`)
+/// can share one archive with a live run: [`absorb`](Self::absorb) folds
+/// completed points from *other* workers of the same global sweep into
+/// the pruning archive, and [`snapshot`](Self::snapshot) reads the
+/// current archive for publishing. Admissibility of a foreign point is
+/// the same argument as a local completion: it is a real completed total
+/// of the same run, so anything its vector strictly dominates (beyond
+/// the pruning slack) is strictly dominated globally and was never on
+/// the frontier — the merged frontier keeps its exact bits.
 #[derive(Default)]
-struct SharedFrontier(Mutex<Frontier>);
+pub struct LiveFrontier(Mutex<Frontier>);
 
-impl crate::netopt::FrontierGate for SharedFrontier {
+impl LiveFrontier {
+    /// An empty archive.
+    pub fn new() -> LiveFrontier {
+        LiveFrontier::default()
+    }
+
+    /// Fold a completed point from another worker into the pruning
+    /// archive (pruning-only: never reported, only used as a bound).
+    pub fn absorb(&self, p: FrontierPoint) {
+        self.0.lock().expect("pareto archive lock").insert(p);
+    }
+
+    /// The current archive contents, ascending in energy.
+    pub fn snapshot(&self) -> Vec<FrontierPoint> {
+        self.0.lock().expect("pareto archive lock").points().to_vec()
+    }
+}
+
+impl crate::netopt::FrontierGate for LiveFrontier {
     fn dominated(&self, energy_lb_pj: f64, cycles_lb: f64) -> bool {
         self.0
             .lock()
@@ -156,9 +184,9 @@ fn pareto_points(
     cost: &dyn CostModel,
     cfg: &NetOptConfig,
     warm: Option<&SeedTable>,
+    gate: &LiveFrontier,
 ) -> (Vec<FrontierEntry>, NetOptStats, SeedTable) {
-    let gate = SharedFrontier::default();
-    let out = run_points_gated(net, cands, cost, cfg, warm, Some(&gate));
+    let out = run_points_gated(net, cands, cost, cfg, warm, Some(gate), None);
     let mut archive = Frontier::new();
     for (idx, r) in &out.ranked {
         if r.opt.unmapped == 0 {
@@ -228,7 +256,8 @@ pub fn pareto_optimize_seeded(
 ) -> ParetoResult {
     let enumeration = space.enumerate();
     let cands: Vec<(usize, Arch)> = enumeration.candidates.into_iter().enumerate().collect();
-    let (entries, mut stats, seeds) = pareto_points(net, cands, cost, cfg, Some(warm));
+    let (entries, mut stats, seeds) =
+        pareto_points(net, cands, cost, cfg, Some(warm), &LiveFrontier::new());
     stats.generated = enumeration.generated;
     stats.budget_filtered = enumeration.budget_filtered;
     stats.ratio_filtered = enumeration.ratio_filtered;
@@ -262,7 +291,8 @@ pub fn pareto_optimize_arches_seeded(
     warm: &SeedTable,
 ) -> ParetoResult {
     let cands: Vec<(usize, Arch)> = arches.iter().cloned().enumerate().collect();
-    let (entries, mut stats, seeds) = pareto_points(net, cands, cost, cfg, Some(warm));
+    let (entries, mut stats, seeds) =
+        pareto_points(net, cands, cost, cfg, Some(warm), &LiveFrontier::new());
     stats.generated = arches.len();
     ParetoResult {
         frontier: thin_entries(entries, pcfg),
@@ -284,8 +314,27 @@ pub fn pareto_optimize_shard(
     index: usize,
     nshards: usize,
 ) -> FrontierCheckpoint {
+    pareto_optimize_shard_with(net, space, cost, cfg, index, nshards, &LiveFrontier::new())
+}
+
+/// [`pareto_optimize_shard`] sharing an externally owned [`LiveFrontier`]
+/// — the orchestrator's frontier-streaming hook. Foreign completed
+/// points absorbed into `live` before or during the run are admissible
+/// dominance bounds (see [`LiveFrontier`]), so the *merged* global
+/// frontier keeps its exact bits; the local checkpoint may legitimately
+/// omit locally-surviving points that a foreign point dominates — the
+/// union re-filter would have removed them anyway.
+pub fn pareto_optimize_shard_with(
+    net: &Network,
+    space: &DesignSpace,
+    cost: &dyn CostModel,
+    cfg: &NetOptConfig,
+    index: usize,
+    nshards: usize,
+    live: &LiveFrontier,
+) -> FrontierCheckpoint {
     let se = space.shard(index, nshards);
-    let (entries, mut stats, seeds) = pareto_points(net, se.candidates, cost, cfg, None);
+    let (entries, mut stats, seeds) = pareto_points(net, se.candidates, cost, cfg, None, live);
     stats.generated = se.generated;
     stats.budget_filtered = se.budget_filtered;
     stats.ratio_filtered = se.ratio_filtered;
