@@ -3,8 +3,11 @@
 #
 #   ./ci.sh --quick      fmt + clippy + `cargo test -q` (fast inner loop)
 #   ./ci.sh --no-bench   quick + release build (the tier-1 verify; PR gate)
-#   ./ci.sh              full: tier-1 + perf gates + BENCH_*.json schema
-#                        check (main-branch gate; emits the perf trajectory)
+#   ./ci.sh              full: tier-1 + perf gates + BENCH_*.json /
+#                        bench_history.jsonl schema check + bench-report
+#                        regression gate + one-command artifact
+#                        regeneration smoke (main-branch gate; appends to
+#                        the perf trajectory — see BENCHMARKS.md)
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -41,7 +44,13 @@ if [[ "$MODE" == "tier1" ]]; then
     exit 0
 fi
 
-echo "==> perf_search (pruning contract: identical winners, >=3x fewer full evals)"
+# Stamp every perf-trajectory record from this run with one (rev, ts)
+# pair so bench-report can group and label them consistently.
+INTERSTELLAR_BENCH_GIT_REV="$(git rev-parse --short HEAD 2> /dev/null || echo unknown)"
+INTERSTELLAR_BENCH_UNIX_TS="$(date +%s)"
+export INTERSTELLAR_BENCH_GIT_REV INTERSTELLAR_BENCH_UNIX_TS
+
+echo "==> perf_search (pruning contract: identical winners, >=3x fewer full evals; emits BENCH_search.json)"
 cargo bench --bench perf_search
 
 echo "==> perf_netopt (network B&B: identical winner, strictly fewer arch points; emits BENCH_netopt.json)"
@@ -65,7 +74,26 @@ cargo bench --bench perf_hotpath
 echo "==> perf_orchestrator (distributed fan-out: >=2.5x at 4 workers, streamed bounds strictly cut full evals, SIGKILL survived via stealing, merged winner/frontier bit-identical; emits BENCH_orchestrator.json)"
 cargo bench --bench perf_orchestrator
 
-echo "==> bench_schema (every BENCH_*.json conforms to the documented schema; fastmap/hotpath/netopt/orchestrator/pareto/shard/remap files required)"
+echo "==> bench_schema (every BENCH_*.json + bench_history.jsonl conform to the documented schemas; all eight perf files required)"
 cargo bench --bench bench_schema
+
+echo "==> bench-report --check (no metric regressed against its own history; see BENCHMARKS.md)"
+target/release/interstellar bench-report --check
+
+echo "==> bench-report --check self-test (synthetic regression must fail the gate)"
+SYN="$(mktemp)"
+for ns in 101 104 102 105 103 250; do
+    printf '\n{"v":1,"bench":"perf_probe","git_rev":"syn","unix_ts":%s,"metrics":{"probe_mean_ns":%s},"labels":{}}\n' "$ns" "$ns" >> "$SYN"
+done
+if target/release/interstellar bench-report --check --history "$SYN" > /dev/null 2>&1; then
+    echo "FAIL: bench-report --check passed on a synthetically injected regression" >&2
+    rm -f "$SYN"
+    exit 1
+fi
+rm -f "$SYN"
+echo "synthetic regression correctly rejected"
+
+echo "==> report --all --smoke (one-command paper-artifact regeneration; see REPRODUCING.md)"
+target/release/interstellar report --all --smoke --out report-artifacts
 
 echo "CI OK"

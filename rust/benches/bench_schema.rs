@@ -9,7 +9,14 @@
 //! ingest any conforming file without per-bench parsers. Run after the
 //! perf benches (`ci.sh` orders this); zero files found is a failure so
 //! the gate can never pass vacuously.
+//!
+//! The same gate also validates the perf-trajectory history
+//! (`bench_history.jsonl`, see BENCHMARKS.md): every parseable line must
+//! be a schema-conforming history record (torn tails from interrupted
+//! appends are tolerated, silently-corrupt records are not), and every
+//! required bench must have appended at least one record.
 
+use interstellar::bench::parse_history_line;
 use interstellar::util::bench::validate_bench_json;
 
 /// Files the full `ci.sh` perf tier is guaranteed to have produced by
@@ -22,6 +29,7 @@ const REQUIRED: &[&str] = &[
     "BENCH_orchestrator.json",
     "BENCH_pareto.json",
     "BENCH_remap.json",
+    "BENCH_search.json",
     "BENCH_shard.json",
 ];
 
@@ -69,5 +77,71 @@ fn main() {
         "required perf-trajectory files missing: {missing:?} — run the perf benches first \
          (full ./ci.sh does)"
     );
+
+    // Second half of the gate: the perf-trajectory history. Skipped only
+    // when history is disabled (INTERSTELLAR_BENCH_HISTORY=off) — with
+    // history on, the benches above must have appended, so an empty or
+    // missing file is a failure, not a skip.
+    match interstellar::bench::history_path() {
+        None => println!("bench_schema: history disabled, skipping bench_history check"),
+        Some(path) => {
+            let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+                panic!(
+                    "history enabled but {} is unreadable ({e}) — the perf benches \
+                     above should have appended records",
+                    path.display()
+                )
+            });
+            let mut valid = 0usize;
+            let mut torn = 0usize;
+            let mut benches: Vec<String> = Vec::new();
+            let mut violations = Vec::new();
+            for (i, line) in text.lines().enumerate() {
+                match parse_history_line(line) {
+                    Ok(Some(rec)) => {
+                        valid += 1;
+                        if !benches.contains(&rec.bench) {
+                            benches.push(rec.bench);
+                        }
+                    }
+                    Ok(None) => torn += 1,
+                    Err(e) => violations.push(format!("line {}: {e}", i + 1)),
+                }
+            }
+            assert!(
+                violations.is_empty(),
+                "history schema violations in {}:\n{}",
+                path.display(),
+                violations.join("\n")
+            );
+            assert!(
+                valid > 0,
+                "{} holds no valid history records — the perf benches above \
+                 should have appended",
+                path.display()
+            );
+            let missing: Vec<String> = REQUIRED
+                .iter()
+                .map(|f| {
+                    format!(
+                        "perf_{}",
+                        f.trim_start_matches("BENCH_").trim_end_matches(".json")
+                    )
+                })
+                .filter(|b| !benches.contains(b))
+                .collect();
+            assert!(
+                missing.is_empty(),
+                "benches with no record in {}: {missing:?}",
+                path.display()
+            );
+            println!(
+                "bench_schema: {} OK ({valid} records, {torn} torn line(s) tolerated, \
+                 {} benches)",
+                path.display(),
+                benches.len()
+            );
+        }
+    }
     println!("bench_schema OK ({checked} files validated, all required files present)");
 }

@@ -32,6 +32,9 @@ fn main() {
     assert!(worst < 2.0, "validation exceeded the 2% bound");
 
     println!("\n=== Fig 7b: AlexNet breakdown under Eyeriss RS (FY|Y) ===");
-    print!("{}", experiments::fig7b_eyeriss_breakdown(threads).to_text());
+    print!(
+        "{}",
+        experiments::fig7b_eyeriss_breakdown(experiments::Effort::Fast, threads).to_text()
+    );
     println!("\nfig7 OK");
 }

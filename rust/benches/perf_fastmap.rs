@@ -124,11 +124,7 @@ fn main() {
             net.name,
             gap * 100.0
         );
-        let slug: String = net
-            .name
-            .chars()
-            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
-            .collect();
+        let slug = interstellar::bench::slug(&net.name);
         fields.push((format!("gap_pct_{slug}"), Json::num(gap * 100.0)));
     }
 
@@ -191,9 +187,7 @@ fn main() {
     fields.push(("pareto_full_primed".into(), Json::int(pon.stats.engine.full)));
     fields.push(("frontier_points".into(), Json::int(poff.frontier.len() as u64)));
 
-    let path = "BENCH_fastmap.json";
-    std::fs::write(path, Json::Obj(fields).to_string()).expect("write bench json");
-    println!("wrote {path}");
+    interstellar::bench::emit(fields).expect("emit perf trajectory");
     println!(
         "perf_fastmap OK ({}x over full-effort b&b, gaps within 5%, priming \
          bit-identical with fewer full evaluations)",

@@ -1,9 +1,29 @@
-//! §Perf: microbenchmarks of the L3 hot path — the analytical-model
-//! evaluation and blocking enumeration that every sweep spends its time
-//! in — plus the end-to-end per-layer optimization. Emits
-//! `BENCH_hotpath.json` for the perf trajectory (validated by the
-//! `bench_schema` gate), so hot-path regressions show up in the same
-//! trend tooling as the contract gates.
+//! §Perf: microbenchmarks of the L3 hot path — the few operations every
+//! sweep, search, and serving remap ultimately spends its wall-clock in.
+//! Unlike the contract gates (`perf_search` … `perf_orchestrator`) this
+//! bench asserts nothing; it exists purely to feed stable timing slugs
+//! into the perf trajectory so hot-path drift is visible *between* PRs
+//! even when every contract still holds. The cases, innermost first:
+//!
+//! 1. `evaluate_one_mapping` — one full analytical-model evaluation
+//!    ([`interstellar::xmodel::evaluate`]), the cost unit every "full
+//!    evaluation" counter in the gates is denominated in.
+//! 2. `engine_energy_bounded` (no bound / tight bound) — the staged
+//!    engine's scalar path, which is what the search inner loop actually
+//!    runs; the tight-bound case shows how much stage-3 early exit
+//!    saves.
+//! 3. `engine_footprints` — stage 2 alone: the fit check that gates
+//!    every candidate before any energy work.
+//! 4. `enumerate_blockings` — candidate generation at a 2000 cap: the
+//!    per-search fixed cost that pruning cannot remove.
+//! 5. `optimize_layer` at 1 thread vs N — the end-to-end per-layer
+//!    search, exposing thread-scaling regressions.
+//!
+//! Emits `BENCH_hotpath.json` and appends to `bench_history.jsonl` via
+//! [`interstellar::bench::emit`]; one `<case>_mean_ns` metric per case
+//! (slugs via [`interstellar::bench::slug`]), all gated by
+//! `bench-report --check` against their own history (see
+//! BENCHMARKS.md).
 
 use interstellar::arch::eyeriss_like;
 use interstellar::coordinator::experiments;
@@ -100,15 +120,9 @@ fn main() {
         ("cases".into(), Json::int(b.results().len() as u64)),
     ];
     for m in b.results() {
-        let slug: String = m
-            .name
-            .chars()
-            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
-            .collect();
+        let slug = interstellar::bench::slug(&m.name);
         fields.push((format!("{slug}_mean_ns"), Json::num(m.mean_ns)));
     }
-    let path = "BENCH_hotpath.json";
-    std::fs::write(path, Json::Obj(fields).to_string()).expect("write bench json");
-    println!("wrote {path}");
+    interstellar::bench::emit(fields).expect("emit perf trajectory");
     println!("\nperf_hotpath done (trajectory in BENCH_hotpath.json)");
 }

@@ -14,6 +14,7 @@ use interstellar::netopt::{co_optimize, DesignSpace, NetOptConfig};
 use interstellar::nn::network;
 use interstellar::search::SearchOpts;
 use interstellar::util::bench::Bencher;
+use interstellar::util::json::Json;
 
 fn main() {
     // mlp-m: three distinct FC shapes whose DRAM-dominated floors make
@@ -89,26 +90,28 @@ fn main() {
         ex.stats.engine.full, bb.stats.engine.full
     );
 
-    let json = format!(
-        "{{\"bench\":\"perf_netopt\",\"network\":\"mlp-m\",\"batch\":32,\
-         \"candidates\":{},\"full_exhaustive\":{},\"full_bnb\":{},\"pruned_bnb\":{},\
-         \"seed_reruns\":{},\"engine_full_exhaustive\":{},\"engine_full_bnb\":{},\
-         \"winner\":\"{}\",\"winner_energy_pj\":{},\
-         \"mean_ns_exhaustive\":{},\"mean_ns_bnb\":{}}}",
-        bb.stats.candidates,
-        ex.stats.evaluated_full,
-        bb.stats.evaluated_full,
-        bb.stats.pruned,
-        bb.stats.layer_reruns,
-        ex.stats.engine.full,
-        bb.stats.engine.full,
-        wb.arch.name,
-        wb.opt.total_energy_pj,
-        m_ex.mean_ns,
-        m_bb.mean_ns
-    );
-    let path = "BENCH_netopt.json";
-    std::fs::write(path, &json).expect("write bench json");
-    println!("wrote {path}");
+    let fields: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str("perf_netopt")),
+        ("network".into(), Json::str("mlp-m")),
+        ("batch".into(), Json::int(32)),
+        ("candidates".into(), Json::int(bb.stats.candidates as u64)),
+        (
+            "full_exhaustive".into(),
+            Json::int(ex.stats.evaluated_full as u64),
+        ),
+        ("full_bnb".into(), Json::int(bb.stats.evaluated_full as u64)),
+        ("pruned_bnb".into(), Json::int(bb.stats.pruned as u64)),
+        ("seed_reruns".into(), Json::int(bb.stats.layer_reruns as u64)),
+        (
+            "engine_full_exhaustive".into(),
+            Json::int(ex.stats.engine.full),
+        ),
+        ("engine_full_bnb".into(), Json::int(bb.stats.engine.full)),
+        ("winner".into(), Json::str(&wb.arch.name)),
+        ("winner_energy_pj".into(), Json::num(wb.opt.total_energy_pj)),
+        ("mean_ns_exhaustive".into(), Json::num(m_ex.mean_ns)),
+        ("mean_ns_bnb".into(), Json::num(m_bb.mean_ns)),
+    ];
+    interstellar::bench::emit(fields).expect("emit perf trajectory");
     println!("perf_netopt OK (identical winner, strictly fewer fully evaluated arch points)");
 }

@@ -262,9 +262,7 @@ fn main() {
             Json::num(ref_winner.opt.total_energy_pj),
         ),
     ];
-    let path = "BENCH_orchestrator.json";
-    std::fs::write(path, Json::Obj(fields).to_string()).expect("write bench json");
-    println!("wrote {path}");
+    interstellar::bench::emit(fields).expect("emit perf trajectory");
     std::fs::remove_dir_all(&dir).ok();
     println!(
         "perf_orchestrator OK ({speedup_4w:.2}x at 4 workers, streaming {evals_on_2w}<{evals_off_2w} \

@@ -22,6 +22,7 @@ use interstellar::nn::{network, Network};
 use interstellar::pareto::{pareto_optimize, ParetoConfig, PlanSelector};
 use interstellar::search::{HierarchyResult, SearchOpts};
 use interstellar::util::bench::Bencher;
+use interstellar::util::json::Json;
 
 fn small_space() -> DesignSpace {
     let mut s = DesignSpace::paper_default(ArrayShape { rows: 8, cols: 8 });
@@ -196,26 +197,35 @@ fn main() {
     // network name ("alexnet[..3]"), so a name lookup would silently
     // record 0 forever.
     assert_eq!(frontier_sizes.len(), 3, "one frontier size per workload");
-    let json = format!(
-        "{{\"bench\":\"perf_pareto\",\"candidates_total\":{},\
-         \"full_exhaustive_total\":{},\"full_pareto_total\":{},\"pruned_total\":{},\
-         \"frontier_alexnet_head\":{},\"frontier_lstm_m\":{},\"frontier_mlp_m\":{},\
-         \"mlp_min_energy_arch\":\"{}\",\
-         \"mean_ns_exhaustive_mlp_m\":{},\"mean_ns_pareto_mlp_m\":{}}}",
-        cand_total,
-        full_ex_total,
-        full_par_total,
-        pruned_total,
-        frontier_sizes[0].1,
-        frontier_sizes[1].1,
-        frontier_sizes[2].1,
-        mlp.entries()[0].result.arch.name,
-        mlp_times.0,
-        mlp_times.1
-    );
-    let path = "BENCH_pareto.json";
-    std::fs::write(path, &json).expect("write bench json");
-    println!("wrote {path}");
+    let fields: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str("perf_pareto")),
+        ("candidates_total".into(), Json::int(cand_total as u64)),
+        (
+            "full_exhaustive_total".into(),
+            Json::int(full_ex_total as u64),
+        ),
+        ("full_pareto_total".into(), Json::int(full_par_total as u64)),
+        ("pruned_total".into(), Json::int(pruned_total as u64)),
+        (
+            "frontier_alexnet_head".into(),
+            Json::int(frontier_sizes[0].1 as u64),
+        ),
+        (
+            "frontier_lstm_m".into(),
+            Json::int(frontier_sizes[1].1 as u64),
+        ),
+        (
+            "frontier_mlp_m".into(),
+            Json::int(frontier_sizes[2].1 as u64),
+        ),
+        (
+            "mlp_min_energy_arch".into(),
+            Json::str(&mlp.entries()[0].result.arch.name),
+        ),
+        ("mean_ns_exhaustive_mlp_m".into(), Json::num(mlp_times.0)),
+        ("mean_ns_pareto_mlp_m".into(), Json::num(mlp_times.1)),
+    ];
+    interstellar::bench::emit(fields).expect("emit perf trajectory");
     println!(
         "perf_pareto OK (exact frontier, strictly fewer full evaluations, \
          budget selection matches the scalar winner)"

@@ -222,9 +222,7 @@ fn main() {
         Json::num(m_exact_first.mean_ns / m_fast_first.mean_ns.max(1.0)),
     ));
 
-    let path = "BENCH_remap.json";
-    std::fs::write(path, Json::Obj(fields).to_string()).expect("write bench json");
-    println!("wrote {path}");
+    interstellar::bench::emit(fields).expect("emit perf trajectory");
     println!(
         "perf_remap OK (deterministic serving, warm-started remap bit-identical to offline, \
          drift tracked to the post-drift optimum, deadline fast path beats eager to first plan)"

@@ -4,16 +4,18 @@
 //! behavior) and branch-and-bound (stage-2/3 lower bounds against a
 //! shared incumbent) — and asserts the pruning contract: the winning
 //! mapping is **identical**, while full (stage-4) evaluations drop by at
-//! least 3x. Records evaluations-pruned vs evaluations-run for
-//! EXPERIMENTS.md §Perf.
+//! least 3x. Emits `BENCH_search.json` for the perf trajectory
+//! (validated by the `bench_schema` gate; see BENCHMARKS.md).
 
 use interstellar::arch::eyeriss_like;
+use interstellar::bench::slug;
 use interstellar::dataflow::Dataflow;
 use interstellar::energy::Table3;
 use interstellar::engine::PruneMode;
 use interstellar::nn::network;
 use interstellar::search::{optimize_layer, SearchOpts};
 use interstellar::util::bench::Bencher;
+use interstellar::util::json::Json;
 use interstellar::util::table::Table;
 
 fn main() {
@@ -37,6 +39,10 @@ fn main() {
         "pruned@bound",
     ]);
     let mut reductions = Vec::new();
+    let mut fields: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str("perf_search")),
+        ("layers".into(), Json::int(conv_layers.len() as u64)),
+    ];
 
     for layer in &conv_layers {
         let ex_opts = SearchOpts::capped(800, 5).with_prune(PruneMode::Exhaustive);
@@ -68,6 +74,10 @@ fn main() {
 
         let reduction = ex.stats.full as f64 / bb.stats.full.max(1) as f64;
         reductions.push(reduction);
+        let ls = slug(&layer.name);
+        fields.push((format!("full_exhaustive_{ls}"), Json::int(ex.stats.full)));
+        fields.push((format!("full_bnb_{ls}"), Json::int(bb.stats.full)));
+        fields.push((format!("reduction_{ls}"), Json::num(reduction)));
         t.row(vec![
             layer.name.clone(),
             format!("{}", ex.evaluated),
@@ -93,5 +103,11 @@ fn main() {
         at_least_3x >= 3,
         "expected >=3x reduction on at least 3 layers, got {reductions:?}"
     );
+
+    fields.push(("layers_at_least_3x".into(), Json::int(at_least_3x as u64)));
+    for m in b.results() {
+        fields.push((format!("{}_mean_ns", slug(&m.name)), Json::num(m.mean_ns)));
+    }
+    interstellar::bench::emit(fields).expect("emit perf trajectory");
     println!("perf_search OK (identical winners, >=3x fewer full evaluations)");
 }

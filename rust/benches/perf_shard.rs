@@ -244,9 +244,7 @@ fn main() {
         ));
     }
 
-    let path = "BENCH_shard.json";
-    std::fs::write(path, Json::Obj(bench_fields).to_string()).expect("write bench json");
-    println!("wrote {path}");
+    interstellar::bench::emit(bench_fields).expect("emit perf trajectory");
     std::fs::remove_dir_all(&dir).ok();
     println!(
         "perf_shard OK ({NSHARDS}-process winners bit-identical to single-process, \

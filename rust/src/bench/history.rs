@@ -1,0 +1,379 @@
+//! The append-only perf-trajectory history: every perf gate appends one
+//! schema-versioned record per run into `bench_history.jsonl`, so the
+//! `BENCH_*.json` snapshots that used to be validated and thrown away
+//! accumulate into a trend line (`bench-report` renders and gates it).
+//!
+//! Records reuse the torn-write-safe framing of
+//! [`crate::orchestrator::bounds`]: each append is a single `O_APPEND`
+//! `write_all` of `\n{record}\n`, so a writer SIGKILLed mid-append can
+//! glue at most one unparseable fragment onto the file, the leading
+//! newline isolates the *next* record from that fragment, and readers
+//! skip blank or unparseable lines — a torn tail can never poison the
+//! records that follow it. Records carry a `v` field
+//! ([`HISTORY_VERSION`]); foreign versions are skipped on read so a
+//! future schema bump does not invalidate old files.
+//!
+//! Serialization is the hand-rolled [`crate::util::json`] codec (no new
+//! deps); the record layout is documented in `BENCHMARKS.md`.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Schema version stamped into every record's `v` field. Readers skip
+/// records from other versions instead of erroring, so history files
+/// survive schema evolution.
+pub const HISTORY_VERSION: u64 = 1;
+
+/// Default history location, relative to the process cwd (the workspace
+/// root under `cargo bench` and `./ci.sh`).
+pub const DEFAULT_HISTORY_PATH: &str = "bench_history.jsonl";
+
+/// One perf-gate run: the flat `BENCH_*.json` fields split into numeric
+/// metrics (trended and regression-gated by `bench-report`) and string
+/// labels (carried for context — winner names, fixture labels), stamped
+/// with the producing git revision and a unix timestamp supplied by the
+/// harness (`ci.sh` exports both; see [`git_rev`] / [`unix_ts`] for the
+/// fallbacks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistoryRecord {
+    /// Emitting gate, e.g. `perf_search` (matches the `bench` field of
+    /// the corresponding `BENCH_*.json`).
+    pub bench: String,
+    /// Git revision the metrics were measured at.
+    pub git_rev: String,
+    /// Seconds since the unix epoch, from the harness.
+    pub unix_ts: u64,
+    /// Metric slug → finite value, in emission order.
+    pub metrics: Vec<(String, f64)>,
+    /// Label slug → string (bools are stored as `"true"`/`"false"`).
+    pub labels: Vec<(String, String)>,
+}
+
+impl HistoryRecord {
+    /// Serialize to the on-disk JSON layout (one line of the history).
+    pub fn to_json(&self) -> Json {
+        let metrics = self
+            .metrics
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v)))
+            .collect();
+        let labels = self
+            .labels
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::str(v.as_str())))
+            .collect();
+        Json::Obj(vec![
+            ("v".into(), Json::int(HISTORY_VERSION)),
+            ("bench".into(), Json::str(self.bench.as_str())),
+            ("git_rev".into(), Json::str(self.git_rev.as_str())),
+            ("unix_ts".into(), Json::int(self.unix_ts)),
+            ("metrics".into(), Json::Obj(metrics)),
+            ("labels".into(), Json::Obj(labels)),
+        ])
+    }
+
+    /// Parse a record, rejecting foreign versions and any metric that is
+    /// not a finite number (the flat-scalar discipline of
+    /// [`crate::util::bench::validate_bench_json`] carried into the
+    /// history).
+    pub fn from_json(v: &Json) -> Result<HistoryRecord> {
+        let ver = v.field("v")?.as_u64()?;
+        if ver != HISTORY_VERSION {
+            bail!("history record version {ver} (this build reads v{HISTORY_VERSION})");
+        }
+        let bench = v.field("bench")?.as_str()?.to_string();
+        if bench.is_empty() {
+            bail!("history record has an empty `bench` name");
+        }
+        let git_rev = v.field("git_rev")?.as_str()?.to_string();
+        let unix_ts = v.field("unix_ts")?.as_u64()?;
+        let mut metrics = Vec::new();
+        for (k, m) in v.field("metrics")?.as_obj()? {
+            let x = m
+                .as_f64()
+                .map_err(|e| e.context(format!("metric `{k}` must be a number")))?;
+            if !x.is_finite() {
+                bail!("metric `{k}` is not finite");
+            }
+            metrics.push((k.clone(), x));
+        }
+        let mut labels = Vec::new();
+        for (k, l) in v.field("labels")?.as_obj()? {
+            let s = l
+                .as_str()
+                .map_err(|e| e.context(format!("label `{k}` must be a string")))?;
+            labels.push((k.clone(), s.to_string()));
+        }
+        Ok(HistoryRecord {
+            bench,
+            git_rev,
+            unix_ts,
+            metrics,
+            labels,
+        })
+    }
+
+    /// Build a record from the flat `BENCH_*.json` field list a perf
+    /// gate emits: the `bench` string names the record, finite numbers
+    /// become metrics, strings and bools become labels; anything else
+    /// (nested values, non-finite numbers) is a producer bug.
+    pub fn from_bench_fields(
+        fields: &[(String, Json)],
+        git_rev: String,
+        unix_ts: u64,
+    ) -> Result<HistoryRecord> {
+        let mut bench = String::new();
+        let mut metrics = Vec::new();
+        let mut labels = Vec::new();
+        for (k, v) in fields {
+            match (k.as_str(), v) {
+                ("bench", Json::Str(s)) => bench = s.clone(),
+                (_, Json::Num(x)) if x.is_finite() => metrics.push((k.clone(), *x)),
+                (_, Json::Str(s)) => labels.push((k.clone(), s.clone())),
+                (_, Json::Bool(b)) => labels.push((k.clone(), b.to_string())),
+                (_, other) => bail!("bench field `{k}` is not a flat scalar: {other:?}"),
+            }
+        }
+        if bench.is_empty() {
+            bail!("bench fields are missing a non-empty `bench` name");
+        }
+        Ok(HistoryRecord {
+            bench,
+            git_rev,
+            unix_ts,
+            metrics,
+            labels,
+        })
+    }
+}
+
+/// Append one record with the bounds-file framing: leading newline (so a
+/// predecessor killed mid-append cannot glue its torn tail onto this
+/// record), one `O_APPEND` `write_all` (so this record itself lands
+/// atomically or not at all).
+pub fn append_record(path: &Path, rec: &HistoryRecord) -> Result<()> {
+    let line = format!("\n{}\n", rec.to_json());
+    let mut f = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("open history {}", path.display()))?;
+    f.write_all(line.as_bytes())
+        .with_context(|| format!("append history record to {}", path.display()))
+}
+
+/// A parsed history file: valid records in append (= time) order, plus
+/// the count of lines that were skipped (torn tails, foreign versions,
+/// malformed records — the forgiving-reader contract).
+#[derive(Debug, Default)]
+pub struct History {
+    /// Valid records, oldest first.
+    pub records: Vec<HistoryRecord>,
+    /// Lines that did not parse as v1 records and were skipped.
+    pub skipped: usize,
+}
+
+/// Read a history file. A missing file is an empty history, not an
+/// error (the first CI run starts from nothing); any unusable line is
+/// counted in [`History::skipped`] and otherwise ignored.
+pub fn read_history(path: &Path) -> History {
+    let mut h = History::default();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return h;
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse_history_line(line) {
+            Ok(Some(rec)) => h.records.push(rec),
+            Ok(None) | Err(_) => h.skipped += 1,
+        }
+    }
+    h
+}
+
+/// Line-level validation, shared with the `bench_schema` CI gate:
+/// `Ok(Some)` is a valid record, `Ok(None)` is a line that is not JSON
+/// at all (a torn tail — tolerated everywhere), `Err` is well-formed
+/// JSON that violates the record schema (a real producer bug; the gate
+/// fails on it, while [`read_history`] just skips it).
+pub fn parse_history_line(line: &str) -> std::result::Result<Option<HistoryRecord>, String> {
+    let Ok(v) = Json::parse(line) else {
+        return Ok(None);
+    };
+    HistoryRecord::from_json(&v).map(Some).map_err(|e| e.to_string())
+}
+
+/// History destination: `INTERSTELLAR_BENCH_HISTORY` overrides the
+/// default [`DEFAULT_HISTORY_PATH`]; setting it to `off`, `0`, or the
+/// empty string disables history appends entirely (`None`).
+pub fn history_path() -> Option<PathBuf> {
+    match std::env::var("INTERSTELLAR_BENCH_HISTORY") {
+        Ok(v) if v.is_empty() || v == "off" || v == "0" => None,
+        Ok(v) => Some(PathBuf::from(v)),
+        Err(_) => Some(PathBuf::from(DEFAULT_HISTORY_PATH)),
+    }
+}
+
+/// Revision stamp for new records: `INTERSTELLAR_BENCH_GIT_REV` if the
+/// harness exported it (`ci.sh` does), else `git rev-parse --short
+/// HEAD`, else `"unknown"` — the history must keep appending even
+/// outside a checkout.
+pub fn git_rev() -> String {
+    if let Ok(v) = std::env::var("INTERSTELLAR_BENCH_GIT_REV") {
+        if !v.is_empty() {
+            return v;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Timestamp for new records: `INTERSTELLAR_BENCH_UNIX_TS` if the
+/// harness exported one (keeps a whole CI run on one stamp), else the
+/// system clock.
+pub fn unix_ts() -> u64 {
+    if let Ok(v) = std::env::var("INTERSTELLAR_BENCH_UNIX_TS") {
+        if let Ok(t) = v.parse() {
+            return t;
+        }
+    }
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "interstellar-history-{}-{name}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    fn sample(bench: &str, ts: u64, v: f64) -> HistoryRecord {
+        HistoryRecord {
+            bench: bench.into(),
+            git_rev: format!("rev{ts}"),
+            unix_ts: ts,
+            metrics: vec![("probe_mean_ns".into(), v), ("count".into(), ts as f64)],
+            labels: vec![("winner".into(), "rf64".into()), ("ok".into(), "true".into())],
+        }
+    }
+
+    #[test]
+    fn append_read_round_trip() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let recs = vec![sample("perf_a", 1, 10.5), sample("perf_b", 2, 20.25)];
+        for r in &recs {
+            append_record(&path, r).unwrap();
+        }
+        let h = read_history(&path);
+        assert_eq!(h.skipped, 0);
+        assert_eq!(h.records, recs);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_does_not_poison_later_records() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        append_record(&path, &sample("perf_a", 1, 10.0)).unwrap();
+        // simulate a writer SIGKILLed mid-append: an unterminated
+        // fragment with no trailing newline
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"\n{\"v\":1,\"bench\":\"per").unwrap();
+        }
+        // the next writer's leading newline isolates its record
+        append_record(&path, &sample("perf_b", 2, 20.0)).unwrap();
+        let h = read_history(&path);
+        assert_eq!(h.skipped, 1, "exactly the torn fragment is skipped");
+        assert_eq!(h.records.len(), 2);
+        assert_eq!(h.records[0].bench, "perf_a");
+        assert_eq!(h.records[1].bench, "perf_b");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn foreign_versions_and_schema_violations_are_skipped_on_read() {
+        let path = tmp("foreign");
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(
+            &path,
+            "{\"v\":99,\"bench\":\"future\",\"git_rev\":\"r\",\"unix_ts\":1,\
+             \"metrics\":{},\"labels\":{}}\n\
+             {\"v\":1,\"bench\":\"\",\"git_rev\":\"r\",\"unix_ts\":1,\
+             \"metrics\":{},\"labels\":{}}\n",
+        )
+        .unwrap();
+        append_record(&path, &sample("perf_a", 3, 30.0)).unwrap();
+        let h = read_history(&path);
+        assert_eq!(h.skipped, 2, "foreign version + empty bench both skipped");
+        assert_eq!(h.records.len(), 1);
+        assert_eq!(h.records[0].bench, "perf_a");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parse_history_line_distinguishes_torn_from_invalid() {
+        // not JSON at all: a torn tail, tolerated
+        assert_eq!(parse_history_line("{\"v\":1,\"ben").unwrap(), None);
+        // well-formed JSON violating the schema: a producer bug
+        assert!(parse_history_line("{\"v\":1,\"bench\":\"x\"}").is_err());
+        let ok = parse_history_line(&sample("perf_a", 1, 1.0).to_json().to_string());
+        assert!(matches!(ok, Ok(Some(_))));
+    }
+
+    #[test]
+    fn from_bench_fields_splits_metrics_and_labels() {
+        let fields = vec![
+            ("bench".to_string(), Json::str("perf_x")),
+            ("mean_ns".to_string(), Json::num(12.5)),
+            ("winner".to_string(), Json::str("rf64")),
+            ("identical".to_string(), Json::Bool(true)),
+        ];
+        let rec = HistoryRecord::from_bench_fields(&fields, "abc".into(), 7).unwrap();
+        assert_eq!(rec.bench, "perf_x");
+        assert_eq!(rec.metrics, vec![("mean_ns".to_string(), 12.5)]);
+        assert_eq!(
+            rec.labels,
+            vec![
+                ("winner".to_string(), "rf64".to_string()),
+                ("identical".to_string(), "true".to_string())
+            ]
+        );
+        // nested values are producer bugs, not silently dropped
+        let bad = vec![
+            ("bench".to_string(), Json::str("perf_x")),
+            ("xs".to_string(), Json::Arr(vec![Json::int(1)])),
+        ];
+        assert!(HistoryRecord::from_bench_fields(&bad, "abc".into(), 7).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_an_empty_history() {
+        let h = read_history(Path::new("/nonexistent/interstellar-history.jsonl"));
+        assert!(h.records.is_empty());
+        assert_eq!(h.skipped, 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Measurement backbone: the perf-trajectory database behind every
+//! `BENCH_*.json` gate and the reporting/regression views over it.
+//!
+//! The eight perf gates (`perf_search` … `perf_hotpath`) used to write
+//! per-run `BENCH_*.json` snapshots that `bench_schema` validated and CI
+//! threw away — no trend line existed. This module gives each run a
+//! durable row:
+//!
+//! - [`history`] — the append-only `bench_history.jsonl` store:
+//!   schema-versioned records (git rev, harness timestamp, metric and
+//!   label slugs) appended with the torn-write-safe framing of
+//!   [`crate::orchestrator::bounds`] and read forgivingly.
+//! - [`report`] — per-`(bench, metric)` trajectory series, the robust
+//!   median/MAD regression rule, and the [`Table`]-rendered trajectory
+//!   view the `bench-report` CLI (and its `--check` CI gate) prints.
+//! - [`emit`] — the one-call emitter every perf bench uses: validate
+//!   the flat-scalar fields, write `BENCH_<name>.json`, append the
+//!   history record.
+//!
+//! `BENCHMARKS.md` documents the schemas and the regression rule;
+//! ARCHITECTURE.md ("Measurement backbone") covers the design.
+//!
+//! [`Table`]: crate::util::table::Table
+
+pub mod history;
+pub mod report;
+
+pub use history::{
+    append_record, git_rev, history_path, parse_history_line, read_history, unix_ts, History,
+    HistoryRecord, DEFAULT_HISTORY_PATH, HISTORY_VERSION,
+};
+pub use report::{
+    assess, direction, regressions, trajectory, trajectory_table, Direction, TrajectoryRow,
+    Verdict, MAD_SIGMAS, MIN_BASELINE, REL_FLOOR,
+};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Slug a free-form case name into a JSON-key-friendly metric name:
+/// every non-alphanumeric byte becomes `_` (so `perf/optimize conv3`
+/// → `perf_optimize_conv3`). Shared by the bench emitters so slugs stay
+/// stable across gates.
+pub fn slug(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// Emit one perf gate's trajectory: validate `fields` against the
+/// flat-scalar `BENCH_*.json` schema
+/// ([`crate::util::bench::validate_bench_json`]), write
+/// `BENCH_<name>.json` in the cwd (the `bench` field `perf_<name>`
+/// names the file), and append a [`HistoryRecord`] to the perf history
+/// (skipped when `INTERSTELLAR_BENCH_HISTORY=off`; see
+/// [`history::history_path`]).
+pub fn emit(fields: Vec<(String, Json)>) -> Result<()> {
+    let doc = Json::Obj(fields);
+    let text = doc.to_string();
+    crate::util::bench::validate_bench_json(&text)
+        .map_err(|e| anyhow!("BENCH fields violate the flat-scalar schema: {e}"))?;
+    let Json::Obj(fields) = &doc else {
+        unreachable!("constructed as an object above")
+    };
+    let bench = fields
+        .iter()
+        .find_map(|(k, v)| match (k.as_str(), v) {
+            ("bench", Json::Str(s)) => Some(s.clone()),
+            _ => None,
+        })
+        .expect("validated to contain a bench string above");
+    let name = bench.strip_prefix("perf_").unwrap_or(&bench);
+    let path = format!("BENCH_{name}.json");
+    std::fs::write(&path, &text).with_context(|| format!("write {path}"))?;
+    println!("wrote {path}");
+    if let Some(hpath) = history::history_path() {
+        let rec = HistoryRecord::from_bench_fields(fields, history::git_rev(), history::unix_ts())?;
+        append_record(&hpath, &rec)?;
+        println!("appended {bench} perf-trajectory record to {}", hpath.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slug_is_json_key_friendly() {
+        assert_eq!(
+            slug("perf/optimize_layer conv3 (1 thread)"),
+            "perf_optimize_layer_conv3__1_thread_"
+        );
+        assert_eq!(slug("CONV1"), "CONV1");
+    }
+
+    #[test]
+    fn emit_rejects_schema_violations_before_writing() {
+        // no `bench` field — must fail without touching the filesystem
+        let fields = vec![("n".to_string(), Json::int(3))];
+        assert!(emit(fields).is_err());
+        // nested field — same
+        let fields = vec![
+            ("bench".to_string(), Json::str("perf_nonexistent_gate")),
+            ("xs".to_string(), Json::Arr(vec![Json::int(1)])),
+        ];
+        assert!(emit(fields).is_err());
+    }
+}

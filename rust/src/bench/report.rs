@@ -1,0 +1,405 @@
+//! Trajectory views over the perf history and the regression rule the
+//! `bench-report --check` CI gate enforces.
+//!
+//! Each `(bench, metric)` pair forms a series in append order. The
+//! latest sample is judged against the *historical distribution* of the
+//! prior samples, not a fixed threshold: with baseline median `m` and
+//! scaled MAD `s` (median absolute deviation × 1.4826, a robust stddev
+//! estimate that one past outlier cannot inflate), the sample regresses
+//! when it moves in the metric's bad direction by more than
+//! `max(MAD_SIGMAS · s, REL_FLOOR · |m|)`. The relative floor keeps
+//! near-constant series (MAD ≈ 0) from flagging on timer jitter; the
+//! MAD term adapts the band to each metric's real run-to-run noise.
+//!
+//! Guard rails: fewer than [`MIN_BASELINE`] prior samples is
+//! [`Verdict::Insufficient`] (a fresh history bootstraps instead of
+//! failing CI), metrics with no better/worse direction (counters,
+//! frontier sizes) are [`Verdict::Informational`], and a series whose
+//! metric stopped being emitted is [`Verdict::Stale`] — only the
+//! metrics present in a bench's newest record gate the build.
+
+use std::collections::BTreeMap;
+
+use crate::util::table::Table;
+use crate::util::{fmt_sig, stats};
+
+use super::history::History;
+
+/// Prior samples required before a series is gated at all.
+pub const MIN_BASELINE: usize = 4;
+
+/// Width of the dispersion band, in scaled-MAD units.
+pub const MAD_SIGMAS: f64 = 4.0;
+
+/// Relative noise floor: a sample within this fraction of the baseline
+/// median never flags, however tight the historical spread.
+pub const REL_FLOOR: f64 = 0.25;
+
+/// MAD → stddev scale under normality.
+const MAD_SCALE: f64 = 1.4826;
+
+/// Whether a metric improves by going down, up, or is not a quality
+/// signal at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Times and energies: `_ns` / `_us` / `_ms` / `_pj` / `_pct`.
+    LowerIsBetter,
+    /// Speedup ratios.
+    HigherIsBetter,
+    /// Counters, sizes, identifiers — trended but never gated (their
+    /// contracts are asserted per-run by the perf gates themselves).
+    Informational,
+}
+
+/// Classify a metric slug by suffix convention (documented in
+/// BENCHMARKS.md; emitters opt into gating by naming metrics
+/// accordingly).
+pub fn direction(metric: &str) -> Direction {
+    const LOWER: &[&str] = &["_ns", "_us", "_ms", "_pj", "_pct"];
+    if LOWER.iter().any(|s| metric.ends_with(s)) {
+        Direction::LowerIsBetter
+    } else if metric.contains("speedup") {
+        Direction::HigherIsBetter
+    } else {
+        Direction::Informational
+    }
+}
+
+/// Outcome of judging one series' latest sample.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    /// Gated and inside the historical band.
+    Ok,
+    /// Gated and outside the band in the bad direction.
+    Regressed {
+        /// Median of the prior samples the latest was judged against.
+        baseline_median: f64,
+        /// Allowed deviation in the bad direction.
+        threshold: f64,
+    },
+    /// Fewer than [`MIN_BASELINE`] prior samples — building a baseline.
+    Insufficient,
+    /// Metric has no better/worse direction; never gated.
+    Informational,
+    /// Metric absent from the bench's newest record (renamed or
+    /// dropped); its old samples no longer gate anything.
+    Stale,
+}
+
+impl Verdict {
+    /// Short cell text for the trajectory table.
+    pub fn label(&self) -> String {
+        match self {
+            Verdict::Ok => "ok".into(),
+            Verdict::Regressed { .. } => "REGRESSED".into(),
+            Verdict::Insufficient => format!("baseline<{MIN_BASELINE}"),
+            Verdict::Informational => "info".into(),
+            Verdict::Stale => "stale".into(),
+        }
+    }
+}
+
+fn median(xs: &[f64]) -> f64 {
+    stats::percentile(xs, 50.0)
+}
+
+/// Scaled median absolute deviation around `med`.
+fn scaled_mad(xs: &[f64], med: f64) -> f64 {
+    let dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    MAD_SCALE * median(&dev)
+}
+
+/// Judge `latest` against the `prior` samples of a series (the
+/// regression rule in the module docs).
+pub fn assess(prior: &[f64], latest: f64, dir: Direction) -> Verdict {
+    if dir == Direction::Informational {
+        return Verdict::Informational;
+    }
+    if prior.len() < MIN_BASELINE {
+        return Verdict::Insufficient;
+    }
+    let med = median(prior);
+    let threshold = (MAD_SIGMAS * scaled_mad(prior, med)).max(REL_FLOOR * med.abs());
+    let delta = match dir {
+        Direction::LowerIsBetter => latest - med,
+        Direction::HigherIsBetter => med - latest,
+        Direction::Informational => unreachable!("handled above"),
+    };
+    if delta > threshold {
+        Verdict::Regressed {
+            baseline_median: med,
+            threshold,
+        }
+    } else {
+        Verdict::Ok
+    }
+}
+
+/// One `(bench, metric)` series summarized for the trajectory table.
+#[derive(Debug, Clone)]
+pub struct TrajectoryRow {
+    /// Emitting gate.
+    pub bench: String,
+    /// Metric slug.
+    pub metric: String,
+    /// Total samples, including the latest.
+    pub samples: usize,
+    /// Baseline median (prior samples; the latest value itself when the
+    /// series has a single sample).
+    pub median: f64,
+    /// Minimum over the whole series.
+    pub min: f64,
+    /// Maximum over the whole series.
+    pub max: f64,
+    /// Scaled MAD of the prior samples (the dispersion band half-width
+    /// before the [`MAD_SIGMAS`] multiplier).
+    pub dispersion: f64,
+    /// Newest sample.
+    pub latest: f64,
+    /// Git revision that produced the newest sample.
+    pub latest_rev: String,
+    /// Gating direction of the metric.
+    pub direction: Direction,
+    /// The judgement on the newest sample.
+    pub verdict: Verdict,
+}
+
+/// Build the per-series trajectory rows from a parsed history, applying
+/// the regression rule to each series whose latest sample comes from
+/// its bench's newest record (older series go [`Verdict::Stale`]).
+pub fn trajectory(h: &History) -> Vec<TrajectoryRow> {
+    let mut series: BTreeMap<(&str, &str), Vec<(usize, f64)>> = BTreeMap::new();
+    let mut newest_record: BTreeMap<&str, usize> = BTreeMap::new();
+    for (i, r) in h.records.iter().enumerate() {
+        newest_record.insert(r.bench.as_str(), i);
+        for (m, x) in &r.metrics {
+            series
+                .entry((r.bench.as_str(), m.as_str()))
+                .or_default()
+                .push((i, *x));
+        }
+    }
+    let mut rows = Vec::new();
+    for ((bench, metric), samples) in &series {
+        let values: Vec<f64> = samples.iter().map(|&(_, x)| x).collect();
+        let (&(last_idx, latest), prior_samples) =
+            samples.split_last().expect("series are never empty");
+        let prior: Vec<f64> = prior_samples.iter().map(|&(_, x)| x).collect();
+        let dir = direction(metric);
+        let verdict = if newest_record.get(bench) != Some(&last_idx) {
+            Verdict::Stale
+        } else {
+            assess(&prior, latest, dir)
+        };
+        let (med, dispersion) = if prior.is_empty() {
+            (latest, 0.0)
+        } else {
+            let m = median(&prior);
+            (m, scaled_mad(&prior, m))
+        };
+        rows.push(TrajectoryRow {
+            bench: bench.to_string(),
+            metric: metric.to_string(),
+            samples: values.len(),
+            median: med,
+            min: stats::min(&values),
+            max: stats::max(&values),
+            dispersion,
+            latest,
+            latest_rev: h.records[last_idx].git_rev.clone(),
+            direction: dir,
+            verdict,
+        });
+    }
+    rows
+}
+
+/// The rows currently flagged as regressions.
+pub fn regressions(rows: &[TrajectoryRow]) -> Vec<&TrajectoryRow> {
+    rows.iter()
+        .filter(|r| matches!(r.verdict, Verdict::Regressed { .. }))
+        .collect()
+}
+
+/// Render trajectory rows as a table (text/markdown/CSV via
+/// [`Table`]): baseline median, whole-series min/max, the scaled-MAD
+/// dispersion band, the newest sample and its signed drift from the
+/// baseline, and the verdict.
+pub fn trajectory_table(rows: &[TrajectoryRow]) -> Table {
+    let mut t = Table::new(vec![
+        "bench", "metric", "n", "median", "min", "max", "disp", "latest", "drift %", "rev",
+        "verdict",
+    ]);
+    for r in rows {
+        let drift = if r.median != 0.0 {
+            format!("{:+.1}", 100.0 * (r.latest - r.median) / r.median.abs())
+        } else {
+            "-".into()
+        };
+        t.row(vec![
+            r.bench.clone(),
+            r.metric.clone(),
+            format!("{}", r.samples),
+            fmt_sig(r.median),
+            fmt_sig(r.min),
+            fmt_sig(r.max),
+            fmt_sig(r.dispersion),
+            fmt_sig(r.latest),
+            drift,
+            r.latest_rev.clone(),
+            r.verdict.label(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::history::HistoryRecord;
+    use super::*;
+    use crate::util::prop::for_cases;
+    use crate::util::rng::XorShift;
+
+    fn unit(rng: &mut XorShift) -> f64 {
+        rng.unit_f32() as f64
+    }
+
+    /// A sample within ±5% of `base` — the stationary-noise model.
+    fn noisy(base: f64, rng: &mut XorShift) -> f64 {
+        base * (1.0 + 0.05 * (2.0 * unit(rng) - 1.0))
+    }
+
+    #[test]
+    fn direction_follows_slug_conventions() {
+        assert_eq!(direction("co_opt_mean_ns"), Direction::LowerIsBetter);
+        assert_eq!(direction("winner_energy_pj"), Direction::LowerIsBetter);
+        assert_eq!(direction("gap_pct_alexnet"), Direction::LowerIsBetter);
+        assert_eq!(direction("speedup_4w"), Direction::HigherIsBetter);
+        assert_eq!(direction("layer_speedup"), Direction::HigherIsBetter);
+        assert_eq!(direction("candidates"), Direction::Informational);
+        assert_eq!(direction("frontier_points"), Direction::Informational);
+    }
+
+    #[test]
+    fn stationary_noise_is_never_flagged() {
+        for_cases(0xB5EC, 128, |rng| {
+            let base = 1.0 + unit(rng) * 1e6;
+            let n = MIN_BASELINE + rng.below(12) as usize;
+            let prior: Vec<f64> = (0..n).map(|_| noisy(base, rng)).collect();
+            let latest = noisy(base, rng);
+            // ±5% noise stays far inside the 25% relative floor, so the
+            // verdict is deterministic, not merely probable
+            for dir in [Direction::LowerIsBetter, Direction::HigherIsBetter] {
+                assert_eq!(
+                    assess(&prior, latest, dir),
+                    Verdict::Ok,
+                    "noise flagged: base {base}, prior {prior:?}, latest {latest}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn injected_step_change_is_flagged() {
+        for_cases(0xB5ED, 128, |rng| {
+            let base = 1.0 + unit(rng) * 1e6;
+            let n = MIN_BASELINE + rng.below(12) as usize;
+            let prior: Vec<f64> = (0..n).map(|_| noisy(base, rng)).collect();
+            // lower-is-better: a 2–3x step up clears the worst-case band
+            // (nearest-rank median ≤ 1.05·base, MAD ≤ 0.1·base, so
+            // threshold ≤ max(4·1.4826·0.1, 0.25·1.05)·base ≈ 0.6·base)
+            let worse_up = base * (2.0 + unit(rng));
+            assert!(
+                matches!(
+                    assess(&prior, worse_up, Direction::LowerIsBetter),
+                    Verdict::Regressed { .. }
+                ),
+                "step up not flagged: base {base}, latest {worse_up}"
+            );
+            // higher-is-better: collapsing to 10–20% of baseline
+            let worse_down = base * (0.1 + 0.1 * unit(rng));
+            assert!(
+                matches!(
+                    assess(&prior, worse_down, Direction::HigherIsBetter),
+                    Verdict::Regressed { .. }
+                ),
+                "step down not flagged: base {base}, latest {worse_down}"
+            );
+        });
+    }
+
+    #[test]
+    fn short_baselines_and_info_metrics_never_gate() {
+        for_cases(0xB5EE, 64, |rng| {
+            let base = 1.0 + unit(rng) * 1e3;
+            let prior: Vec<f64> = (0..MIN_BASELINE - 1).map(|_| noisy(base, rng)).collect();
+            // even a 100x step cannot flag with a short baseline
+            assert_eq!(
+                assess(&prior, base * 100.0, Direction::LowerIsBetter),
+                Verdict::Insufficient
+            );
+            let long: Vec<f64> = (0..MIN_BASELINE + 4).map(|_| noisy(base, rng)).collect();
+            assert_eq!(
+                assess(&long, base * 100.0, Direction::Informational),
+                Verdict::Informational
+            );
+        });
+    }
+
+    fn rec(bench: &str, ts: u64, metrics: Vec<(&str, f64)>) -> HistoryRecord {
+        HistoryRecord {
+            bench: bench.into(),
+            git_rev: format!("r{ts}"),
+            unix_ts: ts,
+            metrics: metrics
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+            labels: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn trajectory_gates_only_the_newest_record_per_bench() {
+        let mut h = History::default();
+        // 6 stable runs, each also carrying a metric that later vanishes
+        for ts in 0..6 {
+            h.records.push(rec(
+                "perf_x",
+                ts,
+                vec![("probe_mean_ns", 100.0 + ts as f64), ("old_mean_ns", 50.0)],
+            ));
+        }
+        // newest record: probe regresses hard, old_mean_ns is gone
+        h.records.push(rec("perf_x", 6, vec![("probe_mean_ns", 400.0)]));
+        let rows = trajectory(&h);
+        let probe = rows
+            .iter()
+            .find(|r| r.metric == "probe_mean_ns")
+            .expect("probe series");
+        assert!(matches!(probe.verdict, Verdict::Regressed { .. }));
+        assert_eq!(probe.samples, 7);
+        assert_eq!(probe.latest, 400.0);
+        assert_eq!(probe.latest_rev, "r6");
+        let old = rows
+            .iter()
+            .find(|r| r.metric == "old_mean_ns")
+            .expect("old series");
+        assert_eq!(old.verdict, Verdict::Stale, "dropped metric must not gate");
+        assert_eq!(regressions(&rows).len(), 1);
+    }
+
+    #[test]
+    fn trajectory_table_renders_every_series() {
+        let mut h = History::default();
+        for ts in 0..3 {
+            h.records.push(rec("perf_x", ts, vec![("probe_mean_ns", 100.0)]));
+        }
+        let rows = trajectory(&h);
+        let t = trajectory_table(&rows);
+        assert_eq!(t.len(), rows.len());
+        let csv = t.to_csv();
+        assert!(csv.contains("probe_mean_ns"));
+        assert!(csv.contains("baseline<"), "short series labeled: {csv}");
+    }
+}

@@ -111,7 +111,19 @@ COMMANDS:
                   swaps in the exact plan when its search lands;
                   --synthetic runs the deterministic stand-in executor
                   (no artifacts needed)
-  report          run every experiment at fast effort
+  report          run every experiment at fast effort and print the tables
+                  --all [--out DIR] [--smoke] [--history PATH]
+                  regenerate every paper artifact (table3, figs 7-14, the
+                  pareto/remap companions, the perf-trajectory table) as
+                  CSV files in DIR (default report-artifacts/) in one
+                  command; --smoke shrinks grids/caps for quick runs
+  bench-report    [--history PATH] [--bench NAME] [--metric SUBSTR]
+                  [--last N] [--check]
+                  per-metric perf-trajectory tables (baseline median,
+                  min/max, MAD dispersion band, latest + drift) from
+                  bench_history.jsonl; --check exits nonzero when the
+                  newest sample regresses against the historical
+                  distribution (the CI gate; see BENCHMARKS.md)
 
 Common options: --threads N (default: cores-1), --csv (CSV output), --full";
 
@@ -648,6 +660,107 @@ pub fn run(args: Args) -> Result<()> {
                 }
             }
         }
+        "bench-report" => {
+            let hpath = PathBuf::from(args.get_str("history", crate::bench::DEFAULT_HISTORY_PATH));
+            let check = args.has_flag("check");
+            if !hpath.is_file() {
+                if check {
+                    bail!(
+                        "perf-trajectory history {} not found — run the perf benches \
+                         (full ./ci.sh) first",
+                        hpath.display()
+                    );
+                }
+                println!(
+                    "no perf-trajectory history at {} (the perf benches append it)",
+                    hpath.display()
+                );
+                return Ok(());
+            }
+            let mut h = crate::bench::read_history(&hpath);
+            if h.skipped > 0 {
+                println!(
+                    "note: skipped {} torn/foreign line(s) in {}",
+                    h.skipped,
+                    hpath.display()
+                );
+            }
+            let last = args.get_usize("last", 0);
+            if last > 0 && h.records.len() > last {
+                h.records.drain(..h.records.len() - last);
+            }
+            let mut rows = crate::bench::trajectory(&h);
+            if let Some(b) = args.get("bench") {
+                rows.retain(|r| r.bench == b);
+            }
+            if let Some(m) = args.get("metric") {
+                rows.retain(|r| r.metric.contains(m));
+            }
+            show(&crate::bench::trajectory_table(&rows));
+            let regs = crate::bench::regressions(&rows);
+            let gated = rows
+                .iter()
+                .filter(|r| {
+                    matches!(
+                        r.verdict,
+                        crate::bench::Verdict::Ok | crate::bench::Verdict::Regressed { .. }
+                    )
+                })
+                .count();
+            println!(
+                "{} series over {} records ({} gated, {} regression(s))",
+                rows.len(),
+                h.records.len(),
+                gated,
+                regs.len()
+            );
+            if check && !regs.is_empty() {
+                let detail: Vec<String> = regs
+                    .iter()
+                    .map(|r| {
+                        let (med, thr) = match r.verdict {
+                            crate::bench::Verdict::Regressed {
+                                baseline_median,
+                                threshold,
+                            } => (baseline_median, threshold),
+                            _ => unreachable!("regressions() only returns Regressed rows"),
+                        };
+                        format!(
+                            "  {} {}: latest {} (rev {}) vs baseline median {} \
+                             (allowed deviation {})",
+                            r.bench,
+                            r.metric,
+                            fmt_sig(r.latest),
+                            r.latest_rev,
+                            fmt_sig(med),
+                            fmt_sig(thr)
+                        )
+                    })
+                    .collect();
+                bail!(
+                    "perf regression(s) against the historical distribution:\n{}",
+                    detail.join("\n")
+                );
+            }
+        }
+        "report" if args.has_flag("all") => {
+            let dir = PathBuf::from(args.get_str("out", "report-artifacts"));
+            let hpath = PathBuf::from(args.get_str("history", crate::bench::DEFAULT_HISTORY_PATH));
+            let eff = if args.has_flag("smoke") {
+                Effort::Smoke
+            } else {
+                effort
+            };
+            let written = experiments::report_all(&dir, eff, threads, &hpath)?;
+            for p in &written {
+                println!("wrote {}", p.display());
+            }
+            println!(
+                "report --all: {} artifacts regenerated under {}",
+                written.len(),
+                dir.display()
+            );
+        }
         "report" => {
             println!("== Table 3 ==");
             show(&experiments::table3());
@@ -895,6 +1008,7 @@ fn parse_shard_spec(spec: &str) -> Result<(usize, usize)> {
 
 fn effort_opts(e: Effort) -> SearchOpts {
     match e {
+        Effort::Smoke => SearchOpts::capped(150, 4),
         Effort::Fast => SearchOpts::capped(600, 5),
         Effort::Full => SearchOpts::capped(20_000, 8),
     }
@@ -903,6 +1017,7 @@ fn effort_opts(e: Effort) -> SearchOpts {
 impl Effort {
     fn batch_for_cli(self) -> u64 {
         match self {
+            Effort::Smoke => 1,
             Effort::Fast => 4,
             Effort::Full => 16,
         }

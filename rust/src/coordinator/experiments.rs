@@ -1,6 +1,8 @@
 //! Experiment drivers: one function per paper table/figure. Each returns
-//! a [`Table`] whose rows mirror what the paper plots, so the benches and
-//! the CLI print the same data that EXPERIMENTS.md records.
+//! a [`Table`] whose rows mirror what the paper plots, so the benches,
+//! the CLI, and the one-command artifact regeneration ([`report_all`],
+//! CLI `report --all`; see REPRODUCING.md for the paper-artifact map)
+//! all print the same data.
 
 use std::collections::HashMap;
 
@@ -24,10 +26,16 @@ use crate::search::{
 use crate::sim::simulate;
 use crate::util::{fmt_bytes, fmt_sig, stats, table::Table};
 
-/// Experiment scale: `Fast` keeps bench wall-time low; `Full` matches the
-/// paper's workload sizes more closely.
+/// Experiment scale: `Smoke` is sized for debug-mode smoke tests,
+/// `Fast` keeps bench wall-time low, `Full` matches the paper's
+/// workload sizes more closely.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Effort {
+    /// Tiny caps and trimmed grids so `report --all --smoke` (and the
+    /// tier-1 smoke test over it) regenerates every artifact quickly
+    /// even in a debug build. Same drivers, same artifact set — only
+    /// the scale shrinks.
+    Smoke,
     /// Reduced batch / search caps (default for `cargo bench`).
     Fast,
     /// Paper-scale workloads (CLI `--full`).
@@ -37,6 +45,7 @@ pub enum Effort {
 impl Effort {
     fn opts(self) -> SearchOpts {
         match self {
+            Effort::Smoke => SearchOpts::capped(150, 4),
             Effort::Fast => SearchOpts::capped(600, 5),
             Effort::Full => SearchOpts::capped(20_000, 8),
         }
@@ -44,10 +53,24 @@ impl Effort {
 
     fn batch(self) -> u64 {
         match self {
+            Effort::Smoke => 1,
             Effort::Fast => 4,
             Effort::Full => 16,
         }
     }
+}
+
+/// The hierarchy-sweep design space at an effort: the paper grid,
+/// trimmed to two points under [`Effort::Smoke`] (Fast and Full sweep
+/// the unchanged paper grid).
+fn space_for_effort(array: ArrayShape, effort: Effort) -> DesignSpace {
+    let mut s = DesignSpace::paper_default(array);
+    if effort == Effort::Smoke {
+        s.rf1_sizes = vec![64, 512];
+        s.rf2_ratios = vec![4];
+        s.gbuf_sizes = vec![128 << 10];
+    }
+    s
 }
 
 /// Sharding knob for the sweep drivers: when `INTERSTELLAR_SHARDS` is
@@ -124,26 +147,42 @@ pub fn table3() -> Table {
 /// exact walk tractable). Paper reports < 2 % error vs synthesis; our
 /// ground truth is the exact walk, so the assertion is equality.
 pub fn fig7_validation(threads: usize) -> Table {
+    let net = network("alexnet", 1).unwrap();
+    let layers: Vec<(String, Shape)> = net
+        .layers
+        .iter()
+        .filter(|l| !l.is_fc_family())
+        .map(|l| (l.name.clone(), l.shape))
+        .collect();
+    fig7_validation_over(&layers, &SearchOpts::capped(300, 5), 2_000_000_000, threads)
+}
+
+/// Core of [`fig7_validation`], parameterized over the layer list,
+/// search caps, and simulator step budget so `report --all --smoke` can
+/// run the same model-vs-simulator comparison on a single small layer.
+pub fn fig7_validation_over(
+    layers: &[(String, Shape)],
+    opts: &SearchOpts,
+    sim_budget: u64,
+    threads: usize,
+) -> Table {
     let mut t = Table::new(vec![
         "design", "layer", "model (uJ)", "sim (uJ)", "err %", "dataflow",
     ]);
-    let net = network("alexnet", 1).unwrap();
-    let opts = SearchOpts::capped(300, 5);
     for (arch, df_str) in validation_designs() {
         let df = Dataflow::parse(df_str).unwrap();
-        for layer in net.layers.iter().filter(|l| !l.is_fc_family()) {
-            let Some(lo) = optimize_layer(&layer.shape, &arch, &df, &Table3, &opts, threads)
-            else {
+        for (name, shape) in layers {
+            let Some(lo) = optimize_layer(shape, &arch, &df, &Table3, opts, threads) else {
                 continue;
             };
-            let sim = match simulate(&lo.mapping, &lo.smap, &arch, &Table3, 2_000_000_000) {
+            let sim = match simulate(&lo.mapping, &lo.smap, &arch, &Table3, sim_budget) {
                 Ok(s) => s,
                 Err(_) => continue,
             };
             let err = 100.0 * (lo.result.energy_pj - sim.energy_pj).abs() / sim.energy_pj;
             t.row(vec![
                 arch.name.clone(),
-                layer.name.clone(),
+                name.clone(),
                 fmt_sig(lo.result.energy_uj()),
                 fmt_sig(sim.energy_uj()),
                 format!("{err:.4}"),
@@ -157,11 +196,11 @@ pub fn fig7_validation(threads: usize) -> Table {
 /// Fig 7b: our model's AlexNet energy breakdown under the Eyeriss
 /// row-stationary configuration, by hierarchy level (to compare against
 /// the published Eyeriss breakdown shape: RF-dominated).
-pub fn fig7b_eyeriss_breakdown(threads: usize) -> Table {
+pub fn fig7b_eyeriss_breakdown(effort: Effort, threads: usize) -> Table {
     let arch = eyeriss_like();
     let df = Dataflow::parse("FY|Y").unwrap();
-    let net = network("alexnet", 4).unwrap();
-    let opts = SearchOpts::capped(600, 5);
+    let net = network("alexnet", effort.batch()).unwrap();
+    let opts = effort.opts();
     let mut t = Table::new(vec!["layer", "RF %", "fabric %", "GBUF %", "DRAM %", "MAC %"]);
     for layer in net.layers.iter().filter(|l| !l.is_fc_family()) {
         let Some(lo) = optimize_layer(&layer.shape, &arch, &df, &Table3, &opts, threads) else {
@@ -253,7 +292,9 @@ pub fn fig10_blocking(shape: Shape, effort: Effort, threads: usize) -> Table {
     let arch = eyeriss_like();
     let df = Dataflow::parse("C|K").unwrap();
     let mut opts = effort.opts();
-    opts.max_blockings = opts.max_blockings.max(2000);
+    if effort != Effort::Smoke {
+        opts.max_blockings = opts.max_blockings.max(2000);
+    }
     let energies = sweep_blockings(&shape, &arch, &df, &Table3, &opts, threads);
     let lo = stats::min(&energies);
     let mut t = Table::new(vec!["metric", "value"]);
@@ -319,9 +360,17 @@ pub fn fig11_breakdown(effort: Effort, threads: usize) -> Table {
 /// `INTERSTELLAR_SHARDS` asks for it.
 pub fn fig12_memory(effort: Effort, threads: usize) -> Table {
     let opts = effort.opts();
-    let net = network("alexnet", effort.batch()).unwrap();
-    let rf_sizes = [32u64, 64, 128, 256, 512];
-    let sram_sizes = [64u64 << 10, 128 << 10, 256 << 10, 512 << 10];
+    let mut net = network("alexnet", effort.batch()).unwrap();
+    if effort == Effort::Smoke {
+        net = net.dedup_shapes();
+    }
+    let (rf_sizes, sram_sizes): (&[u64], &[u64]) = match effort {
+        Effort::Smoke => (&[32, 64], &[64 << 10, 128 << 10]),
+        _ => (
+            &[32, 64, 128, 256, 512],
+            &[64 << 10, 128 << 10, 256 << 10, 512 << 10],
+        ),
+    };
     let mut space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
     space.rf1_sizes = rf_sizes.to_vec();
     space.rf2_ratios = Vec::new();
@@ -355,19 +404,25 @@ pub fn fig12_memory(effort: Effort, threads: usize) -> Table {
 /// Fig 13: optimal memory allocation and total energy vs PE array size.
 pub fn fig13_scaling(effort: Effort, threads: usize) -> Table {
     let net = network("alexnet", effort.batch()).unwrap();
+    let net = if effort == Effort::Smoke {
+        net.dedup_shapes()
+    } else {
+        net
+    };
     let mut opts = effort.opts();
-    if effort == Effort::Fast {
+    if effort != Effort::Full {
         opts.max_order_combos = 9; // hierarchy sweeps multiply everything
     }
     let mut t = Table::new(vec![
         "array", "best RF", "best SRAM", "energy (uJ)", "RF bytes/PE",
     ]);
     let sizes: &[u32] = match effort {
+        Effort::Smoke => &[8, 16],
         Effort::Fast => &[8, 16, 32],
         Effort::Full => &[8, 16, 32, 64],
     };
     for &n in sizes {
-        let space = DesignSpace::paper_default(ArrayShape { rows: n, cols: n });
+        let space = space_for_effort(ArrayShape { rows: n, cols: n }, effort);
         let results = sweep_space(&net, &space, &opts, threads).ranked;
         if let Some(best) = results.first() {
             let rf = best.arch.levels[0].size_bytes;
@@ -397,9 +452,16 @@ pub fn fig13_scaling(effort: Effort, threads: usize) -> Table {
 pub fn fig14_optimizer(effort: Effort, threads: usize) -> Table {
     let df = Dataflow::parse("C|K").unwrap();
     let mut opts = effort.opts();
-    if effort == Effort::Fast {
-        opts.max_blockings = 400;
-        opts.max_order_combos = 9;
+    match effort {
+        Effort::Smoke => {
+            opts.max_blockings = 150;
+            opts.max_order_combos = 4;
+        }
+        Effort::Fast => {
+            opts.max_blockings = 400;
+            opts.max_order_combos = 9;
+        }
+        Effort::Full => {}
     }
     let mut t = Table::new(vec![
         "network",
@@ -409,7 +471,14 @@ pub fn fig14_optimizer(effort: Effort, threads: usize) -> Table {
         "opt arch",
         "TOPS/W",
     ]);
-    for name in crate::nn::network_names() {
+    let names = crate::nn::network_names();
+    // Smoke: one representative per family (conv / mlp / recurrent) —
+    // same driver and columns, three rows instead of nine
+    let names: &[&str] = match effort {
+        Effort::Smoke => &["alexnet", "mlp-m", "lstm-m"],
+        _ => &names[..],
+    };
+    for &name in names {
         let batch = match effort {
             _ if name.starts_with("lstm") || name == "rhn" => 1,
             _ if name.starts_with("mlp") => 32,
@@ -418,7 +487,7 @@ pub fn fig14_optimizer(effort: Effort, threads: usize) -> Table {
         let Some(net) = network(name, batch) else { continue };
         let net = reduce_for_effort(net, effort);
         let baseline = optimize_network(&net, &eyeriss_like(), &df, &Table3, &opts, threads);
-        let space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+        let space = space_for_effort(ArrayShape { rows: 16, cols: 16 }, effort);
         let results = sweep_space(&net, &space, &opts, threads).ranked;
         if let Some(best) = results.first() {
             // flag each side's unmapped layers on its own column, so an
@@ -467,7 +536,7 @@ pub fn large_chip_energy(name: &str, effort: Effort, threads: usize) -> Option<f
 fn reduce_for_effort(net: Network, effort: Effort) -> Network {
     match effort {
         Effort::Full => net,
-        Effort::Fast => net.dedup_shapes(),
+        Effort::Fast | Effort::Smoke => net.dedup_shapes(),
     }
 }
 
@@ -586,7 +655,7 @@ pub fn pareto_curve(effort: Effort, threads: usize) -> Table {
     let mut opts = effort.opts();
     opts.max_order_combos = 9;
     let net = reduce_for_effort(network("mlp-m", 32).unwrap(), effort);
-    let space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+    let space = space_for_effort(ArrayShape { rows: 16, cols: 16 }, effort);
     let cfg = NetOptConfig::new(opts, threads);
     let res = pareto_optimize(&net, &space, &Table3, &cfg, &ParetoConfig::default());
     let mut t = Table::new(vec![
@@ -698,6 +767,85 @@ pub fn ablation_cost_models(shape: Shape, threads: usize) -> Table {
         ]);
     }
     t
+}
+
+/// Every artifact `report_all` writes, in write order — the paper map
+/// (table 3, figs 7–14), the frontier/serving companions, and the
+/// perf-trajectory table. The `report --all` smoke test iterates this
+/// list, so an artifact silently dropped from [`report_all`] fails
+/// tier-1.
+pub const REPORT_ARTIFACTS: &[&str] = &[
+    "table3.csv",
+    "fig7_validation.csv",
+    "fig7b_eyeriss_breakdown.csv",
+    "fig8_dataflow.csv",
+    "fig9_utilization.csv",
+    "fig10_blocking.csv",
+    "fig11_breakdown.csv",
+    "fig12_memory.csv",
+    "fig13_scaling.csv",
+    "fig14_optimizer.csv",
+    "pareto_curve.csv",
+    "remap_drift.csv",
+    "bench_trajectory.csv",
+];
+
+/// One-command paper-artifact regeneration (CLI `report --all`,
+/// documented in REPRODUCING.md): run every experiment driver at the
+/// given effort and write each table as CSV into `dir`, plus the
+/// perf-trajectory table rendered from `history` (an absent history
+/// yields a header-only table — the artifact set never thins out).
+/// Returns the written paths in [`REPORT_ARTIFACTS`] order.
+pub fn report_all(
+    dir: &std::path::Path,
+    effort: Effort,
+    threads: usize,
+    history: &std::path::Path,
+) -> anyhow::Result<Vec<std::path::PathBuf>> {
+    use anyhow::Context;
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let shape = alexnet_conv3(effort.batch());
+    let fig7 = match effort {
+        // same comparison, one small layer, reduced exact-walk budget
+        Effort::Smoke => fig7_validation_over(
+            &[("CONV-S".into(), Shape::new(1, 32, 16, 8, 8, 3, 3, 1))],
+            &SearchOpts::capped(150, 4),
+            500_000_000,
+            threads,
+        ),
+        _ => fig7_validation(threads),
+    };
+    let trajectory = {
+        let h = crate::bench::read_history(history);
+        crate::bench::trajectory_table(&crate::bench::trajectory(&h))
+    };
+    let tables: Vec<(&str, Table)> = vec![
+        ("table3.csv", table3()),
+        ("fig7_validation.csv", fig7),
+        ("fig7b_eyeriss_breakdown.csv", fig7b_eyeriss_breakdown(effort, threads)),
+        ("fig8_dataflow.csv", fig8_dataflow(shape, effort, threads)),
+        ("fig9_utilization.csv", fig9_utilization(shape)),
+        ("fig10_blocking.csv", fig10_blocking(shape, effort, threads)),
+        ("fig11_breakdown.csv", fig11_breakdown(effort, threads)),
+        ("fig12_memory.csv", fig12_memory(effort, threads)),
+        ("fig13_scaling.csv", fig13_scaling(effort, threads)),
+        ("fig14_optimizer.csv", fig14_optimizer(effort, threads)),
+        ("pareto_curve.csv", pareto_curve(effort, threads)),
+        ("remap_drift.csv", remap_drift(threads)),
+        ("bench_trajectory.csv", trajectory),
+    ];
+    let names: Vec<&str> = tables.iter().map(|(n, _)| *n).collect();
+    assert_eq!(
+        names, REPORT_ARTIFACTS,
+        "REPORT_ARTIFACTS must list exactly the tables report_all writes"
+    );
+    let mut written = Vec::new();
+    for (name, t) in &tables {
+        let path = dir.join(name);
+        std::fs::write(&path, t.to_csv()).with_context(|| format!("write {}", path.display()))?;
+        written.push(path);
+    }
+    Ok(written)
 }
 
 /// Handy accessor used by several benches: CONV3 dims are divisor-awkward

@@ -557,3 +557,44 @@ fn pareto_curve_table_is_a_descending_energy_ascending_tops_curve() {
         last_tops = tops;
     }
 }
+
+#[test]
+fn report_all_produces_every_artifact() {
+    // One-command paper-artifact regeneration (REPRODUCING.md): under
+    // Smoke effort every fig7–14/table3 artifact plus the trajectory
+    // curve must land in the output directory, in manifest order.
+    let dir = std::env::temp_dir().join(format!(
+        "interstellar-report-all-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let hist = dir.join("bench_history.jsonl");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Seed a tiny history so bench_trajectory.csv has real rows.
+    for (ts, ns) in [(1u64, 101.0), (2, 103.0)] {
+        let rec = crate::bench::HistoryRecord {
+            bench: "perf_probe".into(),
+            git_rev: "test".into(),
+            unix_ts: ts,
+            metrics: vec![("probe_mean_ns".into(), ns)],
+            labels: Vec::new(),
+        };
+        crate::bench::append_record(&hist, &rec).unwrap();
+    }
+
+    let written = experiments::report_all(&dir, Effort::Smoke, 2, &hist).expect("report_all");
+    assert_eq!(written.len(), experiments::REPORT_ARTIFACTS.len());
+    for (path, name) in written.iter().zip(experiments::REPORT_ARTIFACTS) {
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), *name);
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("{name} unreadable: {e}"));
+        assert!(!text.trim().is_empty(), "{name} is empty");
+    }
+    let traj = std::fs::read_to_string(dir.join("bench_trajectory.csv")).unwrap();
+    assert!(
+        traj.contains("probe_mean_ns"),
+        "trajectory curve must include the seeded history metric"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

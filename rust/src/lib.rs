@@ -41,6 +41,10 @@
 //!   OS processes with work stealing over sub-sharded grids and live
 //!   incumbent/frontier bound streaming through an append-only bounds
 //!   file, merging back to bit-identical winners and frontiers;
+//! - [`bench`] — the measurement backbone: every perf gate's metrics
+//!   appended to a torn-write-safe `bench_history.jsonl`, with
+//!   trajectory views and the median/MAD regression rule behind the
+//!   `bench-report --check` CI gate;
 //! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
 //!   artifacts (the request-path compute; Python is build-time only);
 //! - [`coordinator`] — CLI, sweep orchestration, reports.
@@ -49,6 +53,7 @@
 //! `ROADMAP.md` for the experiment plan and measured milestones.
 
 pub mod arch;
+pub mod bench;
 pub mod coordinator;
 pub mod dataflow;
 pub mod energy;

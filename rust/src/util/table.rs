@@ -1,7 +1,8 @@
 //! Plain-text / markdown / CSV table rendering for reports and benches.
 //!
 //! Every figure-regeneration bench prints its rows through this so the
-//! output can be diffed, pasted into EXPERIMENTS.md, or post-processed.
+//! output can be diffed, written to the `report --all` artifact set
+//! (REPRODUCING.md), or post-processed.
 
 /// A simple column-aligned table builder.
 #[derive(Default, Clone)]
