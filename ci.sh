@@ -28,7 +28,9 @@ cargo clippy --all-targets -- -D warnings
 if [[ "$MODE" == "quick" ]]; then
     # `cargo test -q` is the whole tier-1 test set, including the serve
     # determinism, remap equivalence, and seeded-vs-cold suites
-    # (coordinator::tests, netopt::tests) — all artifact-free.
+    # (coordinator::tests, netopt::tests) and the in-process fleet
+    # scenario smoke (fleet::tests — the thread-mode variant of the
+    # perf_fleet gate below) — all artifact-free.
     echo "==> cargo test -q"
     cargo test -q
     echo "CI OK (quick)"
@@ -74,7 +76,10 @@ cargo bench --bench perf_hotpath
 echo "==> perf_orchestrator (distributed fan-out: >=2.5x at 4 workers, streamed bounds strictly cut full evals, SIGKILL survived via stealing, merged winner/frontier bit-identical; emits BENCH_orchestrator.json)"
 cargo bench --bench perf_orchestrator
 
-echo "==> bench_schema (every BENCH_*.json + bench_history.jsonl conform to the documented schemas; all eight perf files required)"
+echo "==> perf_fleet (serving fleet: 4-worker merged digest bit-identical to single-process serve, SIGKILL crash + rejoin on the broadcast epoch, full scenario catalogue as OS processes, p50/p99/p99.9 under load; emits BENCH_fleet.json)"
+cargo bench --bench perf_fleet
+
+echo "==> bench_schema (every BENCH_*.json + bench_history.jsonl conform to the documented schemas; all nine perf files required)"
 cargo bench --bench bench_schema
 
 echo "==> bench-report --check (no metric regressed against its own history; see BENCHMARKS.md)"
@@ -92,6 +97,23 @@ if target/release/interstellar bench-report --check --history "$SYN" > /dev/null
 fi
 rm -f "$SYN"
 echo "synthetic regression correctly rejected"
+
+# Same self-test for a serving-latency spike: a stable p99 series ending
+# in a 2.5x tail blowup must fail the gate (the `_ms` suffix opts
+# latency percentiles into lower-is-better gating).
+SYN="$(mktemp)"
+i=0
+for ms in 10.1 10.4 10.2 10.5 10.3 25.0; do
+    i=$((i + 1))
+    printf '\n{"v":1,"bench":"perf_probe_fleet","git_rev":"syn","unix_ts":%s,"metrics":{"probe_p99_ms":%s},"labels":{}}\n' "$i" "$ms" >> "$SYN"
+done
+if target/release/interstellar bench-report --check --history "$SYN" > /dev/null 2>&1; then
+    echo "FAIL: bench-report --check passed on a synthetic p99 latency spike" >&2
+    rm -f "$SYN"
+    exit 1
+fi
+rm -f "$SYN"
+echo "synthetic p99 latency spike correctly rejected"
 
 echo "==> report --all --smoke (one-command paper-artifact regeneration; see REPRODUCING.md)"
 target/release/interstellar report --all --smoke --out report-artifacts

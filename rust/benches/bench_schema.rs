@@ -24,6 +24,7 @@ use interstellar::util::bench::validate_bench_json;
 /// their absence means a perf gate silently stopped emitting.
 const REQUIRED: &[&str] = &[
     "BENCH_fastmap.json",
+    "BENCH_fleet.json",
     "BENCH_hotpath.json",
     "BENCH_netopt.json",
     "BENCH_orchestrator.json",

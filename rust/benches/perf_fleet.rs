@@ -1,0 +1,153 @@
+//! §Perf/CI gate: the production serving fleet. Drives [`run_fleet`]
+//! against the release binary (real OS-process workers, the same
+//! launcher path `fleet --hosts` uses) and asserts the fleet contract:
+//!
+//! 1. **Merge identity** — a 4-worker fleet over interleaved shards of a
+//!    240-request mixed trace, with a live controller remapper, merges
+//!    to a digest bit-identical to one process serving the whole trace.
+//! 2. **Crash + rejoin** — one of 4 workers is SIGKILLed mid-run (a
+//!    slow-executor delay stretches its shard so the kill lands
+//!    mid-serve); the controller respawns it once a plan has broadcast,
+//!    and the rejoined worker finishes on the current plan epoch with
+//!    the merged digest still bit-identical to the baseline.
+//! 3. **Scenario catalogue** — every scenario in
+//!    [`interstellar::fleet::scenarios`] (steady, bursty, mix-flip,
+//!    straggler, crash-rejoin, zero-budget) passes as OS processes —
+//!    the same configs the in-process fleet tests smoke as threads.
+//!
+//! Reports p50/p99/p99.9 latency under load from the bursty (paced)
+//! scenario and emits `BENCH_fleet.json` for the perf trajectory
+//! (validated by the `bench_schema` gate).
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use interstellar::coordinator::trace::TraceSpec;
+use interstellar::fleet::scenarios::run_all;
+use interstellar::fleet::{baseline, run_fleet, FaultSpec, FleetConfig};
+use interstellar::util::json::Json;
+
+fn main() {
+    let bin = PathBuf::from(env!("CARGO_BIN_EXE_interstellar"));
+    let dir =
+        std::env::temp_dir().join(format!("interstellar-perf-fleet-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+
+    // 1. merge identity: 4 OS-process workers, live remapper, one
+    // 240-request trace. The digest must match single-process `serve`.
+    let spec = TraceSpec::mixed(240, 42);
+    let (want_digest, _) = baseline(&spec).expect("single-process baseline");
+    let mut cfg = FleetConfig::new(4, spec, dir.join("merge"));
+    cfg.bin = Some(bin.clone());
+    cfg.batch = 12;
+    cfg.window = 24;
+    cfg.drift = 0.9;
+    let t = Instant::now();
+    let fleet = run_fleet(&cfg).expect("4-worker OS-process fleet");
+    let fleet_wall_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(fleet.completed, 240, "fleet served the whole trace");
+    assert_eq!(fleet.respawns, 0, "healthy fleet must not respawn");
+    assert_eq!(
+        fleet.digest, want_digest,
+        "4-worker fleet digest {:016x} != single-process {want_digest:016x}",
+        fleet.digest
+    );
+    println!(
+        "perf_fleet: 4 workers over 240 requests: {fleet_wall_ms:.0} ms, digest \
+         {:016x} bit-identical to single-process ({} mix records, {} plans)",
+        fleet.digest, fleet.mix_records, fleet.remaps
+    );
+
+    // 2. crash + rejoin with a real SIGKILL. Worker 1's executor is
+    // slowed to 2 ms/request (60-request shard on 2 threads ⇒ ≥ 60 ms
+    // of serving), so the 40 ms kill is guaranteed to land mid-run; the
+    // respawn is deferred until a plan has broadcast, so the rejoined
+    // worker deterministically adopts the current epoch.
+    let spec = TraceSpec::mixed(240, 23);
+    let (kill_digest, _) = baseline(&spec).expect("kill baseline");
+    let mut cfg = FleetConfig::new(4, spec, dir.join("kill"));
+    cfg.bin = Some(bin.clone());
+    cfg.batch = 12;
+    cfg.window = 24;
+    cfg.drift = 0.9;
+    cfg.slow_worker = Some((1, 2_000_000));
+    cfg.fault = Some(FaultSpec {
+        worker: 1,
+        after: Duration::from_millis(40),
+        after_batches: None,
+        await_plan: true,
+    });
+    let killed = run_fleet(&cfg).expect("fault-injected fleet");
+    assert!(
+        killed.respawns >= 1,
+        "SIGKILL injected no crash (victim finished too fast?)"
+    );
+    assert!(
+        killed.plan_epoch.is_some(),
+        "no plan broadcast before the rejoin gate opened"
+    );
+    assert_eq!(
+        killed.worker_epochs[1], killed.plan_epoch,
+        "rejoined worker is not on the fleet's current plan epoch"
+    );
+    assert_eq!(
+        killed.digest, kill_digest,
+        "crash + rejoin perturbed the merged digest"
+    );
+    println!(
+        "perf_fleet: survived SIGKILL of 1/4 workers ({} respawn(s), rejoined on \
+         epoch {:?}, digest intact)",
+        killed.respawns, killed.plan_epoch
+    );
+
+    // 3. the whole scenario catalogue as OS processes. Each scenario
+    // re-verifies digest identity against its own baseline plus its
+    // invariant (mix-flip replans, straggler tail, zero-budget
+    // degradation, ...); latency percentiles under load come from the
+    // bursty (paced) scenario.
+    let t = Instant::now();
+    let outcomes =
+        run_all(2, &dir.join("scenarios"), Some(bin)).expect("scenario catalogue");
+    let scenarios_wall_ms = t.elapsed().as_secs_f64() * 1e3;
+    let bursty = outcomes
+        .iter()
+        .find(|o| o.name == "bursty")
+        .expect("bursty outcome");
+    println!(
+        "perf_fleet: {} scenarios OK as OS processes in {scenarios_wall_ms:.0} ms \
+         (bursty p50 {:.3} ms, p99 {:.3} ms, p99.9 {:.3} ms)",
+        outcomes.len(),
+        bursty.stats.p50_ms,
+        bursty.stats.p99_ms,
+        bursty.stats.p999_ms
+    );
+
+    let fields: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str("perf_fleet")),
+        ("requests".into(), Json::int(240)),
+        ("workers".into(), Json::int(4)),
+        ("fleet_wall_ms".into(), Json::num(fleet_wall_ms)),
+        ("digest".into(), Json::str(format!("{:016x}", fleet.digest))),
+        ("digest_match".into(), Json::Bool(fleet.digest == want_digest)),
+        ("mix_records".into(), Json::int(fleet.mix_records as u64)),
+        ("remaps".into(), Json::int(fleet.remaps as u64)),
+        ("p50_ms".into(), Json::num(bursty.stats.p50_ms)),
+        ("p99_ms".into(), Json::num(bursty.stats.p99_ms)),
+        ("p99_9_ms".into(), Json::num(bursty.stats.p999_ms)),
+        ("mean_ms".into(), Json::num(bursty.stats.mean_ms)),
+        ("kill_respawns".into(), Json::int(killed.respawns as u64)),
+        (
+            "kill_plan_epoch".into(),
+            Json::int(killed.plan_epoch.unwrap_or(0) as u64),
+        ),
+        ("scenarios".into(), Json::int(outcomes.len() as u64)),
+        ("scenarios_wall_ms".into(), Json::num(scenarios_wall_ms)),
+    ];
+    interstellar::bench::emit(fields).expect("emit perf trajectory");
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "perf_fleet OK (digest bit-identical at 4 workers, SIGKILL rejoin on the \
+         broadcast epoch, {} scenarios green)",
+        outcomes.len()
+    );
+}

@@ -16,8 +16,6 @@
 //! Serialization is the hand-rolled [`crate::util::json`] codec (no new
 //! deps); the record layout is documented in `BENCHMARKS.md`.
 
-use std::fs::OpenOptions;
-use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
@@ -157,13 +155,7 @@ impl HistoryRecord {
 /// record), one `O_APPEND` `write_all` (so this record itself lands
 /// atomically or not at all).
 pub fn append_record(path: &Path, rec: &HistoryRecord) -> Result<()> {
-    let line = format!("\n{}\n", rec.to_json());
-    let mut f = OpenOptions::new()
-        .create(true)
-        .append(true)
-        .open(path)
-        .with_context(|| format!("open history {}", path.display()))?;
-    f.write_all(line.as_bytes())
+    crate::orchestrator::append_framed(path, &rec.to_json())
         .with_context(|| format!("append history record to {}", path.display()))
 }
 
@@ -261,6 +253,8 @@ pub fn unix_ts() -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::fs::OpenOptions;
+    use std::io::Write;
 
     fn tmp(name: &str) -> PathBuf {
         std::env::temp_dir().join(format!(

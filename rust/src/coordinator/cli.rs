@@ -9,10 +9,12 @@ use anyhow::{bail, Context, Result};
 use super::experiments::{self, Effort};
 use super::remap::{RemapPolicy, Remapper};
 use super::serve;
+use super::trace::TraceSpec;
 use crate::arch::{eyeriss_like, ArrayShape};
 use crate::dataflow::Dataflow;
 use crate::energy::Table3;
 use crate::engine::PruneMode;
+use crate::fleet::{run_fleet, run_worker, FleetConfig, WorkerConfig};
 use crate::netopt::{
     co_optimize, co_optimize_shard, merge_all, CoOptResult, DesignSpace, NetOptConfig,
     ShardCheckpoint,
@@ -111,6 +113,26 @@ COMMANDS:
                   swaps in the exact plan when its search lands;
                   --synthetic runs the deterministic stand-in executor
                   (no artifacts needed)
+  fleet           [--workers N] [--requests N] [--trace SPEC]
+                  [--batch-requests B] [--worker-threads T] [--window W]
+                  [--drift D] [--latency-budget CYCLES] [--deadline]
+                  [--warm-start CKPT] [--dir PATH] [--bin PATH]
+                  [--hosts 'CMD;CMD'] [--in-process] [--json]
+                  multi-worker serving fleet over the synthetic executor:
+                  N workers (OS processes round-robined over --hosts
+                  launcher prefixes, or threads with --in-process) serve
+                  interleaved shards of one seeded trace (--trace takes a
+                  TraceSpec encoding, e.g. 240:42:steady@0:uniform@fc);
+                  per-batch mixes stream into mix.jsonl, the controller
+                  re-optimizes on fleet-level drift when --window W > 0
+                  and broadcasts plan epochs through plans.jsonl;
+                  --warm-start primes the re-optimizer from a sweep
+                  checkpoint; the merged digest is bit-identical to the
+                  single-process serve of the same trace
+  fleet-worker    --worker=I --fleet=N --trace=SPEC --dir=PATH
+                  [--threads=T] [--batch-requests=B] [--slow-ns=NS]
+                  [--crash-after=B] [--pace]
+                  one fleet serving worker (spawned by fleet)
   report          run every experiment at fast effort and print the tables
                   --all [--out DIR] [--smoke] [--history PATH]
                   regenerate every paper artifact (table3, figs 7-14, the
@@ -659,6 +681,114 @@ pub fn run(args: Args) -> Result<()> {
                     None => println!("no feasible plan for the observed mix"),
                 }
             }
+        }
+        "fleet" => {
+            let workers = args.get_usize("workers", 4);
+            let spec = match args.get("trace") {
+                Some(t) => TraceSpec::decode(t)?,
+                None => TraceSpec::mixed(args.get_usize("requests", 240), 42),
+            };
+            let dir = PathBuf::from(args.get_str("dir", "fleet-scratch"));
+            let mut fcfg = FleetConfig::new(workers, spec, &dir);
+            fcfg.threads = args.get_usize("worker-threads", 2);
+            fcfg.batch = args.get_usize("batch-requests", 24);
+            fcfg.window = args.get_usize("window", 0);
+            fcfg.drift = args.get_f64("drift", 0.25);
+            fcfg.deadline = args.has_flag("deadline");
+            if args.get("latency-budget").is_some() {
+                fcfg.latency_budget = Some(args.get_f64("latency-budget", f64::INFINITY));
+                if fcfg.window == 0 {
+                    fcfg.window = 64; // a budget needs a live mix window
+                }
+            }
+            if let Some(p) = args.get("warm-start") {
+                fcfg.warm_start = Some(PathBuf::from(p));
+            }
+            if !args.has_flag("in-process") {
+                fcfg.bin = Some(match args.get("bin") {
+                    Some(b) => PathBuf::from(b),
+                    None => std::env::current_exe().context(
+                        "resolve the interstellar binary for fleet workers \
+                         (or pass --bin / --in-process)",
+                    )?,
+                });
+            }
+            if let Some(hosts) = args.get("hosts") {
+                fcfg.launchers = hosts
+                    .split(';')
+                    .map(|h| h.split_whitespace().map(str::to_string).collect::<Vec<_>>())
+                    .filter(|v| !v.is_empty())
+                    .collect();
+            }
+            println!(
+                "fleet: {workers} workers x {} threads over {} requests ({}, window {}{})...",
+                fcfg.threads,
+                fcfg.spec.n,
+                if fcfg.bin.is_some() {
+                    "OS processes"
+                } else {
+                    "in-process threads"
+                },
+                fcfg.window,
+                match fcfg.latency_budget {
+                    Some(b) => format!(", budget {b} cycles"),
+                    None => String::new(),
+                }
+            );
+            let stats = run_fleet(&fcfg)?;
+            if args.has_flag("json") {
+                println!("{}", stats.to_json());
+            } else {
+                println!(
+                    "completed {}  wall {:.2}s  p50 {:.3} ms  p99 {:.3} ms  \
+                     p99.9 {:.3} ms  mean {:.3} ms",
+                    stats.completed,
+                    stats.wall_s,
+                    stats.p50_ms,
+                    stats.p99_ms,
+                    stats.p999_ms,
+                    stats.mean_ms
+                );
+                println!(
+                    "digest {:016x}  checksum {:.3}  remaps {} (fast {})  \
+                     epoch {:?}  respawns {}  failovers {}  mix records {}",
+                    stats.digest,
+                    stats.checksum,
+                    stats.remaps,
+                    stats.fast_remaps,
+                    stats.plan_epoch,
+                    stats.respawns,
+                    stats.failovers,
+                    stats.mix_records
+                );
+            }
+        }
+        "fleet-worker" => {
+            let Some(trace) = args.get("trace") else {
+                bail!("fleet-worker needs --trace=SPEC (a TraceSpec encoding)");
+            };
+            let mut wcfg = WorkerConfig::new(
+                args.get_usize("worker", 0),
+                args.get_usize("fleet", 1),
+                TraceSpec::decode(trace)?,
+                PathBuf::from(args.get_str("dir", "fleet-scratch")),
+            );
+            wcfg.threads = args.get_usize("threads", 2);
+            wcfg.batch = args.get_usize("batch-requests", 16);
+            wcfg.slow_ns = args.get_u64("slow-ns", 0);
+            wcfg.pace = args.has_flag("pace");
+            if args.get("crash-after").is_some() {
+                wcfg.crash_after_batches = Some(args.get_usize("crash-after", 1));
+            }
+            let report = run_worker(&wcfg)?;
+            println!(
+                "fleet worker {} done: {} requests, {} batches, digest {:016x}, epoch {:?}",
+                report.worker,
+                report.completed,
+                report.batches,
+                report.digest,
+                report.plan_epoch
+            );
         }
         "bench-report" => {
             let hpath = PathBuf::from(args.get_str("history", crate::bench::DEFAULT_HISTORY_PATH));

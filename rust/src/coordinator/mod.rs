@@ -6,6 +6,7 @@ pub mod cli;
 pub mod experiments;
 pub mod remap;
 pub mod serve;
+pub mod trace;
 
 pub use experiments::Effort;
 

@@ -651,6 +651,18 @@ impl Remapper {
         &self.seeds
     }
 
+    /// Warm-start: min-merge a pre-existing seeds table (e.g. a
+    /// checkpointed sweep's — the fleet loads one from a
+    /// `ShardCheckpoint` / `FrontierCheckpoint` and primes every
+    /// worker's remapper with it) into the accumulated table, so the
+    /// first remap already prunes with everything the sweep learned.
+    /// Seeds are hints, never trusted results (netopt's rerun fallback),
+    /// so priming can only prune work — every published plan stays
+    /// bit-identical to the cold-start plan.
+    pub fn prime_seeds(&mut self, seeds: &SeedTable) {
+        self.seeds.merge(seeds);
+    }
+
     /// The candidate architecture list (`None` for a live-space source,
     /// whose candidates are re-enumerated at every remap).
     pub fn candidates(&self) -> Option<&[Arch]> {

@@ -17,6 +17,29 @@
 //! the trace length. `coordinator::tests` locks both down at the
 //! `serve()` level.
 //!
+//! Alongside the order-pinning checksum, [`ServeStats::digest`] is an
+//! **order-free but order-binding** u64: the wrapping sum of
+//! [`digest_term`]`(global_index, value)` over the trace. Each term mixes
+//! the request's *global trace index* with its value bits (splitmix64
+//! finalizer), so any reordering or cross-request value swap changes the
+//! digest — but wrapping addition is associative and commutative, so
+//! digests of **disjoint trace shards merge** with `wrapping_add` in any
+//! order to exactly the single-process digest. That is the fleet
+//! contract ([`crate::fleet`]): worker `w` of `N` serves the interleaved
+//! shard `index % N == w` under
+//! [`ServeConfig::with_index_map`]`(w, N)`, and the merged fleet digest
+//! is bit-identical to one process serving the whole trace.
+//!
+//! ## Failover
+//!
+//! A worker whose executor-slot initialization (or a request execution)
+//! fails no longer aborts the whole batch loop: its shard is retried
+//! sequentially on a fresh replica from `make` (counted in
+//! [`ServeStats::failovers`]); only a second consecutive failure — the
+//! replacement replica also failing — is surfaced as an error, naming
+//! the worker. The retry serves the identical shard in shard order, so
+//! failover never perturbs the checksum or digest.
+//!
 //! ## Executors
 //!
 //! The executor is pluggable ([`Executor`]): [`PjrtExecutor`] runs the
@@ -92,6 +115,20 @@ pub struct ServeStats {
     /// Output checksum (trace-ordered sum of all output elements) for
     /// determinism checks.
     pub checksum: f64,
+    /// Order-binding, shard-mergeable output digest: wrapping sum of
+    /// [`digest_term`]`(global_index, value)` over the served trace,
+    /// where `global_index` comes from [`ServeConfig::with_index_map`].
+    /// Digests of disjoint shards `wrapping_add` to the whole-trace
+    /// digest (module docs, "Determinism contract").
+    pub digest: u64,
+    /// Per-request latencies in trace order, milliseconds — the raw
+    /// samples behind the percentile fields, kept so a fleet controller
+    /// can merge workers' latencies before taking fleet-level
+    /// percentiles (percentiles do not compose; raw samples do).
+    pub latencies_ms: Vec<f64>,
+    /// Worker shards retried on a fresh executor replica after a
+    /// mid-batch executor failure (module docs, "Failover").
+    pub failovers: usize,
     /// Scheduling batches served.
     pub batches: usize,
     /// Plan swaps received from the remapper (0 without `--remap`).
@@ -185,17 +222,39 @@ pub struct ServeConfig {
     /// remapper observes traffic and plans may swap. `0` serves the
     /// whole trace as a single batch.
     pub batch: usize,
+    /// Global trace index of this process's first request (digest index
+    /// mapping; see [`ServeStats::digest`]). A standalone process serving
+    /// the whole trace uses `0`.
+    pub index_base: u64,
+    /// Global-index step between consecutive local requests. A
+    /// standalone process uses `1`; fleet worker `w` of `N` serves the
+    /// interleaved shard with `(index_base, index_stride) = (w, N)`.
+    pub index_stride: u64,
 }
 
 impl ServeConfig {
     /// Single-batch serving on `threads` workers (the pre-remap layout).
     pub fn new(threads: usize) -> ServeConfig {
-        ServeConfig { threads, batch: 0 }
+        ServeConfig {
+            threads,
+            batch: 0,
+            index_base: 0,
+            index_stride: 1,
+        }
     }
 
     /// Same configuration with a scheduling-batch size.
     pub fn with_batch(mut self, batch: usize) -> ServeConfig {
         self.batch = batch;
+        self
+    }
+
+    /// Same configuration serving the interleaved global-trace shard
+    /// whose requests sit at global indices `base + k·stride` — the
+    /// digest index mapping for fleet worker `base` of `stride`.
+    pub fn with_index_map(mut self, base: u64, stride: u64) -> ServeConfig {
+        self.index_base = base;
+        self.index_stride = stride.max(1);
         self
     }
 }
@@ -225,7 +284,83 @@ pub fn serve_with<E, F>(
     requests: Vec<Request>,
     cfg: &ServeConfig,
     make: F,
-    mut remapper: Option<&mut Remapper>,
+    remapper: Option<&mut Remapper>,
+) -> Result<ServeStats>
+where
+    E: Executor + Send,
+    F: Fn() -> Result<E> + Sync,
+{
+    match remapper {
+        Some(r) => {
+            let mut hook = RemapHook(r);
+            serve_hooked(requests, cfg, make, Some(&mut hook))
+        }
+        None => serve_hooked(requests, cfg, make, None),
+    }
+}
+
+/// Per-batch extension point of the serving loop — the reusable worker
+/// loop contract. [`serve_with`]'s remapper integration is one
+/// implementation ([`Remapper`] behind the scenes); a fleet worker
+/// ([`crate::fleet`]) is another (stream the batch's mix to the fleet
+/// controller, poll the plan broadcast). Hook calls happen strictly
+/// **between** scheduling batches on the coordinator thread, so the
+/// plan-swap safety argument (module docs) is unchanged for any hook.
+pub trait BatchHook {
+    /// Called after each scheduling batch with the requests just served.
+    /// Returned plans are adopted in order — the last becomes active for
+    /// the next batch ([`MappingPlan::fast`] plans count as fast
+    /// remaps).
+    fn after_batch(&mut self, served: &[Request]) -> Result<Vec<Arc<MappingPlan>>>;
+
+    /// Called once after the last batch (end-of-trace flush). Returned
+    /// plans are adopted the same way.
+    fn finish(&mut self) -> Result<Vec<Arc<MappingPlan>>> {
+        Ok(Vec::new())
+    }
+}
+
+/// [`serve_with`]'s remapper as a [`BatchHook`]: observe the batch,
+/// re-optimize on drift, drain the plan-swap channel; on finish, run any
+/// owed deadline exact search ([`Remapper::flush_pending`]) so every run
+/// converges to the exact plan of its last triggering mix.
+struct RemapHook<'a>(&'a mut Remapper);
+
+impl RemapHook<'_> {
+    fn drain(&mut self) -> Vec<Arc<MappingPlan>> {
+        let mut plans = Vec::new();
+        while let Some(p) = self.0.take_plan() {
+            plans.push(p);
+        }
+        plans
+    }
+}
+
+impl BatchHook for RemapHook<'_> {
+    fn after_batch(&mut self, served: &[Request]) -> Result<Vec<Arc<MappingPlan>>> {
+        for req in served {
+            self.0.observe(&req.artifact);
+        }
+        self.0.maybe_remap();
+        Ok(self.drain())
+    }
+
+    fn finish(&mut self) -> Result<Vec<Arc<MappingPlan>>> {
+        // End-of-trace convergence: a deadline remapper may still owe
+        // the exact search for its last fast plan — run it now and adopt
+        // the result (the deadline determinism contract).
+        self.0.flush_pending();
+        Ok(self.drain())
+    }
+}
+
+/// The serving loop under an arbitrary [`BatchHook`] — what
+/// [`serve_with`] wraps and what a fleet worker drives directly.
+pub fn serve_hooked<E, F>(
+    requests: Vec<Request>,
+    cfg: &ServeConfig,
+    make: F,
+    mut hook: Option<&mut dyn BatchHook>,
 ) -> Result<ServeStats>
 where
     E: Executor + Send,
@@ -242,9 +377,11 @@ where
     let t0 = Instant::now();
     let mut lat = Vec::with_capacity(n);
     let mut checksum = 0.0f64;
+    let mut digest = 0u64;
     let mut batches = 0usize;
     let mut remaps = 0usize;
     let mut fast_remaps = 0usize;
+    let mut failovers = 0usize;
     let mut active: Option<Arc<MappingPlan>> = None;
 
     let mut start = 0usize;
@@ -284,22 +421,58 @@ where
         // independent of the worker count.
         let mut batch_vals: Vec<(f64, f64)> = vec![(0.0, 0.0); end - start];
         for (w, worker) in per_worker.into_iter().enumerate() {
-            for (k, v) in worker?.into_iter().enumerate() {
+            let vals = match worker {
+                Ok(vals) => vals,
+                // Failover: retry this worker's shard sequentially on a
+                // fresh replica instead of aborting the whole loop. The
+                // shard and its order are identical, so the checksum and
+                // digest are unaffected.
+                Err(first) => {
+                    failovers += 1;
+                    let mut slot = slots[w].lock().expect("worker executor slot");
+                    *slot = None; // discard the suspect replica, if any
+                    *slot = Some(make().map_err(|e| {
+                        anyhow::anyhow!(
+                            "serve worker {w}: executor failed twice \
+                             (initial: {first}; failover replica: {e})"
+                        )
+                    })?);
+                    let ex = slot.as_mut().expect("slot just filled");
+                    if let Some(p) = &batch_plan {
+                        ex.adopt_plan(p);
+                    }
+                    let shard: Vec<usize> = (start + w..end).step_by(threads).collect();
+                    let mut out = Vec::with_capacity(shard.len());
+                    for &i in &shard {
+                        let t = Instant::now();
+                        let s = ex.execute(&requests[i]).map_err(|e| {
+                            anyhow::anyhow!(
+                                "serve worker {w}: failover retry failed on \
+                                 request {i} ({}): {e}",
+                                requests[i].artifact
+                            )
+                        })?;
+                        out.push((t.elapsed().as_secs_f64() * 1e3, s));
+                    }
+                    out
+                }
+            };
+            for (k, v) in vals.into_iter().enumerate() {
                 batch_vals[w + k * threads] = v;
             }
         }
-        for (dt, s) in batch_vals {
+        for (j, (dt, s)) in batch_vals.into_iter().enumerate() {
+            let global = cfg
+                .index_base
+                .wrapping_add(((start + j) as u64).wrapping_mul(cfg.index_stride.max(1)));
+            digest = digest.wrapping_add(digest_term(global, s));
             lat.push(dt);
             checksum += s;
         }
         batches += 1;
 
-        if let Some(r) = &mut remapper {
-            for req in &requests[start..end] {
-                r.observe(&req.artifact);
-            }
-            r.maybe_remap();
-            while let Some(p) = r.take_plan() {
+        if let Some(h) = &mut hook {
+            for p in h.after_batch(&requests[start..end])? {
                 if p.fast {
                     fast_remaps += 1;
                 }
@@ -309,13 +482,8 @@ where
         }
         start = end;
     }
-    // End-of-trace convergence: a deadline remapper may still owe the
-    // exact search for its last fast plan — run it now and adopt the
-    // result, so a deadline run always ends on the exact plan of its
-    // last triggering mix (the deadline determinism contract).
-    if let Some(r) = &mut remapper {
-        r.flush_pending();
-        while let Some(p) = r.take_plan() {
+    if let Some(h) = &mut hook {
+        for p in h.finish()? {
             if p.fast {
                 fast_remaps += 1;
             }
@@ -334,11 +502,30 @@ where
         p99_latency_ms: stats::percentile(&lat, 99.0),
         rps: lat.len() as f64 / wall,
         checksum,
+        digest,
+        failovers,
         batches,
         remaps,
         fast_remaps,
         plan_epoch: active.map(|p| p.epoch),
+        latencies_ms: lat,
     })
+}
+
+/// One request's contribution to [`ServeStats::digest`]: the splitmix64
+/// finalizer over the value's bits xored with the golden-ratio-spread
+/// global trace index. Binding the index into every term makes any
+/// reorder or cross-request swap change the digest, while the wrapping
+/// *sum* of terms stays associative and commutative — disjoint trace
+/// shards merge with `wrapping_add` in any order to the whole-trace
+/// digest (the fleet merge contract, [`crate::fleet`]).
+pub fn digest_term(global_index: u64, value: f64) -> u64 {
+    let mut z = value.to_bits() ^ global_index.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// Build a mixed request trace over the available artifacts. Per-request
@@ -348,20 +535,21 @@ where
 /// `seed ^ (i · 0x9E37)` mixing produced near-identical generator states
 /// for adjacent `i` at small seeds and aliased across related trace
 /// seeds; `coordinator::tests` keeps a collision regression.
+///
+/// A thin wrapper over [`TraceSpec::mixed`](super::trace::TraceSpec) —
+/// the seeded spec the fleet and the scenario harness share — pinned
+/// bit-identical to the pre-extraction generator by
+/// `coordinator::tests`.
 pub fn mixed_trace(n: usize, seed: u64) -> Vec<Request> {
-    let kinds = ["conv3x3", "conv1x1", "fc", "lstm_cell", "conv_chain"];
-    let mut rng = XorShift::new(seed);
-    (0..n)
-        .map(|_| Request {
-            artifact: kinds[rng.below(kinds.len() as u64) as usize].to_string(),
-            seed: rng.split().next_u64(),
-        })
-        .collect()
+    super::trace::TraceSpec::mixed(n, seed)
+        .requests()
+        .expect("the canonical mixed pool is non-empty")
 }
 
 /// Synthetic drift trace: requests before `switch_at` are drawn
 /// uniformly from `before`, the rest from `after` — the workload-shift
-/// fixture the remap tests and the `perf_remap` bench drive.
+/// fixture the remap tests and the `perf_remap` bench drive. A wrapper
+/// over [`TraceSpec::flip`](super::trace::TraceSpec).
 pub fn drift_trace(
     n: usize,
     switch_at: usize,
@@ -370,14 +558,7 @@ pub fn drift_trace(
     seed: u64,
 ) -> Vec<Request> {
     assert!(!before.is_empty() && !after.is_empty());
-    let mut rng = XorShift::new(seed);
-    (0..n)
-        .map(|i| {
-            let pool = if i < switch_at { before } else { after };
-            Request {
-                artifact: pool[rng.below(pool.len() as u64) as usize].to_string(),
-                seed: rng.split().next_u64(),
-            }
-        })
-        .collect()
+    super::trace::TraceSpec::flip(n, seed, switch_at, before, after)
+        .requests()
+        .expect("pools asserted non-empty above")
 }

@@ -598,3 +598,85 @@ fn report_all_produces_every_artifact() {
     );
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn failed_executor_slot_fails_over_without_perturbing_the_checksum() {
+    // Satellite regression for the serve failover path: an executor
+    // factory that fails on its first invocation used to abort the whole
+    // batch loop; now the affected worker's shard is retried on a fresh
+    // replica, counted in `failovers`, with checksum and digest
+    // untouched.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let trace = mixed_trace(60, 7);
+    let clean = serve_synthetic(trace.clone(), 3, 10, None);
+    assert_eq!(clean.failovers, 0);
+
+    let calls = AtomicUsize::new(0);
+    let flaky = serve_with(
+        trace.clone(),
+        &ServeConfig::new(3).with_batch(10),
+        || {
+            if calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                anyhow::bail!("injected executor-slot init failure");
+            }
+            Ok(SyntheticExecutor)
+        },
+        None,
+    )
+    .expect("one failed slot must fail over, not abort");
+    assert_eq!(flaky.failovers, 1, "exactly the injected failure");
+    assert_eq!(flaky.completed, clean.completed);
+    assert_eq!(
+        flaky.checksum.to_bits(),
+        clean.checksum.to_bits(),
+        "failover must re-serve the identical shard in shard order"
+    );
+    assert_eq!(flaky.digest, clean.digest);
+
+    // A replacement replica that also fails is surfaced, naming the worker.
+    let always = serve_with(
+        trace,
+        &ServeConfig::new(3).with_batch(10),
+        || -> anyhow::Result<SyntheticExecutor> {
+            anyhow::bail!("executor is down")
+        },
+        None,
+    );
+    let err = format!("{:#}", always.expect_err("two failures must surface"));
+    assert!(err.contains("failed twice"), "unexpected error: {err}");
+}
+
+#[test]
+fn digest_merges_across_interleaved_shards_bit_for_bit() {
+    // The fleet merge contract at the serve level: worker w of N serving
+    // the interleaved shard under with_index_map(w, N) produces digests
+    // whose wrapping sum equals the single-process digest, while the
+    // order-dependent f64 checksum is left to trace-order runs.
+    let trace = mixed_trace(90, 13);
+    let whole = serve_synthetic(trace.clone(), 2, 16, None);
+    for fleet in [2usize, 3, 5] {
+        let mut merged = 0u64;
+        let mut completed = 0usize;
+        for w in 0..fleet {
+            let shard: Vec<Request> = trace
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % fleet == w)
+                .map(|(_, r)| r.clone())
+                .collect();
+            let st = serve_with(
+                shard,
+                &ServeConfig::new(2)
+                    .with_batch(8)
+                    .with_index_map(w as u64, fleet as u64),
+                || Ok(SyntheticExecutor),
+                None,
+            )
+            .expect("shard serve");
+            merged = merged.wrapping_add(st.digest);
+            completed += st.completed;
+        }
+        assert_eq!(completed, 90);
+        assert_eq!(merged, whole.digest, "{fleet}-way shard merge");
+    }
+}

@@ -1,0 +1,326 @@
+//! Seeded, reusable request-trace specifications.
+//!
+//! `serve`, the fleet CLI and the fleet scenario harness all need the
+//! *same* deterministic traffic: a [`TraceSpec`] is the one seeded
+//! description — an arrival pattern × a mix schedule — that each of them
+//! expands with [`TraceSpec::requests`]. The expansion is a pure
+//! function of the spec (one [`XorShift`] stream, two draws per request:
+//! a pool pick and a [`XorShift::split`] input seed), so every consumer
+//! regenerates bit-identical requests from the spec alone — a fleet
+//! worker needs no trace file, only the spec's compact string encoding
+//! ([`TraceSpec::encode`] / [`TraceSpec::decode`]) forwarded on its
+//! command line.
+//!
+//! The legacy generators [`mixed_trace`](super::serve::mixed_trace) and
+//! [`drift_trace`](super::serve::drift_trace) are thin wrappers over
+//! `TraceSpec` and are pinned bit-identical to their pre-extraction
+//! output by `coordinator::tests` (the RNG call sequence per request is
+//! part of the contract: exactly one `below` then one `split`).
+//!
+//! Arrival offsets ([`TraceSpec::arrival_ns`]) are deliberately RNG-free
+//! — pacing must never perturb the request values — and only shape *when*
+//! scenario load is offered, never *what* is served.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::serve::Request;
+use crate::util::XorShift;
+
+/// The canonical serving artifact pool (every artifact
+/// [`super::remap::artifact_network`] models and `python/compile/aot.py`
+/// lowers).
+pub const MIXED_KINDS: [&str; 5] = ["conv3x3", "conv1x1", "fc", "lstm_cell", "conv_chain"];
+
+/// When requests are *offered* (nanosecond offsets from trace start).
+/// Pure pacing metadata: expansion is RNG-free so arrival shaping can
+/// never change the served values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    /// One request every `gap_ns` (0 = as fast as possible).
+    Steady {
+        /// Gap between consecutive arrivals, nanoseconds.
+        gap_ns: u64,
+    },
+    /// Requests arrive `burst` at a time, bursts spaced `gap_ns` apart —
+    /// the bursty-load scenario shape.
+    Bursty {
+        /// Requests per burst (≥ 1).
+        burst: usize,
+        /// Gap between consecutive bursts, nanoseconds.
+        gap_ns: u64,
+    },
+}
+
+/// Which artifact pool each request index draws from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MixSchedule {
+    /// Every request drawn uniformly from one pool.
+    Uniform(Vec<String>),
+    /// Requests before `switch_at` draw from `before`, the rest from
+    /// `after` — the adversarial mix-flip / drift shape.
+    Flip {
+        /// First request index served from `after`.
+        switch_at: usize,
+        /// Pool before the flip.
+        before: Vec<String>,
+        /// Pool after the flip.
+        after: Vec<String>,
+    },
+}
+
+impl MixSchedule {
+    /// The pool request `i` draws from.
+    fn pool_at(&self, i: usize) -> &[String] {
+        match self {
+            MixSchedule::Uniform(pool) => pool,
+            MixSchedule::Flip {
+                switch_at,
+                before,
+                after,
+            } => {
+                if i < *switch_at {
+                    before
+                } else {
+                    after
+                }
+            }
+        }
+    }
+
+    /// Every pool must be non-empty (a draw from an empty pool has no
+    /// meaning; the legacy `drift_trace` asserted the same).
+    fn validate(&self) -> Result<()> {
+        let empty = match self {
+            MixSchedule::Uniform(pool) => pool.is_empty(),
+            MixSchedule::Flip { before, after, .. } => before.is_empty() || after.is_empty(),
+        };
+        if empty {
+            bail!("trace mix schedule has an empty artifact pool");
+        }
+        Ok(())
+    }
+}
+
+/// A seeded request-trace specification: `n` requests, an arrival
+/// pattern, and a mix schedule. Expansion ([`requests`](Self::requests))
+/// is a pure function of the spec — the determinism root every serving
+/// test, the fleet, and the scenario harness share.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// Trace length.
+    pub n: usize,
+    /// RNG seed for pool picks and per-request input seeds.
+    pub seed: u64,
+    /// Offered-load pacing.
+    pub arrival: ArrivalPattern,
+    /// Artifact pool schedule.
+    pub mix: MixSchedule,
+}
+
+impl TraceSpec {
+    /// Uniform mix over `pool`, back-to-back arrivals.
+    pub fn uniform(n: usize, seed: u64, pool: &[&str]) -> TraceSpec {
+        TraceSpec {
+            n,
+            seed,
+            arrival: ArrivalPattern::Steady { gap_ns: 0 },
+            mix: MixSchedule::Uniform(pool.iter().map(|s| s.to_string()).collect()),
+        }
+    }
+
+    /// The canonical mixed trace over [`MIXED_KINDS`]
+    /// (what `mixed_trace(n, seed)` expands).
+    pub fn mixed(n: usize, seed: u64) -> TraceSpec {
+        TraceSpec::uniform(n, seed, &MIXED_KINDS)
+    }
+
+    /// A mix flip at `switch_at`, back-to-back arrivals
+    /// (what `drift_trace` expands).
+    pub fn flip(n: usize, seed: u64, switch_at: usize, before: &[&str], after: &[&str]) -> TraceSpec {
+        TraceSpec {
+            n,
+            seed,
+            arrival: ArrivalPattern::Steady { gap_ns: 0 },
+            mix: MixSchedule::Flip {
+                switch_at,
+                before: before.iter().map(|s| s.to_string()).collect(),
+                after: after.iter().map(|s| s.to_string()).collect(),
+            },
+        }
+    }
+
+    /// Same spec with a different arrival pattern.
+    pub fn with_arrival(mut self, arrival: ArrivalPattern) -> TraceSpec {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Expand the spec into its request trace. Exactly two RNG draws per
+    /// request — a pool pick (`below`) then a split input seed — off one
+    /// stream seeded with `self.seed`, so the expansion is bit-identical
+    /// on every call, in every process, at any thread count (expansion
+    /// itself is single-threaded by construction; `coordinator::tests`
+    /// and `fleet::tests` pin both properties).
+    pub fn requests(&self) -> Result<Vec<Request>> {
+        self.mix.validate()?;
+        let mut rng = XorShift::new(self.seed);
+        Ok((0..self.n)
+            .map(|i| {
+                let pool = self.mix.pool_at(i);
+                Request {
+                    artifact: pool[rng.below(pool.len() as u64) as usize].clone(),
+                    seed: rng.split().next_u64(),
+                }
+            })
+            .collect())
+    }
+
+    /// Nanosecond arrival offset of every request — RNG-free pacing for
+    /// the scenario harness's offered-load clock.
+    pub fn arrival_ns(&self) -> Vec<u64> {
+        (0..self.n)
+            .map(|i| match self.arrival {
+                ArrivalPattern::Steady { gap_ns } => i as u64 * gap_ns,
+                ArrivalPattern::Bursty { burst, gap_ns } => (i / burst.max(1)) as u64 * gap_ns,
+            })
+            .collect()
+    }
+
+    /// Compact single-token encoding, safe to forward as one CLI value:
+    /// `N:SEED:ARRIVAL:MIX` with `ARRIVAL` = `steady@GAP` |
+    /// `bursty@BURSTxGAP` and `MIX` = `uniform@a,b,c` |
+    /// `flip@AT@a,b>c,d`. [`decode`](Self::decode) inverts it exactly.
+    pub fn encode(&self) -> String {
+        let arrival = match &self.arrival {
+            ArrivalPattern::Steady { gap_ns } => format!("steady@{gap_ns}"),
+            ArrivalPattern::Bursty { burst, gap_ns } => format!("bursty@{burst}x{gap_ns}"),
+        };
+        let mix = match &self.mix {
+            MixSchedule::Uniform(pool) => format!("uniform@{}", pool.join(",")),
+            MixSchedule::Flip {
+                switch_at,
+                before,
+                after,
+            } => format!("flip@{switch_at}@{}>{}", before.join(","), after.join(",")),
+        };
+        format!("{}:{}:{arrival}:{mix}", self.n, self.seed)
+    }
+
+    /// Parse [`encode`](Self::encode)'s format.
+    pub fn decode(text: &str) -> Result<TraceSpec> {
+        let parts: Vec<&str> = text.splitn(4, ':').collect();
+        let [n, seed, arrival, mix] = parts[..] else {
+            bail!("trace spec `{text}` needs 4 `:`-separated fields (N:SEED:ARRIVAL:MIX)");
+        };
+        let n: usize = n.parse().map_err(|_| anyhow!("bad trace length `{n}`"))?;
+        let seed: u64 = seed.parse().map_err(|_| anyhow!("bad trace seed `{seed}`"))?;
+        let arrival = match arrival.split_once('@') {
+            Some(("steady", gap)) => ArrivalPattern::Steady {
+                gap_ns: gap.parse().map_err(|_| anyhow!("bad steady gap `{gap}`"))?,
+            },
+            Some(("bursty", spec)) => {
+                let (burst, gap) = spec
+                    .split_once('x')
+                    .ok_or_else(|| anyhow!("bursty arrival needs BURSTxGAP, got `{spec}`"))?;
+                ArrivalPattern::Bursty {
+                    burst: burst.parse().map_err(|_| anyhow!("bad burst size `{burst}`"))?,
+                    gap_ns: gap.parse().map_err(|_| anyhow!("bad burst gap `{gap}`"))?,
+                }
+            }
+            _ => bail!("unknown arrival pattern `{arrival}`"),
+        };
+        let pool = |s: &str| -> Vec<String> {
+            s.split(',').filter(|p| !p.is_empty()).map(|p| p.to_string()).collect()
+        };
+        let mix = match mix.split_once('@') {
+            Some(("uniform", pools)) => MixSchedule::Uniform(pool(pools)),
+            Some(("flip", spec)) => {
+                let (at, pools) = spec
+                    .split_once('@')
+                    .ok_or_else(|| anyhow!("flip mix needs AT@BEFORE>AFTER, got `{spec}`"))?;
+                let (before, after) = pools
+                    .split_once('>')
+                    .ok_or_else(|| anyhow!("flip mix needs BEFORE>AFTER pools, got `{pools}`"))?;
+                MixSchedule::Flip {
+                    switch_at: at.parse().map_err(|_| anyhow!("bad flip index `{at}`"))?,
+                    before: pool(before),
+                    after: pool(after),
+                }
+            }
+            _ => bail!("unknown mix schedule `{mix}`"),
+        };
+        let spec = TraceSpec {
+            n,
+            seed,
+            arrival,
+            mix,
+        };
+        spec.mix.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn expansion_is_bit_identical_across_calls_and_specs_round_trip() {
+        for_cases(0x72_ace0, 24, |rng| {
+            let n = 1 + (rng.below(64) as usize);
+            let seed = rng.next_u64();
+            let spec = if rng.below(2) == 0 {
+                TraceSpec::mixed(n, seed)
+            } else {
+                TraceSpec::flip(n, seed, n / 2, &["conv3x3", "fc"], &["lstm_cell"])
+            };
+            let a = spec.requests().expect("expand a");
+            let b = spec.requests().expect("expand b");
+            assert_eq!(a.len(), n);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.artifact, y.artifact);
+                assert_eq!(x.seed, y.seed);
+            }
+            let round = TraceSpec::decode(&spec.encode()).expect("decode own encoding");
+            assert_eq!(round, spec);
+            let c = round.requests().expect("expand decoded");
+            for (x, y) in a.iter().zip(&c) {
+                assert_eq!(x.artifact, y.artifact);
+                assert_eq!(x.seed, y.seed);
+            }
+        });
+    }
+
+    #[test]
+    fn encode_decode_covers_all_shapes() {
+        let bursty = TraceSpec::mixed(40, 7).with_arrival(ArrivalPattern::Bursty {
+            burst: 8,
+            gap_ns: 1_000,
+        });
+        assert_eq!(TraceSpec::decode(&bursty.encode()).unwrap(), bursty);
+        let flip = TraceSpec::flip(96, 11, 48, &["conv3x3", "fc"], &["lstm_cell"]);
+        assert_eq!(TraceSpec::decode(&flip.encode()).unwrap(), flip);
+        assert!(TraceSpec::decode("12:3:steady@0").is_err());
+        assert!(TraceSpec::decode("12:3:steady@0:uniform@").is_err());
+        assert!(TraceSpec::decode("12:3:warp@0:uniform@fc").is_err());
+        assert!(TraceSpec::decode("12:3:steady@0:flip@4@fc>").is_err());
+    }
+
+    #[test]
+    fn arrival_offsets_are_deterministic_and_shaped() {
+        let steady = TraceSpec::mixed(5, 1).with_arrival(ArrivalPattern::Steady { gap_ns: 10 });
+        assert_eq!(steady.arrival_ns(), vec![0, 10, 20, 30, 40]);
+        let bursty = TraceSpec::mixed(6, 1).with_arrival(ArrivalPattern::Bursty {
+            burst: 3,
+            gap_ns: 100,
+        });
+        assert_eq!(bursty.arrival_ns(), vec![0, 0, 0, 100, 100, 100]);
+    }
+
+    #[test]
+    fn empty_pool_is_rejected() {
+        let spec = TraceSpec::uniform(4, 9, &[]);
+        assert!(spec.requests().is_err());
+    }
+}

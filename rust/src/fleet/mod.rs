@@ -1,0 +1,1047 @@
+//! The production serving fleet: one serving loop, N workers, one
+//! drift-driven co-optimizer.
+//!
+//! [`run_fleet`] scales [`crate::coordinator::serve`] from one process to
+//! a fleet: `N` serving workers — real OS processes launched through the
+//! orchestrator's [`launcher_command`] prefixes, or in-process threads
+//! for tests — each expand the shared [`TraceSpec`] themselves and serve
+//! the interleaved shard `global_index % N == worker` under
+//! [`ServeConfig::with_index_map`]`(worker, N)`. No trace bytes cross a
+//! process boundary: the spec's compact encoding on the worker command
+//! line is the whole contract.
+//!
+//! ## The two append-only files
+//!
+//! Workers and controller share a directory and two line-delimited JSON
+//! logs, both written with the orchestrator's torn-write-safe
+//! `\n{json}\n` framing ([`append_framed`]) and read forgivingly (torn
+//! or garbage lines are skipped, never an error):
+//!
+//! - **`mix.jsonl`** — upstream. After every scheduling batch a worker
+//!   appends a [`MixRecord`] with its batch's artifact counts. The
+//!   controller folds new records into the fleet-level mix window of a
+//!   single [`Remapper`] — fleet drift is total variation over the
+//!   *merged* traffic, not any one worker's view.
+//! - **`plans.jsonl`** — downstream, the epoch broadcast. The remapper
+//!   runs on its own controller thread (fed through an `mpsc` channel,
+//!   the same plan-swap decoupling `serve_with` uses), so
+//!   re-optimization never blocks any worker's batch loop; each plan it
+//!   publishes is appended as a [`PlanRecord`]. Workers poll the file at
+//!   batch boundaries and adopt the highest epoch seen — plan *bodies*
+//!   stay with the controller; the synthetic executors' values never
+//!   depend on plans ([`Executor::adopt_plan`] is metadata-only), so the
+//!   broadcast carries exactly what adoption needs: the epoch and its
+//!   energy summary.
+//!
+//! ## Crash + rejoin
+//!
+//! Workers write their [`WorkerReport`] only at successful exit, so a
+//! crash (SIGKILL, injected batch-loop failure, nonzero exit) leaves no
+//! stale report. The controller respawns crashed workers — optionally
+//! deferred until `plans.jsonl` is non-empty ([`FaultSpec::await_plan`]),
+//! which pins rejoin tests: the rejoined worker re-serves its full shard
+//! and adopts the current epoch at its first batch boundary. Duplicate
+//! `mix.jsonl` records from the worker's first life are harmless — the
+//! mix stream is advisory (it drives *when* to re-optimize, never what a
+//! request computes).
+//!
+//! ## Determinism
+//!
+//! The merged fleet digest is bit-identical to one process serving the
+//! whole trace, at any worker count, under crashes, stragglers, and live
+//! remaps: each worker's [`ServeStats::digest`] is an index-bound
+//! wrapping sum over its disjoint shard
+//! ([`crate::coordinator::serve::digest_term`]), so the fleet merge is
+//! `wrapping_add` in any order; request values are pure functions of
+//! `(artifact, seed)` from the spec expansion; plans and pacing never
+//! touch values. The f64 `checksum` is the one fleet-level quantity that
+//! is *not* worker-count-invariant (float addition is not associative),
+//! which is exactly why the digest exists.
+
+pub mod scenarios;
+#[cfg(test)]
+mod tests;
+
+use std::path::{Path, PathBuf};
+use std::process::Child;
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::remap::{MappingPlan, RemapPolicy, Remapper};
+use crate::coordinator::serve::{
+    serve_hooked, BatchHook, Executor, Request, ServeConfig, ServeStats, SyntheticExecutor,
+};
+use crate::coordinator::trace::TraceSpec;
+use crate::netopt::{SeedTable, ShardCheckpoint};
+use crate::orchestrator::{append_framed, launcher_command};
+use crate::pareto::FrontierCheckpoint;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Cap on any single pacing sleep (arrival gaps are scenario shapes, not
+/// real-time replays — tests must stay fast).
+const PACE_CAP_NS: u64 = 2_000_000;
+
+/// The shared mix stream (workers append, controller reads).
+pub fn mix_path(dir: &Path) -> PathBuf {
+    dir.join("mix.jsonl")
+}
+
+/// The plan-epoch broadcast (controller appends, workers read).
+pub fn plans_path(dir: &Path) -> PathBuf {
+    dir.join("plans.jsonl")
+}
+
+/// Worker `w`'s final report (written once, at successful exit).
+pub fn report_path(dir: &Path, worker: usize) -> PathBuf {
+    dir.join(format!("worker_{worker}.json"))
+}
+
+/// One worker batch's artifact counts — the upstream drift signal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixRecord {
+    /// Worker index.
+    pub worker: usize,
+    /// Worker-local batch index.
+    pub batch: usize,
+    /// `(artifact, requests served)` for the batch.
+    pub counts: Vec<(String, usize)>,
+}
+
+impl MixRecord {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("worker".into(), Json::int(self.worker as u64)),
+            ("batch".into(), Json::int(self.batch as u64)),
+            (
+                "counts".into(),
+                Json::Arr(
+                    self.counts
+                        .iter()
+                        .map(|(name, n)| {
+                            Json::Obj(vec![
+                                ("artifact".into(), Json::str(name.clone())),
+                                ("n".into(), Json::int(*n as u64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn parse(line: &str) -> Option<MixRecord> {
+        let v = Json::parse(line).ok()?;
+        let mut counts = Vec::new();
+        for c in v.field("counts").ok()?.as_arr().ok()? {
+            counts.push((
+                c.field("artifact").ok()?.as_str().ok()?.to_string(),
+                c.field("n").ok()?.as_usize().ok()?,
+            ));
+        }
+        Some(MixRecord {
+            worker: v.field("worker").ok()?.as_usize().ok()?,
+            batch: v.field("batch").ok()?.as_usize().ok()?,
+            counts,
+        })
+    }
+}
+
+/// Read every well-formed mix record (missing file = empty; torn lines
+/// skipped — a worker may be appending, or may have died mid-append).
+pub fn read_mix(path: &Path) -> Vec<MixRecord> {
+    read_lines(path, MixRecord::parse)
+}
+
+/// One broadcast plan epoch — the downstream adoption signal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRecord {
+    /// Plan epoch (monotone per remapper).
+    pub epoch: usize,
+    /// Winning hierarchy's total network energy, pJ.
+    pub energy_pj: f64,
+    /// Heuristic fast-path plan (deadline mode)?
+    pub fast: bool,
+}
+
+impl PlanRecord {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("epoch".into(), Json::int(self.epoch as u64)),
+            ("energy_pj".into(), Json::num(self.energy_pj)),
+            ("fast".into(), Json::Bool(self.fast)),
+        ])
+    }
+
+    fn parse(line: &str) -> Option<PlanRecord> {
+        let v = Json::parse(line).ok()?;
+        Some(PlanRecord {
+            epoch: v.field("epoch").ok()?.as_usize().ok()?,
+            energy_pj: v.field("energy_pj").ok()?.as_f64().ok()?,
+            fast: matches!(v.field("fast").ok()?, Json::Bool(true)),
+        })
+    }
+}
+
+/// Read every well-formed plan record.
+pub fn read_plans(path: &Path) -> Vec<PlanRecord> {
+    read_lines(path, PlanRecord::parse)
+}
+
+/// The highest broadcast epoch, if any plan has been published.
+pub fn latest_epoch(path: &Path) -> Option<usize> {
+    read_plans(path).iter().map(|p| p.epoch).max()
+}
+
+fn read_lines<T>(path: &Path, parse: fn(&str) -> Option<T>) -> Vec<T> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return Vec::new(),
+    };
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(parse)
+        .collect()
+}
+
+/// An [`Executor`] wrapper that sleeps `delay` before every request — the
+/// slow-executor straggler shape. Delay never touches the value, so a
+/// straggler fleet's digest is bit-identical to a healthy one's.
+pub struct SlowExecutor<E> {
+    inner: E,
+    delay: Duration,
+}
+
+impl<E> SlowExecutor<E> {
+    /// Wrap `inner`, sleeping `delay_ns` nanoseconds per request.
+    pub fn new(inner: E, delay_ns: u64) -> SlowExecutor<E> {
+        SlowExecutor {
+            inner,
+            delay: Duration::from_nanos(delay_ns),
+        }
+    }
+}
+
+impl<E: Executor> Executor for SlowExecutor<E> {
+    fn execute(&mut self, req: &Request) -> Result<f64> {
+        if !self.delay.is_zero() {
+            thread::sleep(self.delay);
+        }
+        self.inner.execute(req)
+    }
+
+    fn adopt_plan(&mut self, plan: &MappingPlan) {
+        self.inner.adopt_plan(plan);
+    }
+}
+
+/// One worker's configuration — everything [`run_worker`] needs, and
+/// everything the `fleet-worker` CLI arm forwards.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// This worker's index in `0..fleet`.
+    pub worker: usize,
+    /// Fleet size (the digest index stride).
+    pub fleet: usize,
+    /// The shared trace spec (each worker expands it itself).
+    pub spec: TraceSpec,
+    /// Serve threads inside this worker.
+    pub threads: usize,
+    /// Requests per scheduling batch (the mix-record granularity).
+    pub batch: usize,
+    /// Shared fleet directory (`mix.jsonl`, `plans.jsonl`, reports).
+    pub dir: PathBuf,
+    /// Per-request executor delay, nanoseconds (straggler injection).
+    pub slow_ns: u64,
+    /// Sleep out the spec's arrival gaps between batches (offered-load
+    /// pacing; capped per batch, never affects values).
+    pub pace: bool,
+    /// Fail the batch loop after this many batches (in-process crash
+    /// injection; OS-mode crashes use a real SIGKILL instead).
+    pub crash_after_batches: Option<usize>,
+}
+
+impl WorkerConfig {
+    /// Worker `worker` of `fleet` over `spec`, serving into `dir` with
+    /// fault-free defaults.
+    pub fn new(worker: usize, fleet: usize, spec: TraceSpec, dir: impl Into<PathBuf>) -> WorkerConfig {
+        WorkerConfig {
+            worker,
+            fleet,
+            spec,
+            threads: 2,
+            batch: 16,
+            dir: dir.into(),
+            slow_ns: 0,
+            pace: false,
+            crash_after_batches: None,
+        }
+    }
+}
+
+/// A worker's final self-report — the fleet merge input. Written to
+/// [`report_path`] only at successful exit (crash ⇒ no report), with the
+/// digest as a 16-hex-digit string (u64 does not fit JSON's exact-f64
+/// integer range).
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    /// Worker index.
+    pub worker: usize,
+    /// Requests served.
+    pub completed: usize,
+    /// Shard checksum (trace-ordered f64 sum — association-dependent).
+    pub checksum: f64,
+    /// Shard digest (order-free merge term; module docs).
+    pub digest: u64,
+    /// Failover retries inside this worker's serve loop.
+    pub failovers: usize,
+    /// Scheduling batches served.
+    pub batches: usize,
+    /// Highest broadcast plan epoch adopted (`None` if none was ever
+    /// published while this worker ran).
+    pub plan_epoch: Option<usize>,
+    /// Raw per-request latencies, shard order, milliseconds (percentiles
+    /// do not compose across workers; raw samples do).
+    pub latencies_ms: Vec<f64>,
+}
+
+impl WorkerReport {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("worker".into(), Json::int(self.worker as u64)),
+            ("completed".into(), Json::int(self.completed as u64)),
+            ("checksum".into(), Json::num(self.checksum)),
+            ("digest".into(), Json::str(format!("{:016x}", self.digest))),
+            ("failovers".into(), Json::int(self.failovers as u64)),
+            ("batches".into(), Json::int(self.batches as u64)),
+            (
+                "plan_epoch".into(),
+                match self.plan_epoch {
+                    Some(e) => Json::int(e as u64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "latencies_ms".into(),
+                Json::Arr(self.latencies_ms.iter().map(|&v| Json::num(v)).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a report file's contents.
+    pub fn from_json(text: &str) -> Result<WorkerReport> {
+        let v = Json::parse(text).context("parse worker report")?;
+        let digest_hex = v.field("digest")?.as_str()?;
+        let digest = u64::from_str_radix(digest_hex, 16)
+            .map_err(|_| anyhow!("bad worker digest `{digest_hex}`"))?;
+        let plan_epoch = match v.field("plan_epoch")? {
+            Json::Null => None,
+            e => Some(e.as_usize()?),
+        };
+        let mut latencies_ms = Vec::new();
+        for l in v.field("latencies_ms")?.as_arr()? {
+            latencies_ms.push(l.as_f64()?);
+        }
+        Ok(WorkerReport {
+            worker: v.field("worker")?.as_usize()?,
+            completed: v.field("completed")?.as_usize()?,
+            checksum: v.field("checksum")?.as_f64()?,
+            digest,
+            failovers: v.field("failovers")?.as_usize()?,
+            batches: v.field("batches")?.as_usize()?,
+            plan_epoch,
+            latencies_ms,
+        })
+    }
+
+    /// Load worker `worker`'s report from `dir`.
+    pub fn load(dir: &Path, worker: usize) -> Result<WorkerReport> {
+        let path = report_path(dir, worker);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read worker report {}", path.display()))?;
+        WorkerReport::from_json(&text)
+    }
+}
+
+/// The worker side of the fleet protocol as a [`BatchHook`]: append the
+/// batch's [`MixRecord`], optionally crash (fault injection), poll the
+/// plan broadcast, optionally sleep out the arrival gap.
+struct FleetHook {
+    worker: usize,
+    mix: PathBuf,
+    plans: PathBuf,
+    batch_idx: usize,
+    epoch: Option<usize>,
+    crash_after: Option<usize>,
+    /// Sleep after batch `b` (pacing; empty when unpaced).
+    pace_ns: Vec<u64>,
+}
+
+impl FleetHook {
+    fn poll_epoch(&mut self) {
+        if let Some(e) = latest_epoch(&self.plans) {
+            // Adopt the highest epoch seen; epochs are monotone so this
+            // never moves backwards.
+            self.epoch = Some(self.epoch.map_or(e, |cur| cur.max(e)));
+        }
+    }
+}
+
+impl BatchHook for FleetHook {
+    fn after_batch(&mut self, served: &[Request]) -> Result<Vec<Arc<MappingPlan>>> {
+        let mut counts: Vec<(String, usize)> = Vec::new();
+        for req in served {
+            match counts.iter_mut().find(|(name, _)| *name == req.artifact) {
+                Some((_, n)) => *n += 1,
+                None => counts.push((req.artifact.clone(), 1)),
+            }
+        }
+        append_framed(
+            &self.mix,
+            &MixRecord {
+                worker: self.worker,
+                batch: self.batch_idx,
+                counts,
+            }
+            .to_json(),
+        )?;
+        let b = self.batch_idx;
+        self.batch_idx += 1;
+        if let Some(limit) = self.crash_after {
+            if self.batch_idx >= limit {
+                // The injected crash: the mix record above is already on
+                // disk (the controller must see a half-run worker), the
+                // report is not (crash ⇒ no report).
+                bail!("fleet worker {}: injected crash after {limit} batches", self.worker);
+            }
+        }
+        self.poll_epoch();
+        if let Some(&ns) = self.pace_ns.get(b) {
+            if ns > 0 {
+                thread::sleep(Duration::from_nanos(ns.min(PACE_CAP_NS)));
+            }
+        }
+        Ok(Vec::new())
+    }
+
+    fn finish(&mut self) -> Result<Vec<Arc<MappingPlan>>> {
+        // One last poll so a plan broadcast during the final batch is
+        // still adopted before the report is written.
+        self.poll_epoch();
+        Ok(Vec::new())
+    }
+}
+
+/// Run one fleet worker to completion: expand the spec, serve the
+/// interleaved shard `global % fleet == worker` through [`serve_hooked`]
+/// with the fleet hook, and write the [`WorkerReport`]. This is what the
+/// `fleet-worker` CLI arm calls in OS mode and what thread-mode spawns
+/// directly.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
+    let fleet = cfg.fleet.max(1);
+    let all = cfg.spec.requests()?;
+    let shard: Vec<Request> = all
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % fleet == cfg.worker)
+        .map(|(_, r)| r.clone())
+        .collect();
+    let batch = cfg.batch.max(1);
+
+    let pace_ns = if cfg.pace {
+        // Per-batch arrival gap of this worker's shard: time between its
+        // first request of batch b and its first request of batch b+1 on
+        // the spec's offered-load clock.
+        let arrivals = cfg.spec.arrival_ns();
+        let global = |local: usize| cfg.worker + local * fleet;
+        let nbatches = shard.len().div_ceil(batch);
+        (0..nbatches)
+            .map(|b| {
+                let here = arrivals.get(global(b * batch)).copied().unwrap_or(0);
+                let next = arrivals
+                    .get(global((b + 1) * batch).min(cfg.spec.n.saturating_sub(1)))
+                    .copied()
+                    .unwrap_or(here);
+                next.saturating_sub(here)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    let mut hook = FleetHook {
+        worker: cfg.worker,
+        mix: mix_path(&cfg.dir),
+        plans: plans_path(&cfg.dir),
+        batch_idx: 0,
+        epoch: None,
+        crash_after: cfg.crash_after_batches,
+        pace_ns,
+    };
+    let serve_cfg = ServeConfig::new(cfg.threads)
+        .with_batch(batch)
+        .with_index_map(cfg.worker as u64, fleet as u64);
+    let slow = cfg.slow_ns;
+    let st: ServeStats = serve_hooked(
+        shard,
+        &serve_cfg,
+        || Ok(SlowExecutor::new(SyntheticExecutor, slow)),
+        Some(&mut hook),
+    )?;
+
+    let report = WorkerReport {
+        worker: cfg.worker,
+        completed: st.completed,
+        checksum: st.checksum,
+        digest: st.digest,
+        failovers: st.failovers,
+        batches: st.batches,
+        plan_epoch: hook.epoch,
+        latencies_ms: st.latencies_ms,
+    };
+    // Write-then-rename so a reader never sees a half-written report.
+    let path = report_path(&cfg.dir, cfg.worker);
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, report.to_json().to_string())
+        .with_context(|| format!("write worker report {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publish worker report {}", path.display()))?;
+    Ok(report)
+}
+
+/// Crash injection for the scenario harness.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Which worker to crash.
+    pub worker: usize,
+    /// OS mode: SIGKILL the worker this long after fleet start.
+    pub after: Duration,
+    /// Thread mode: the worker's batch loop fails after this many
+    /// batches instead (threads cannot be SIGKILLed).
+    pub after_batches: Option<usize>,
+    /// Defer the respawn until `plans.jsonl` is non-empty, so the
+    /// rejoined worker deterministically adopts the broadcast epoch.
+    pub await_plan: bool,
+}
+
+/// Fleet configuration — controller plus the template every worker is
+/// spawned from. Fields are public: scenarios and the CLI build one with
+/// [`FleetConfig::new`] and set what they need.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Worker count.
+    pub workers: usize,
+    /// The shared trace spec.
+    pub spec: TraceSpec,
+    /// Serve threads per worker.
+    pub threads: usize,
+    /// Requests per scheduling batch.
+    pub batch: usize,
+    /// Shared fleet directory.
+    pub dir: PathBuf,
+    /// Worker binary for OS-process mode (`None` = in-process threads).
+    pub bin: Option<PathBuf>,
+    /// Launcher prefixes, round-robined across workers (OS mode; same
+    /// shape as the orchestrator's `--hosts`).
+    pub launchers: Vec<Vec<String>>,
+    /// Remapper mix-window size; `0` disables the controller remapper
+    /// entirely (no drift signal, no broadcasts).
+    pub window: usize,
+    /// Total-variation drift threshold.
+    pub drift: f64,
+    /// Serve from the live design space under this latency budget
+    /// (cycles) instead of the fixed candidate list.
+    pub latency_budget: Option<f64>,
+    /// Deadline remaps: broadcast the heuristic fast-path plan first.
+    pub deadline: bool,
+    /// Warm-start checkpoint (frontier or shard) whose [`SeedTable`]
+    /// primes the remapper before the first request lands.
+    pub warm_start: Option<PathBuf>,
+    /// Crash injection.
+    pub fault: Option<FaultSpec>,
+    /// `(worker, delay_ns)` straggler injection.
+    pub slow_worker: Option<(usize, u64)>,
+    /// Pace workers by the spec's arrival pattern.
+    pub pace: bool,
+    /// Controller poll interval.
+    pub poll: Duration,
+    /// Give up (with a diagnostic) after this long.
+    pub timeout: Duration,
+    /// Abort after this many respawns — a persistently crashing worker
+    /// is a bug, not a fault to absorb.
+    pub max_respawns: usize,
+}
+
+impl FleetConfig {
+    /// `workers` in-process workers over `spec` in `dir`, no remapper,
+    /// no faults.
+    pub fn new(workers: usize, spec: TraceSpec, dir: impl Into<PathBuf>) -> FleetConfig {
+        FleetConfig {
+            workers,
+            spec,
+            threads: 2,
+            batch: 16,
+            dir: dir.into(),
+            bin: None,
+            launchers: Vec::new(),
+            window: 0,
+            drift: 0.25,
+            latency_budget: None,
+            deadline: false,
+            warm_start: None,
+            fault: None,
+            slow_worker: None,
+            pace: false,
+            poll: Duration::from_millis(5),
+            timeout: Duration::from_secs(120),
+            max_respawns: 2,
+        }
+    }
+
+    fn worker_config(&self, worker: usize, crash: Option<usize>) -> WorkerConfig {
+        let mut w = WorkerConfig::new(worker, self.workers, self.spec.clone(), &self.dir);
+        w.threads = self.threads;
+        w.batch = self.batch;
+        w.pace = self.pace;
+        w.crash_after_batches = crash;
+        if let Some((slow, ns)) = self.slow_worker {
+            if slow == worker {
+                w.slow_ns = ns;
+            }
+        }
+        w
+    }
+}
+
+/// Merged fleet-level results.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    /// Worker count.
+    pub workers: usize,
+    /// Requests served (sum over workers; re-served shard requests from
+    /// a crashed worker's first life are not double counted — only its
+    /// final successful run reports).
+    pub completed: usize,
+    /// Merged fleet digest (`wrapping_add` over worker digests) —
+    /// bit-identical to single-process [`ServeStats::digest`] on the
+    /// same spec.
+    pub digest: u64,
+    /// Sum of worker checksums (association-dependent; see module docs).
+    pub checksum: f64,
+    /// Fleet latency percentiles over the concatenated raw samples, ms.
+    pub p50_ms: f64,
+    /// p99, ms.
+    pub p99_ms: f64,
+    /// p99.9, ms.
+    pub p999_ms: f64,
+    /// Mean latency, ms.
+    pub mean_ms: f64,
+    /// Executor failovers across the fleet.
+    pub failovers: usize,
+    /// Plans the controller remapper published.
+    pub remaps: usize,
+    /// Of those, heuristic fast-path plans.
+    pub fast_remaps: usize,
+    /// The controller's final broadcast epoch.
+    pub plan_epoch: Option<usize>,
+    /// Each worker's adopted epoch, indexed by worker.
+    pub worker_epochs: Vec<Option<usize>>,
+    /// Crashed workers respawned.
+    pub respawns: usize,
+    /// Fleet wall time, seconds.
+    pub wall_s: f64,
+    /// Mix records the controller consumed.
+    pub mix_records: usize,
+}
+
+impl FleetStats {
+    /// JSON view for the `fleet --json` CLI output (digest as hex — u64
+    /// exceeds JSON's exact integer range).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("workers".into(), Json::int(self.workers as u64)),
+            ("completed".into(), Json::int(self.completed as u64)),
+            ("digest".into(), Json::str(format!("{:016x}", self.digest))),
+            ("checksum".into(), Json::num(self.checksum)),
+            ("p50_ms".into(), Json::num(self.p50_ms)),
+            ("p99_ms".into(), Json::num(self.p99_ms)),
+            ("p99_9_ms".into(), Json::num(self.p999_ms)),
+            ("mean_ms".into(), Json::num(self.mean_ms)),
+            ("failovers".into(), Json::int(self.failovers as u64)),
+            ("remaps".into(), Json::int(self.remaps as u64)),
+            ("fast_remaps".into(), Json::int(self.fast_remaps as u64)),
+            (
+                "plan_epoch".into(),
+                match self.plan_epoch {
+                    Some(e) => Json::int(e as u64),
+                    None => Json::Null,
+                },
+            ),
+            ("respawns".into(), Json::int(self.respawns as u64)),
+            ("wall_s".into(), Json::num(self.wall_s)),
+            ("mix_records".into(), Json::int(self.mix_records as u64)),
+        ])
+    }
+}
+
+/// Load the warm-start [`SeedTable`] from a sweep checkpoint — either a
+/// frontier checkpoint ([`FrontierCheckpoint`]) or a scalar shard
+/// checkpoint ([`ShardCheckpoint`]); both carry the per-layer best-energy
+/// seeds the remapper primes its searches with.
+pub fn load_warm_seeds(path: &Path) -> Result<SeedTable> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read warm-start checkpoint {}", path.display()))?;
+    if let Ok(ckpt) = FrontierCheckpoint::from_json(&text) {
+        return Ok(ckpt.seeds);
+    }
+    match ShardCheckpoint::from_json(&text) {
+        Ok(ckpt) => Ok(ckpt.seeds),
+        Err(e) => bail!(
+            "{} is neither a frontier nor a shard checkpoint: {e}",
+            path.display()
+        ),
+    }
+}
+
+/// A live worker: an in-process thread or a real OS process.
+enum Handle {
+    Thread(JoinHandle<Result<()>>),
+    Process(Child),
+}
+
+/// One poll's view of a worker.
+enum Poll {
+    Running,
+    Finished,
+    Crashed(String),
+}
+
+fn poll_handle(handle: &mut Option<Handle>) -> Poll {
+    match handle {
+        None => Poll::Finished,
+        Some(Handle::Thread(h)) => {
+            if !h.is_finished() {
+                return Poll::Running;
+            }
+            let Some(Handle::Thread(h)) = handle.take() else {
+                unreachable!("just matched a thread handle");
+            };
+            match h.join() {
+                Ok(Ok(())) => Poll::Finished,
+                Ok(Err(e)) => Poll::Crashed(format!("{e:#}")),
+                Err(_) => Poll::Crashed("worker thread panicked".into()),
+            }
+        }
+        Some(Handle::Process(child)) => match child.try_wait() {
+            Ok(None) => Poll::Running,
+            Ok(Some(status)) if status.success() => {
+                *handle = None;
+                Poll::Finished
+            }
+            Ok(Some(status)) => {
+                *handle = None;
+                Poll::Crashed(format!("exit status {status}"))
+            }
+            Err(e) => Poll::Crashed(format!("wait failed: {e}")),
+        },
+    }
+}
+
+fn spawn_worker(cfg: &FleetConfig, worker: usize, crash: Option<usize>) -> Result<Handle> {
+    // A stale report would let the controller count a worker done before
+    // its current life finishes.
+    let _ = std::fs::remove_file(report_path(&cfg.dir, worker));
+    match &cfg.bin {
+        None => {
+            let wcfg = cfg.worker_config(worker, crash);
+            Ok(Handle::Thread(thread::spawn(move || {
+                run_worker(&wcfg).map(|_| ())
+            })))
+        }
+        Some(bin) => {
+            let wcfg = cfg.worker_config(worker, crash);
+            // `--key=value` form throughout: the greedy Args parser would
+            // otherwise eat a following flag as a value. Flags go last.
+            let mut args = vec![
+                format!("--worker={}", wcfg.worker),
+                format!("--fleet={}", wcfg.fleet),
+                format!("--trace={}", wcfg.spec.encode()),
+                format!("--dir={}", wcfg.dir.display()),
+                format!("--threads={}", wcfg.threads),
+                format!("--batch-requests={}", wcfg.batch),
+            ];
+            if wcfg.slow_ns > 0 {
+                args.push(format!("--slow-ns={}", wcfg.slow_ns));
+            }
+            if let Some(after) = crash {
+                args.push(format!("--crash-after={after}"));
+            }
+            if wcfg.pace {
+                args.push("--pace".into());
+            }
+            let mut cmd = launcher_command(&cfg.launchers, worker, bin, "fleet-worker", &args);
+            let child = cmd
+                .spawn()
+                .with_context(|| format!("spawn fleet worker {worker}"))?;
+            Ok(Handle::Process(child))
+        }
+    }
+}
+
+/// The controller remapper thread: one [`Remapper`] over the merged
+/// fleet mix, publishing every plan to `plans.jsonl`. Returns
+/// `(remaps, fast_remaps, last_epoch)` at shutdown (sender dropped).
+fn spawn_remapper(
+    cfg: &FleetConfig,
+) -> Result<(
+    Option<Sender<Vec<String>>>,
+    Option<JoinHandle<(usize, usize, Option<usize>)>>,
+)> {
+    if cfg.window == 0 {
+        return Ok((None, None));
+    }
+    let mut policy = RemapPolicy::new(cfg.window, cfg.drift);
+    if let Some(budget) = cfg.latency_budget {
+        policy = policy.with_latency_budget(budget);
+    }
+    if cfg.deadline {
+        policy = policy.with_deadline();
+    }
+    let mut remapper = if cfg.latency_budget.is_some() {
+        Remapper::with_space(policy, Remapper::default_space())
+    } else {
+        Remapper::new(policy, Remapper::default_candidates())
+    };
+    if let Some(path) = &cfg.warm_start {
+        remapper.prime_seeds(&load_warm_seeds(path)?);
+    }
+    let plans = plans_path(&cfg.dir);
+    let (tx, rx) = mpsc::channel::<Vec<String>>();
+    let handle = thread::spawn(move || {
+        let mut remaps = 0usize;
+        let mut fast = 0usize;
+        let mut last_epoch = None;
+        let mut publish = |remapper: &mut Remapper, remaps: &mut usize, fast: &mut usize| {
+            while let Some(plan) = remapper.take_plan() {
+                *remaps += 1;
+                if plan.fast {
+                    *fast += 1;
+                }
+                last_epoch = Some(plan.epoch);
+                let rec = PlanRecord {
+                    epoch: plan.epoch,
+                    energy_pj: plan.winner.opt.total_energy_pj,
+                    fast: plan.fast,
+                };
+                // A failed broadcast only delays adoption (workers keep
+                // their current epoch) — never fail the fleet for it.
+                let _ = append_framed(&plans, &rec.to_json());
+            }
+        };
+        while let Ok(artifacts) = rx.recv() {
+            for a in &artifacts {
+                remapper.observe(a);
+            }
+            remapper.maybe_remap();
+            publish(&mut remapper, &mut remaps, &mut fast);
+        }
+        // Sender dropped: the fleet is done serving. Pay off any owed
+        // deadline exact search so the final broadcast converges.
+        remapper.flush_pending();
+        publish(&mut remapper, &mut remaps, &mut fast);
+        (remaps, fast, last_epoch)
+    });
+    Ok((Some(tx), Some(handle)))
+}
+
+/// Stream mix records past `cursor` to the remapper channel, one
+/// `send` per record (counts expand back into the artifact stream the
+/// mix window expects).
+fn pump_mix(mix: &Path, tx: &Option<Sender<Vec<String>>>, cursor: &mut usize) {
+    let records = read_mix(mix);
+    if records.len() <= *cursor {
+        return;
+    }
+    if let Some(tx) = tx {
+        for rec in &records[*cursor..] {
+            let mut artifacts = Vec::new();
+            for (name, n) in &rec.counts {
+                for _ in 0..*n {
+                    artifacts.push(name.clone());
+                }
+            }
+            let _ = tx.send(artifacts);
+        }
+    }
+    *cursor = records.len();
+}
+
+/// Run a serving fleet to completion and merge the worker reports.
+pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetStats> {
+    if cfg.workers == 0 {
+        bail!("fleet needs at least one worker");
+    }
+    std::fs::create_dir_all(&cfg.dir)
+        .with_context(|| format!("create fleet dir {}", cfg.dir.display()))?;
+    let mix = mix_path(&cfg.dir);
+    let plans = plans_path(&cfg.dir);
+    let _ = std::fs::remove_file(&mix);
+    let _ = std::fs::remove_file(&plans);
+
+    let (mix_tx, remapper_handle) = spawn_remapper(cfg)?;
+
+    let t0 = Instant::now();
+    let mut handles: Vec<Option<Handle>> = Vec::with_capacity(cfg.workers);
+    for w in 0..cfg.workers {
+        let crash = cfg
+            .fault
+            .as_ref()
+            .filter(|f| f.worker == w)
+            .and_then(|f| f.after_batches);
+        handles.push(Some(spawn_worker(cfg, w, crash)?));
+    }
+
+    let mut done = vec![false; cfg.workers];
+    let mut pending_respawn: Vec<usize> = Vec::new();
+    let mut respawns = 0usize;
+    let mut killed = false;
+    let mut mix_cursor = 0usize;
+
+    loop {
+        // Upstream: feed new mix records to the remapper (counts expand
+        // back into the artifact stream the mix window expects).
+        pump_mix(&mix, &mix_tx, &mut mix_cursor);
+
+        // OS-mode fault: a real SIGKILL, mid-run.
+        if let Some(fault) = &cfg.fault {
+            if !killed && cfg.bin.is_some() && t0.elapsed() >= fault.after {
+                if let Some(Some(Handle::Process(child))) = handles.get_mut(fault.worker) {
+                    let _ = child.kill();
+                }
+                killed = true;
+            }
+        }
+
+        for w in 0..cfg.workers {
+            if done[w] || pending_respawn.contains(&w) {
+                continue;
+            }
+            match poll_handle(&mut handles[w]) {
+                Poll::Running => {}
+                Poll::Finished => {
+                    if report_path(&cfg.dir, w).exists() {
+                        done[w] = true;
+                    } else {
+                        // Clean exit without a report is a protocol
+                        // violation — treat it as a crash.
+                        pending_respawn.push(w);
+                    }
+                }
+                Poll::Crashed(why) => {
+                    if respawns >= cfg.max_respawns {
+                        bail!(
+                            "fleet worker {w} crashed ({why}) after the respawn \
+                             budget ({}) was spent",
+                            cfg.max_respawns
+                        );
+                    }
+                    pending_respawn.push(w);
+                }
+            }
+        }
+
+        // Rejoin: respawn crashed workers, fault-free. `await_plan`
+        // defers until the broadcast exists, so the rejoined worker's
+        // first batch boundary already sees the current epoch.
+        let gate_open = cfg
+            .fault
+            .as_ref()
+            .map_or(true, |f| !f.await_plan || !read_plans(&plans).is_empty());
+        if gate_open {
+            for w in std::mem::take(&mut pending_respawn) {
+                respawns += 1;
+                handles[w] = Some(spawn_worker(cfg, w, None)?);
+            }
+        }
+
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        if t0.elapsed() > cfg.timeout {
+            let missing: Vec<usize> =
+                (0..cfg.workers).filter(|&w| !done[w]).collect();
+            bail!(
+                "fleet timed out after {:.1}s waiting for workers {missing:?}",
+                cfg.timeout.as_secs_f64()
+            );
+        }
+        thread::sleep(cfg.poll);
+    }
+
+    // Final pump so the remapper sees every record, then shut it down.
+    pump_mix(&mix, &mix_tx, &mut mix_cursor);
+    drop(mix_tx);
+    let (remaps, fast_remaps, plan_epoch) = match remapper_handle {
+        Some(h) => h
+            .join()
+            .map_err(|_| anyhow!("fleet remapper thread panicked"))?,
+        None => (0, 0, None),
+    };
+
+    // Merge.
+    let mut digest = 0u64;
+    let mut checksum = 0.0f64;
+    let mut completed = 0usize;
+    let mut failovers = 0usize;
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut worker_epochs = Vec::with_capacity(cfg.workers);
+    for w in 0..cfg.workers {
+        let report = WorkerReport::load(&cfg.dir, w)?;
+        if report.worker != w {
+            bail!("worker report {w} claims worker {}", report.worker);
+        }
+        digest = digest.wrapping_add(report.digest);
+        checksum += report.checksum;
+        completed += report.completed;
+        failovers += report.failovers;
+        latencies.extend_from_slice(&report.latencies_ms);
+        worker_epochs.push(report.plan_epoch);
+    }
+
+    Ok(FleetStats {
+        workers: cfg.workers,
+        completed,
+        digest,
+        checksum,
+        p50_ms: stats::percentile(&latencies, 50.0),
+        p99_ms: stats::percentile(&latencies, 99.0),
+        p999_ms: stats::percentile(&latencies, 99.9),
+        mean_ms: stats::mean(&latencies),
+        failovers,
+        remaps,
+        fast_remaps,
+        plan_epoch,
+        worker_epochs,
+        respawns,
+        wall_s: t0.elapsed().as_secs_f64(),
+        mix_records: mix_cursor,
+    })
+}
+
+/// Single-process reference digest/checksum for `spec` — what every
+/// fleet configuration must merge back to, bit for bit (digest) on the
+/// digest and what the scenario harness compares against.
+pub fn baseline(spec: &TraceSpec) -> Result<(u64, f64)> {
+    let requests = spec.requests()?;
+    let st = serve_hooked(
+        requests,
+        &ServeConfig::new(2).with_batch(16),
+        || Ok(SyntheticExecutor),
+        None,
+    )?;
+    Ok((st.digest, st.checksum))
+}

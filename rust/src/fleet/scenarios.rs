@@ -1,0 +1,247 @@
+//! The deterministic fleet scenario harness — the load-test shapes the
+//! `perf_fleet` gate and the fleet tests drive.
+//!
+//! Every scenario is a fixed-seed [`FleetConfig`] (bursty arrivals,
+//! adversarial mix flips, slow-executor stragglers, worker crash +
+//! rejoin, an unsatisfiable latency budget) plus an invariant check.
+//! [`run_scenario`] expands the spec, computes the single-process
+//! [`baseline`] digest, runs the fleet, and fails loudly unless the
+//! merged digest is bit-identical to the baseline *and* the scenario's
+//! own invariant holds — load shaping, faults, and re-optimization must
+//! never change what is served, only when and under which plan.
+//!
+//! Scenarios run in-process (threads) by default and as real OS
+//! processes when a worker binary is supplied — same configs, same
+//! invariants, which is how the bench gate exercises the process path
+//! the tests smoke in-process.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::{baseline, read_plans, run_fleet, plans_path, FaultSpec, FleetConfig, FleetStats};
+use crate::coordinator::trace::{ArrivalPattern, TraceSpec};
+
+/// The scenario catalogue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Steady uniform load, no remapper — the merge-identity floor.
+    Steady,
+    /// Bursty arrivals with pacing under a live (but quiet) remapper —
+    /// the latency-under-load shape the gate reports percentiles from.
+    Bursty,
+    /// Adversarial mid-trace mix flip under a deadline remapper — the
+    /// drift path end to end (fast plan then exact convergence).
+    MixFlip,
+    /// One slow-executor straggler worker — tail latency grows, the
+    /// digest must not move.
+    Straggler,
+    /// A worker crashes mid-run and rejoins — it must re-serve its full
+    /// shard and adopt the current broadcast epoch.
+    CrashRejoin,
+    /// An unsatisfiable (zero) latency budget — the fleet must degrade
+    /// gracefully: zero plans broadcast, zero thrash, digest intact.
+    ZeroBudget,
+}
+
+impl Scenario {
+    /// Every scenario, in gate order.
+    pub fn all() -> [Scenario; 6] {
+        [
+            Scenario::Steady,
+            Scenario::Bursty,
+            Scenario::MixFlip,
+            Scenario::Straggler,
+            Scenario::CrashRejoin,
+            Scenario::ZeroBudget,
+        ]
+    }
+
+    /// Stable name (subdirectory and report key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Bursty => "bursty",
+            Scenario::MixFlip => "mix_flip",
+            Scenario::Straggler => "straggler",
+            Scenario::CrashRejoin => "crash_rejoin",
+            Scenario::ZeroBudget => "zero_budget",
+        }
+    }
+
+    /// The scenario's fleet configuration for `workers` workers serving
+    /// into `dir`. Specs are fixed-seed: the same scenario always serves
+    /// the same requests, whatever the mode or worker count.
+    pub fn config(&self, workers: usize, dir: &Path) -> FleetConfig {
+        let mut cfg = match self {
+            Scenario::Steady => FleetConfig::new(workers, TraceSpec::mixed(96, 11), dir),
+            Scenario::Bursty => {
+                let spec = TraceSpec::mixed(96, 13).with_arrival(ArrivalPattern::Bursty {
+                    burst: 16,
+                    gap_ns: 500_000,
+                });
+                let mut cfg = FleetConfig::new(workers, spec, dir);
+                cfg.pace = true;
+                // Live remapper, threshold high enough that only the
+                // first (no-plan-yet) boundary triggers.
+                cfg.window = 24;
+                cfg.drift = 0.9;
+                cfg
+            }
+            Scenario::MixFlip => {
+                let spec = TraceSpec::flip(
+                    120,
+                    17,
+                    60,
+                    &["conv3x3", "conv1x1"],
+                    &["lstm_cell", "fc"],
+                );
+                let mut cfg = FleetConfig::new(workers, spec, dir);
+                cfg.window = 24;
+                cfg.drift = 0.25;
+                cfg.deadline = true;
+                cfg
+            }
+            Scenario::Straggler => {
+                let mut cfg = FleetConfig::new(workers, TraceSpec::mixed(72, 19), dir);
+                cfg.slow_worker = Some((workers.saturating_sub(1), 400_000));
+                cfg
+            }
+            Scenario::CrashRejoin => {
+                let mut cfg = FleetConfig::new(workers, TraceSpec::mixed(96, 23), dir);
+                // Static mix + high threshold ⇒ exactly one broadcast
+                // (epoch 0): the rejoined worker's adopted epoch is
+                // deterministic.
+                cfg.window = 24;
+                cfg.drift = 0.9;
+                cfg.fault = Some(FaultSpec {
+                    worker: workers.saturating_sub(1).min(1),
+                    after: Duration::from_millis(30),
+                    after_batches: Some(1),
+                    await_plan: true,
+                });
+                cfg
+            }
+            Scenario::ZeroBudget => {
+                let mut cfg = FleetConfig::new(workers, TraceSpec::mixed(72, 29), dir);
+                cfg.window = 16;
+                cfg.drift = 0.25;
+                cfg.latency_budget = Some(0.0);
+                cfg
+            }
+        };
+        cfg.batch = 12;
+        cfg
+    }
+
+    /// The scenario-specific invariant (over and above digest identity,
+    /// which [`run_scenario`] checks for every scenario).
+    pub fn check(&self, cfg: &FleetConfig, stats: &FleetStats) -> Result<()> {
+        let expected: usize = cfg.spec.n;
+        if stats.completed != expected {
+            bail!(
+                "{}: served {} of {expected} requests",
+                self.name(),
+                stats.completed
+            );
+        }
+        match self {
+            Scenario::Steady | Scenario::Bursty | Scenario::Straggler => Ok(()),
+            Scenario::MixFlip => {
+                // The flip must have driven at least the initial plan and
+                // one drift re-plan, and some worker must have adopted one.
+                if stats.remaps < 2 {
+                    bail!("mix_flip: expected ≥ 2 broadcast plans, got {}", stats.remaps);
+                }
+                if stats.plan_epoch.is_none() {
+                    bail!("mix_flip: no final plan epoch");
+                }
+                Ok(())
+            }
+            Scenario::CrashRejoin => {
+                if stats.respawns == 0 {
+                    bail!("crash_rejoin: the injected crash never happened");
+                }
+                let victim = cfg.fault.as_ref().expect("crash scenario has a fault").worker;
+                if stats.plan_epoch.is_none() {
+                    bail!("crash_rejoin: no plan was ever broadcast");
+                }
+                if stats.worker_epochs[victim] != stats.plan_epoch {
+                    bail!(
+                        "crash_rejoin: rejoined worker {victim} is on epoch {:?}, \
+                         fleet is on {:?}",
+                        stats.worker_epochs[victim],
+                        stats.plan_epoch
+                    );
+                }
+                Ok(())
+            }
+            Scenario::ZeroBudget => {
+                // Graceful degradation: the budget is unsatisfiable, so
+                // nothing may thrash — no plans, no adoptions.
+                if stats.remaps != 0 || stats.plan_epoch.is_some() {
+                    bail!(
+                        "zero_budget: {} plans broadcast under an unsatisfiable budget",
+                        stats.remaps
+                    );
+                }
+                if stats.worker_epochs.iter().any(|e| e.is_some()) {
+                    bail!("zero_budget: a worker adopted a plan that cannot exist");
+                }
+                if !read_plans(&plans_path(&cfg.dir)).is_empty() {
+                    bail!("zero_budget: plans.jsonl is not empty");
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// One scenario's verified result.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    /// Scenario name.
+    pub name: &'static str,
+    /// Merged fleet stats.
+    pub stats: FleetStats,
+    /// Single-process reference digest the fleet matched.
+    pub baseline_digest: u64,
+}
+
+/// Run one scenario and verify it: digest identity against the
+/// single-process baseline, full completion, and the scenario invariant.
+/// `bin` switches the workers from in-process threads to OS processes.
+pub fn run_scenario(
+    scenario: Scenario,
+    workers: usize,
+    dir: &Path,
+    bin: Option<PathBuf>,
+) -> Result<ScenarioOutcome> {
+    let mut cfg = scenario.config(workers, dir);
+    cfg.bin = bin;
+    let (want_digest, _) = baseline(&cfg.spec)?;
+    let stats = run_fleet(&cfg)?;
+    if stats.digest != want_digest {
+        bail!(
+            "{}: fleet digest {:016x} != single-process digest {want_digest:016x}",
+            scenario.name(),
+            stats.digest
+        );
+    }
+    scenario.check(&cfg, &stats)?;
+    Ok(ScenarioOutcome {
+        name: scenario.name(),
+        stats,
+        baseline_digest: want_digest,
+    })
+}
+
+/// Run the whole catalogue (each scenario in its own subdirectory of
+/// `dir`), failing on the first violated invariant.
+pub fn run_all(workers: usize, dir: &Path, bin: Option<PathBuf>) -> Result<Vec<ScenarioOutcome>> {
+    Scenario::all()
+        .into_iter()
+        .map(|s| run_scenario(s, workers, &dir.join(s.name()), bin.clone()))
+        .collect()
+}

@@ -1,0 +1,195 @@
+//! Fleet tests: merge identity across worker counts, the file protocol,
+//! crash + rejoin, and graceful degradation. Everything here runs
+//! in-process (worker threads) — `CARGO_BIN_EXE_*` paths only exist for
+//! benches/integration tests, so the real-OS-process and real-SIGKILL
+//! variants of the same scenarios live in `benches/perf_fleet.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::scenarios::{run_scenario, Scenario};
+use super::*;
+use crate::netopt::NetOptStats;
+use crate::util::prop::for_cases;
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// A fresh scratch directory per call (tests run concurrently).
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "interstellar-fleet-{}-{name}-{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn merged_fleet_digest_is_bit_identical_across_worker_counts() {
+    for_cases(0xf1ee7, 3, |rng| {
+        let n = 36 + rng.below(48) as usize;
+        let spec = TraceSpec::mixed(n, rng.next_u64());
+        let (want_digest, _) = baseline(&spec).expect("single-process baseline");
+        // Also varies threads-per-worker: the digest must be invariant
+        // to both the fleet layout and each worker's parallelism.
+        for (workers, threads) in [(1usize, 3usize), (2, 2), (4, 1)] {
+            let dir = tmp("merge");
+            let mut cfg = FleetConfig::new(workers, spec.clone(), &dir);
+            cfg.batch = 8;
+            cfg.threads = threads;
+            let stats = run_fleet(&cfg).expect("fleet run");
+            assert_eq!(stats.completed, n, "{workers} workers served the trace");
+            assert_eq!(
+                stats.digest, want_digest,
+                "{workers}x{threads}: fleet digest must match single-process"
+            );
+            assert_eq!(stats.respawns, 0);
+            assert_eq!(stats.workers, workers);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    });
+}
+
+#[test]
+fn mix_and_plan_records_round_trip_through_the_framed_log() {
+    let dir = tmp("records");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mix = mix_path(&dir);
+    let rec = MixRecord {
+        worker: 3,
+        batch: 7,
+        counts: vec![("conv3x3".into(), 5), ("fc".into(), 2)],
+    };
+    append_framed(&mix, &rec.to_json()).unwrap();
+    // A torn tail (writer killed mid-append) must not poison the reader.
+    use std::io::Write;
+    std::fs::OpenOptions::new()
+        .append(true)
+        .open(&mix)
+        .unwrap()
+        .write_all(b"{\"worker\":9,\"batch\":0,\"coun")
+        .unwrap();
+    let rec2 = MixRecord {
+        worker: 1,
+        batch: 0,
+        counts: vec![("lstm_cell".into(), 4)],
+    };
+    append_framed(&mix, &rec2.to_json()).unwrap();
+    assert_eq!(read_mix(&mix), vec![rec, rec2]);
+
+    let plans = plans_path(&dir);
+    let plan = PlanRecord {
+        epoch: 2,
+        energy_pj: 1234.5,
+        fast: true,
+    };
+    append_framed(&plans, &plan.to_json()).unwrap();
+    assert_eq!(read_plans(&plans), vec![plan]);
+    assert_eq!(latest_epoch(&plans), Some(2));
+    assert_eq!(latest_epoch(&dir.join("absent.jsonl")), None);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn worker_reports_round_trip_with_full_u64_digests() {
+    let report = WorkerReport {
+        worker: 2,
+        completed: 24,
+        checksum: 0.1 + 0.2,
+        digest: u64::MAX - 17, // above 2^53: must survive the hex path
+        failovers: 1,
+        batches: 3,
+        plan_epoch: Some(4),
+        latencies_ms: vec![0.25, 1.5, 0.75],
+    };
+    let round = WorkerReport::from_json(&report.to_json().to_string()).unwrap();
+    assert_eq!(round.digest, report.digest);
+    assert_eq!(round.checksum.to_bits(), report.checksum.to_bits());
+    assert_eq!(round.plan_epoch, Some(4));
+    assert_eq!(round.latencies_ms, report.latencies_ms);
+
+    let none = WorkerReport {
+        plan_epoch: None,
+        ..report
+    };
+    let round = WorkerReport::from_json(&none.to_json().to_string()).unwrap();
+    assert_eq!(round.plan_epoch, None);
+}
+
+#[test]
+fn crashed_worker_rejoins_and_adopts_the_broadcast_epoch() {
+    let dir = tmp("crash");
+    let outcome =
+        run_scenario(Scenario::CrashRejoin, 3, &dir, None).expect("crash scenario");
+    let stats = &outcome.stats;
+    assert!(stats.respawns >= 1, "the injected crash must respawn");
+    assert!(stats.plan_epoch.is_some(), "one plan must have broadcast");
+    // The victim re-served its full shard on the current epoch; the
+    // merged digest already matched the single-process baseline inside
+    // run_scenario.
+    assert_eq!(stats.worker_epochs[1], stats.plan_epoch);
+    assert_eq!(stats.digest, outcome.baseline_digest);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unsatisfiable_latency_budget_degrades_gracefully() {
+    let dir = tmp("budget");
+    let outcome =
+        run_scenario(Scenario::ZeroBudget, 2, &dir, None).expect("zero-budget scenario");
+    assert_eq!(outcome.stats.remaps, 0, "no plan fits a zero budget");
+    assert_eq!(outcome.stats.plan_epoch, None);
+    assert!(outcome.stats.worker_epochs.iter().all(|e| e.is_none()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn load_and_straggler_scenarios_hold_their_invariants() {
+    // Steady, bursty (paced + live remapper) and straggler smoke — the
+    // crash and budget scenarios have their own tests above; the OS
+    // process variants run in `benches/perf_fleet.rs`.
+    for scenario in [Scenario::Steady, Scenario::Bursty, Scenario::Straggler] {
+        let dir = tmp(scenario.name());
+        run_scenario(scenario, 2, &dir, None)
+            .unwrap_or_else(|e| panic!("{} scenario: {e:#}", scenario.name()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn mix_flip_drives_fast_then_exact_replans() {
+    let dir = tmp("flip");
+    let outcome =
+        run_scenario(Scenario::MixFlip, 2, &dir, None).expect("mix-flip scenario");
+    assert!(outcome.stats.remaps >= 2);
+    assert!(
+        outcome.stats.fast_remaps >= 1,
+        "deadline mode publishes the heuristic plan first"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_start_seeds_load_from_a_frontier_checkpoint() {
+    let dir = tmp("warm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let key = ([1u64, 2, 3, 4, 5, 6, 7], 1u32);
+    let ckpt = FrontierCheckpoint {
+        network: "serving-mix".into(),
+        batch: 1,
+        nshards: 1,
+        shards: vec![0],
+        stats: NetOptStats::default(),
+        seeds: SeedTable::from_entries(vec![(key, 42.5)]),
+        frontier: Vec::new(),
+    };
+    let path = dir.join("frontier.ckpt.json");
+    std::fs::write(&path, ckpt.to_json()).unwrap();
+    let seeds = load_warm_seeds(&path).expect("frontier checkpoint seeds");
+    assert_eq!(seeds.get(&key), Some(42.5));
+
+    let garbage = dir.join("garbage.json");
+    std::fs::write(&garbage, "{\"not\": \"a checkpoint\"}").unwrap();
+    assert!(load_warm_seeds(&garbage).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -41,6 +41,12 @@
 //!   OS processes with work stealing over sub-sharded grids and live
 //!   incumbent/frontier bound streaming through an append-only bounds
 //!   file, merging back to bit-identical winners and frontiers;
+//! - [`fleet`] — the production serving fleet: N serving workers (OS
+//!   processes or threads) over interleaved trace shards, per-worker mix
+//!   windows streamed into an append-only `mix.jsonl`, a controller-side
+//!   drift signal driving one async remapper whose plans broadcast to
+//!   every worker via `plans.jsonl`, crash + rejoin with plan
+//!   re-adoption, and a deterministic scenario/load-test harness;
 //! - [`bench`] — the measurement backbone: every perf gate's metrics
 //!   appended to a torn-write-safe `bench_history.jsonl`, with
 //!   trajectory views and the median/MAD regression rule behind the
@@ -59,6 +65,7 @@ pub mod dataflow;
 pub mod energy;
 pub mod engine;
 pub mod fastmap;
+pub mod fleet;
 pub mod halide;
 pub mod loopnest;
 pub mod netopt;

@@ -146,20 +146,30 @@ impl BoundsLink {
     }
 
     fn append(&self, record: Json) -> Result<()> {
-        // Leading newline: if the previous writer was killed mid-append
-        // and left a torn tail, this record still starts on a fresh line
-        // — only the torn record is lost, never the one after it. The
-        // reader skips the blank lines this produces in the common case.
-        let line = format!("\n{record}\n");
-        let mut f = OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&self.path)
-            .with_context(|| format!("open bounds file {}", self.path.display()))?;
-        f.write_all(line.as_bytes())
-            .with_context(|| format!("append bounds record to {}", self.path.display()))?;
-        Ok(())
+        append_framed(&self.path, &record)
     }
+}
+
+/// Append one record to a line-delimited JSON file with the
+/// torn-write-safe `\n{record}\n` framing — the one framing every
+/// append-only protocol in the repo shares (this bounds log, the bench
+/// history, the fleet's `mix.jsonl` / `plans.jsonl`). Leading newline:
+/// if the previous writer was killed mid-append and left a torn tail,
+/// this record still starts on a fresh line — only the torn record is
+/// lost, never the one after it. Readers skip the blank lines this
+/// produces in the common case. One `O_APPEND` `write_all` per record,
+/// so concurrent appenders never interleave within a line (for the
+/// small records involved, on every platform we target).
+pub fn append_framed(path: &Path, record: &Json) -> Result<()> {
+    let line = format!("\n{record}\n");
+    let mut f = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("open append-only log {}", path.display()))?;
+    f.write_all(line.as_bytes())
+        .with_context(|| format!("append record to {}", path.display()))?;
+    Ok(())
 }
 
 /// Read a bounds file into an aggregated snapshot. A missing file is an

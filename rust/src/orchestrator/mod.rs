@@ -44,7 +44,7 @@
 pub mod bounds;
 pub mod worker;
 
-pub use bounds::{point_key, read_bounds, BoundsLink, BoundsSnapshot};
+pub use bounds::{append_framed, point_key, read_bounds, BoundsLink, BoundsSnapshot};
 pub use worker::{run_coopt_shard_streamed, run_pareto_shard_streamed};
 
 use std::collections::{HashMap, VecDeque};
@@ -391,6 +391,31 @@ fn run_loop(cfg: &OrchestrateConfig, bounds: Option<&Path>, st: &mut State) -> R
     Ok(())
 }
 
+/// Build a worker `Command` the orchestrator way: the round-robined
+/// launcher prefix for attempt `seq` (empty `launchers` = plain local
+/// process), then the binary, the subcommand, and `args` — stdout/stderr
+/// nulled (workers talk through files, never pipes). Shared with the
+/// serving fleet ([`crate::fleet`]), which fans out `fleet-worker`
+/// processes under the same ssh-style launcher contract.
+pub fn launcher_command(
+    launchers: &[Vec<String>],
+    seq: usize,
+    bin: &Path,
+    subcommand: &str,
+    args: &[String],
+) -> Command {
+    let mut argv: Vec<String> = Vec::new();
+    if !launchers.is_empty() {
+        argv.extend(launchers[seq % launchers.len()].iter().cloned());
+    }
+    argv.push(bin.display().to_string());
+    argv.push(subcommand.to_string());
+    argv.extend(args.iter().cloned());
+    let mut cmd = Command::new(&argv[0]);
+    cmd.args(&argv[1..]).stdout(Stdio::null()).stderr(Stdio::null());
+    cmd
+}
+
 fn launch(
     cfg: &OrchestrateConfig,
     bounds: Option<&Path>,
@@ -405,28 +430,21 @@ fn launch(
     // A retry must not parse a stale file from a previous attempt.
     let _ = std::fs::remove_file(&checkpoint);
 
-    let mut argv: Vec<String> = Vec::new();
-    if !cfg.launchers.is_empty() {
-        argv.extend(cfg.launchers[seq % cfg.launchers.len()].iter().cloned());
-    }
-    argv.push(cfg.bin.display().to_string());
-    argv.push(cfg.mode.subcommand().to_string());
-    argv.extend(cfg.worker_args.iter().cloned());
-    argv.push("--shard".into());
-    argv.push(format!("{}/{}", class.0, class.1));
-    argv.push("--checkpoint".into());
-    argv.push(checkpoint.display().to_string());
+    let mut args: Vec<String> = cfg.worker_args.clone();
+    args.push("--shard".into());
+    args.push(format!("{}/{}", class.0, class.1));
+    args.push("--checkpoint".into());
+    args.push(checkpoint.display().to_string());
     if let (Some(path), Some(interval)) = (bounds, cfg.bounds_interval) {
-        argv.push("--bounds".into());
-        argv.push(path.display().to_string());
-        argv.push("--bounds-interval".into());
-        argv.push(interval.as_millis().to_string());
-        argv.push("--worker-id".into());
-        argv.push(seq.to_string());
+        args.push("--bounds".into());
+        args.push(path.display().to_string());
+        args.push("--bounds-interval".into());
+        args.push(interval.as_millis().to_string());
+        args.push("--worker-id".into());
+        args.push(seq.to_string());
     }
 
-    let mut cmd = Command::new(&argv[0]);
-    cmd.args(&argv[1..]).stdout(Stdio::null()).stderr(Stdio::null());
+    let mut cmd = launcher_command(&cfg.launchers, seq, &cfg.bin, cfg.mode.subcommand(), &args);
     match cmd.spawn() {
         Ok(child) => {
             st.running.push(RunningTask {
