@@ -79,7 +79,10 @@ cargo bench --bench perf_orchestrator
 echo "==> perf_fleet (serving fleet: 4-worker merged digest bit-identical to single-process serve, SIGKILL crash + rejoin on the broadcast epoch, full scenario catalogue as OS processes, p50/p99/p99.9 under load; emits BENCH_fleet.json)"
 cargo bench --bench perf_fleet
 
-echo "==> bench_schema (every BENCH_*.json + bench_history.jsonl conform to the documented schemas; all nine perf files required)"
+echo "==> perf_telemetry (tracing-off runs bit-identical, tracing-on same bits within 5% overhead, traced co-opt + fleet trace schema-valid with zero orphaned spans; emits BENCH_telemetry.json)"
+cargo bench --bench perf_telemetry
+
+echo "==> bench_schema (every BENCH_*.json + bench_history.jsonl conform to the documented schemas; all ten perf files required)"
 cargo bench --bench bench_schema
 
 echo "==> bench-report --check (no metric regressed against its own history; see BENCHMARKS.md)"
@@ -114,6 +117,33 @@ if target/release/interstellar bench-report --check --history "$SYN" > /dev/null
 fi
 rm -f "$SYN"
 echo "synthetic p99 latency spike correctly rejected"
+
+# Telemetry end-to-end: one traced orchestrated sweep (the parent and
+# its worker processes inherit INTERSTELLAR_TRACE and append to one
+# shared trace) plus one traced fleet run, then the trace-report gate:
+# schema-valid records, zero orphaned spans, all four instrumented
+# planes present. See OBSERVABILITY.md.
+TRACE_DIR="$(mktemp -d)"
+TRACE_FILE="$TRACE_DIR/trace.jsonl"
+echo "==> traced orchestrate (engine/search records from workers, orchestrator spans from the parent)"
+INTERSTELLAR_TRACE="$TRACE_FILE" target/release/interstellar orchestrate \
+    --mode co-opt --net alexnet --batch 1 --head 2 --space full --rows 8 --cols 8 \
+    --rf1 16,64 --rf2-ratio 8 --gbuf 65536,262144 --ratio-min 0.25 --ratio-max 64 \
+    --cap 150 --divisors 4 --orders 9 --workers 2 --nshards 4 --worker-threads 1 \
+    --dir "$TRACE_DIR/orch" > /dev/null
+
+echo "==> traced fleet (per-batch spans, latency histograms, plan events into the same trace)"
+INTERSTELLAR_TRACE="$TRACE_FILE" target/release/interstellar fleet \
+    --workers 2 --requests 96 --window 24 --drift 0.25 --in-process \
+    --dir "$TRACE_DIR/fleet" > /dev/null
+
+echo "==> trace-report --check (schema-valid, zero orphaned spans, engine+search+orchestrator+fleet planes)"
+target/release/interstellar trace-report --trace "$TRACE_FILE" --check \
+    --require-planes engine,search,orchestrator,fleet
+
+echo "==> trace-report (the rendered profile tree / utilization / latency view)"
+target/release/interstellar trace-report --trace "$TRACE_FILE"
+rm -rf "$TRACE_DIR"
 
 echo "==> report --all --smoke (one-command paper-artifact regeneration; see REPRODUCING.md)"
 target/release/interstellar report --all --smoke --out report-artifacts

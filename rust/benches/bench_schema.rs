@@ -32,6 +32,7 @@ const REQUIRED: &[&str] = &[
     "BENCH_remap.json",
     "BENCH_search.json",
     "BENCH_shard.json",
+    "BENCH_telemetry.json",
 ];
 
 fn main() {

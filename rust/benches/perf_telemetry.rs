@@ -1,0 +1,235 @@
+//! §Perf/CI gate: the unified telemetry layer. Asserts the two promises
+//! ARCHITECTURE.md makes for tracing ("observes, never steers" and
+//! "cheap enough to leave on"):
+//!
+//! 1. **Bit identity, tracing off** — repeated untraced runs of the
+//!    network co-optimizer produce bit-identical winners and identical
+//!    staged search statistics (the determinism floor the other gates
+//!    pin).
+//! 2. **Bit identity, tracing on** — the same workload with a live
+//!    recorder produces the *same bits*: winner arch, energy/cycle
+//!    bits, full-eval/prune counts. Telemetry must not steer.
+//! 3. **Overhead bound** — min-of-N wall clock with tracing on is
+//!    within 5% of tracing off on the `perf_search`-family workload
+//!    (the staged per-layer engine inside the network B&B).
+//! 4. **Trace integrity** — the trace written by the traced co-opt runs
+//!    plus one traced in-process fleet scenario (mix-flip: drift,
+//!    replans, epoch adoption, per-batch latency histograms) parses
+//!    with zero violations (every span begun/ended, parents known) and
+//!    covers the engine, search, and fleet planes; the end-of-run
+//!    engine gauges must agree with the untraced run's staged counters.
+//!    The orchestrator plane is covered by the traced `orchestrate`
+//!    run in `ci.sh`.
+//!
+//! Emits `BENCH_telemetry.json` (overhead ratio, per-plane record
+//! counts, `span_engine_stage3_pct`, `fleet_batch_p99_ms_hist`) for the
+//! perf trajectory (validated by the `bench_schema` gate).
+
+use std::time::Instant;
+
+use interstellar::arch::ArrayShape;
+use interstellar::energy::Table3;
+use interstellar::fleet::scenarios::{run_scenario, Scenario};
+use interstellar::netopt::{co_optimize, CoOptResult, DesignSpace, NetOptConfig};
+use interstellar::nn::{network, Network};
+use interstellar::search::SearchOpts;
+use interstellar::telemetry;
+use interstellar::telemetry::report::{check_trace, merged_latency_hist};
+use interstellar::util::json::Json;
+
+const TIMED_RUNS: usize = 3;
+const MAX_OVERHEAD: f64 = 1.05;
+
+fn workload() -> (Network, DesignSpace, NetOptConfig) {
+    // mlp-m on the paper-default grid: the same staged-engine-inside-
+    // network-B&B workload perf_search/perf_netopt gate, big enough to
+    // amortize per-record cost, small enough for min-of-N timing.
+    let net = network("mlp-m", 32).unwrap();
+    let space = DesignSpace::paper_default(ArrayShape { rows: 16, cols: 16 });
+    let mut opts = SearchOpts::capped(400, 5);
+    opts.max_order_combos = 9;
+    // threads = 1: deterministic candidate order, so the full-eval and
+    // prune counts below are exact fixtures, not races.
+    (net, space, NetOptConfig::new(opts, 1))
+}
+
+/// Everything the workload computes that telemetry could possibly
+/// perturb, collapsed to comparable bits.
+#[derive(Debug, PartialEq)]
+struct Signature {
+    winner: String,
+    energy_bits: u64,
+    cycle_bits: u64,
+    evaluated_full: usize,
+    pruned: usize,
+    engine_full: u64,
+    engine_stage2: u64,
+    engine_stage3: u64,
+}
+
+fn signature(r: &CoOptResult) -> Signature {
+    let w = r.best().expect("co-opt winner");
+    Signature {
+        winner: w.arch.name.clone(),
+        energy_bits: w.opt.total_energy_pj.to_bits(),
+        cycle_bits: w.opt.total_cycles.to_bits(),
+        evaluated_full: r.stats.evaluated_full,
+        pruned: r.stats.pruned,
+        engine_full: r.stats.engine.full,
+        engine_stage2: r.stats.engine.stage2,
+        engine_stage3: r.stats.engine.stage3,
+    }
+}
+
+fn main() {
+    let (net, space, cfg) = workload();
+    let scratch = format!("interstellar-perf-telemetry-{}", std::process::id());
+    let dir = std::env::temp_dir().join(scratch);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    let trace = dir.join("trace.jsonl");
+
+    // 1. + 3a. tracing off: identity across repeats, min-of-N timing.
+    // Must run before telemetry::init — the recorder is once-per-process.
+    assert!(!telemetry::enabled(), "telemetry must start disabled");
+    let mut off_min_ms = f64::INFINITY;
+    let mut sig_off = None;
+    for _ in 0..TIMED_RUNS {
+        let t = Instant::now();
+        let r = co_optimize(&net, &space, &Table3, &cfg);
+        off_min_ms = off_min_ms.min(t.elapsed().as_secs_f64() * 1e3);
+        let s = signature(&r);
+        match &sig_off {
+            None => sig_off = Some(s),
+            Some(first) => assert_eq!(&s, first, "untraced runs disagree"),
+        }
+    }
+    let sig_off = sig_off.unwrap();
+    println!(
+        "perf_telemetry: tracing off: min {off_min_ms:.1} ms over {TIMED_RUNS} runs \
+         (winner {}, {} full evals)",
+        sig_off.winner,
+        sig_off.evaluated_full
+    );
+
+    // 2. + 3b. tracing on: same bits, bounded overhead.
+    telemetry::init(&trace, 7).expect("install recorder");
+    assert!(telemetry::enabled());
+    let mut on_min_ms = f64::INFINITY;
+    for _ in 0..TIMED_RUNS {
+        let t = Instant::now();
+        let r = co_optimize(&net, &space, &Table3, &cfg);
+        on_min_ms = on_min_ms.min(t.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(
+            signature(&r),
+            sig_off,
+            "tracing changed the computation — telemetry must observe, never steer"
+        );
+    }
+    let overhead = on_min_ms / off_min_ms;
+    println!(
+        "perf_telemetry: tracing on: min {on_min_ms:.1} ms, overhead {overhead:.3}x \
+         (bound {MAX_OVERHEAD}x)"
+    );
+    assert!(
+        overhead <= MAX_OVERHEAD,
+        "tracing overhead {overhead:.3}x exceeds the {MAX_OVERHEAD}x bound \
+         ({on_min_ms:.1} ms on vs {off_min_ms:.1} ms off)"
+    );
+
+    // Snapshot the trace before the fleet phase: only the co-opt runs
+    // have written, so the engine roll-up gauges are exact fixtures
+    // (the fleet remapper's own searches would otherwise mix in).
+    telemetry::flush();
+    let (coopt_records, _) = telemetry::read_trace(&trace).expect("read co-opt trace");
+    let gauges = |plane: &str, name: &str| -> Vec<f64> {
+        coopt_records
+            .iter()
+            .filter(|r| r.kind == "g")
+            .filter(|r| r.json.get("plane").and_then(|v| v.as_str().ok()) == Some(plane))
+            .filter(|r| r.json.get("name").and_then(|v| v.as_str().ok()) == Some(name))
+            .filter_map(|r| r.json.get("val").and_then(|v| v.as_f64().ok()))
+            .collect()
+    };
+    let stage2_totals = gauges("engine", "stage2_total");
+    let stage3_totals = gauges("engine", "stage3_total");
+    assert_eq!(stage2_totals.len(), TIMED_RUNS, "one stage2_total gauge per traced run");
+    assert!(
+        stage2_totals.iter().all(|&v| v == sig_off.engine_stage2 as f64),
+        "stage2_total gauges {stage2_totals:?} disagree with the untraced run's {}",
+        sig_off.engine_stage2
+    );
+    assert!(
+        stage3_totals.iter().all(|&v| v == sig_off.engine_stage3 as f64),
+        "stage3_total gauges {stage3_totals:?} disagree with the untraced run's {}",
+        sig_off.engine_stage3
+    );
+    // Stage-3 share of stage-2 survivors — deterministic at threads = 1,
+    // so the trajectory gates it like any other exact fixture.
+    let stage3_pct = 100.0 * sig_off.engine_stage3 as f64 / sig_off.engine_stage2.max(1) as f64;
+
+    // 4. one traced fleet scenario (in-process threads share this
+    // recorder): mix-flip drives drift → replan → epoch adoption plus
+    // per-batch spans and the merged latency-histogram event.
+    let outcome = run_scenario(Scenario::MixFlip, 2, &dir.join("fleet"), None)
+        .expect("traced mix-flip scenario");
+    assert_eq!(outcome.stats.digest, outcome.baseline_digest, "traced digest moved");
+    telemetry::flush();
+
+    let (records, skipped) = telemetry::read_trace(&trace).expect("read trace");
+    let summary = check_trace(&records, skipped);
+    assert!(
+        summary.violations.is_empty(),
+        "trace violations:\n  {}",
+        summary.violations.join("\n  ")
+    );
+    assert_eq!(summary.skipped, 0, "clean single-process trace has no torn lines");
+    for plane in ["engine", "search", "fleet"] {
+        assert!(
+            summary.planes.iter().any(|p| p == plane),
+            "plane `{plane}` missing from the trace (got {:?})",
+            summary.planes
+        );
+    }
+    let plane_count = |plane: &str| -> u64 {
+        records
+            .iter()
+            .filter(|r| r.json.get("plane").and_then(|v| v.as_str().ok()) == Some(plane))
+            .count() as u64
+    };
+
+    let hist = merged_latency_hist(&records);
+    assert!(hist.count() > 0, "traced fleet scenario produced no latency-histogram events");
+    let p99_ms = hist.quantile(99.0);
+    println!(
+        "perf_telemetry: trace {} records, planes [{}], stage3/stage2 {stage3_pct:.1}%, \
+         fleet p99 {p99_ms:.3} ms over {} samples",
+        summary.records,
+        summary.planes.join(", "),
+        hist.count()
+    );
+
+    let fields: Vec<(String, Json)> = vec![
+        ("bench".into(), Json::str("perf_telemetry")),
+        ("network".into(), Json::str("mlp-m")),
+        ("timed_runs".into(), Json::int(TIMED_RUNS as u64)),
+        ("coopt_off_min_ms".into(), Json::num(off_min_ms)),
+        ("coopt_on_min_ms".into(), Json::num(on_min_ms)),
+        ("telemetry_overhead_ratio".into(), Json::num(overhead)),
+        ("signature_match".into(), Json::Bool(true)),
+        ("trace_records".into(), Json::int(summary.records as u64)),
+        ("trace_spans".into(), Json::int(summary.spans as u64)),
+        ("trace_violations".into(), Json::int(summary.violations.len() as u64)),
+        ("records_engine".into(), Json::int(plane_count("engine"))),
+        ("records_search".into(), Json::int(plane_count("search"))),
+        ("records_fleet".into(), Json::int(plane_count("fleet"))),
+        ("span_engine_stage3_pct".into(), Json::num(stage3_pct)),
+        ("fleet_batch_p99_ms_hist".into(), Json::num(p99_ms)),
+        ("fleet_hist_count".into(), Json::int(hist.count())),
+    ];
+    interstellar::bench::emit(fields).expect("emit perf trajectory");
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "perf_telemetry OK (tracing-on bits identical, {overhead:.3}x overhead within \
+         {MAX_OVERHEAD}x, trace schema-valid with zero orphaned spans)"
+    );
+}

@@ -22,7 +22,7 @@ use crate::netopt::{
 use crate::nn::{network, Network};
 use crate::orchestrator::{
     orchestrate, run_coopt_shard_streamed, run_pareto_shard_streamed, BoundsLink, MergedSweep,
-    OrchestrateConfig, SweepMode,
+    OrchestrateConfig, SweepMode, TaskOutcome,
 };
 use crate::pareto::{
     merge_all_frontiers, pareto_optimize, pareto_optimize_shard, FrontierCheckpoint,
@@ -31,6 +31,8 @@ use crate::pareto::{
 use crate::search::{
     default_threads, optimize_layer, optimize_network, search_hierarchy, SearchOpts,
 };
+use crate::telemetry;
+use crate::util::json::Json;
 use crate::util::{fmt_sig, Args};
 
 const USAGE: &str = "interstellar — Halide-schedule analysis of DNN accelerators (ASPLOS'20 reproduction)
@@ -139,6 +141,14 @@ COMMANDS:
                   pareto/remap companions, the perf-trajectory table) as
                   CSV files in DIR (default report-artifacts/) in one
                   command; --smoke shrinks grids/caps for quick runs
+  trace-report    [--trace PATH] [--check] [--require-planes P1,P2,..]
+                  explain a telemetry trace written under
+                  INTERSTELLAR_TRACE: self-time profile tree, per-worker
+                  utilization, straggler and per-shard task tables, and
+                  the merged serving-latency histogram; --check validates
+                  instead of rendering (schema-valid records, zero
+                  orphaned spans, --require-planes coverage — the CI
+                  full-tier gate; see OBSERVABILITY.md)
   bench-report    [--history PATH] [--bench NAME] [--metric SUBSTR]
                   [--last N] [--check]
                   per-metric perf-trajectory tables (baseline median,
@@ -446,7 +456,47 @@ pub fn run(args: Args) -> Result<()> {
                     .with_context(|| format!("writing merged checkpoint {out}"))?;
             }
             if args.has_flag("json") {
-                println!("{merged_json}");
+                // Envelope: the merged checkpoint plus per-task
+                // scheduling telemetry (shard class, 1-based attempt,
+                // outcome, wall) — retries are distinguishable from
+                // first launches without parsing worker filenames.
+                let tasks: Vec<Json> = report
+                    .tasks
+                    .iter()
+                    .map(|t| {
+                        Json::Obj(vec![
+                            ("seq".into(), Json::int(t.seq as u64)),
+                            (
+                                "shard".into(),
+                                Json::str(format!("{}/{}", t.class.0, t.class.1)),
+                            ),
+                            ("attempt".into(), Json::int(t.attempt as u64)),
+                            (
+                                "outcome".into(),
+                                Json::str(match t.outcome {
+                                    TaskOutcome::Done => "done",
+                                    TaskOutcome::Failed => "failed",
+                                    TaskOutcome::Cancelled => "cancelled",
+                                }),
+                            ),
+                            ("wall_ms".into(), Json::num(t.wall.as_secs_f64() * 1e3)),
+                        ])
+                    })
+                    .collect();
+                let envelope = Json::Obj(vec![
+                    (
+                        "merged".into(),
+                        Json::parse(&merged_json).context("re-parse merged checkpoint")?,
+                    ),
+                    ("tasks".into(), Json::Arr(tasks)),
+                    ("launched".into(), Json::int(report.launched as u64)),
+                    ("failures".into(), Json::int(report.failures as u64)),
+                    ("steals".into(), Json::int(report.steals as u64)),
+                    ("cancelled".into(), Json::int(report.cancelled as u64)),
+                ]);
+                let mut out = String::new();
+                envelope.write(&mut out);
+                println!("{out}");
             } else {
                 match &report.merged {
                     MergedSweep::CoOpt(c) => match c.winner_result() {
@@ -871,6 +921,50 @@ pub fn run(args: Args) -> Result<()> {
                     "perf regression(s) against the historical distribution:\n{}",
                     detail.join("\n")
                 );
+            }
+        }
+        "trace-report" => {
+            let default_trace =
+                std::env::var(telemetry::TRACE_ENV).unwrap_or_else(|_| "trace.jsonl".into());
+            let path = PathBuf::from(args.get_str("trace", &default_trace));
+            let (records, skipped) = telemetry::read_trace(&path)
+                .with_context(|| format!("read trace {}", path.display()))?;
+            if args.has_flag("check") {
+                let summary = telemetry::report::check_trace(&records, skipped);
+                let mut problems = summary.violations.clone();
+                if summary.records == 0 {
+                    problems.push("trace has no records".into());
+                }
+                for plane in args
+                    .get_str("require-planes", "")
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|p| !p.is_empty())
+                {
+                    if !summary.planes.iter().any(|p| p == plane) {
+                        problems.push(format!("required plane `{plane}` has no records"));
+                    }
+                }
+                if !problems.is_empty() {
+                    bail!(
+                        "trace-report --check failed on {} ({} problem(s)):\n  {}",
+                        path.display(),
+                        problems.len(),
+                        problems.join("\n  ")
+                    );
+                }
+                println!(
+                    "trace ok: {} records ({} skipped line(s)), {} worker(s), {} span(s), \
+                     {} counter/gauge/event(s), planes [{}]",
+                    summary.records,
+                    summary.skipped,
+                    summary.workers,
+                    summary.spans,
+                    summary.points,
+                    summary.planes.join(", ")
+                );
+            } else {
+                print!("{}", telemetry::report::render(&records, skipped));
             }
         }
         "report" if args.has_flag("all") => {

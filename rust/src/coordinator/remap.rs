@@ -77,6 +77,8 @@ use crate::pareto::{
     pareto_optimize_arches_seeded, pareto_optimize_seeded, ParetoConfig, PlanSelector,
 };
 use crate::search::{HierarchyResult, LayerOpt, SearchOpts};
+use crate::telemetry;
+use crate::util::json::Json;
 
 /// When to re-optimize: window size and drift threshold, plus the
 /// search budget each re-optimization is allowed.
@@ -470,6 +472,12 @@ impl Remapper {
             // quiet boundary: pay off a deferred exact search, if owed
             return self.flush_pending();
         }
+        telemetry::event("fleet", "drift", || {
+            vec![
+                ("drift".into(), Json::num(self.drift())),
+                ("threshold".into(), Json::num(self.policy.drift)),
+            ]
+        });
         // a fresh drift supersedes any owed exact search — its plan
         // would be replaced by this remap's anyway
         self.pending_exact = None;

@@ -83,7 +83,10 @@ use anyhow::Result;
 use super::remap::{MappingPlan, Remapper};
 use crate::runtime::Runtime;
 use crate::search::parallel_map;
-use crate::util::{stats, XorShift};
+use crate::telemetry;
+use crate::telemetry::hist::LogHistogram;
+use crate::util::json::Json;
+use crate::util::XorShift;
 
 /// One serving request: which artifact to run (inputs are generated
 /// per-request from the seed).
@@ -121,11 +124,14 @@ pub struct ServeStats {
     /// Digests of disjoint shards `wrapping_add` to the whole-trace
     /// digest (module docs, "Determinism contract").
     pub digest: u64,
-    /// Per-request latencies in trace order, milliseconds — the raw
-    /// samples behind the percentile fields, kept so a fleet controller
-    /// can merge workers' latencies before taking fleet-level
-    /// percentiles (percentiles do not compose; raw samples do).
-    pub latencies_ms: Vec<f64>,
+    /// Log-bucketed latency histogram, milliseconds — the samples behind
+    /// the percentile fields. Histograms merge exactly (integer bucket
+    /// counts; [`LogHistogram::merge`]), so a fleet controller combines
+    /// workers' histograms before taking fleet-level percentiles
+    /// (percentiles do not compose; mergeable histograms do) in bounded
+    /// memory, where the raw `Vec<f64>` this replaced grew with the
+    /// trace length.
+    pub latency_hist: LogHistogram,
     /// Worker shards retried on a fresh executor replica after a
     /// mid-batch executor failure (module docs, "Failover").
     pub failovers: usize,
@@ -375,7 +381,8 @@ where
     let slots: Vec<Mutex<Option<E>>> = (0..threads).map(|_| Mutex::new(None)).collect();
 
     let t0 = Instant::now();
-    let mut lat = Vec::with_capacity(n);
+    let mut hist = LogHistogram::new();
+    let mut completed = 0usize;
     let mut checksum = 0.0f64;
     let mut digest = 0u64;
     let mut batches = 0usize;
@@ -387,6 +394,12 @@ where
     let mut start = 0usize;
     while start < n {
         let end = (start + batch).min(n);
+        let bspan = telemetry::span_with("fleet", "batch", || {
+            vec![
+                ("batch".into(), Json::int(batches as u64)),
+                ("requests".into(), Json::int((end - start) as u64)),
+            ]
+        });
         // Index shards — requests are served in place, never cloned.
         let shards: Vec<(usize, Vec<usize>)> = (0..threads)
             .map(|w| (w, (start + w..end).step_by(threads).collect()))
@@ -429,6 +442,12 @@ where
                 // digest are unaffected.
                 Err(first) => {
                     failovers += 1;
+                    telemetry::event("fleet", "failover", || {
+                        vec![
+                            ("worker".into(), Json::int(w as u64)),
+                            ("batch".into(), Json::int(batches as u64)),
+                        ]
+                    });
                     let mut slot = slots[w].lock().expect("worker executor slot");
                     *slot = None; // discard the suspect replica, if any
                     *slot = Some(make().map_err(|e| {
@@ -466,7 +485,8 @@ where
                 .index_base
                 .wrapping_add(((start + j) as u64).wrapping_mul(cfg.index_stride.max(1)));
             digest = digest.wrapping_add(digest_term(global, s));
-            lat.push(dt);
+            hist.record(dt);
+            completed += 1;
             checksum += s;
         }
         batches += 1;
@@ -480,6 +500,7 @@ where
                 remaps += 1;
             }
         }
+        drop(bspan);
         start = end;
     }
     if let Some(h) = &mut hook {
@@ -492,15 +513,21 @@ where
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    telemetry::event("fleet", "latency_hist", || {
+        vec![
+            ("hist".into(), hist.to_json()),
+            ("count".into(), Json::int(hist.count())),
+        ]
+    });
 
     Ok(ServeStats {
-        completed: lat.len(),
+        completed,
         wall_s: wall,
-        mean_latency_ms: stats::mean(&lat),
-        p50_latency_ms: stats::percentile(&lat, 50.0),
-        p95_latency_ms: stats::percentile(&lat, 95.0),
-        p99_latency_ms: stats::percentile(&lat, 99.0),
-        rps: lat.len() as f64 / wall,
+        mean_latency_ms: hist.mean(),
+        p50_latency_ms: hist.quantile(50.0),
+        p95_latency_ms: hist.quantile(95.0),
+        p99_latency_ms: hist.quantile(99.0),
+        rps: completed as f64 / wall,
         checksum,
         digest,
         failovers,
@@ -508,7 +535,7 @@ where
         remaps,
         fast_remaps,
         plan_epoch: active.map(|p| p.epoch),
-        latencies_ms: lat,
+        latency_hist: hist,
     })
 }
 

@@ -79,8 +79,9 @@ use crate::coordinator::trace::TraceSpec;
 use crate::netopt::{SeedTable, ShardCheckpoint};
 use crate::orchestrator::{append_framed, launcher_command};
 use crate::pareto::FrontierCheckpoint;
+use crate::telemetry;
+use crate::telemetry::hist::LogHistogram;
 use crate::util::json::Json;
-use crate::util::stats;
 
 /// Cap on any single pacing sleep (arrival gaps are scenario shapes, not
 /// real-time replays — tests must stay fast).
@@ -304,9 +305,10 @@ pub struct WorkerReport {
     /// Highest broadcast plan epoch adopted (`None` if none was ever
     /// published while this worker ran).
     pub plan_epoch: Option<usize>,
-    /// Raw per-request latencies, shard order, milliseconds (percentiles
-    /// do not compose across workers; raw samples do).
-    pub latencies_ms: Vec<f64>,
+    /// Log-bucketed latency histogram, milliseconds (percentiles do not
+    /// compose across workers; histograms merge exactly, in bounded
+    /// memory — [`LogHistogram::merge`]).
+    pub latency_hist: LogHistogram,
 }
 
 impl WorkerReport {
@@ -325,10 +327,7 @@ impl WorkerReport {
                     None => Json::Null,
                 },
             ),
-            (
-                "latencies_ms".into(),
-                Json::Arr(self.latencies_ms.iter().map(|&v| Json::num(v)).collect()),
-            ),
+            ("latency_hist".into(), self.latency_hist.to_json()),
         ])
     }
 
@@ -342,10 +341,8 @@ impl WorkerReport {
             Json::Null => None,
             e => Some(e.as_usize()?),
         };
-        let mut latencies_ms = Vec::new();
-        for l in v.field("latencies_ms")?.as_arr()? {
-            latencies_ms.push(l.as_f64()?);
-        }
+        let latency_hist = LogHistogram::from_json(v.field("latency_hist")?)
+            .context("parse worker latency histogram")?;
         Ok(WorkerReport {
             worker: v.field("worker")?.as_usize()?,
             completed: v.field("completed")?.as_usize()?,
@@ -354,7 +351,7 @@ impl WorkerReport {
             failovers: v.field("failovers")?.as_usize()?,
             batches: v.field("batches")?.as_usize()?,
             plan_epoch,
-            latencies_ms,
+            latency_hist,
         })
     }
 
@@ -384,6 +381,15 @@ struct FleetHook {
 impl FleetHook {
     fn poll_epoch(&mut self) {
         if let Some(e) = latest_epoch(&self.plans) {
+            if self.epoch.map_or(true, |cur| e > cur) {
+                let worker = self.worker;
+                telemetry::event("fleet", "epoch_adopt", || {
+                    vec![
+                        ("worker".into(), Json::int(worker as u64)),
+                        ("epoch".into(), Json::int(e as u64)),
+                    ]
+                });
+            }
             // Adopt the highest epoch seen; epochs are monotone so this
             // never moves backwards.
             self.epoch = Some(self.epoch.map_or(e, |cur| cur.max(e)));
@@ -501,7 +507,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
         failovers: st.failovers,
         batches: st.batches,
         plan_epoch: hook.epoch,
-        latencies_ms: st.latencies_ms,
+        latency_hist: st.latency_hist,
     };
     // Write-then-rename so a reader never sees a half-written report.
     let path = report_path(&cfg.dir, cfg.worker);
@@ -632,7 +638,8 @@ pub struct FleetStats {
     pub digest: u64,
     /// Sum of worker checksums (association-dependent; see module docs).
     pub checksum: f64,
-    /// Fleet latency percentiles over the concatenated raw samples, ms.
+    /// Fleet latency percentiles over the histogram-merged worker
+    /// samples, ms.
     pub p50_ms: f64,
     /// p99, ms.
     pub p99_ms: f64,
@@ -837,6 +844,13 @@ fn spawn_remapper(
                     energy_pj: plan.winner.opt.total_energy_pj,
                     fast: plan.fast,
                 };
+                telemetry::event("fleet", "replan", || {
+                    vec![
+                        ("epoch".into(), Json::int(rec.epoch as u64)),
+                        ("energy_pj".into(), Json::num(rec.energy_pj)),
+                        ("fast".into(), Json::Bool(rec.fast)),
+                    ]
+                });
                 // A failed broadcast only delays adoption (workers keep
                 // their current epoch) — never fail the fleet for it.
                 let _ = append_framed(&plans, &rec.to_json());
@@ -885,6 +899,12 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetStats> {
     if cfg.workers == 0 {
         bail!("fleet needs at least one worker");
     }
+    let _fspan = telemetry::span_with("fleet", "run_fleet", || {
+        vec![
+            ("workers".into(), Json::int(cfg.workers as u64)),
+            ("requests".into(), Json::int(cfg.spec.n as u64)),
+        ]
+    });
     std::fs::create_dir_all(&cfg.dir)
         .with_context(|| format!("create fleet dir {}", cfg.dir.display()))?;
     let mix = mix_path(&cfg.dir);
@@ -964,6 +984,9 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetStats> {
         if gate_open {
             for w in std::mem::take(&mut pending_respawn) {
                 respawns += 1;
+                telemetry::event("fleet", "respawn", || {
+                    vec![("worker".into(), Json::int(w as u64))]
+                });
                 handles[w] = Some(spawn_worker(cfg, w, None)?);
             }
         }
@@ -992,12 +1015,14 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetStats> {
         None => (0, 0, None),
     };
 
-    // Merge.
+    // Merge. Latencies merge as histograms (exact integer bucket
+    // addition, any order), so the controller's memory is bounded by the
+    // bucket count, not the trace length.
     let mut digest = 0u64;
     let mut checksum = 0.0f64;
     let mut completed = 0usize;
     let mut failovers = 0usize;
-    let mut latencies: Vec<f64> = Vec::new();
+    let mut latency_hist = LogHistogram::new();
     let mut worker_epochs = Vec::with_capacity(cfg.workers);
     for w in 0..cfg.workers {
         let report = WorkerReport::load(&cfg.dir, w)?;
@@ -1008,19 +1033,26 @@ pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetStats> {
         checksum += report.checksum;
         completed += report.completed;
         failovers += report.failovers;
-        latencies.extend_from_slice(&report.latencies_ms);
+        latency_hist.merge(&report.latency_hist);
         worker_epochs.push(report.plan_epoch);
     }
+    telemetry::event("fleet", "latency_hist", || {
+        vec![
+            ("hist".into(), latency_hist.to_json()),
+            ("count".into(), Json::int(latency_hist.count())),
+            ("merged".into(), Json::Bool(true)),
+        ]
+    });
 
     Ok(FleetStats {
         workers: cfg.workers,
         completed,
         digest,
         checksum,
-        p50_ms: stats::percentile(&latencies, 50.0),
-        p99_ms: stats::percentile(&latencies, 99.0),
-        p999_ms: stats::percentile(&latencies, 99.9),
-        mean_ms: stats::mean(&latencies),
+        p50_ms: latency_hist.quantile(50.0),
+        p99_ms: latency_hist.quantile(99.0),
+        p999_ms: latency_hist.quantile(99.9),
+        mean_ms: latency_hist.mean(),
         failovers,
         remaps,
         fast_remaps,

@@ -9,6 +9,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use super::scenarios::{run_scenario, Scenario};
 use super::*;
 use crate::netopt::NetOptStats;
+use crate::telemetry::hist::LogHistogram;
 use crate::util::prop::for_cases;
 
 static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
@@ -92,6 +93,10 @@ fn mix_and_plan_records_round_trip_through_the_framed_log() {
 
 #[test]
 fn worker_reports_round_trip_with_full_u64_digests() {
+    let mut latency_hist = LogHistogram::new();
+    for v in [0.25, 1.5, 0.75] {
+        latency_hist.record(v);
+    }
     let report = WorkerReport {
         worker: 2,
         completed: 24,
@@ -100,13 +105,13 @@ fn worker_reports_round_trip_with_full_u64_digests() {
         failovers: 1,
         batches: 3,
         plan_epoch: Some(4),
-        latencies_ms: vec![0.25, 1.5, 0.75],
+        latency_hist,
     };
     let round = WorkerReport::from_json(&report.to_json().to_string()).unwrap();
     assert_eq!(round.digest, report.digest);
     assert_eq!(round.checksum.to_bits(), report.checksum.to_bits());
     assert_eq!(round.plan_epoch, Some(4));
-    assert_eq!(round.latencies_ms, report.latencies_ms);
+    assert_eq!(round.latency_hist, report.latency_hist);
 
     let none = WorkerReport {
         plan_epoch: None,

@@ -51,6 +51,10 @@
 //!   appended to a torn-write-safe `bench_history.jsonl`, with
 //!   trajectory views and the median/MAD regression rule behind the
 //!   `bench-report --check` CI gate;
+//! - [`telemetry`] — zero-cost-when-disabled structured tracing: spans,
+//!   counters, gauges, and mergeable log-bucketed latency histograms
+//!   into an append-only `trace.jsonl` shared across fleet and
+//!   orchestrator processes, explained by the `trace-report` CLI;
 //! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
 //!   artifacts (the request-path compute; Python is build-time only);
 //! - [`coordinator`] — CLI, sweep orchestration, reports.
@@ -75,5 +79,6 @@ pub mod pareto;
 pub mod runtime;
 pub mod search;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod xmodel;

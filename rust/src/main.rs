@@ -2,8 +2,16 @@
 
 use anyhow::Result;
 use interstellar::coordinator::cli;
+use interstellar::telemetry;
 use interstellar::util::Args;
 
 fn main() -> Result<()> {
-    cli::run(Args::from_env())
+    // Tracing is opt-in via INTERSTELLAR_TRACE; spawned workers inherit
+    // the environment, so one env var traces a whole fleet/sweep. The
+    // final flush runs on the error path too — a failing command still
+    // leaves a readable trace.
+    telemetry::init_from_env();
+    let result = cli::run(Args::from_env());
+    telemetry::flush();
+    result
 }

@@ -118,6 +118,8 @@ use crate::nn::Network;
 use crate::search::{
     optimize_layer_seeded, parallel_map, HierarchyResult, LayerOpt, NetworkOpt, SearchOpts,
 };
+use crate::telemetry;
+use crate::util::json::Json;
 
 /// Configuration of one [`co_optimize`] run.
 #[derive(Debug, Clone)]
@@ -403,10 +405,20 @@ struct NetRun<'a> {
     /// Best-known per-layer-shape energies (from completed feasible
     /// points), used to seed layer searches on other architectures.
     seeds: &'a Mutex<HashMap<LayerKey, f64>>,
+    /// Telemetry parent for per-point spans: worker threads have empty
+    /// span stacks, so their point spans attach under the sweep's root
+    /// span explicitly (0 = no sweep span; telemetry never steers).
+    trace_parent: u64,
 }
 
 impl NetRun<'_> {
     fn evaluate_point(&self, idx: usize, arch: &Arch, cache: &mut DivisorCache) -> PointReport {
+        let _pspan = telemetry::span_under("search", "point", self.trace_parent, || {
+            vec![
+                ("idx".into(), Json::int(idx as u64)),
+                ("arch".into(), Json::str(&arch.name)),
+            ]
+        });
         let (floor_l, suffix) = self.profile.floors(arch, self.cost);
         // The cycles suffix is only consulted by the vector bound.
         let cycle_suffix = match self.mode {
@@ -436,6 +448,7 @@ impl NetRun<'_> {
             // only paid its compulsory floor, the point cannot beat the
             // incumbent.
             if total_e + suffix[li] > inc * (1.0 + PRUNE_SLACK) {
+                telemetry::counter("search", "points_pruned", 1);
                 return PointReport {
                     eval: PointEval::Pruned,
                     engine,
@@ -448,6 +461,7 @@ impl NetRun<'_> {
             // cycle floors — is strictly dominated by a completed point.
             if let (NetMode::Frontier(gate), Some(cyc)) = (&self.mode, &cycle_suffix) {
                 if gate.dominated(total_e + suffix[li], total_c + cyc[li]) {
+                    telemetry::counter("search", "points_pruned", 1);
                     return PointReport {
                         eval: PointEval::Pruned,
                         engine,
@@ -484,6 +498,9 @@ impl NetRun<'_> {
                         f64::INFINITY
                     };
                     searches += 1;
+                    let lspan = telemetry::span_with("engine", "layer_search", || {
+                        vec![("layer".into(), Json::int(li as u64))]
+                    });
                     let (mut lo, snap) = optimize_layer_seeded(
                         &pl.shape,
                         arch,
@@ -494,6 +511,7 @@ impl NetRun<'_> {
                         bound0,
                         cache,
                     );
+                    drop(lspan);
                     engine.absorb(&snap);
                     // The borrowed cross-architecture seed is not
                     // admissible at the network level: if it was the
@@ -506,6 +524,12 @@ impl NetRun<'_> {
                     };
                     if layer_bnb && seed < net_bound && clipped {
                         reruns += 1;
+                        let rspan = telemetry::span_with("engine", "layer_search", || {
+                            vec![
+                                ("layer".into(), Json::int(li as u64)),
+                                ("rerun".into(), Json::Bool(true)),
+                            ]
+                        });
                         let (lo2, snap2) = optimize_layer_seeded(
                             &pl.shape,
                             arch,
@@ -516,12 +540,14 @@ impl NetRun<'_> {
                             net_bound,
                             cache,
                         );
+                        drop(rspan);
                         engine.absorb(&snap2);
                         lo = lo2;
                     }
                     if lo.is_none() && layer_bnb && net_bound.is_finite() {
                         // Unmappable or fully pruned under an admissible
                         // bound — either way the point cannot win.
+                        telemetry::counter("search", "points_pruned", 1);
                         return PointReport {
                             eval: PointEval::Pruned,
                             engine,
@@ -572,7 +598,23 @@ impl NetRun<'_> {
         let feasible = opt.unmapped == 0 && meets_tops;
         if feasible && !matches!(self.mode, NetMode::Off) {
             match &self.mode {
-                NetMode::Scalar(inc) => inc.observe(opt.total_energy_pj),
+                NetMode::Scalar(inc) => {
+                    // The pre-observe load is telemetry-only: `observe`
+                    // still makes the real CAS decision, so the bound's
+                    // bits are unchanged with tracing on. Racy reads can
+                    // only under-report tightenings, never misreport one.
+                    let before = inc.get();
+                    inc.observe(opt.total_energy_pj);
+                    if opt.total_energy_pj < before {
+                        telemetry::event("search", "bound_tighten", || {
+                            vec![
+                                ("idx".into(), Json::int(idx as u64)),
+                                ("from_pj".into(), Json::num(before)),
+                                ("to_pj".into(), Json::num(opt.total_energy_pj)),
+                            ]
+                        });
+                    }
+                }
                 NetMode::Frontier(gate) => {
                     gate.observe(idx, opt.total_energy_pj, opt.total_cycles)
                 }
@@ -587,6 +629,17 @@ impl NetRun<'_> {
                     }
                 }
             }
+        }
+        if telemetry::enabled() {
+            // Live per-stage engine counters, emitted from the worker
+            // thread as each point completes (pruned points' residual
+            // counts are folded into the end-of-run gauges).
+            telemetry::counter("engine", "stage2", engine.stage2);
+            telemetry::counter("engine", "fit_rejected", engine.fit_rejected);
+            telemetry::counter("engine", "stage3", engine.stage3);
+            telemetry::counter("engine", "stage3_pruned", engine.pruned);
+            telemetry::counter("engine", "full", engine.full);
+            telemetry::counter("search", "points_evaluated_full", 1);
         }
         PointReport {
             eval: PointEval::Complete {
@@ -623,6 +676,7 @@ pub fn evaluate_network(
         min_tops: None,
         clock_ghz: 1.0,
         seeds: &seeds,
+        trace_parent: 0,
     };
     let mut cache = DivisorCache::new();
     match run.evaluate_point(0, arch, &mut cache).eval {
@@ -733,6 +787,12 @@ pub(crate) fn run_points_gated(
         None if cfg.prune == PruneMode::BranchAndBound => NetMode::Scalar(incumbent),
         None => NetMode::Off,
     };
+    let sweep_span = telemetry::span_with("search", "run_points", || {
+        vec![
+            ("candidates".into(), Json::int(n as u64)),
+            ("network".into(), Json::str(&net.name)),
+        ]
+    });
     let run = NetRun {
         profile: &profile,
         df: &cfg.df,
@@ -743,6 +803,7 @@ pub(crate) fn run_points_gated(
         min_tops: cfg.min_tops,
         clock_ghz: cfg.clock_ghz,
         seeds: &seeds,
+        trace_parent: sweep_span.id(),
     };
 
     // Scout priming: evaluate the heuristically best feasible candidate
@@ -770,6 +831,12 @@ pub(crate) fn run_points_gated(
     let mut reports: Vec<(usize, PointReport)> = Vec::new();
     if let Some(pos) = scout {
         let (i, arch) = &cands[pos];
+        telemetry::event("search", "prime", || {
+            vec![
+                ("idx".into(), Json::int(*i as u64)),
+                ("arch".into(), Json::str(&arch.name)),
+            ]
+        });
         let mut cache = DivisorCache::new();
         reports.push((*i, run.evaluate_point(*i, arch, &mut cache)));
     }
@@ -827,6 +894,19 @@ pub(crate) fn run_points_gated(
     // contracts both rely on `rank_order` being reconstructible from any
     // subset of points.
     ranked.sort_by(rank_order);
+    if telemetry::enabled() {
+        // End-of-run roll-ups: totals including pruned points' residual
+        // engine work, which the live per-point counters elide.
+        telemetry::gauge("engine", "stage2_total", stats.engine.stage2 as f64);
+        telemetry::gauge("engine", "fit_rejected_total", stats.engine.fit_rejected as f64);
+        telemetry::gauge("engine", "stage3_total", stats.engine.stage3 as f64);
+        telemetry::gauge("engine", "stage3_pruned_total", stats.engine.pruned as f64);
+        telemetry::gauge("engine", "full_total", stats.engine.full as f64);
+        telemetry::gauge("search", "points_evaluated_full", stats.evaluated_full as f64);
+        telemetry::gauge("search", "points_pruned", stats.pruned as f64);
+        telemetry::gauge("search", "incumbent_pj", incumbent.get());
+    }
+    drop(sweep_span);
     let seeds = seeds.into_inner().expect("netopt seeds lock");
     RunOutput {
         ranked,

@@ -57,6 +57,8 @@ use anyhow::{bail, Context, Result};
 use crate::netopt::shard::{gcd, MAX_MERGE_GRANULARITY};
 use crate::netopt::{merge_all, ShardCheckpoint};
 use crate::pareto::{merge_all_frontiers, FrontierCheckpoint};
+use crate::telemetry;
+use crate::util::json::Json;
 
 /// Which sweep the workers run — selects the subcommand, the checkpoint
 /// format parsed back, and the merge used at the end.
@@ -192,6 +194,9 @@ pub struct TaskRecord {
     pub seq: usize,
     /// The shard class `(index, nshards)` this worker ran.
     pub class: (usize, usize),
+    /// 1-based attempt number for this class at launch: whole-class
+    /// retries bump it, a re-split's sub-classes start back at 1.
+    pub attempt: usize,
     /// How it ended.
     pub outcome: TaskOutcome,
     /// Wall time from spawn to reap.
@@ -236,10 +241,14 @@ pub struct OrchestrateReport {
 struct RunningTask {
     seq: usize,
     class: (usize, usize),
+    attempt: usize,
     child: Child,
     checkpoint: PathBuf,
     started: Instant,
     split: bool,
+    /// Task lifecycle span (dispatch → reap); ends with the outcome, or
+    /// plainly on drop, so a killed sweep never strands an open span.
+    span: telemetry::ManualSpan,
 }
 
 enum Parsed {
@@ -275,6 +284,13 @@ pub fn orchestrate(cfg: &OrchestrateConfig) -> Result<OrchestrateReport> {
         .with_context(|| format!("create orchestrator dir {}", cfg.dir.display()))?;
     let bounds_path = cfg.bounds_interval.map(|_| cfg.dir.join("bounds.jsonl"));
     let t0 = Instant::now();
+    let ospan = telemetry::begin("orchestrator", "orchestrate", || {
+        vec![
+            ("mode".into(), Json::str(cfg.mode.subcommand())),
+            ("workers".into(), Json::int(cfg.workers as u64)),
+            ("nshards".into(), Json::int(cfg.nshards as u64)),
+        ]
+    });
 
     let mut st = State {
         pending: (0..cfg.nshards).map(|i| (i, cfg.nshards)).collect(),
@@ -291,7 +307,7 @@ pub fn orchestrate(cfg: &OrchestrateConfig) -> Result<OrchestrateReport> {
         fault_fired: false,
     };
 
-    let looped = run_loop(cfg, bounds_path.as_deref(), &mut st);
+    let looped = run_loop(cfg, bounds_path.as_deref(), &mut st, ospan.id());
     // Safety net: no error path may leak worker processes.
     for t in &mut st.running {
         let _ = t.child.kill();
@@ -300,6 +316,9 @@ pub fn orchestrate(cfg: &OrchestrateConfig) -> Result<OrchestrateReport> {
     looped?;
 
     let mut aggregate_evaluated_full = 0usize;
+    let mspan = telemetry::begin_under("orchestrator", "merge", ospan.id(), || {
+        vec![("checkpoints".into(), Json::int(st.done.len() as u64))]
+    });
     let merged = match cfg.mode {
         SweepMode::CoOpt => {
             let mut ckpts = Vec::with_capacity(st.done.len());
@@ -332,10 +351,19 @@ pub fn orchestrate(cfg: &OrchestrateConfig) -> Result<OrchestrateReport> {
         MergedSweep::CoOpt(c) => (c.nshards, c.shards.len()),
         MergedSweep::Pareto(c) => (c.nshards, c.shards.len()),
     };
+    drop(mspan);
     if covered != nshards {
         bail!("merged coverage incomplete: {covered}/{nshards} shards");
     }
 
+    ospan.end_with(|| {
+        vec![
+            ("launched".into(), Json::int(st.next_seq as u64)),
+            ("failures".into(), Json::int(st.failures as u64)),
+            ("steals".into(), Json::int(st.steals as u64)),
+            ("cancelled".into(), Json::int(st.cancelled as u64)),
+        ]
+    });
     Ok(OrchestrateReport {
         merged,
         tasks: st.tasks,
@@ -348,14 +376,19 @@ pub fn orchestrate(cfg: &OrchestrateConfig) -> Result<OrchestrateReport> {
     })
 }
 
-fn run_loop(cfg: &OrchestrateConfig, bounds: Option<&Path>, st: &mut State) -> Result<()> {
+fn run_loop(
+    cfg: &OrchestrateConfig,
+    bounds: Option<&Path>,
+    st: &mut State,
+    root: u64,
+) -> Result<()> {
     while !(st.pending.is_empty() && st.running.is_empty()) {
         // Launch up to the worker cap.
         while st.running.len() < cfg.workers {
             let Some(class) = st.pending.pop_front() else {
                 break;
             };
-            launch(cfg, bounds, st, class)?;
+            launch(cfg, bounds, st, class, root)?;
         }
 
         inject_fault(cfg, st);
@@ -370,9 +403,12 @@ fn run_loop(cfg: &OrchestrateConfig, bounds: Option<&Path>, st: &mut State) -> R
                 let _ = t.child.kill();
                 let _ = t.child.wait();
                 st.cancelled += 1;
+                t.span
+                    .end_with(|| vec![("outcome".into(), Json::str("cancelled"))]);
                 st.tasks.push(TaskRecord {
                     seq: t.seq,
                     class: t.class,
+                    attempt: t.attempt,
                     outcome: TaskOutcome::Cancelled,
                     wall: t.started.elapsed(),
                 });
@@ -421,12 +457,18 @@ fn launch(
     bounds: Option<&Path>,
     st: &mut State,
     class: (usize, usize),
+    root: u64,
 ) -> Result<()> {
     let seq = st.next_seq;
     st.next_seq += 1;
-    let checkpoint = cfg
-        .dir
-        .join(format!("task-{seq}-shard-{}of{}.json", class.0, class.1));
+    // 1-based attempt: `attempts` counts prior whole-class retries, so a
+    // relaunch is distinguishable from a first launch in the checkpoint
+    // filename, the task span, and `orchestrate --json`.
+    let attempt = st.attempts.get(&class).copied().unwrap_or(0) + 1;
+    let checkpoint = cfg.dir.join(format!(
+        "task-{seq}-shard-{}of{}-try{attempt}.json",
+        class.0, class.1
+    ));
     // A retry must not parse a stale file from a previous attempt.
     let _ = std::fs::remove_file(&checkpoint);
 
@@ -444,16 +486,26 @@ fn launch(
         args.push(seq.to_string());
     }
 
+    let span = telemetry::begin_under("orchestrator", "task", root, || {
+        vec![
+            ("seq".into(), Json::int(seq as u64)),
+            ("shard".into(), Json::str(format!("{}/{}", class.0, class.1))),
+            ("attempt".into(), Json::int(attempt as u64)),
+            ("mode".into(), Json::str(cfg.mode.subcommand())),
+        ]
+    });
     let mut cmd = launcher_command(&cfg.launchers, seq, &cfg.bin, cfg.mode.subcommand(), &args);
     match cmd.spawn() {
         Ok(child) => {
             st.running.push(RunningTask {
                 seq,
                 class,
+                attempt,
                 child,
                 checkpoint,
                 started: Instant::now(),
                 split: false,
+                span,
             });
             Ok(())
         }
@@ -462,9 +514,11 @@ fn launch(
             // treated like a worker failure so the class is retried or
             // re-split elsewhere instead of aborting the sweep.
             st.failures += 1;
+            span.end_with(|| vec![("outcome".into(), Json::str("spawn_failed"))]);
             st.tasks.push(TaskRecord {
                 seq,
                 class,
+                attempt,
                 outcome: TaskOutcome::Failed,
                 wall: Duration::ZERO,
             });
@@ -510,18 +564,24 @@ fn reap(cfg: &OrchestrateConfig, st: &mut State) -> Result<()> {
                         st.done.push(p);
                         st.done_classes.push(t.class);
                         st.done_walls.push(wall);
+                        t.span
+                            .end_with(|| vec![("outcome".into(), Json::str("done"))]);
                         st.tasks.push(TaskRecord {
                             seq: t.seq,
                             class: t.class,
+                            attempt: t.attempt,
                             outcome: TaskOutcome::Done,
                             wall,
                         });
                     }
                     None => {
                         st.failures += 1;
+                        t.span
+                            .end_with(|| vec![("outcome".into(), Json::str("failed"))]);
                         st.tasks.push(TaskRecord {
                             seq: t.seq,
                             class: t.class,
+                            attempt: t.attempt,
                             outcome: TaskOutcome::Failed,
                             wall,
                         });
@@ -567,6 +627,14 @@ fn speculate(cfg: &OrchestrateConfig, st: &mut State) {
     if t.started.elapsed().as_secs_f64() > cfg.straggler_factor * median {
         t.split = true;
         let class = t.class;
+        let elapsed = t.started.elapsed();
+        telemetry::event("orchestrator", "speculate", || {
+            vec![
+                ("shard".into(), Json::str(format!("{}/{}", class.0, class.1))),
+                ("split".into(), Json::int(cfg.steal_split as u64)),
+                ("elapsed_ms".into(), Json::num(elapsed.as_secs_f64() * 1e3)),
+            ]
+        });
         split_into(&mut st.pending, class, cfg.steal_split);
         st.steals += 1;
     }
@@ -575,11 +643,18 @@ fn speculate(cfg: &OrchestrateConfig, st: &mut State) {
 fn requeue(cfg: &OrchestrateConfig, st: &mut State, class: (usize, usize)) -> Result<()> {
     if cfg.steal && st.steals < cfg.max_steals && splittable(class, cfg.steal_split) {
         st.steals += 1;
+        telemetry::event("orchestrator", "steal", || {
+            vec![
+                ("shard".into(), Json::str(format!("{}/{}", class.0, class.1))),
+                ("split".into(), Json::int(cfg.steal_split as u64)),
+            ]
+        });
         split_into(&mut st.pending, class, cfg.steal_split);
         return Ok(());
     }
     let tries = st.attempts.entry(class).or_insert(0);
     *tries += 1;
+    let next_attempt = *tries + 1;
     if *tries > cfg.max_retries {
         bail!(
             "shard {}/{} failed {} retries and cannot be re-split further",
@@ -588,6 +663,12 @@ fn requeue(cfg: &OrchestrateConfig, st: &mut State, class: (usize, usize)) -> Re
             cfg.max_retries
         );
     }
+    telemetry::event("orchestrator", "retry", || {
+        vec![
+            ("shard".into(), Json::str(format!("{}/{}", class.0, class.1))),
+            ("attempt".into(), Json::int(next_attempt as u64)),
+        ]
+    });
     st.pending.push_back(class);
     Ok(())
 }

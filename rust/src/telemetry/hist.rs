@@ -1,0 +1,297 @@
+//! Mergeable log-bucketed latency histogram.
+//!
+//! The serving fleet needs percentiles that (a) merge across workers and
+//! processes without shipping every sample, (b) stay bounded in memory at
+//! fleet scale, and (c) are **deterministic regardless of merge order** —
+//! the fleet digest contract extends to every reported statistic. A
+//! float-summing reservoir fails (c): f64 addition is not associative, so
+//! two merge orders can disagree in the last bit. This histogram stores
+//! only integer counts keyed by bucket index, so merging is exact integer
+//! addition — associative, commutative, and thread-count-independent —
+//! and every derived statistic (mean, quantiles) is a pure function of
+//! the final counts.
+//!
+//! Bucketing is log-spaced and computed **directly from the IEEE-754
+//! bits** (no `log2` call, so no libm rounding hazards): the bucket index
+//! of a positive finite `v` is its exponent and top [`SUB_BITS`] mantissa
+//! bits, i.e. the top 16 bits of `v.to_bits()` minus a bias. That gives
+//! 2^[`SUB_BITS`] = 32 sub-buckets per octave — at most ~3.2% relative
+//! width — and makes [`bucket_index`] / [`bucket_value`] exact inverses:
+//! `bucket_index(bucket_value(i)) == i` for every representable bucket.
+//! Quantiles use the same nearest-rank rule as [`crate::util::stats::
+//! percentile`], so on fixtures whose samples are exact bucket
+//! representatives the histogram reproduces the sorted-`Vec` percentile
+//! bit for bit (the `ServeStats` replacement contract).
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::util::json::Json;
+
+/// Mantissa bits per bucket index: 2^5 = 32 sub-buckets per octave.
+pub const SUB_BITS: u32 = 5;
+/// Bias aligning bucket 0 with `v = 1.0` (exponent 0, first sub-bucket).
+const IDX_BIAS: i32 = 1023 << SUB_BITS;
+
+/// Bucket index of a positive finite value: the top `11 + SUB_BITS` bits
+/// of its IEEE-754 representation, re-biased so 1.0 lands in bucket 0.
+/// Monotone in `v` (larger values never map to smaller buckets).
+pub fn bucket_index(v: f64) -> i32 {
+    debug_assert!(v.is_finite() && v > 0.0, "bucket_index wants positive finite, got {v}");
+    ((v.to_bits() >> (52 - SUB_BITS)) as i32) - IDX_BIAS
+}
+
+/// The bucket's representative value: its exact lower bound,
+/// reconstructed from the same bit layout, so
+/// `bucket_index(bucket_value(i)) == i` holds exactly.
+pub fn bucket_value(idx: i32) -> f64 {
+    f64::from_bits(((idx + IDX_BIAS) as u64) << (52 - SUB_BITS))
+}
+
+/// Log-bucketed histogram of non-negative samples. Non-positive and
+/// non-finite samples are counted in a dedicated `zeros` bucket (they
+/// sort below every positive bucket). Derives `Eq`: two histograms are
+/// equal iff they hold identical counts — the property the merge laws
+/// are stated over.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LogHistogram {
+    zeros: u64,
+    buckets: BTreeMap<i32, u64>,
+}
+
+impl LogHistogram {
+    /// Empty histogram.
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` identical samples.
+    pub fn record_n(&mut self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        if v.is_finite() && v > 0.0 {
+            *self.buckets.entry(bucket_index(v)).or_insert(0) += n;
+        } else {
+            self.zeros += n;
+        }
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.zeros + self.buckets.values().sum::<u64>()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.zeros == 0 && self.buckets.is_empty()
+    }
+
+    /// Samples in the zero bucket (non-positive or non-finite).
+    pub fn zeros(&self) -> u64 {
+        self.zeros
+    }
+
+    /// Fold another histogram into this one — exact integer addition per
+    /// bucket, so merging is associative, commutative, and independent of
+    /// how samples were sharded across threads or processes.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        self.zeros += other.zeros;
+        for (&idx, &n) in &other.buckets {
+            *self.buckets.entry(idx).or_insert(0) += n;
+        }
+    }
+
+    /// Mean over bucket representatives (zero-bucket samples count as 0).
+    /// A pure function of the counts, so it is merge-order independent.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .buckets
+            .iter()
+            .map(|(&idx, &c)| bucket_value(idx) * c as f64)
+            .sum();
+        sum / n as f64
+    }
+
+    /// p-th quantile (0..=100) by the same nearest-rank rule as
+    /// [`crate::util::stats::percentile`]: rank =
+    /// `round(p/100 * (n-1))`, then walk buckets in ascending order and
+    /// return the representative of the bucket holding that rank.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (((p / 100.0) * (n as f64 - 1.0)).round() as u64).min(n - 1);
+        if rank < self.zeros {
+            return 0.0;
+        }
+        let mut seen = self.zeros;
+        for (&idx, &c) in &self.buckets {
+            seen += c;
+            if rank < seen {
+                return bucket_value(idx);
+            }
+        }
+        // unreachable when counts are consistent; fall back to the top
+        // bucket so a logic slip degrades instead of panicking
+        self.buckets
+            .keys()
+            .next_back()
+            .map(|&i| bucket_value(i))
+            .unwrap_or(0.0)
+    }
+
+    /// Iterate `(bucket index, count)` in ascending bucket order.
+    pub fn iter(&self) -> impl Iterator<Item = (i32, u64)> + '_ {
+        self.buckets.iter().map(|(&i, &c)| (i, c))
+    }
+
+    /// JSON form (schema v1): `{"v":1,"zeros":Z,"buckets":[[idx,n],..]}`.
+    /// Bucket order is ascending, so the encoding is deterministic.
+    pub fn to_json(&self) -> Json {
+        let buckets = self
+            .buckets
+            .iter()
+            .map(|(&idx, &n)| Json::Arr(vec![Json::Num(idx as f64), Json::int(n)]))
+            .collect();
+        Json::Obj(vec![
+            ("v".into(), Json::int(1)),
+            ("zeros".into(), Json::int(self.zeros)),
+            ("buckets".into(), Json::Arr(buckets)),
+        ])
+    }
+
+    /// Parse the [`LogHistogram::to_json`] form.
+    pub fn from_json(j: &Json) -> Result<LogHistogram> {
+        ensure!(
+            j.field("v")?.as_u64()? == 1,
+            "unsupported histogram schema version"
+        );
+        let zeros = j.field("zeros")?.as_u64()?;
+        let mut buckets = BTreeMap::new();
+        for pair in j.field("buckets")?.as_arr()? {
+            let pair = pair.as_arr()?;
+            ensure!(pair.len() == 2, "histogram bucket wants [idx, count]");
+            let idx = pair[0].as_f64()?;
+            ensure!(
+                idx.fract() == 0.0 && idx.abs() <= 66_000.0,
+                "bad histogram bucket index {idx}"
+            );
+            let n = pair[1].as_u64()?;
+            if n > 0 {
+                *buckets.entry(idx as i32).or_insert(0) += n;
+            }
+        }
+        Ok(LogHistogram { zeros, buckets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn bucket_index_and_value_are_exact_inverses() {
+        for idx in [-320, -33, -1, 0, 1, 5, 16, 31, 32, 100, 640] {
+            let v = bucket_value(idx);
+            assert!(v > 0.0, "bucket {idx} representative not positive");
+            assert_eq!(bucket_index(v), idx, "round-trip failed for {idx}");
+        }
+    }
+
+    #[test]
+    fn bucket_width_is_bounded() {
+        // adjacent representatives differ by at most a factor 1 + 2^-5
+        for idx in [-320, -1, 0, 31, 32, 640] {
+            let lo = bucket_value(idx);
+            let hi = bucket_value(idx + 1);
+            assert!(hi > lo);
+            assert!(hi / lo <= 1.0 + 1.0 / 32.0 + 1e-12, "{idx}: {lo}..{hi}");
+        }
+    }
+
+    #[test]
+    fn quantiles_match_sorted_percentile_on_representative_fixtures() {
+        // the ServeStats replacement contract: on samples that are exact
+        // bucket representatives, the histogram reproduces the sorted-Vec
+        // nearest-rank percentile bit for bit
+        let samples = [0.25, 1.5, 0.75, 12.0, 3.0, 0.25, 96.0, 1.5];
+        for v in samples {
+            assert_eq!(bucket_value(bucket_index(v)), v, "{v} is not a representative");
+        }
+        let mut h = LogHistogram::new();
+        for v in samples {
+            h.record(v);
+        }
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let exact = stats::percentile(&samples, p);
+            assert_eq!(h.quantile(p).to_bits(), exact.to_bits(), "p{p}");
+        }
+        let exact_mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((h.mean() - exact_mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_and_nonfinite_samples_land_in_the_zero_bucket() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(2.0);
+        assert_eq!(h.zeros(), 4);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(100.0), 2.0);
+    }
+
+    #[test]
+    fn merge_is_exact_integer_addition() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut whole = LogHistogram::new();
+        for (i, v) in [0.3, 1.7, 2.9, 0.0, 55.0, 1.7].iter().enumerate() {
+            whole.record(*v);
+            if i % 2 == 0 {
+                a.record(*v);
+            } else {
+                b.record(*v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+        assert_eq!(a.count(), 6);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut h = LogHistogram::new();
+        for v in [0.25, 1.5, 0.0, 3.25e-3, 8192.0] {
+            h.record(v);
+        }
+        let back = LogHistogram::from_json(&h.to_json()).unwrap();
+        assert_eq!(h, back);
+        assert!(LogHistogram::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(50.0), 0.0);
+    }
+}

@@ -1,0 +1,523 @@
+//! Unified telemetry: spans, counters, gauges, and events into an
+//! append-only `trace.jsonl` — zero-cost when disabled (the default).
+//!
+//! ## Design
+//!
+//! A process-global [`Recorder`] (installed once, from
+//! [`init_from_env`] in `main`) emits schema-v1 records using the
+//! orchestrator's torn-write-safe `\n{json}\n` framing, buffered and
+//! flushed with one `O_APPEND` `write_all` so concurrent fleet /
+//! orchestrator worker processes can share a single trace file. Every
+//! record is stamped with:
+//!
+//! - `v` — schema version (1)
+//! - `k` — kind: `meta`, `b` (span begin), `e` (span end), `c`
+//!   (counter delta), `g` (gauge), `ev` (event)
+//! - `w` — worker id (defaults to the process id, override via
+//!   `INTERSTELLAR_TRACE_WORKER`)
+//! - `s` — per-process monotone sequence number
+//! - `e` — wall-clock **microseconds** since the unix epoch at recorder
+//!   init (microseconds keep the value inside `Json::int`'s exact-f64
+//!   range; nanoseconds would not fit)
+//! - `t` — monotonic nanoseconds since recorder init
+//!
+//! `e*1000 + t` is a per-record absolute-nanosecond timestamp, so traces
+//! from many processes merge into one global order: sort by
+//! `(abs_ns, worker, seq)` (see [`parse_trace`]). Span ids are
+//! per-process, so `(worker, id)` is globally unique; parent links are
+//! kept per thread via a thread-local span stack ([`span`] /
+//! [`span_with`]) or set explicitly for spans that outlive a scope
+//! ([`begin`] → [`ManualSpan`], used for orchestrator task lifecycles).
+//!
+//! ## Telemetry observes, never steers
+//!
+//! Nothing in this module feeds back into search, scheduling, or
+//! serving decisions: recording a span or counter can allocate and take
+//! a mutex, but it cannot change any computed value. Every bit-identity
+//! pin (search winners, Pareto frontiers, fleet digest) holds with
+//! tracing on — `perf_telemetry` gates this, plus a ≤5% wall-clock
+//! overhead bound on the `perf_search` workload. When disabled, every
+//! entry point is one relaxed atomic load and an early return.
+
+pub mod hist;
+pub mod report;
+#[cfg(test)]
+mod tests;
+
+use std::cell::RefCell;
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Trace record schema version.
+pub const SCHEMA_VERSION: u64 = 1;
+/// Env var naming the trace file; absence (or empty) disables telemetry.
+pub const TRACE_ENV: &str = "INTERSTELLAR_TRACE";
+/// Env var overriding the per-record worker id (defaults to the pid).
+pub const WORKER_ENV: &str = "INTERSTELLAR_TRACE_WORKER";
+/// Buffered bytes that trigger an implicit flush.
+const FLUSH_BYTES: usize = 64 * 1024;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RECORDER: OnceLock<Recorder> = OnceLock::new();
+
+thread_local! {
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// True when a recorder is installed — one relaxed atomic load. Guard
+/// any non-trivial attribute construction on this (the span/event APIs
+/// already take attribute closures, evaluated only when enabled).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The buffered trace writer. Normally used through the process-global
+/// API below; constructible directly so tests can exercise emission and
+/// framing without touching global state.
+pub struct Recorder {
+    path: PathBuf,
+    worker: u64,
+    epoch_us: u64,
+    base: Instant,
+    seq: AtomicU64,
+    next_span: AtomicU64,
+    buf: Mutex<String>,
+}
+
+impl Recorder {
+    /// New recorder appending to `path`, stamping `worker` on every
+    /// record. The epoch (wall clock) and timebase (monotonic clock)
+    /// are captured here.
+    pub fn new(path: impl Into<PathBuf>, worker: u64) -> Recorder {
+        let epoch_us = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        Recorder {
+            path: path.into(),
+            worker,
+            epoch_us,
+            base: Instant::now(),
+            seq: AtomicU64::new(0),
+            next_span: AtomicU64::new(0),
+            buf: Mutex::new(String::new()),
+        }
+    }
+
+    fn t_ns(&self) -> u64 {
+        self.base.elapsed().as_nanos() as u64
+    }
+
+    /// Append one framed record (common stamps + `fields`) to the
+    /// buffer; flushes when the buffer passes [`FLUSH_BYTES`].
+    pub fn emit(&self, kind: &str, fields: Vec<(String, Json)>) {
+        let mut members = Vec::with_capacity(fields.len() + 6);
+        members.push(("v".into(), Json::int(SCHEMA_VERSION)));
+        members.push(("k".into(), Json::str(kind)));
+        members.push(("w".into(), Json::int(self.worker)));
+        members.push((
+            "s".into(),
+            Json::int(self.seq.fetch_add(1, Ordering::Relaxed)),
+        ));
+        members.push(("e".into(), Json::int(self.epoch_us)));
+        members.push(("t".into(), Json::int(self.t_ns())));
+        members.extend(fields);
+        let record = Json::Obj(members);
+        let mut line = String::with_capacity(160);
+        line.push('\n');
+        record.write(&mut line);
+        line.push('\n');
+        let flush_now = {
+            let mut buf = self.buf.lock().unwrap();
+            buf.push_str(&line);
+            buf.len() >= FLUSH_BYTES
+        };
+        if flush_now {
+            // best-effort: a full disk must not take the workload down
+            let _ = self.flush();
+        }
+    }
+
+    /// Write all buffered records with one `O_APPEND` `write_all` —
+    /// records from concurrent processes interleave only at frame
+    /// boundaries, and a torn tail loses at most the torn record.
+    pub fn flush(&self) -> Result<()> {
+        let pending = {
+            let mut buf = self.buf.lock().unwrap();
+            if buf.is_empty() {
+                return Ok(());
+            }
+            std::mem::take(&mut *buf)
+        };
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("open trace log {}", self.path.display()))?;
+        f.write_all(pending.as_bytes())
+            .with_context(|| format!("append trace records to {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// Install the process-global recorder. Fails if one is already
+/// installed (the recorder captures the timebase, so it is
+/// once-per-process by construction).
+pub fn init(path: impl Into<PathBuf>, worker: u64) -> Result<()> {
+    let rec = Recorder::new(path, worker);
+    rec.emit(
+        "meta",
+        vec![
+            ("pid".into(), Json::int(std::process::id() as u64)),
+            (
+                "argv".into(),
+                Json::Arr(std::env::args().map(Json::str).collect()),
+            ),
+        ],
+    );
+    RECORDER
+        .set(rec)
+        .map_err(|_| anyhow::anyhow!("telemetry recorder already installed"))?;
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Install a recorder from `INTERSTELLAR_TRACE` (the trace path) and
+/// `INTERSTELLAR_TRACE_WORKER` (worker id, default: pid). Called from
+/// `main` before the CLI dispatch, so every spawned worker process
+/// (which inherits the environment) self-initializes against the same
+/// trace file with a distinct worker id. No env var → `Disabled`
+/// stays the default and this is a no-op.
+pub fn init_from_env() {
+    let Ok(path) = std::env::var(TRACE_ENV) else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    let worker = std::env::var(WORKER_ENV)
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(std::process::id() as u64)
+        & ((1u64 << 53) - 1);
+    if let Err(e) = init(path, worker) {
+        eprintln!("telemetry: disabled ({e})");
+    }
+}
+
+/// Flush the global recorder's buffer (no-op when disabled). `main`
+/// calls this after the CLI returns so process exit never strands
+/// buffered records.
+pub fn flush() {
+    if let Some(rec) = RECORDER.get() {
+        if let Err(e) = rec.flush() {
+            eprintln!("telemetry: flush failed ({e})");
+        }
+    }
+}
+
+#[inline]
+fn recorder() -> Option<&'static Recorder> {
+    if enabled() {
+        RECORDER.get()
+    } else {
+        None
+    }
+}
+
+/// RAII span tied to the current thread's span stack: `begin` on
+/// creation, `end` (with measured wall-ns) on drop. When telemetry is
+/// disabled this is an inert zero-sized-state guard.
+pub struct SpanGuard {
+    id: u64,
+    start: Option<Instant>,
+}
+
+impl SpanGuard {
+    /// The span's id (0 when telemetry is disabled). Pass to
+    /// [`span_under`] so spans opened on *other* threads (e.g. a
+    /// parallel sweep's workers) attach under this span instead of
+    /// becoming extra roots.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// Open a span with no attributes. See [`span_with`].
+pub fn span(plane: &str, name: &str) -> SpanGuard {
+    span_with(plane, name, Vec::new)
+}
+
+/// Open a span on the current thread's stack: the innermost open span
+/// becomes the parent. `attrs` is only evaluated when telemetry is
+/// enabled, so call sites stay zero-cost when disabled.
+pub fn span_with(
+    plane: &str,
+    name: &str,
+    attrs: impl FnOnce() -> Vec<(String, Json)>,
+) -> SpanGuard {
+    span_under(plane, name, 0, attrs)
+}
+
+/// Like [`span_with`], but when the current thread has no open span the
+/// parent falls back to `parent` instead of the root. Worker threads in
+/// a parallel sweep use this to hang their spans under the sweep's root
+/// span, which lives on the dispatching thread's stack.
+pub fn span_under(
+    plane: &str,
+    name: &str,
+    parent: u64,
+    attrs: impl FnOnce() -> Vec<(String, Json)>,
+) -> SpanGuard {
+    let Some(rec) = recorder() else {
+        return SpanGuard { id: 0, start: None };
+    };
+    let id = rec.next_span.fetch_add(1, Ordering::Relaxed) + 1;
+    let parent = SPAN_STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let p = s.last().copied().unwrap_or(parent);
+        s.push(id);
+        p
+    });
+    let mut fields = vec![
+        ("id".into(), Json::int(id)),
+        ("par".into(), Json::int(parent)),
+        ("plane".into(), Json::str(plane)),
+        ("name".into(), Json::str(name)),
+    ];
+    let a = attrs();
+    if !a.is_empty() {
+        fields.push(("attrs".into(), Json::Obj(a)));
+    }
+    rec.emit("b", fields);
+    SpanGuard {
+        id,
+        start: Some(Instant::now()),
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else {
+            return;
+        };
+        SPAN_STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+        if let Some(rec) = RECORDER.get() {
+            rec.emit(
+                "e",
+                vec![
+                    ("id".into(), Json::int(self.id)),
+                    ("ns".into(), Json::int(start.elapsed().as_nanos() as u64)),
+                ],
+            );
+        }
+    }
+}
+
+/// A span that outlives a lexical scope (e.g. an orchestrator task:
+/// begun at dispatch, ended at reap, with other spans interleaved).
+/// Not tied to the thread-local stack — its parent is the root. Ends
+/// with outcome attributes via [`ManualSpan::end_with`], or plainly on
+/// drop, so a cancelled task can never strand an open span.
+pub struct ManualSpan {
+    id: u64,
+    start: Option<Instant>,
+}
+
+/// Open a manual (stack-free, root-parented) span. `attrs` is only
+/// evaluated when telemetry is enabled.
+pub fn begin(plane: &str, name: &str, attrs: impl FnOnce() -> Vec<(String, Json)>) -> ManualSpan {
+    begin_under(plane, name, 0, attrs)
+}
+
+/// [`begin`] with an explicit parent span id (0 = root) — e.g. the
+/// orchestrator parents every task span under its run span.
+pub fn begin_under(
+    plane: &str,
+    name: &str,
+    parent: u64,
+    attrs: impl FnOnce() -> Vec<(String, Json)>,
+) -> ManualSpan {
+    let Some(rec) = recorder() else {
+        return ManualSpan { id: 0, start: None };
+    };
+    let id = rec.next_span.fetch_add(1, Ordering::Relaxed) + 1;
+    let mut fields = vec![
+        ("id".into(), Json::int(id)),
+        ("par".into(), Json::int(parent)),
+        ("plane".into(), Json::str(plane)),
+        ("name".into(), Json::str(name)),
+    ];
+    let a = attrs();
+    if !a.is_empty() {
+        fields.push(("attrs".into(), Json::Obj(a)));
+    }
+    rec.emit("b", fields);
+    ManualSpan {
+        id,
+        start: Some(Instant::now()),
+    }
+}
+
+impl ManualSpan {
+    /// The span's id (0 when telemetry is disabled).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// End the span, attaching outcome attributes to the end record.
+    pub fn end_with(mut self, attrs: impl FnOnce() -> Vec<(String, Json)>) {
+        let a = if self.start.is_some() { attrs() } else { Vec::new() };
+        self.finish(a);
+    }
+
+    fn finish(&mut self, attrs: Vec<(String, Json)>) {
+        let Some(start) = self.start.take() else {
+            return;
+        };
+        if let Some(rec) = RECORDER.get() {
+            let mut fields = vec![
+                ("id".into(), Json::int(self.id)),
+                ("ns".into(), Json::int(start.elapsed().as_nanos() as u64)),
+            ];
+            if !attrs.is_empty() {
+                fields.push(("attrs".into(), Json::Obj(attrs)));
+            }
+            rec.emit("e", fields);
+        }
+    }
+}
+
+impl Drop for ManualSpan {
+    fn drop(&mut self) {
+        self.finish(Vec::new());
+    }
+}
+
+/// Record a monotone counter increment (`delta` of the named counter).
+/// Zero deltas are elided.
+pub fn counter(plane: &str, name: &str, delta: u64) {
+    if delta == 0 {
+        return;
+    }
+    let Some(rec) = recorder() else {
+        return;
+    };
+    rec.emit(
+        "c",
+        vec![
+            ("plane".into(), Json::str(plane)),
+            ("name".into(), Json::str(name)),
+            ("val".into(), Json::int(delta)),
+        ],
+    );
+}
+
+/// Record an instantaneous gauge sample.
+pub fn gauge(plane: &str, name: &str, value: f64) {
+    let Some(rec) = recorder() else {
+        return;
+    };
+    rec.emit(
+        "g",
+        vec![
+            ("plane".into(), Json::str(plane)),
+            ("name".into(), Json::str(name)),
+            ("val".into(), Json::num(value)),
+        ],
+    );
+}
+
+/// Record a point event with attributes (evaluated only when enabled).
+pub fn event(plane: &str, name: &str, attrs: impl FnOnce() -> Vec<(String, Json)>) {
+    let Some(rec) = recorder() else {
+        return;
+    };
+    rec.emit(
+        "ev",
+        vec![
+            ("plane".into(), Json::str(plane)),
+            ("name".into(), Json::str(name)),
+            ("attrs".into(), Json::Obj(attrs())),
+        ],
+    );
+}
+
+/// One parsed trace record with its merge keys extracted.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    /// The full record.
+    pub json: Json,
+    /// Record kind (`meta`/`b`/`e`/`c`/`g`/`ev`).
+    pub kind: String,
+    /// Worker id stamp.
+    pub worker: u64,
+    /// Per-process sequence number.
+    pub seq: u64,
+    /// Absolute nanoseconds: `epoch_us * 1000 + t_ns`.
+    pub abs_ns: u64,
+}
+
+/// Parse a trace file's text into records sorted by the cross-process
+/// merge order `(abs_ns, worker, seq)` — the monotonic timebase plus
+/// worker id makes the order total and deterministic. Returns the
+/// records and the count of skipped lines (torn tails from interrupted
+/// appends, or records missing the v1 stamps).
+pub fn parse_trace(text: &str) -> (Vec<TraceRecord>, usize) {
+    let mut records = Vec::new();
+    let mut skipped = 0usize;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(json) = Json::parse(line) else {
+            skipped += 1;
+            continue;
+        };
+        let stamps = (
+            json.get("v").and_then(|v| v.as_u64().ok()),
+            json.get("k").and_then(|v| v.as_str().ok().map(String::from)),
+            json.get("w").and_then(|v| v.as_u64().ok()),
+            json.get("s").and_then(|v| v.as_u64().ok()),
+            json.get("e").and_then(|v| v.as_u64().ok()),
+            json.get("t").and_then(|v| v.as_u64().ok()),
+        );
+        let (Some(v), Some(kind), Some(worker), Some(seq), Some(epoch_us), Some(t_ns)) = stamps
+        else {
+            skipped += 1;
+            continue;
+        };
+        if v != SCHEMA_VERSION {
+            skipped += 1;
+            continue;
+        }
+        records.push(TraceRecord {
+            json,
+            kind,
+            worker,
+            seq,
+            abs_ns: epoch_us.saturating_mul(1000).saturating_add(t_ns),
+        });
+    }
+    records.sort_by_key(|r| (r.abs_ns, r.worker, r.seq));
+    (records, skipped)
+}
+
+/// Read and [`parse_trace`] a trace file.
+pub fn read_trace(path: &Path) -> Result<(Vec<TraceRecord>, usize)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    Ok(parse_trace(&text))
+}

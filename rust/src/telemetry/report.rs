@@ -1,0 +1,586 @@
+//! `trace-report`: explain a `trace.jsonl` — a self-time profile tree
+//! ("where did the wall-clock go"), per-worker utilization and
+//! straggler tables, a per-shard task table, and the merged serving
+//! latency-histogram view — plus the `--check` validator the CI full
+//! tier gates on: schema-valid records, zero orphaned spans (every
+//! begin ended, every end begun, every parent known), and required
+//! plane coverage.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::hist::{bucket_value, LogHistogram, SUB_BITS};
+use super::{read_trace, TraceRecord};
+use crate::util::json::Json;
+
+/// One reconstructed span (begin matched to end when present).
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Worker id of the emitting process.
+    pub worker: u64,
+    /// Per-process span id.
+    pub id: u64,
+    /// Parent span id within the same worker (0 = root).
+    pub parent: u64,
+    /// Instrumented plane (`engine`/`search`/`orchestrator`/`fleet`).
+    pub plane: String,
+    /// Span name within the plane.
+    pub name: String,
+    /// Begin-record attributes.
+    pub attrs: Option<Json>,
+    /// End-record attributes (e.g. a task outcome).
+    pub end_attrs: Option<Json>,
+    /// Measured wall nanoseconds; `None` for an orphaned begin.
+    pub ns: Option<u64>,
+}
+
+impl Span {
+    fn label(&self) -> String {
+        format!("{}:{}", self.plane, self.name)
+    }
+
+    fn attr_str(&self, key: &str) -> Option<String> {
+        for side in [&self.attrs, &self.end_attrs] {
+            if let Some(v) = side.as_ref().and_then(|a| a.get(key)) {
+                if let Ok(s) = v.as_str() {
+                    return Some(s.to_string());
+                }
+                return Some(v.to_string());
+            }
+        }
+        None
+    }
+
+    fn attr_u64(&self, key: &str) -> Option<u64> {
+        for side in [&self.attrs, &self.end_attrs] {
+            if let Some(n) = side.as_ref().and_then(|a| a.get(key)).and_then(|v| v.as_u64().ok())
+            {
+                return Some(n);
+            }
+        }
+        None
+    }
+}
+
+/// What `--check` computed over one trace.
+#[derive(Debug)]
+pub struct CheckSummary {
+    /// Schema-valid records.
+    pub records: usize,
+    /// Skipped lines (torn tails / foreign records).
+    pub skipped: usize,
+    /// Distinct worker ids.
+    pub workers: usize,
+    /// Reconstructed spans (matched or orphaned).
+    pub spans: usize,
+    /// Counter + gauge + event records.
+    pub points: usize,
+    /// Planes seen across all records, sorted.
+    pub planes: Vec<String>,
+    /// Violations: orphaned spans, malformed records, unknown kinds.
+    pub violations: Vec<String>,
+}
+
+/// Reconstruct spans from time-ordered records, reporting violations
+/// into `violations` when provided.
+fn collect_spans(
+    records: &[TraceRecord],
+    mut violations: Option<&mut Vec<String>>,
+) -> Vec<Span> {
+    let mut spans: Vec<Span> = Vec::new();
+    let mut open: HashMap<(u64, u64), usize> = HashMap::new();
+    let mut note = |violations: &mut Option<&mut Vec<String>>, msg: String| {
+        if let Some(v) = violations.as_deref_mut() {
+            v.push(msg);
+        }
+    };
+    for r in records {
+        match r.kind.as_str() {
+            "b" => {
+                let id = r.json.get("id").and_then(|v| v.as_u64().ok());
+                let parent = r.json.get("par").and_then(|v| v.as_u64().ok());
+                let plane = r.json.get("plane").and_then(|v| v.as_str().ok());
+                let name = r.json.get("name").and_then(|v| v.as_str().ok());
+                let (Some(id), Some(parent), Some(plane), Some(name)) =
+                    (id, parent, plane, name)
+                else {
+                    note(
+                        &mut violations,
+                        format!("worker {} seq {}: malformed span begin", r.worker, r.seq),
+                    );
+                    continue;
+                };
+                if id == 0 {
+                    note(
+                        &mut violations,
+                        format!("worker {} seq {}: span id 0 is reserved", r.worker, r.seq),
+                    );
+                    continue;
+                }
+                if parent != 0 && !open.contains_key(&(r.worker, parent)) {
+                    note(
+                        &mut violations,
+                        format!(
+                            "worker {} span {id} ({plane}:{name}): parent {parent} never began",
+                            r.worker
+                        ),
+                    );
+                }
+                if open.insert((r.worker, id), spans.len()).is_some() {
+                    note(
+                        &mut violations,
+                        format!("worker {} span {id}: duplicate begin", r.worker),
+                    );
+                }
+                spans.push(Span {
+                    worker: r.worker,
+                    id,
+                    parent,
+                    plane: plane.to_string(),
+                    name: name.to_string(),
+                    attrs: r.json.get("attrs").cloned(),
+                    end_attrs: None,
+                    ns: None,
+                });
+            }
+            "e" => {
+                let id = r.json.get("id").and_then(|v| v.as_u64().ok());
+                let ns = r.json.get("ns").and_then(|v| v.as_u64().ok());
+                let (Some(id), Some(ns)) = (id, ns) else {
+                    note(
+                        &mut violations,
+                        format!("worker {} seq {}: malformed span end", r.worker, r.seq),
+                    );
+                    continue;
+                };
+                match open.get(&(r.worker, id)) {
+                    Some(&i) if spans[i].ns.is_none() => {
+                        spans[i].ns = Some(ns);
+                        spans[i].end_attrs = r.json.get("attrs").cloned();
+                    }
+                    Some(_) => note(
+                        &mut violations,
+                        format!("worker {} span {id}: ended twice", r.worker),
+                    ),
+                    None => note(
+                        &mut violations,
+                        format!("worker {} span {id}: end without begin", r.worker),
+                    ),
+                }
+            }
+            "c" | "g" => {
+                let ok = r.json.get("plane").and_then(|v| v.as_str().ok()).is_some()
+                    && r.json.get("name").and_then(|v| v.as_str().ok()).is_some()
+                    && r.json.get("val").is_some();
+                if !ok {
+                    note(
+                        &mut violations,
+                        format!("worker {} seq {}: malformed {} record", r.worker, r.seq, r.kind),
+                    );
+                }
+            }
+            "ev" => {
+                let ok = r.json.get("plane").and_then(|v| v.as_str().ok()).is_some()
+                    && r.json.get("name").and_then(|v| v.as_str().ok()).is_some();
+                if !ok {
+                    note(
+                        &mut violations,
+                        format!("worker {} seq {}: malformed event record", r.worker, r.seq),
+                    );
+                }
+            }
+            "meta" => {}
+            other => note(
+                &mut violations,
+                format!("worker {} seq {}: unknown record kind `{other}`", r.worker, r.seq),
+            ),
+        }
+    }
+    for s in &spans {
+        if s.ns.is_none() {
+            note(
+                &mut violations,
+                format!(
+                    "worker {} span {} ({}): never ended",
+                    s.worker,
+                    s.id,
+                    s.label()
+                ),
+            );
+        }
+    }
+    spans
+}
+
+/// Planes named by any record (spans, counters, gauges, events).
+fn planes_of(records: &[TraceRecord]) -> Vec<String> {
+    let mut planes: BTreeSet<String> = BTreeSet::new();
+    for r in records {
+        if let Some(p) = r.json.get("plane").and_then(|v| v.as_str().ok()) {
+            planes.insert(p.to_string());
+        }
+    }
+    planes.into_iter().collect()
+}
+
+/// Validate a parsed trace: schema-valid records and zero orphaned
+/// spans. Violations are collected, not bailed on, so one run reports
+/// every problem.
+pub fn check_trace(records: &[TraceRecord], skipped: usize) -> CheckSummary {
+    let mut violations = Vec::new();
+    let spans = collect_spans(records, Some(&mut violations));
+    let workers: BTreeSet<u64> = records.iter().map(|r| r.worker).collect();
+    let points = records
+        .iter()
+        .filter(|r| matches!(r.kind.as_str(), "c" | "g" | "ev"))
+        .count();
+    CheckSummary {
+        records: records.len(),
+        skipped,
+        workers: workers.len(),
+        spans: spans.len(),
+        points,
+        planes: planes_of(records),
+        violations,
+    }
+}
+
+/// Read, parse, and [`check_trace`] a trace file.
+pub fn check_path(path: &Path) -> Result<CheckSummary> {
+    let (records, skipped) = read_trace(path)?;
+    Ok(check_trace(&records, skipped))
+}
+
+fn fmt_ms(ns: u64) -> String {
+    format!("{:.2}", ns as f64 / 1e6)
+}
+
+/// The self-time profile tree: spans aggregated by their parent-chain
+/// label path, with total, self (total minus children), and the
+/// self-time share of all root wall-clock.
+pub fn profile_tree(records: &[TraceRecord]) -> String {
+    let spans = collect_spans(records, None);
+    let mut index: HashMap<(u64, u64), usize> = HashMap::new();
+    for (i, s) in spans.iter().enumerate() {
+        index.insert((s.worker, s.id), i);
+    }
+    let path_of = |i: usize| -> String {
+        let mut parts = vec![spans[i].label()];
+        let mut cur = i;
+        let mut depth = 0;
+        while spans[cur].parent != 0 && depth < 64 {
+            match index.get(&(spans[cur].worker, spans[cur].parent)) {
+                Some(&p) => {
+                    parts.push(spans[p].label());
+                    cur = p;
+                }
+                None => break,
+            }
+            depth += 1;
+        }
+        parts.reverse();
+        parts.join(" > ")
+    };
+    #[derive(Default)]
+    struct Agg {
+        count: u64,
+        total_ns: u64,
+        child_ns: u64,
+    }
+    let mut aggs: BTreeMap<String, Agg> = BTreeMap::new();
+    for (i, s) in spans.iter().enumerate() {
+        let Some(ns) = s.ns else { continue };
+        let path = path_of(i);
+        if s.parent != 0 && index.contains_key(&(s.worker, s.parent)) {
+            let parent_path = path
+                .rsplit_once(" > ")
+                .map(|(head, _)| head.to_string())
+                .unwrap_or_default();
+            if !parent_path.is_empty() {
+                aggs.entry(parent_path).or_default().child_ns += ns;
+            }
+        }
+        let a = aggs.entry(path).or_default();
+        a.count += 1;
+        a.total_ns += ns;
+    }
+    let grand: u64 = aggs
+        .iter()
+        .filter(|(path, _)| !path.contains(" > "))
+        .map(|(_, a)| a.total_ns)
+        .sum();
+    let mut out = String::new();
+    out.push_str("== profile tree (self-time) ==\n");
+    out.push_str(&format!(
+        "{:<52} {:>7} {:>12} {:>12} {:>7}\n",
+        "span", "count", "total ms", "self ms", "self%"
+    ));
+    for (path, a) in &aggs {
+        let depth = path.matches(" > ").count();
+        let name = path.rsplit(" > ").next().unwrap_or(path);
+        let self_ns = a.total_ns.saturating_sub(a.child_ns);
+        let pct = if grand > 0 {
+            100.0 * self_ns as f64 / grand as f64
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "{:<52} {:>7} {:>12} {:>12} {:>6.1}%\n",
+            format!("{}{}", "  ".repeat(depth), name),
+            a.count,
+            fmt_ms(a.total_ns),
+            fmt_ms(self_ns),
+            pct
+        ));
+    }
+    if aggs.is_empty() {
+        out.push_str("(no completed spans)\n");
+    }
+    out
+}
+
+/// Per-worker utilization: root-span busy time against the worker's
+/// active window (first to last record). Thread-parallel workers can
+/// exceed 100% — that is the parallelism showing, not an error.
+pub fn utilization_table(records: &[TraceRecord]) -> String {
+    let spans = collect_spans(records, None);
+    #[derive(Default)]
+    struct W {
+        records: u64,
+        spans: u64,
+        busy_ns: u64,
+        first: u64,
+        last: u64,
+    }
+    let mut workers: BTreeMap<u64, W> = BTreeMap::new();
+    for r in records {
+        let w = workers.entry(r.worker).or_default();
+        if w.records == 0 {
+            w.first = r.abs_ns;
+        }
+        w.records += 1;
+        w.last = w.last.max(r.abs_ns);
+    }
+    for s in &spans {
+        let w = workers.entry(s.worker).or_default();
+        w.spans += 1;
+        if s.parent == 0 {
+            w.busy_ns += s.ns.unwrap_or(0);
+        }
+    }
+    let mut out = String::new();
+    out.push_str("== per-worker utilization ==\n");
+    out.push_str(&format!(
+        "{:>10} {:>9} {:>7} {:>12} {:>12} {:>7}\n",
+        "worker", "records", "spans", "busy ms", "window ms", "util%"
+    ));
+    for (id, w) in &workers {
+        let window = w.last.saturating_sub(w.first);
+        let util = if window > 0 {
+            100.0 * w.busy_ns as f64 / window as f64
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "{:>10} {:>9} {:>7} {:>12} {:>12} {:>6.1}%\n",
+            id,
+            w.records,
+            w.spans,
+            fmt_ms(w.busy_ns),
+            fmt_ms(window),
+            util
+        ));
+    }
+    out
+}
+
+/// The longest completed spans — where to look first for a straggler.
+/// Orchestrator task spans carry shard/attempt/outcome attributes.
+pub fn straggler_table(records: &[TraceRecord], top: usize) -> String {
+    let mut spans = collect_spans(records, None);
+    spans.retain(|s| s.ns.is_some());
+    spans.sort_by_key(|s| std::cmp::Reverse(s.ns.unwrap_or(0)));
+    let mut out = String::new();
+    out.push_str("== stragglers (longest spans) ==\n");
+    out.push_str(&format!(
+        "{:<28} {:>10} {:>12}  {}\n",
+        "span", "worker", "wall ms", "detail"
+    ));
+    for s in spans.iter().take(top) {
+        let mut detail = Vec::new();
+        for key in ["shard", "seq", "attempt", "outcome", "arch", "batch"] {
+            if let Some(v) = s.attr_str(key) {
+                detail.push(format!("{key}={v}"));
+            }
+        }
+        out.push_str(&format!(
+            "{:<28} {:>10} {:>12}  {}\n",
+            s.label(),
+            s.worker,
+            fmt_ms(s.ns.unwrap_or(0)),
+            detail.join(" ")
+        ));
+    }
+    if spans.is_empty() {
+        out.push_str("(no completed spans)\n");
+    }
+    out
+}
+
+/// Orchestrator task spans grouped by shard class: task count, highest
+/// attempt, total wall, and outcomes — the per-shard view of a sweep.
+pub fn shard_table(records: &[TraceRecord]) -> String {
+    let spans = collect_spans(records, None);
+    #[derive(Default)]
+    struct Sh {
+        tasks: u64,
+        max_attempt: u64,
+        total_ns: u64,
+        outcomes: BTreeMap<String, u64>,
+    }
+    let mut shards: BTreeMap<String, Sh> = BTreeMap::new();
+    for s in &spans {
+        if !(s.plane == "orchestrator" && s.name == "task") {
+            continue;
+        }
+        let key = s.attr_str("shard").unwrap_or_else(|| "?".into());
+        let sh = shards.entry(key).or_default();
+        sh.tasks += 1;
+        sh.max_attempt = sh.max_attempt.max(s.attr_u64("attempt").unwrap_or(1));
+        sh.total_ns += s.ns.unwrap_or(0);
+        let outcome = s.attr_str("outcome").unwrap_or_else(|| "open".into());
+        *sh.outcomes.entry(outcome).or_insert(0) += 1;
+    }
+    if shards.is_empty() {
+        return String::new();
+    }
+    let mut out = String::new();
+    out.push_str("== per-shard tasks ==\n");
+    out.push_str(&format!(
+        "{:<12} {:>6} {:>9} {:>12}  {}\n",
+        "shard", "tasks", "attempts", "total ms", "outcomes"
+    ));
+    for (shard, sh) in &shards {
+        let outcomes = sh
+            .outcomes
+            .iter()
+            .map(|(k, v)| format!("{k}x{v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        out.push_str(&format!(
+            "{:<12} {:>6} {:>9} {:>12}  {}\n",
+            shard,
+            sh.tasks,
+            sh.max_attempt,
+            fmt_ms(sh.total_ns),
+            outcomes
+        ));
+    }
+    out
+}
+
+/// Merge every `latency_hist` event in the trace into one histogram —
+/// the cross-worker serving latency distribution.
+pub fn merged_latency_hist(records: &[TraceRecord]) -> LogHistogram {
+    let mut merged = LogHistogram::new();
+    for r in records {
+        if r.kind != "ev" {
+            continue;
+        }
+        let name = r.json.get("name").and_then(|v| v.as_str().ok());
+        if name != Some("latency_hist") {
+            continue;
+        }
+        if let Some(h) = r
+            .json
+            .get("attrs")
+            .and_then(|a| a.get("hist"))
+            .and_then(|h| LogHistogram::from_json(h).ok())
+        {
+            merged.merge(&h);
+        }
+    }
+    merged
+}
+
+/// The serving latency view: merged-histogram quantiles plus a
+/// per-octave bar chart (buckets coalesced to powers of two).
+pub fn latency_view(records: &[TraceRecord]) -> String {
+    let h = merged_latency_hist(records);
+    if h.is_empty() {
+        return String::new();
+    }
+    let mut out = String::new();
+    out.push_str("== serving latency (merged histogram, ms) ==\n");
+    out.push_str(&format!(
+        "count {}  mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}  p99.9 {:.3}\n",
+        h.count(),
+        h.mean(),
+        h.quantile(50.0),
+        h.quantile(95.0),
+        h.quantile(99.0),
+        h.quantile(99.9)
+    ));
+    let mut octaves: BTreeMap<i32, u64> = BTreeMap::new();
+    if h.zeros() > 0 {
+        octaves.insert(i32::MIN, h.zeros());
+    }
+    for (idx, n) in h.iter() {
+        *octaves.entry(idx >> SUB_BITS).or_insert(0) += n;
+    }
+    let peak = octaves.values().copied().max().unwrap_or(1).max(1);
+    for (oct, n) in &octaves {
+        let label = if *oct == i32::MIN {
+            "<=0".to_string()
+        } else {
+            format!("{:.4}", bucket_value(oct << SUB_BITS))
+        };
+        let bar = "#".repeat(((n * 40).div_ceil(peak)) as usize);
+        out.push_str(&format!("{label:>12} {n:>8} {bar}\n"));
+    }
+    out
+}
+
+/// The full human report: summary line, profile tree, utilization,
+/// stragglers, shard table, latency view.
+pub fn render(records: &[TraceRecord], skipped: usize) -> String {
+    let summary = check_trace(records, skipped);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace: {} records ({} skipped line(s)), {} worker(s), {} span(s), \
+         {} counter/gauge/event(s), planes [{}]\n\n",
+        summary.records,
+        summary.skipped,
+        summary.workers,
+        summary.spans,
+        summary.points,
+        summary.planes.join(", ")
+    ));
+    out.push_str(&profile_tree(records));
+    out.push('\n');
+    out.push_str(&utilization_table(records));
+    out.push('\n');
+    out.push_str(&straggler_table(records, 8));
+    let shards = shard_table(records);
+    if !shards.is_empty() {
+        out.push('\n');
+        out.push_str(&shards);
+    }
+    let latency = latency_view(records);
+    if !latency.is_empty() {
+        out.push('\n');
+        out.push_str(&latency);
+    }
+    if !summary.violations.is_empty() {
+        out.push_str(&format!(
+            "\n{} violation(s) — run with --check for the gate:\n",
+            summary.violations.len()
+        ));
+        for v in &summary.violations {
+            out.push_str(&format!("  {v}\n"));
+        }
+    }
+    out
+}

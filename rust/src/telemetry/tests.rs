@@ -1,0 +1,348 @@
+//! Property tests for the telemetry layer: histogram merge laws and
+//! bucket determinism, trace framing torn-tail recovery, and the
+//! cross-process merge order — all under `util::prop::for_cases`.
+
+use super::hist::{bucket_value, LogHistogram};
+use super::report::{check_trace, render};
+use super::{parse_trace, read_trace, Recorder, TraceRecord};
+use crate::util::json::Json;
+use crate::util::prop::for_cases;
+use crate::util::rng::XorShift;
+use crate::util::stats;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "interstellar-telemetry-{}-{name}",
+        std::process::id()
+    ))
+}
+
+/// Mostly positive latency-like samples across many octaves, with an
+/// occasional zero / negative / non-finite to exercise the zero bucket.
+fn sample(rng: &mut XorShift) -> f64 {
+    match rng.below(12) {
+        0 => 0.0,
+        1 => -1.0,
+        2 => f64::NAN,
+        _ => (rng.below(1_000_000) as f64 + 1.0) / 997.0,
+    }
+}
+
+#[test]
+fn hist_merge_is_associative_and_commutative() {
+    for_cases(0x7e1e_0001, 60, |rng| {
+        let mut parts = Vec::new();
+        for _ in 0..3 {
+            let mut h = LogHistogram::new();
+            for _ in 0..rng.below(40) {
+                h.record(sample(rng));
+            }
+            parts.push(h);
+        }
+        let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+        let mut left = a.clone(); // (a + b) + c
+        left.merge(b);
+        left.merge(c);
+        let mut bc = b.clone(); // a + (b + c)
+        bc.merge(c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right, "merge not associative");
+        let mut ab = a.clone();
+        ab.merge(b);
+        let mut ba = b.clone();
+        ba.merge(a);
+        assert_eq!(ab, ba, "merge not commutative");
+        // equal histograms encode to identical JSON
+        assert_eq!(left.to_json().to_string(), right.to_json().to_string());
+    });
+}
+
+#[test]
+fn hist_quantiles_are_monotone_in_p() {
+    for_cases(0x7e1e_0002, 60, |rng| {
+        let mut h = LogHistogram::new();
+        for _ in 0..rng.below(200) + 1 {
+            h.record(sample(rng));
+        }
+        let mut ps: Vec<f64> = (0..8).map(|_| rng.below(1001) as f64 / 10.0).collect();
+        ps.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for w in ps.windows(2) {
+            assert!(
+                h.quantile(w[0]) <= h.quantile(w[1]),
+                "quantile not monotone: p{} -> {}, p{} -> {}",
+                w[0],
+                h.quantile(w[0]),
+                w[1],
+                h.quantile(w[1])
+            );
+        }
+    });
+}
+
+#[test]
+fn hist_quantiles_match_sorted_percentile_on_representatives() {
+    // on multisets of exact bucket representatives the histogram must
+    // reproduce the sorted-Vec nearest-rank percentile bit for bit —
+    // the ServeStats replacement contract, as a property
+    for_cases(0x7e1e_0003, 40, |rng| {
+        let mut values = Vec::new();
+        let mut h = LogHistogram::new();
+        for _ in 0..rng.below(120) + 1 {
+            let idx = rng.range(0, 400) as i32 - 200;
+            let v = bucket_value(idx);
+            values.push(v);
+            h.record(v);
+        }
+        for p in [0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let exact = stats::percentile(&values, p);
+            assert_eq!(h.quantile(p).to_bits(), exact.to_bits(), "p{p} diverged");
+        }
+    });
+}
+
+#[test]
+fn hist_is_deterministic_across_thread_counts_and_merge_order() {
+    for_cases(0x7e1e_0004, 12, |rng| {
+        let values: Vec<f64> = (0..rng.below(300) + 16).map(|_| sample(rng)).collect();
+        let mut single = LogHistogram::new();
+        for &v in &values {
+            single.record(v);
+        }
+        for nthreads in [2usize, 3, 5] {
+            let mut shards: Vec<LogHistogram> = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for t in 0..nthreads {
+                    let vals = &values;
+                    handles.push(scope.spawn(move || {
+                        let mut h = LogHistogram::new();
+                        for (i, &v) in vals.iter().enumerate() {
+                            if i % nthreads == t {
+                                h.record(v);
+                            }
+                        }
+                        h
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let mut fwd = LogHistogram::new();
+            for s in &shards {
+                fwd.merge(s);
+            }
+            shards.reverse();
+            let mut rev = LogHistogram::new();
+            for s in &shards {
+                rev.merge(s);
+            }
+            assert_eq!(fwd, single, "{nthreads}-way shard + merge diverged");
+            assert_eq!(rev, single, "reverse merge order diverged");
+        }
+    });
+}
+
+#[test]
+fn trace_framing_recovers_from_torn_tails() {
+    for_cases(0x7e1e_0005, 30, |rng| {
+        let mut text = String::new();
+        let mut want = 0usize;
+        let mut want_skipped = 0usize;
+        for i in 0..rng.below(12) + 1 {
+            text.push_str(&format!(
+                "\n{{\"v\":1,\"k\":\"g\",\"w\":7,\"s\":{i},\"e\":1000,\"t\":{},\
+                 \"plane\":\"engine\",\"name\":\"x\",\"val\":1}}\n",
+                i * 10
+            ));
+            want += 1;
+        }
+        if rng.below(2) == 0 {
+            // a foreign non-JSON line is skipped, never fatal
+            text.push_str("not json at all\n");
+            want_skipped += 1;
+        }
+        // a record torn mid-write (killed appender): cut strictly inside
+        // the body so the remainder can never parse as complete JSON
+        let full = String::from(
+            "\n{\"v\":1,\"k\":\"g\",\"w\":7,\"s\":99,\"e\":1000,\"t\":999,\
+             \"plane\":\"engine\",\"name\":\"x\",\"val\":2}\n",
+        );
+        let cut = rng.range(2, full.len() as u64 - 2) as usize;
+        text.push_str(&full[..cut]);
+        let (records, skipped) = parse_trace(&text);
+        assert_eq!(records.len(), want, "whole records lost to the torn tail");
+        assert_eq!(skipped, want_skipped + 1, "torn tail not counted");
+        // in-worker order follows the monotonic timebase
+        let ts: Vec<u64> = records.iter().map(|r| r.abs_ns).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    });
+}
+
+#[test]
+fn trace_merge_order_is_total_and_file_order_independent() {
+    for_cases(0x7e1e_0006, 30, |rng| {
+        let n = rng.below(40) + 2;
+        let mut lines = Vec::new();
+        for s in 0..n {
+            let w = rng.below(4);
+            let e = 1_000_000 + rng.below(1000);
+            let t = rng.below(100_000);
+            lines.push(format!(
+                "{{\"v\":1,\"k\":\"ev\",\"w\":{w},\"s\":{s},\"e\":{e},\"t\":{t},\
+                 \"plane\":\"fleet\",\"name\":\"n\",\"attrs\":{{}}}}"
+            ));
+        }
+        let mut shuffled = lines.clone();
+        rng.shuffle(&mut shuffled);
+        let (a, _) = parse_trace(&lines.join("\n"));
+        let (b, _) = parse_trace(&shuffled.join("\n"));
+        let key = |r: &TraceRecord| (r.abs_ns, r.worker, r.seq);
+        let ka: Vec<_> = a.iter().map(key).collect();
+        let kb: Vec<_> = b.iter().map(key).collect();
+        assert_eq!(ka, kb, "merge order depends on file order");
+        assert!(ka.windows(2).all(|w| w[0] <= w[1]), "not sorted");
+    });
+}
+
+#[test]
+fn recorder_emits_framed_schema_valid_records() {
+    let path = tmp("recorder.jsonl");
+    let _ = std::fs::remove_file(&path);
+    let rec = Recorder::new(&path, 42);
+    rec.emit(
+        "b",
+        vec![
+            ("id".into(), Json::int(1)),
+            ("par".into(), Json::int(0)),
+            ("plane".into(), Json::str("engine")),
+            ("name".into(), Json::str("layer_search")),
+        ],
+    );
+    rec.emit(
+        "c",
+        vec![
+            ("plane".into(), Json::str("engine")),
+            ("name".into(), Json::str("stage3")),
+            ("val".into(), Json::int(5)),
+        ],
+    );
+    rec.emit(
+        "e",
+        vec![
+            ("id".into(), Json::int(1)),
+            ("ns".into(), Json::int(1234)),
+        ],
+    );
+    rec.flush().unwrap();
+    // a torn tail from a killed writer must not break later records
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .unwrap();
+        f.write_all(b"\n{\"v\":1,\"k\":\"g\",\"w\":42,\"s\":9").unwrap();
+    }
+    rec.emit(
+        "g",
+        vec![
+            ("plane".into(), Json::str("engine")),
+            ("name".into(), Json::str("pruned")),
+            ("val".into(), Json::num(0.5)),
+        ],
+    );
+    rec.flush().unwrap();
+    let (records, skipped) = read_trace(&path).unwrap();
+    assert_eq!(skipped, 1, "torn tail not skipped");
+    assert_eq!(records.len(), 4);
+    assert!(records.iter().all(|r| r.worker == 42));
+    let seqs: Vec<u64> = records.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, vec![0, 1, 2, 3], "per-process seq not monotone");
+    let summary = check_trace(&records, skipped);
+    assert!(summary.violations.is_empty(), "{:?}", summary.violations);
+    assert_eq!(summary.spans, 1);
+    assert_eq!(summary.planes, vec!["engine".to_string()]);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn check_flags_orphaned_spans_and_unknown_parents() {
+    let text = concat!(
+        "{\"v\":1,\"k\":\"b\",\"w\":1,\"s\":0,\"e\":10,\"t\":5,",
+        "\"id\":1,\"par\":0,\"plane\":\"search\",\"name\":\"point\"}\n",
+        "{\"v\":1,\"k\":\"b\",\"w\":1,\"s\":1,\"e\":10,\"t\":6,",
+        "\"id\":2,\"par\":9,\"plane\":\"engine\",\"name\":\"layer\"}\n",
+        "{\"v\":1,\"k\":\"e\",\"w\":1,\"s\":2,\"e\":10,\"t\":7,\"id\":2,\"ns\":100}\n",
+        "{\"v\":1,\"k\":\"e\",\"w\":1,\"s\":3,\"e\":10,\"t\":8,\"id\":5,\"ns\":100}\n",
+    );
+    let (records, skipped) = parse_trace(text);
+    assert_eq!(skipped, 0);
+    let summary = check_trace(&records, skipped);
+    // three problems: span 1 never ends, span 2's parent never began,
+    // end for id 5 has no begin
+    assert_eq!(summary.violations.len(), 3, "{:?}", summary.violations);
+}
+
+#[test]
+fn render_covers_every_section_for_a_multi_worker_trace() {
+    let path = tmp("render.jsonl");
+    let _ = std::fs::remove_file(&path);
+    // "process" one: an orchestrator controller with a task span
+    let ctl = Recorder::new(&path, 1);
+    ctl.emit(
+        "b",
+        vec![
+            ("id".into(), Json::int(1)),
+            ("par".into(), Json::int(0)),
+            ("plane".into(), Json::str("orchestrator")),
+            ("name".into(), Json::str("task")),
+            (
+                "attrs".into(),
+                Json::Obj(vec![
+                    ("shard".into(), Json::str("0/2")),
+                    ("attempt".into(), Json::int(2)),
+                ]),
+            ),
+        ],
+    );
+    ctl.emit(
+        "e",
+        vec![
+            ("id".into(), Json::int(1)),
+            ("ns".into(), Json::int(5_000_000)),
+            (
+                "attrs".into(),
+                Json::Obj(vec![("outcome".into(), Json::str("done"))]),
+            ),
+        ],
+    );
+    ctl.flush().unwrap();
+    // "process" two: a fleet worker publishing its latency histogram
+    let mut h = LogHistogram::new();
+    for v in [0.25, 1.5, 0.75, 1.5] {
+        h.record(v);
+    }
+    let w = Recorder::new(&path, 2);
+    w.emit(
+        "ev",
+        vec![
+            ("plane".into(), Json::str("fleet")),
+            ("name".into(), Json::str("latency_hist")),
+            ("attrs".into(), Json::Obj(vec![("hist".into(), h.to_json())])),
+        ],
+    );
+    w.flush().unwrap();
+    let (records, skipped) = read_trace(&path).unwrap();
+    let text = render(&records, skipped);
+    for section in [
+        "profile tree",
+        "per-worker utilization",
+        "stragglers",
+        "per-shard tasks",
+        "serving latency",
+        "orchestrator:task",
+        "shard=0/2",
+    ] {
+        assert!(text.contains(section), "missing `{section}` in:\n{text}");
+    }
+    let _ = std::fs::remove_file(&path);
+}
